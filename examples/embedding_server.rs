@@ -1,0 +1,99 @@
+//! Serving demo: train + compress a DPQ embedding, serve it over TCP with
+//! micro-batching, then run a small closed-loop load test (multiple client
+//! threads) and report latency/throughput -- the "no inference cost"
+//! claim of paper Sec. 3.4 in serving form.
+//!
+//!     cargo run --release --example embedding_server [requests]
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::Result;
+use dpq_embed::config::{LrSchedule, RunConfig};
+use dpq_embed::coordinator::{experiments, Trainer};
+use dpq_embed::metrics::LatencyStats;
+use dpq_embed::runtime::Runtime;
+use dpq_embed::server::{Client, EmbeddingServer};
+use dpq_embed::util::Rng;
+
+fn main() -> Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500);
+    let rt = Runtime::new("artifacts")?;
+    let prefix = "lm_ptb_sx_K32D32";
+    eprintln!("training {prefix} briefly to get a real codebook...");
+    let cfg = RunConfig {
+        artifact: prefix.into(),
+        steps: 60,
+        seed: 3,
+        lr: LrSchedule { base: 1.0, decay_after: usize::MAX, decay: 1.0 },
+        log_every: 30,
+        eval_batches: 4,
+        artifacts_dir: "artifacts".into(),
+        checkpoint_dir: None,
+        checkpoint_every: 0,
+        export_every: 0,
+    };
+    let out = Trainer::new(&rt, cfg).quiet().run()?;
+    let ce = experiments::compress_state(&rt, prefix, &out.state, false)?;
+    let vocab = ce.vocab();
+    println!(
+        "serving compressed embedding: {} KiB vs {} KiB full (CR {:.1}x)",
+        ce.storage_bits() / 8 / 1024,
+        vocab * ce.d * 4 / 1024,
+        ce.compression_ratio()
+    );
+
+    let server = Arc::new(EmbeddingServer::new(ce, 64));
+    let stats = server.stats.clone();
+    let (tx, rx) = mpsc::channel();
+    let s2 = server.clone();
+    let handle = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    println!("listening on {addr}; running load test...");
+
+    const CLIENTS: usize = 4;
+    let per_client = requests / CLIENTS;
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|w| {
+            std::thread::spawn(move || -> Result<LatencyStats> {
+                let mut c = Client::connect(addr)?;
+                let mut rng = Rng::new(w as u64 + 100);
+                let mut lat = LatencyStats::default();
+                for _ in 0..per_client {
+                    let ids: Vec<usize> =
+                        (0..8).map(|_| rng.below(2000)).collect();
+                    let t = Instant::now();
+                    let v = c.lookup(&ids)?;
+                    lat.record(t.elapsed().as_secs_f64());
+                    assert_eq!(v.len(), 8);
+                }
+                Ok(lat)
+            })
+        })
+        .collect();
+    let mut all = LatencyStats::default();
+    for w in workers {
+        all.merge(&w.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("lookup latency: {}", all.summary(1.0));
+    println!(
+        "aggregate: {} requests ({} ids) in {wall:.2}s = {:.0} req/s, \
+         {} batches formed",
+        requests,
+        requests * 8,
+        requests as f64 / wall,
+        stats.batches.load(std::sync::atomic::Ordering::Relaxed)
+    );
+
+    let mut c = Client::connect(addr)?;
+    c.shutdown()?;
+    handle.join().unwrap();
+    Ok(())
+}

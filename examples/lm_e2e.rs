@@ -1,0 +1,88 @@
+//! End-to-end validation driver (the EXPERIMENTS.md headline run): train
+//! the PTB-shaped LSTM LM with all three embedding variants for several
+//! hundred steps each, logging the full loss curve, then export + verify
+//! the compressed embedding and print the paper-style summary row.
+//!
+//!     cargo run --release --example lm_e2e [steps]
+
+use anyhow::Result;
+use dpq_embed::config::{LrSchedule, RunConfig};
+use dpq_embed::coordinator::{experiments, Trainer};
+use dpq_embed::dpq::stats as dstats;
+use dpq_embed::metrics;
+use dpq_embed::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let rt = Runtime::new("artifacts")?;
+    let mut summary: Vec<(String, f64, f64, f64)> = Vec::new();
+
+    for (label, prefix) in [
+        ("full", "lm_ptb_full"),
+        ("dpq-sx", "lm_ptb_sx_K32D32"),
+        ("dpq-vq", "lm_ptb_vq_K32D32"),
+    ] {
+        println!("\n===== {label} ({prefix}) =====");
+        let cfg = RunConfig {
+            artifact: prefix.into(),
+            steps,
+            seed: 17,
+            lr: LrSchedule { base: 1.0, decay_after: steps * 2 / 3, decay: 0.5 },
+            log_every: (steps / 20).max(1),
+            eval_batches: 16,
+            artifacts_dir: "artifacts".into(),
+            checkpoint_dir: Some("checkpoints".into()),
+            checkpoint_every: steps / 2,
+            export_every: 0,
+        };
+        let tr = Trainer::new(&rt, cfg);
+        let out = tr.run()?;
+        println!("loss curve (step, ce):");
+        for (s, m) in &out.history {
+            println!("  {s:>5}  {:.4}", m[0]);
+        }
+        let ppl = out.ppl().unwrap();
+        let (cr, util) = if label == "full" {
+            (1.0, f64::NAN)
+        } else {
+            let ce = experiments::compress_state(&rt, prefix, &out.state,
+                                                 false)?;
+            let codes = ce.codebook.to_tensor();
+            (ce.compression_ratio(), dstats::utilization(&codes, ce.codebook.k))
+        };
+        println!(
+            "{label}: held-out ppl {ppl:.2}  CR {cr:.1}x  \
+             steps/s {:.2}{}",
+            out.steps_per_sec,
+            if util.is_nan() {
+                String::new()
+            } else {
+                format!("  code-utilization {util:.2}")
+            }
+        );
+        summary.push((label.to_string(), ppl, cr, out.steps_per_sec));
+    }
+
+    println!("\n===== summary (paper Table 3 row shape) =====");
+    println!("{:<8} {:>10} {:>8} {:>9}", "method", "PPL", "CR", "steps/s");
+    for (l, p, c, s) in &summary {
+        println!("{l:<8} {p:>10.2} {c:>7.1}x {s:>9.2}");
+    }
+    let base = summary[0].1;
+    for (l, p, _, _) in summary.iter().skip(1) {
+        let gap = p - base;
+        println!(
+            "{l}: ppl gap vs full = {gap:+.2} ({})",
+            if gap.abs() < 0.05 * base {
+                "within 5% -- matches the paper's 'negligible cost' claim"
+            } else {
+                "outside 5%"
+            }
+        );
+    }
+    let _ = metrics::perplexity(0.0);
+    Ok(())
+}

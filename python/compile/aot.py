@@ -1,0 +1,678 @@
+"""AOT artifact builder: lowers every (task x embedding-variant x K x D)
+configuration used by the experiments to **HLO text** + a JSON manifest.
+
+This is the only place Python runs; the Rust coordinator loads the HLO via
+`HloModuleProto::from_text_file`, compiles it on the PJRT CPU client, and
+drives training/eval/serving from there.
+
+Interchange is HLO *text*, not `.serialize()`: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact conventions (mirrored by rust/src/runtime/manifest.rs):
+
+  <name>.hlo.txt       HLO text of the entry computation (root is a tuple)
+  <name>.manifest.json {"name", "kind", "inputs": [...], "outputs": [...],
+                        "meta": {...}}
+
+  kind=init    inputs: seed:i32[]             outputs: state...
+  kind=train   inputs: state..., batch..., lr outputs: metrics..., state...
+  kind=eval    inputs: state..., batch...     outputs: metrics...
+  kind=decode  inputs: state..., src          outputs: hyp ids
+  kind=export  inputs: state...               outputs: codes/values/table
+
+State entries are ordered by sorted(name); training artifacts return the
+new state in exactly the input order so the Rust trainer can feed outputs
+straight back in.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--only REGEX] [--list]
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layers, optim
+from .layers import EmbedCfg
+from .models import bert_tiny, lstm_lm, nmt, textclass
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Artifact plumbing
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Arg:
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str           # "f32" | "i32"
+    role: str            # "state" | "input"
+
+    def sds(self):
+        return jax.ShapeDtypeStruct(self.shape, F32 if self.dtype == "f32" else I32)
+
+
+@dataclass
+class Artifact:
+    name: str
+    kind: str
+    fn: Callable          # positional over Arg order
+    args: List[Arg]
+    out_names: List[str]  # names; roles derived from kind
+    out_roles: List[str]
+    meta: dict
+
+
+REGISTRY: List[Artifact] = []
+
+
+def _dt(x):
+    return "i32" if jnp.issubdtype(x.dtype, jnp.integer) else "f32"
+
+
+def _state_args(state0) -> List[Arg]:
+    return [Arg(k, tuple(state0[k].shape), _dt(state0[k]), "state")
+            for k in sorted(state0)]
+
+
+def _shapes_of(init_params, opt):
+    params0 = jax.eval_shape(init_params, jax.random.PRNGKey(0))
+    ostate0 = jax.eval_shape(lambda p: opt.init_state(p), params0)
+    return params0, ostate0
+
+
+def task_bundle(prefix, init_params, loss, metric_names, batch_args,
+                opt_name, meta, with_eval=False):
+    """Registers <prefix>_init and <prefix>_train (and optionally _eval).
+
+    init_params: rng -> params dict
+    loss: (params_dict, *batch) -> (total, *metrics) with
+          len(metrics) == len(metric_names)
+    batch_args: [Arg(role=input)] excluding the trailing lr scalar.
+    """
+    opt = optim.get(opt_name)
+    params0, ostate0 = _shapes_of(init_params, opt)
+    state0 = {**params0, **ostate0}
+    names = sorted(state0)
+    sargs = _state_args(state0)
+    ns = len(names)
+
+    def init_fn(seed):
+        params = init_params(jax.random.PRNGKey(seed))
+        st = {**params, **opt.init_state(params)}
+        return tuple(st[k] for k in names)
+
+    def train_fn(*flat):
+        state = dict(zip(names, flat[:ns]))
+        batch = flat[ns:-1]
+        lr = flat[-1]
+        params = {k: v for k, v in state.items() if not k.startswith("opt/")}
+        ostate = {k: v for k, v in state.items() if k.startswith("opt/")}
+
+        def lf(p):
+            out = loss(p, *batch)
+            return out[0], out[1:]
+
+        (_, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_params, new_ostate = opt.apply(params, grads, ostate, lr)
+        new_state = {**new_params, **new_ostate}
+        return tuple(metrics) + tuple(new_state[k] for k in names)
+
+    def eval_fn(*flat):
+        state = dict(zip(names, flat[:ns]))
+        params = {k: v for k, v in state.items() if not k.startswith("opt/")}
+        out = loss(params, *flat[ns:])
+        return tuple(out[1:])
+
+    REGISTRY.append(Artifact(
+        f"{prefix}_init", "init", init_fn,
+        [Arg("seed", (), "i32", "input")],
+        list(names), ["state"] * ns, meta))
+    REGISTRY.append(Artifact(
+        f"{prefix}_train", "train", train_fn,
+        sargs + batch_args + [Arg("lr", (), "f32", "input")],
+        list(metric_names) + list(names),
+        ["metric"] * len(metric_names) + ["state"] * ns, meta))
+    if with_eval:
+        REGISTRY.append(Artifact(
+            f"{prefix}_eval", "eval", eval_fn,
+            sargs + batch_args, list(metric_names),
+            ["metric"] * len(metric_names), meta))
+    return names, sargs, state0
+
+
+def export_bundle(prefix, init_params, opt_name, ecfg: EmbedCfg, meta):
+    """Registers <prefix>_export: state -> (codes, values, table)."""
+    opt = optim.get(opt_name)
+    params0, ostate0 = _shapes_of(init_params, opt)
+    state0 = {**params0, **ostate0}
+    names = sorted(state0)
+    sargs = _state_args(state0)
+
+    def export_fn(*flat):
+        params = dict(zip(names, flat))
+        if ecfg.variant in ("sx", "vq"):
+            codes = layers.extract_codes(params, ecfg)
+            values = layers.value_matrix(params, ecfg)
+            from .kernels.reconstruct import gather_codes
+            table = gather_codes(codes, values)
+            return codes, values, table
+        table = layers.reconstruct_table(params, ecfg)
+        return (table,)
+
+    if ecfg.variant in ("sx", "vq"):
+        outs = ["codes", "values", "table"]
+    else:
+        outs = ["table"]
+    REGISTRY.append(Artifact(
+        f"{prefix}_export", "export", export_fn, sargs,
+        outs, ["output"] * len(outs), meta))
+
+
+# ---------------------------------------------------------------------------
+# Embedding configs
+# ---------------------------------------------------------------------------
+
+def _ecfg(variant, vocab, d, K=32, D=32, share=False, rank=8, **kw):
+    return EmbedCfg(variant=variant, vocab=vocab, d=d, K=K, D=D,
+                    share=share, rank=rank, **kw)
+
+
+def _emb_meta(e: EmbedCfg):
+    return {
+        "variant": e.variant, "vocab": e.vocab, "d": e.d, "K": e.K,
+        "D": e.D, "share": e.share, "rank": e.rank,
+        "bits": e.bits(), "cr": e.compression_ratio(),
+    }
+
+
+def _suffix(e: EmbedCfg):
+    if e.variant in ("sx", "vq", "chen18"):
+        s = f"{e.variant}_K{e.K}D{e.D}"
+        s += "s" if e.share else ""
+        s += "" if e.dist_bn else "nb"
+        return s
+    if e.variant == "lowrank":
+        return f"lowrank{e.rank}"
+    return e.variant
+
+
+# ---------------------------------------------------------------------------
+# Task families
+# ---------------------------------------------------------------------------
+
+LM_BATCH, LM_SEQ = 16, 24
+
+
+def lm_family(ds, vocab, d, h, ecfg: EmbedCfg, with_eval=False,
+              with_export=False):
+    cfg = lstm_lm.LmCfg(emb=ecfg, hidden=h, batch=LM_BATCH, seq=LM_SEQ)
+    prefix = f"lm_{ds}_{_suffix(ecfg)}"
+    meta = {"task": "lm", "dataset": ds, "hidden": h,
+            "batch": LM_BATCH, "seq": LM_SEQ, "metrics": ["ce"],
+            **_emb_meta(ecfg)}
+    batch = [Arg("x", (LM_BATCH, LM_SEQ), "i32", "input"),
+             Arg("y", (LM_BATCH, LM_SEQ), "i32", "input")]
+
+    def loss(p, x, y):
+        total, ce = lstm_lm.loss_fn(p, x, y, cfg)
+        return total, ce
+
+    task_bundle(prefix, lambda r: lstm_lm.init(r, cfg), loss, ["ce"],
+                batch, "sgd", meta, with_eval=with_eval)
+    if with_export:
+        export_bundle(prefix, lambda r: lstm_lm.init(r, cfg), "sgd", ecfg, meta)
+
+
+NMT_B, NMT_TS, NMT_TT = 32, 14, 16
+
+
+def nmt_family(ds, vocab, ecfg: EmbedCfg, with_eval=False, with_export=False,
+               with_decode=True, h=96):
+    cfg = nmt.NmtCfg(emb=ecfg, tgt_vocab=vocab, hidden=h, batch=NMT_B,
+                     src_len=NMT_TS, tgt_len=NMT_TT)
+    prefix = f"nmt_{ds}_{_suffix(ecfg)}"
+    meta = {"task": "nmt", "dataset": ds, "hidden": h, "batch": NMT_B,
+            "src_len": NMT_TS, "tgt_len": NMT_TT, "tgt_vocab": vocab,
+            "metrics": ["ce"], **_emb_meta(ecfg)}
+    batch = [Arg("src", (NMT_B, NMT_TS), "i32", "input"),
+             Arg("tgt_in", (NMT_B, NMT_TT), "i32", "input"),
+             Arg("tgt_out", (NMT_B, NMT_TT), "i32", "input")]
+
+    def loss(p, src, ti, to):
+        total, ce = nmt.loss_fn(p, src, ti, to, cfg)
+        return total, ce
+
+    names, sargs, _ = task_bundle(
+        prefix, lambda r: nmt.init(r, cfg), loss, ["ce"], batch, "adam",
+        meta, with_eval=with_eval)
+    if with_decode:
+        ns = len(names)
+
+        def decode_fn(*flat):
+            params = {k: v for k, v in zip(names, flat[:ns])
+                      if not k.startswith("opt/")}
+            return (nmt.greedy_decode(params, flat[ns], cfg),)
+
+        REGISTRY.append(Artifact(
+            f"{prefix}_decode", "decode", decode_fn,
+            sargs + [Arg("src", (NMT_B, NMT_TS), "i32", "input")],
+            ["hyp"], ["output"], meta))
+    if with_export:
+        export_bundle(prefix, lambda r: nmt.init(r, cfg), "adam", ecfg, meta)
+
+
+TC_B, TC_T = 32, 32
+
+
+def textc_family(ds, vocab, classes, ecfg: EmbedCfg, with_eval=False):
+    cfg = textclass.TextCfg(emb=ecfg, hidden=64, classes=classes,
+                            batch=TC_B, seq=TC_T)
+    prefix = f"textc_{ds}_{_suffix(ecfg)}"
+    meta = {"task": "textc", "dataset": ds, "classes": classes,
+            "batch": TC_B, "seq": TC_T, "metrics": ["ce", "acc"],
+            **_emb_meta(ecfg)}
+    batch = [Arg("x", (TC_B, TC_T), "i32", "input"),
+             Arg("y", (TC_B,), "i32", "input")]
+
+    def loss(p, x, y):
+        return textclass.loss_fn(p, x, y, cfg)
+
+    task_bundle(prefix, lambda r: textclass.init(r, cfg), loss,
+                ["ce", "acc"], batch, "adam", meta, with_eval=with_eval)
+
+
+BERT_B, BERT_T = 8, 48
+
+
+def bert_family(ecfg: EmbedCfg):
+    cfg = bert_tiny.BertCfg(emb=ecfg, layers_n=2, heads=4, ff=256,
+                            batch=BERT_B, seq=BERT_T, classes=2)
+    prefix = f"bert_{_suffix(ecfg)}"
+    meta = {"task": "bert", "dataset": "synthmlm", "batch": BERT_B,
+            "seq": BERT_T, "classes": 2, "metrics": ["ce"],
+            **_emb_meta(ecfg)}
+    mlm_batch = [Arg("x", (BERT_B, BERT_T), "i32", "input"),
+                 Arg("y", (BERT_B, BERT_T), "i32", "input"),
+                 Arg("w", (BERT_B, BERT_T), "i32", "input")]
+
+    def mlm(p, x, y, w):
+        total, ce = bert_tiny.mlm_loss(p, x, y, w, cfg)
+        return total, ce
+
+    names, sargs, _ = task_bundle(
+        prefix, lambda r: bert_tiny.init(r, cfg), mlm, ["ce"],
+        mlm_batch, "adam", meta)
+
+    # fine-tune probe: same state, classification loss
+    ns = len(names)
+    ft_batch = [Arg("x", (BERT_B, BERT_T), "i32", "input"),
+                Arg("y", (BERT_B,), "i32", "input")]
+    opt = optim.get("adam")
+
+    def ft_train(*flat):
+        state = dict(zip(names, flat[:ns]))
+        x, y, lr = flat[ns], flat[ns + 1], flat[-1]
+        params = {k: v for k, v in state.items() if not k.startswith("opt/")}
+        ostate = {k: v for k, v in state.items() if k.startswith("opt/")}
+
+        def lf(p):
+            total, ce, acc = bert_tiny.cls_loss(p, x, y, cfg)
+            return total, (ce, acc)
+
+        (_, (ce, acc)), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_params, new_ostate = opt.apply(params, grads, ostate, lr)
+        new_state = {**new_params, **new_ostate}
+        return (ce, acc) + tuple(new_state[k] for k in names)
+
+    ft_meta = dict(meta, metrics=["ce", "acc"])
+    REGISTRY.append(Artifact(
+        f"{prefix}_ft_train", "train", ft_train,
+        sargs + ft_batch + [Arg("lr", (), "f32", "input")],
+        ["ce", "acc"] + list(names),
+        ["metric", "metric"] + ["state"] * ns, ft_meta))
+
+
+# ---------------------------------------------------------------------------
+# Chen'18+ (distillation) and Shu'17 (3-step) baselines -- LM medium only
+# ---------------------------------------------------------------------------
+
+def chen18p_family(ds, vocab, d, h):
+    """Chen'18+ : Chen'18 code-learning with an extra distillation loss
+    against a pre-trained full embedding table (passed in as an input)."""
+    ecfg = _ecfg("chen18", vocab, d, K=32, D=16)
+    cfg = lstm_lm.LmCfg(emb=ecfg, hidden=h, batch=LM_BATCH, seq=LM_SEQ)
+    prefix = f"lm_{ds}_chen18p_K{ecfg.K}D{ecfg.D}"
+    meta = {"task": "lm", "dataset": ds, "hidden": h, "batch": LM_BATCH,
+            "seq": LM_SEQ, "metrics": ["ce"], **_emb_meta(ecfg)}
+    opt = optim.get("sgd")
+    params0, ostate0 = _shapes_of(lambda r: lstm_lm.init(r, cfg), opt)
+    state0 = {**params0, **ostate0}
+    names = sorted(state0)
+    sargs = _state_args(state0)
+    ns = len(names)
+
+    def init_fn(seed):
+        p = lstm_lm.init(jax.random.PRNGKey(seed), cfg)
+        st = {**p, **opt.init_state(p)}
+        return tuple(st[k] for k in names)
+
+    def train_fn(*flat):
+        state = dict(zip(names, flat[:ns]))
+        x, y, target, dw, lr = flat[ns], flat[ns + 1], flat[ns + 2], flat[ns + 3], flat[-1]
+        params = {k: v for k, v in state.items() if not k.startswith("opt/")}
+
+        def lf(p):
+            total, ce = lstm_lm.loss_fn(p, x, y, cfg)
+            emb, _ = layers.embed(p, x, ecfg)
+            distill = jnp.mean(jnp.sum((emb - target[x]) ** 2, -1))
+            return total + dw * distill, ce
+
+        (_, ce), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_params, _ = opt.apply(params, grads, {}, lr)
+        return (ce,) + tuple({**new_params}[k] for k in names)
+
+    REGISTRY.append(Artifact(f"{prefix}_init", "init", init_fn,
+                             [Arg("seed", (), "i32", "input")],
+                             list(names), ["state"] * ns, meta))
+    REGISTRY.append(Artifact(
+        f"{prefix}_train", "train", train_fn,
+        sargs + [Arg("x", (LM_BATCH, LM_SEQ), "i32", "input"),
+                 Arg("y", (LM_BATCH, LM_SEQ), "i32", "input"),
+                 Arg("target", (vocab, d), "f32", "input"),
+                 Arg("dw", (), "f32", "input"),
+                 Arg("lr", (), "f32", "input")],
+        ["ce"] + list(names), ["metric"] + ["state"] * ns, meta))
+
+
+def shu17_family(ds, vocab, d, h):
+    """Shu & Nakayama 2017: (2) learn codes that reconstruct a pre-trained
+    table, (3) freeze codes, train the task model over composed embeddings.
+    Step (1) -- training the full model -- reuses lm_<ds>_full."""
+    K, D = 32, 16
+    ecfg = _ecfg("chen18", vocab, d, K=K, D=D)
+
+    # ---- stage 2: code learning (reconstruction autoencoder) ----
+    prefix2 = f"shu17_{ds}_codelearn_K{K}D{D}"
+    meta2 = {"task": "shu17_codelearn", "dataset": ds, "metrics": ["mse"],
+             **_emb_meta(ecfg)}
+    opt2 = optim.get("adam")
+    CB = 256  # rows per reconstruction step
+
+    def init2_params(rng):
+        return layers.init_params(rng, ecfg)
+
+    params0, ostate0 = _shapes_of(init2_params, opt2)
+    st0 = {**params0, **ostate0}
+    names2 = sorted(st0)
+    sargs2 = _state_args(st0)
+    ns2 = len(names2)
+
+    def init2(seed):
+        p = init2_params(jax.random.PRNGKey(seed))
+        st = {**p, **opt2.init_state(p)}
+        return tuple(st[k] for k in names2)
+
+    def train2(*flat):
+        state = dict(zip(names2, flat[:ns2]))
+        ids, rows, lr = flat[ns2], flat[ns2 + 1], flat[-1]
+        params = {k: v for k, v in state.items() if not k.startswith("opt/")}
+        ostate = {k: v for k, v in state.items() if k.startswith("opt/")}
+
+        def lf(p):
+            emb, _ = layers.embed(p, ids, ecfg)
+            mse = jnp.mean(jnp.sum((emb - rows) ** 2, -1))
+            return mse, mse
+
+        (_, mse), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_params, new_ostate = opt2.apply(params, grads, ostate, lr)
+        new_state = {**new_params, **new_ostate}
+        return (mse,) + tuple(new_state[k] for k in names2)
+
+    def export2(*flat):
+        params = dict(zip(names2, flat))
+        logits = params["emb/logits"]
+        return (jnp.argmax(logits, -1).astype(jnp.int32),)
+
+    REGISTRY.append(Artifact(f"{prefix2}_init", "init", init2,
+                             [Arg("seed", (), "i32", "input")],
+                             list(names2), ["state"] * ns2, meta2))
+    REGISTRY.append(Artifact(
+        f"{prefix2}_train", "train", train2,
+        sargs2 + [Arg("ids", (CB,), "i32", "input"),
+                  Arg("rows", (CB, d), "f32", "input"),
+                  Arg("lr", (), "f32", "input")],
+        ["mse"] + list(names2), ["metric"] + ["state"] * ns2, meta2))
+    REGISTRY.append(Artifact(f"{prefix2}_export", "export", export2, sargs2,
+                             ["codes"], ["output"], meta2))
+
+    # ---- stage 3: task training with frozen codes ----
+    prefix3 = f"shu17_{ds}_task_K{K}D{D}"
+    meta3 = {"task": "lm", "dataset": ds, "hidden": h, "batch": LM_BATCH,
+             "seq": LM_SEQ, "metrics": ["ce"], **_emb_meta(ecfg),
+             "frozen_codes": True}
+    opt3 = optim.get("sgd")
+
+    def init3_params(rng):
+        ps = lstm_lm.init(rng, lstm_lm.LmCfg(emb=ecfg, hidden=h,
+                                             batch=LM_BATCH, seq=LM_SEQ))
+        ps.pop("emb/logits")  # codes are frozen inputs in stage 3
+        return ps
+
+    params30, ostate30 = _shapes_of(init3_params, opt3)
+    st30 = {**params30, **ostate30}
+    names3 = sorted(st30)
+    sargs3 = _state_args(st30)
+    ns3 = len(names3)
+    cfg3 = lstm_lm.LmCfg(emb=ecfg, hidden=h, batch=LM_BATCH, seq=LM_SEQ)
+
+    def loss3(p, codes, x, y):
+        onehot = jax.nn.one_hot(codes[x.reshape(-1)], K, dtype=jnp.float32)
+        emb = layers.chen18_compose(onehot, p, ecfg)
+        emb = emb.reshape(x.shape + (d,))
+        # replicate lstm_lm.loss_fn body with a precomputed embedding
+        B = x.shape[0]
+        h0 = jnp.zeros((B, h), jnp.float32)
+        hs = lstm_lm._lstm_scan(p, emb, h0, h0)
+        logits = hs @ p["out/w"] + p["out/b"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+        return ce, ce
+
+    def init3(seed):
+        p = init3_params(jax.random.PRNGKey(seed))
+        st = {**p, **opt3.init_state(p)}
+        return tuple(st[k] for k in names3)
+
+    def train3(*flat):
+        state = dict(zip(names3, flat[:ns3]))
+        # batch first, then the frozen codes (the Trainer appends constant
+        # extra inputs after the generated batch), then lr.
+        x, y, codes, lr = flat[ns3], flat[ns3 + 1], flat[ns3 + 2], flat[-1]
+        params = {k: v for k, v in state.items() if not k.startswith("opt/")}
+
+        def lf(p):
+            return loss3(p, codes, x, y)
+
+        (_, ce), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_params, _ = opt3.apply(params, grads, {}, lr)
+        return (ce,) + tuple(new_params[k] for k in names3)
+
+    REGISTRY.append(Artifact(f"{prefix3}_init", "init", init3,
+                             [Arg("seed", (), "i32", "input")],
+                             list(names3), ["state"] * ns3, meta3))
+    REGISTRY.append(Artifact(
+        f"{prefix3}_train", "train", train3,
+        sargs3 + [Arg("x", (LM_BATCH, LM_SEQ), "i32", "input"),
+                  Arg("y", (LM_BATCH, LM_SEQ), "i32", "input"),
+                  Arg("codes", (vocab, D), "i32", "input"),
+                  Arg("lr", (), "f32", "input")],
+        ["ce"] + list(names3), ["metric"] + ["state"] * ns3, meta3))
+
+
+# ---------------------------------------------------------------------------
+# The full artifact set (see DESIGN.md experiment index)
+# ---------------------------------------------------------------------------
+
+LM_SIZES = {"small": (64, 64), "medium": (128, 128), "large": (256, 256)}
+PTB_VOCAB = 2000
+WIKI2_VOCAB = 4000
+NMT_DATASETS = {"envi": 3000, "vien": 2000, "ende": 4000}
+TC_DATASETS = {"agnews": (8000, 4), "yahoo": (24000, 10),
+               "dbpedia": (16000, 14), "yelpp": (12000, 2),
+               "yelpf": (12000, 5)}
+
+
+def build_registry():
+    # ---- LM / PTB-shaped: Tables 3, 4, 5; Figures 3, 4, 5, 6 ----
+    for size, (d, h) in LM_SIZES.items():
+        ds = f"ptb{size}" if size != "medium" else "ptb"
+        full = size == "medium"
+        lm_family(ds, PTB_VOCAB, d, h, _ecfg("full", PTB_VOCAB, d),
+                  with_eval=full, with_export=full)
+        for v in ("sx", "vq"):
+            lm_family(ds, PTB_VOCAB, d, h, _ecfg(v, PTB_VOCAB, d, K=32, D=32),
+                      with_export=full)
+    # Fig 3 K x D grid + Fig 6 K ladder (LM medium, d=128)
+    d, h = LM_SIZES["medium"]
+    for v in ("sx", "vq"):
+        for K in (2, 8, 32, 128):
+            for D in (8, 32):
+                if (K, D) == (32, 32):
+                    continue  # default config above
+                export = D == 32 and K in (8, 128)  # Fig 6 code tracking
+                lm_family("ptb", PTB_VOCAB, d, h,
+                          _ecfg(v, PTB_VOCAB, d, K=K, D=D),
+                          with_export=export)
+    # ablations (Sec. 2.4): subspace-sharing and distance batch-norm
+    for v in ("sx", "vq"):
+        lm_family("ptb", PTB_VOCAB, d, h,
+                  _ecfg(v, PTB_VOCAB, d, K=32, D=32, share=True))
+        lm_family("ptb", PTB_VOCAB, d, h,
+                  _ecfg(v, PTB_VOCAB, d, K=32, D=32, dist_bn=False))
+    # Chen'18 / Chen'18+ / Shu'17 baselines (Table 4, medium)
+    lm_family("ptb", PTB_VOCAB, d, h, _ecfg("chen18", PTB_VOCAB, d, K=32, D=16))
+    chen18p_family("ptb", PTB_VOCAB, d, h)
+    shu17_family("ptb", PTB_VOCAB, d, h)
+
+    # ---- LM / Wikitext2-shaped (Table 3) ----
+    lm_family("wiki2", WIKI2_VOCAB, d, h, _ecfg("full", WIKI2_VOCAB, d))
+    for v in ("sx", "vq"):
+        lm_family("wiki2", WIKI2_VOCAB, d, h,
+                  _ecfg(v, WIKI2_VOCAB, d, K=32, D=32))
+
+    # ---- NMT (Tables 3, 8; Fig 3 grid on envi) ----
+    for ds, vocab in NMT_DATASETS.items():
+        ende = ds == "ende"
+        nmt_family(ds, vocab, _ecfg("full", vocab, 64), with_eval=ende)
+        for v in ("sx", "vq"):
+            nmt_family(ds, vocab, _ecfg(v, vocab, 64, K=32, D=16),
+                       with_export=ende)
+    for v in ("sx", "vq"):
+        for K in (2, 32, 128):
+            for D in (8, 16):
+                if (K, D) == (32, 16):
+                    continue
+                nmt_family("envi", NMT_DATASETS["envi"],
+                           _ecfg(v, NMT_DATASETS["envi"], 64, K=K, D=D),
+                           with_decode=True)
+
+    # ---- Text classification (Tables 3, 6) ----
+    for ds, (vocab, classes) in TC_DATASETS.items():
+        textc_family(ds, vocab, classes, _ecfg("full", vocab, 64))
+        for v in ("sx", "vq"):
+            textc_family(ds, vocab, classes, _ecfg(v, vocab, 64, K=32, D=16))
+        for rank in (6, 3):  # ~10x and ~20x CR at d=64
+            textc_family(ds, vocab, classes,
+                         _ecfg("lowrank", vocab, 64, rank=rank))
+
+    # ---- BERT (Table 7) ----
+    bert_family(_ecfg("full", 4000, 128))
+    bert_family(_ecfg("sx", 4000, 128, K=32, D=128))
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, arg_sds):
+    # keep_unused: eval/decode/export graphs ignore optimizer slots, but the
+    # Rust runtime passes the full state positionally -- the lowered program
+    # must keep every declared parameter.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_sds)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def emit(art: Artifact, out_dir: str) -> bool:
+    hlo_path = os.path.join(out_dir, f"{art.name}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{art.name}.manifest.json")
+    if os.path.exists(hlo_path) and os.path.exists(man_path):
+        return False
+    arg_sds = [a.sds() for a in art.args]
+    out_shapes = jax.eval_shape(art.fn, *arg_sds)
+    text = to_hlo_text(art.fn, arg_sds)
+    manifest = {
+        "name": art.name,
+        "kind": art.kind,
+        "inputs": [{"name": a.name, "shape": list(a.shape),
+                    "dtype": a.dtype, "role": a.role} for a in art.args],
+        "outputs": [{"name": n, "shape": list(o.shape), "dtype": _dt(o),
+                     "role": r}
+                    for n, o, r in zip(art.out_names, out_shapes,
+                                       art.out_roles)],
+        "meta": art.meta,
+    }
+    tmp = hlo_path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, hlo_path)
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex filter on artifact names")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    build_registry()
+    sel = [a for a in REGISTRY
+           if args.only is None or re.search(args.only, a.name)]
+    if args.list:
+        for a in sel:
+            print(a.name)
+        print(f"{len(sel)} artifacts")
+        return
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+    built = 0
+    for i, a in enumerate(sel):
+        t1 = time.time()
+        if emit(a, args.out_dir):
+            built += 1
+            print(f"[{i + 1}/{len(sel)}] {a.name}  ({time.time() - t1:.1f}s)",
+                  flush=True)
+    print(f"done: {built} built, {len(sel) - built} up-to-date, "
+          f"{time.time() - t0:.0f}s total")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Pallas kernel: DPQ-SX dot-product scores (Eq. 3, pre-softmax logits).
+
+Computes scores[n, j, k] = <Q_n^(j), K_k^(j)> for every token n, subspace j
+and centroid k. This is the DPQ hot-spot: a [N*D, s] x [s, K] contraction
+per subspace, mapped to the MXU on TPU. The token axis is tiled into VMEM
+blocks; the key matrix stays fully resident across the grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import pallas_util as pu
+
+
+def _sx_scores_kernel(q_ref, key_ref, out_ref):
+    """One token block.
+
+    q_ref:   [bn, D, s]   VMEM block of query subvectors
+    key_ref: [K, D, s]    full product-key matrix (resident)
+    out_ref: [bn, D, K]   dot-product scores
+    """
+    q = q_ref[...]
+    k = key_ref[...]
+    # Contract the subspace axis: (bn, D, s) x (K, D, s) -> (bn, D, K).
+    # dot_general with batch dim D keeps the contraction MXU-shaped.
+    out_ref[...] = jax.lax.dot_general(
+        jnp.swapaxes(q, 0, 1),            # [D, bn, s]
+        jnp.transpose(k, (1, 2, 0)),      # [D, s, K]
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).transpose(1, 0, 2)                   # [bn, D, K]
+
+
+def sx_scores(q3, key3, block_n=None):
+    """q3: [N, D, s], key3: [K, D, s] -> [N, D, K] dot-product scores."""
+    N, D, s = q3.shape
+    K = key3.shape[0]
+    if block_n is None:
+        block_n = pu.block_for(D * s, K, D)
+    q3, n_orig = pu.pad_rows(q3, block_n)
+    grid = (q3.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _sx_scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, D, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((K, D, s), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, D, K), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q3.shape[0], D, K), jnp.float32),
+        interpret=True,
+    )(q3, key3)
+    return pu.unpad_rows(out, n_orig)

@@ -1,0 +1,50 @@
+"""Pallas kernel: DPQ-VQ negative squared Euclidean scores (Eq. 6).
+
+scores[n, j, k] = -||Q_n^(j) - K_k^(j)||^2, expanded as
+-(||q||^2 - 2 q.k + ||k||^2) so the bulk of the work is the same MXU
+contraction as DPQ-SX plus two cheap squared-norm reductions. Token axis
+tiled into VMEM blocks; keys resident.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import pallas_util as pu
+
+
+def _vq_scores_kernel(q_ref, key_ref, out_ref):
+    """q_ref: [bn, D, s]; key_ref: [K, D, s]; out_ref: [bn, D, K]."""
+    q = q_ref[...]
+    k = key_ref[...]
+    qk = jax.lax.dot_general(
+        jnp.swapaxes(q, 0, 1),            # [D, bn, s]
+        jnp.transpose(k, (1, 2, 0)),      # [D, s, K]
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).transpose(1, 0, 2)                   # [bn, D, K]
+    qsq = jnp.sum(q * q, axis=-1)[:, :, None]            # [bn, D, 1]
+    ksq = jnp.sum(k * k, axis=-1).T[None, :, :]          # [1, D, K]
+    out_ref[...] = 2.0 * qk - qsq - ksq
+
+
+def vq_scores(q3, key3, block_n=None):
+    """q3: [N, D, s], key3: [K, D, s] -> [N, D, K] = -squared distances."""
+    N, D, s = q3.shape
+    K = key3.shape[0]
+    if block_n is None:
+        block_n = pu.block_for(D * s, K, D)
+    q3, n_orig = pu.pad_rows(q3, block_n)
+    grid = (q3.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _vq_scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, D, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((K, D, s), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, D, K), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q3.shape[0], D, K), jnp.float32),
+        interpret=True,
+    )(q3, key3)
+    return pu.unpad_rows(out, n_orig)

@@ -1,0 +1,61 @@
+"""Shared plumbing for the Pallas kernels.
+
+All kernels tile the token axis N into VMEM-sized blocks and keep the
+product key/value matrices fully resident (they are K*d floats -- tens of
+KiB, far below the ~16 MiB TPU VMEM budget; see DESIGN.md
+section "Hardware adaptation"). The grid iterates over token blocks only.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so kernels are lowered through the Pallas interpreter into
+plain HLO. Block/tiling structure is still the real TPU design.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Default token-block: 128 rows keeps q-block + score-block + out-block
+# comfortably inside VMEM for every configuration exercised in this repo
+# (worst case d=256, K=128, D=128: ~128*256*4 + 128*128*128*4 + 128*256*4
+# which overflows -- the sweep harness lowers the block to 32 for such
+# corner configs via `block_for`).
+DEFAULT_BLOCK_N = 128
+
+# Soft VMEM budget used by `block_for` (bytes). Real TPUs have ~16 MiB;
+# we keep kernels under half of it to leave room for double-buffering.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def block_for(d, K, D, budget=VMEM_BUDGET):
+    """Pick a token-block size whose VMEM footprint fits the budget.
+
+    Footprint per block row: q (d f32) + scores (D*K f32) + out (d f32).
+    Resident key/value: K*d f32 each.
+    """
+    resident = 2 * K * d * 4
+    per_row = (2 * d + D * K) * 4
+    bn = max(8, (budget - resident) // max(per_row, 1))
+    # round down to a power of two, capped at DEFAULT_BLOCK_N
+    b = 8
+    while b * 2 <= min(bn, DEFAULT_BLOCK_N):
+        b *= 2
+    return b
+
+
+def pad_rows(x, block_n):
+    """Pad axis 0 up to a multiple of block_n. Returns (padded, orig_n)."""
+    n = x.shape[0]
+    rem = (-n) % block_n
+    if rem == 0:
+        return x, n
+    pad = [(0, rem)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad), n
+
+
+def unpad_rows(x, n):
+    return x[:n]
+
+
+def cdiv(a, b):
+    return (a + b - 1) // b

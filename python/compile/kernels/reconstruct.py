@@ -1,0 +1,100 @@
+"""Pallas kernels for the selection/reconstruction half of DPQ.
+
+- select_gather: argmax over K + product-value gather (Eq. 1 + Eq. 2),
+  used in the hard forward path of training (inside stop_gradient) and in
+  code extraction.
+- gather_codes: Algorithm 1 -- reconstruct embedding rows from integer KD
+  codes and the value matrix. This is the *inference* hot path the paper
+  claims is as cheap as a plain table lookup; the gather is expressed as a
+  one-hot matmul so it runs on the MXU instead of scalar loads.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import pallas_util as pu
+
+
+def _select_gather_kernel(scores_ref, value_ref, out_ref, codes_ref):
+    """scores: [bn, D, K]; value: [K, D, s] -> out [bn, D*s], codes [bn, D]."""
+    scores = scores_ref[...]
+    v = value_ref[...]
+    codes = jnp.argmax(scores, axis=-1)                    # [bn, D]
+    K = v.shape[0]
+    onehot = jax.nn.one_hot(codes, K, dtype=jnp.float32)   # [bn, D, K]
+    picked = jax.lax.dot_general(
+        jnp.swapaxes(onehot, 0, 1),       # [D, bn, K]
+        jnp.transpose(v, (1, 0, 2)),      # [D, K, s]
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).transpose(1, 0, 2)                   # [bn, D, s]
+    bn = picked.shape[0]
+    out_ref[...] = picked.reshape(bn, -1)
+    codes_ref[...] = codes.astype(jnp.int32)
+
+
+def select_gather(scores, value3, block_n=None):
+    """scores: [N, D, K], value3: [K, D, s] -> (H [N, D*s], codes [N, D])."""
+    N, D, K = scores.shape
+    s = value3.shape[2]
+    if block_n is None:
+        block_n = pu.block_for(D * s, K, D)
+    scores, n_orig = pu.pad_rows(scores, block_n)
+    grid = (scores.shape[0] // block_n,)
+    out, codes = pl.pallas_call(
+        _select_gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, D, K), lambda i: (i, 0, 0)),
+            pl.BlockSpec((K, D, s), lambda i: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, D * s), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((scores.shape[0], D * s), jnp.float32),
+            jax.ShapeDtypeStruct((scores.shape[0], D), jnp.int32),
+        ],
+        interpret=True,
+    )(scores, value3)
+    return pu.unpad_rows(out, n_orig), pu.unpad_rows(codes, n_orig)
+
+
+def _gather_codes_kernel(codes_ref, value_ref, out_ref):
+    """codes: [bn, D] int32; value: [K, D, s] -> out [bn, D*s]."""
+    codes = codes_ref[...]
+    v = value_ref[...]
+    K = v.shape[0]
+    onehot = jax.nn.one_hot(codes, K, dtype=jnp.float32)   # [bn, D, K]
+    picked = jax.lax.dot_general(
+        jnp.swapaxes(onehot, 0, 1),
+        jnp.transpose(v, (1, 0, 2)),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).transpose(1, 0, 2)
+    bn = picked.shape[0]
+    out_ref[...] = picked.reshape(bn, -1)
+
+
+def gather_codes(codes, value3, block_n=None):
+    """codes: int32 [N, D], value3: [K, D, s] -> H [N, D*s] (Algorithm 1)."""
+    N, D = codes.shape
+    K, _, s = value3.shape
+    if block_n is None:
+        block_n = pu.block_for(D * s, K, D)
+    codes, n_orig = pu.pad_rows(codes, block_n)
+    grid = (codes.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _gather_codes_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+            pl.BlockSpec((K, D, s), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, D * s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((codes.shape[0], D * s), jnp.float32),
+        interpret=True,
+    )(codes, value3)
+    return pu.unpad_rows(out, n_orig)

@@ -1,0 +1,100 @@
+"""Pure-jnp reference oracles for the DPQ Pallas kernels.
+
+These are the ground truth the Pallas kernels (dpq_sx.py, dpq_vq.py,
+reconstruct.py) are tested against in python/tests/test_kernels.py.
+Everything here follows the paper's notation:
+
+  Q in R^{N x d}           query rows (the raw embedding rows in use)
+  K in R^{K x D x d/D}     product keys, split into D subspaces
+  V in R^{K x D x d/D}     product values (tied to K for DPQ-VQ)
+  C in {0..K-1}^{N x D}    KD codes (0-based here; the paper is 1-based)
+
+`scores` are always "higher is better": dot products for DPQ-SX (Eq. 3),
+negative squared Euclidean distance for DPQ-VQ (Eq. 6).
+"""
+
+import jax.numpy as jnp
+
+
+def split_subspaces(x, D):
+    """[N, d] -> [N, D, d/D] subspace view (paper's column grouping)."""
+    N, d = x.shape
+    assert d % D == 0, f"d={d} not divisible by D={D}"
+    return x.reshape(N, D, d // D)
+
+
+def merge_subspaces(x):
+    """[N, D, s] -> [N, D*s] (the concat of Eq. 2)."""
+    N, D, s = x.shape
+    return x.reshape(N, D * s)
+
+
+def sx_scores_ref(q3, key3):
+    """Dot-product scores of Eq. 3 (pre-softmax logits).
+
+    q3: [N, D, s], key3: [K, D, s]  ->  [N, D, K]
+    """
+    return jnp.einsum("nds,kds->ndk", q3, key3)
+
+
+def vq_scores_ref(q3, key3):
+    """Negative squared Euclidean distances of Eq. 6 ("higher is better").
+
+    q3: [N, D, s], key3: [K, D, s]  ->  [N, D, K]
+    """
+    # ||q - k||^2 = ||q||^2 - 2 q.k + ||k||^2
+    qsq = jnp.sum(q3 * q3, axis=-1)[:, :, None]           # [N, D, 1]
+    ksq = jnp.sum(key3 * key3, axis=-1).T[None, :, :]     # [1, D, K]
+    qk = jnp.einsum("nds,kds->ndk", q3, key3)             # [N, D, K]
+    return -(qsq - 2.0 * qk + ksq)
+
+
+def dist_bn_ref(scores, eps=1e-5):
+    """Distance batch-normalization (Sec. 2.4): per (j, k), normalize the
+    score distribution over the batch axis N. No learned scale/offset."""
+    mean = jnp.mean(scores, axis=0, keepdims=True)
+    var = jnp.var(scores, axis=0, keepdims=True)
+    return (scores - mean) / jnp.sqrt(var + eps)
+
+
+def codes_ref(scores):
+    """argmax_k over scores -> KD codes. [N, D, K] -> int32 [N, D]."""
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+def gather_codes_ref(codes, value3):
+    """Algorithm 1: index each subspace of V with the code, concat.
+
+    codes: int [N, D], value3: [K, D, s] -> [N, D*s]
+    """
+    D = codes.shape[1]
+    cols = jnp.arange(D)[None, :]                         # [1, D]
+    picked = value3[codes, cols]                          # [N, D, s]
+    return merge_subspaces(picked)
+
+
+def select_gather_ref(scores, value3):
+    """Hard top-1 selection + product-value gather (Eq. 1 + Eq. 2).
+
+    scores: [N, D, K], value3: [K, D, s] -> [N, d]
+    """
+    return gather_codes_ref(codes_ref(scores), value3)
+
+
+def dpq_forward_hard_ref(q, key3, value3, metric="dot", use_bn=False):
+    """End-to-end hard forward: split -> scores -> (BN) -> argmax -> gather.
+
+    q: [N, d]; key3/value3: [K, D, s]; returns ([N, d], codes [N, D]).
+    """
+    D = key3.shape[1]
+    q3 = split_subspaces(q, D)
+    if metric == "dot":
+        scores = sx_scores_ref(q3, key3)
+    elif metric == "l2":
+        scores = vq_scores_ref(q3, key3)
+    else:
+        raise ValueError(metric)
+    if use_bn:
+        scores = dist_bn_ref(scores)
+    codes = codes_ref(scores)
+    return gather_codes_ref(codes, value3), codes

@@ -1,0 +1,329 @@
+"""Embedding-layer variants (L2), all sharing one functional interface:
+
+    embed(params: dict, ids: int32[...], cfg) -> (vectors [..., d], reg_loss)
+
+Variants:
+  - FullEmbedding      : the uncompressed baseline table.
+  - DPQ-SX (Eq. 3-5)   : softmax relaxation; forward emits the *hard*
+                         quantization (computed by the Pallas kernels),
+                         gradient flows through the tau=1 soft path.
+  - DPQ-VQ (Eq. 6-7)   : straight-through centroids with tied K=V and the
+                         VQ-VAE-style regularizer (Sec. 2.3).
+  - LowRankEmbedding   : E = A B end-to-end trained factorization baseline.
+  - Chen18Embedding    : learned KD codes as free logits + MLP composition
+                         (Chen et al. 2018b baseline of Table 4).
+
+The Pallas score kernels are wrapped in jax.custom_vjp: forward runs the
+kernel, backward applies the analytic gradients of the dot / -L2 scores.
+This keeps the kernels usable in the differentiable soft path too.
+"""
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.dpq_sx import sx_scores as _sx_scores_pallas
+from .kernels.dpq_vq import vq_scores as _vq_scores_pallas
+from .kernels.reconstruct import select_gather as _select_gather_pallas
+
+
+@dataclass(frozen=True)
+class EmbedCfg:
+    """Configuration of the embedding layer under compression."""
+    variant: str            # full | sx | vq | lowrank | chen18
+    vocab: int
+    d: int
+    K: int = 32             # centroids per subspace
+    D: int = 32             # number of subspaces (code length)
+    share: bool = False     # subspace-sharing (Sec. 2.4)
+    dist_bn: bool = True    # distance batch-norm (Sec. 2.4)
+    tau: float = 1.0        # softmax temperature of the backward path
+    rank: int = 8           # low-rank baseline rank
+    chen_hidden: int = 64   # Chen'18 MLP hidden width
+    beta: float = 0.25      # VQ commitment coefficient (VQ-VAE style)
+
+    @property
+    def sub(self):
+        assert self.d % self.D == 0
+        return self.d // self.D
+
+    def bits(self) -> float:
+        """Inference-time storage in bits (Sec. 3 'CR' accounting)."""
+        import math
+        n, d, K, D = self.vocab, self.d, self.K, self.D
+        if self.variant == "full":
+            return 32.0 * n * d
+        if self.variant in ("sx", "vq"):
+            value_bits = 32.0 * K * d / (D if self.share else 1)
+            return n * D * math.log2(K) + value_bits
+        if self.variant == "lowrank":
+            return 32.0 * (n * self.rank + self.rank * d)
+        if self.variant == "chen18":
+            # codes + code-embedding table + MLP composition parameters
+            h = self.chen_hidden
+            return (n * D * math.log2(K)
+                    + 32.0 * K * D * self.sub
+                    + 32.0 * (D * self.sub * h + h + h * d + d))
+        raise ValueError(self.variant)
+
+    def compression_ratio(self) -> float:
+        return (32.0 * self.vocab * self.d) / self.bits()
+
+
+# ---------------------------------------------------------------------------
+# Pallas score kernels with analytic VJPs
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def sx_scores(q3, key3):
+    return _sx_scores_pallas(q3, key3)
+
+
+def _sx_scores_fwd(q3, key3):
+    return _sx_scores_pallas(q3, key3), (q3, key3)
+
+
+def _sx_scores_bwd(res, g):
+    q3, key3 = res
+    dq = jnp.einsum("ndk,kds->nds", g, key3)
+    dkey = jnp.einsum("ndk,nds->kds", g, q3)
+    return dq, dkey
+
+
+sx_scores.defvjp(_sx_scores_fwd, _sx_scores_bwd)
+
+
+@jax.custom_vjp
+def vq_scores(q3, key3):
+    return _vq_scores_pallas(q3, key3)
+
+
+def _vq_scores_fwd(q3, key3):
+    return _vq_scores_pallas(q3, key3), (q3, key3)
+
+
+def _vq_scores_bwd(res, g):
+    # s_ndk = -(||q_nd||^2 - 2 q_nd.k_kd + ||k_kd||^2)
+    # ds/dq_nds = -2 (q_nds - k_kds);  ds/dk_kds = 2 (q_nds - k_kds)
+    q3, key3 = res
+    gsum_n = jnp.sum(g, axis=-1)                          # [N, D]
+    dq = -2.0 * (q3 * gsum_n[:, :, None]
+                 - jnp.einsum("ndk,kds->nds", g, key3))
+    gsum_k = jnp.sum(g, axis=0).T                         # [K, D]
+    dkey = 2.0 * (jnp.einsum("ndk,nds->kds", g, q3)
+                  - key3 * gsum_k[:, :, None])
+    return dq, dkey
+
+
+vq_scores.defvjp(_vq_scores_fwd, _vq_scores_bwd)
+
+
+def hard_select(scores, value3):
+    """Non-differentiable hard path (Pallas): argmax + gather.
+
+    Inputs are stop-gradient'ed so autodiff never tries to linearize the
+    pallas_call -- this branch only ever feeds the forward value (Eq. 5/7).
+    """
+    h, codes = _select_gather_pallas(
+        jax.lax.stop_gradient(scores), jax.lax.stop_gradient(value3))
+    return h, codes
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: EmbedCfg):
+    """Returns an ordered dict name -> array for the chosen variant."""
+    n, d, K, D, s = cfg.vocab, cfg.d, cfg.K, cfg.D, cfg.sub
+    Dk = 1 if cfg.share else D
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    ps = {}
+    if cfg.variant == "full":
+        ps["emb/table"] = jax.random.uniform(rng, (n, d), jnp.float32, -0.1, 0.1)
+    elif cfg.variant == "sx":
+        r1, r2, r3 = jax.random.split(rng, 3)
+        ps["emb/q"] = jax.random.uniform(r1, (n, d), jnp.float32, -0.1, 0.1)
+        ps["emb/key"] = jax.random.normal(r2, (K, Dk, s), jnp.float32) * scale
+        ps["emb/value"] = jax.random.normal(r3, (K, Dk, s), jnp.float32) * scale
+    elif cfg.variant == "vq":
+        r1, r2 = jax.random.split(rng)
+        ps["emb/q"] = jax.random.uniform(r1, (n, d), jnp.float32, -0.1, 0.1)
+        # tied key = value ("centroids"); init from the same range as q so
+        # initial assignments are balanced.
+        ps["emb/kv"] = jax.random.uniform(r2, (K, Dk, s), jnp.float32, -0.1, 0.1)
+    elif cfg.variant == "lowrank":
+        r1, r2 = jax.random.split(rng)
+        ps["emb/a"] = jax.random.normal(r1, (n, cfg.rank), jnp.float32) * 0.1
+        ps["emb/b"] = jax.random.normal(r2, (cfg.rank, d), jnp.float32) * scale
+    elif cfg.variant == "chen18":
+        r1, r2, r3, r4 = jax.random.split(rng, 4)
+        h = cfg.chen_hidden
+        ps["emb/logits"] = jax.random.normal(r1, (n, D, K), jnp.float32) * 0.1
+        ps["emb/codeemb"] = jax.random.normal(r2, (K, D, s), jnp.float32) * scale
+        ps["emb/w1"] = jax.random.normal(r3, (D * s, h), jnp.float32) / jnp.sqrt(float(D * s))
+        ps["emb/b1"] = jnp.zeros((h,), jnp.float32)
+        ps["emb/w2"] = jax.random.normal(r4, (h, d), jnp.float32) / jnp.sqrt(float(h))
+        ps["emb/b2"] = jnp.zeros((d,), jnp.float32)
+    else:
+        raise ValueError(cfg.variant)
+    return ps
+
+
+def _expand_key(k, cfg: EmbedCfg):
+    """[K, 1, s] -> [K, D, s] when subspace-sharing is on."""
+    if cfg.share:
+        return jnp.broadcast_to(k, (cfg.K, cfg.D, cfg.sub))
+    return k
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _dpq_rows_sx(q_rows, params, cfg: EmbedCfg):
+    """DPQ-SX over a set of query rows [N, d] -> ([N, d], reg=0)."""
+    q3 = ref.split_subspaces(q_rows, cfg.D)
+    key3 = _expand_key(params["emb/key"], cfg)
+    value3 = _expand_key(params["emb/value"], cfg)
+    scores = sx_scores(q3, key3)
+    if cfg.dist_bn:
+        scores = ref.dist_bn_ref(scores)
+    # tau=1 soft path (differentiable)
+    soft = jax.nn.softmax(scores / cfg.tau, axis=-1)      # [N, D, K]
+    h_soft = jnp.einsum("ndk,kds->nds", soft, value3).reshape(q_rows.shape)
+    # tau=0 hard path (Pallas, inside stop_gradient)
+    h_hard, _ = hard_select(scores, value3)
+    # Eq. 5: forward = hard, backward = soft
+    h = h_soft + jax.lax.stop_gradient(h_hard - h_soft)
+    return h, jnp.zeros((), jnp.float32)
+
+
+def _dpq_rows_vq(q_rows, params, cfg: EmbedCfg):
+    """DPQ-VQ over query rows [N, d] -> ([N, d], reg loss)."""
+    q3 = ref.split_subspaces(q_rows, cfg.D)
+    kv3 = _expand_key(params["emb/kv"], cfg)
+    scores = vq_scores(q3, jax.lax.stop_gradient(kv3))
+    if cfg.dist_bn:
+        scores = ref.dist_bn_ref(scores)
+    codes = jax.lax.stop_gradient(ref.codes_ref(scores))  # [N, D]
+    # differentiable-in-V gather (indexing is linear in V)
+    cols = jnp.arange(cfg.D)[None, :]
+    quant = kv3[codes, cols].reshape(q_rows.shape)        # T(Q), [N, d]
+    # Eq. 7: forward = centroid, gradient passes straight through to Q.
+    h = q_rows - jax.lax.stop_gradient(q_rows - quant)
+    # Sec 2.3 regularizer: pulls centroids to the mean of their members,
+    # plus a VQ-VAE commitment term pulling Q toward its centroid.
+    reg = (jnp.mean(jnp.sum((quant - jax.lax.stop_gradient(q_rows)) ** 2, -1))
+           + cfg.beta * jnp.mean(jnp.sum(
+               (jax.lax.stop_gradient(quant) - q_rows) ** 2, -1)))
+    return h, reg
+
+
+def chen18_compose(onehot, params, cfg: EmbedCfg):
+    """MLP composition of (soft) one-hot codes (Chen'18 / Shu'17 style).
+
+    onehot: [N, D, K] -> [N, d]
+    """
+    code3 = jnp.einsum("ndk,kds->nds", onehot, params["emb/codeemb"])
+    flat = code3.reshape(code3.shape[0], -1)              # [N, D*s]
+    hsz = jnp.tanh(flat @ params["emb/w1"] + params["emb/b1"])
+    return hsz @ params["emb/w2"] + params["emb/b2"]
+
+
+def _chen18_rows(q_ids_rows_unused, params, cfg: EmbedCfg, ids):
+    """Chen'18: free code logits per symbol + MLP composition."""
+    logits = params["emb/logits"][ids]                    # [N, D, K]
+    soft = jax.nn.softmax(logits / cfg.tau, axis=-1)
+    hard = jax.nn.one_hot(jnp.argmax(logits, -1), cfg.K, dtype=jnp.float32)
+    onehot = soft + jax.lax.stop_gradient(hard - soft)    # ST-softmax
+    out = chen18_compose(onehot, params, cfg)
+    return out, jnp.zeros((), jnp.float32)
+
+
+def embed(params, ids, cfg: EmbedCfg):
+    """Look up (and, for DPQ, quantize) embeddings for integer ids.
+
+    ids: int32[...]; returns (vectors [..., d], reg_loss scalar).
+    DPQ is applied to the *accessed* rows only -- the quantization of a row
+    depends only on that row and the shared key/value matrices, so this is
+    exactly the paper's computation restricted to the batch (the distance
+    batch-norm then normalizes over batch tokens, which is the natural
+    reading of 'over batch samples' in Sec. 2.4).
+    """
+    flat = ids.reshape(-1)
+    if cfg.variant == "full":
+        out = params["emb/table"][flat]
+        reg = jnp.zeros((), jnp.float32)
+    elif cfg.variant == "sx":
+        out, reg = _dpq_rows_sx(params["emb/q"][flat], params, cfg)
+    elif cfg.variant == "vq":
+        out, reg = _dpq_rows_vq(params["emb/q"][flat], params, cfg)
+    elif cfg.variant == "lowrank":
+        out = params["emb/a"][flat] @ params["emb/b"]
+        reg = jnp.zeros((), jnp.float32)
+    elif cfg.variant == "chen18":
+        out, reg = _chen18_rows(None, params, cfg, flat)
+    else:
+        raise ValueError(cfg.variant)
+    return out.reshape(ids.shape + (cfg.d,)), reg
+
+
+# ---------------------------------------------------------------------------
+# Whole-vocabulary operations (code extraction / table reconstruction)
+# ---------------------------------------------------------------------------
+
+def extract_codes(params, cfg: EmbedCfg):
+    """Quantize the entire query matrix -> codebook C int32 [n, D].
+
+    Distance BN statistics are computed over the full vocabulary here;
+    training used per-batch statistics (see `embed`).
+    """
+    q3 = ref.split_subspaces(_query_matrix(params, cfg), cfg.D)
+    key3 = _expand_key(params["emb/key"] if cfg.variant == "sx"
+                       else params["emb/kv"], cfg)
+    scores = (sx_scores if cfg.variant == "sx" else vq_scores)(q3, key3)
+    if cfg.dist_bn:
+        scores = ref.dist_bn_ref(scores)
+    value3 = _expand_key(params["emb/value"] if cfg.variant == "sx"
+                         else params["emb/kv"], cfg)
+    _, codes = hard_select(scores, value3)
+    return codes
+
+
+def _query_matrix(params, cfg: EmbedCfg):
+    return params["emb/q"]
+
+
+def value_matrix(params, cfg: EmbedCfg):
+    """The [K, D, s] value matrix kept at inference."""
+    if cfg.variant == "sx":
+        return _expand_key(params["emb/value"], cfg)
+    if cfg.variant == "vq":
+        return _expand_key(params["emb/kv"], cfg)
+    raise ValueError(cfg.variant)
+
+
+def reconstruct_table(params, cfg: EmbedCfg):
+    """Full embedding table as seen at inference time.
+
+    full:    the table itself;  lowrank: A @ B;
+    sx/vq:   gather_codes(extract_codes(Q), V)  (Algorithm 1).
+    """
+    if cfg.variant == "full":
+        return params["emb/table"]
+    if cfg.variant == "lowrank":
+        return params["emb/a"] @ params["emb/b"]
+    if cfg.variant in ("sx", "vq"):
+        from .kernels.reconstruct import gather_codes
+        codes = extract_codes(params, cfg)
+        return gather_codes(codes, value_matrix(params, cfg))
+    if cfg.variant == "chen18":
+        n = cfg.vocab
+        ids = jnp.arange(n, dtype=jnp.int32)
+        out, _ = _chen18_rows(None, params, cfg, ids)
+        return out
+    raise ValueError(cfg.variant)

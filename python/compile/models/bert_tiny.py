@@ -1,0 +1,107 @@
+"""Tiny BERT-style masked-LM (L2) for the Table 7 experiment: a small
+transformer encoder whose input embedding is swappable for DPQ. Masking is
+applied by the Rust coordinator (it supplies masked input ids, original
+target ids and a mask-weight matrix); the graph only computes the weighted
+MLM cross-entropy. A classification probe head (`ft_*`) reuses the encoder
+for the fine-tuning half of Table 7.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+
+
+@dataclass(frozen=True)
+class BertCfg:
+    emb: layers.EmbedCfg
+    layers_n: int
+    heads: int
+    ff: int
+    batch: int
+    seq: int
+    classes: int = 2            # probe task
+    reg_weight: float = 1.0
+
+
+def init(rng, cfg: BertCfg):
+    d = cfg.emb.d
+    rs = jax.random.split(rng, 4 + 6 * cfg.layers_n)
+    ps = layers.init_params(rs[0], cfg.emb)
+    ps["pos/table"] = jax.random.normal(rs[1], (cfg.seq, d), jnp.float32) * 0.02
+    sd = 0.02
+    for l in range(cfg.layers_n):
+        r = rs[4 + 6 * l: 4 + 6 * (l + 1)]
+        ps[f"l{l}/wqkv"] = jax.random.normal(r[0], (d, 3 * d), jnp.float32) * sd
+        ps[f"l{l}/wo"] = jax.random.normal(r[1], (d, d), jnp.float32) * sd
+        ps[f"l{l}/ff1"] = jax.random.normal(r[2], (d, cfg.ff), jnp.float32) * sd
+        ps[f"l{l}/ff1b"] = jnp.zeros((cfg.ff,), jnp.float32)
+        ps[f"l{l}/ff2"] = jax.random.normal(r[3], (cfg.ff, d), jnp.float32) * sd
+        ps[f"l{l}/ff2b"] = jnp.zeros((d,), jnp.float32)
+        ps[f"l{l}/ln1g"] = jnp.ones((d,), jnp.float32)
+        ps[f"l{l}/ln1b"] = jnp.zeros((d,), jnp.float32)
+        ps[f"l{l}/ln2g"] = jnp.ones((d,), jnp.float32)
+        ps[f"l{l}/ln2b"] = jnp.zeros((d,), jnp.float32)
+    ps["mlm/w"] = jax.random.normal(rs[2], (d, cfg.emb.vocab), jnp.float32) * sd
+    ps["mlm/b"] = jnp.zeros((cfg.emb.vocab,), jnp.float32)
+    ps["cls/w"] = jax.random.normal(rs[3], (d, cfg.classes), jnp.float32) * sd
+    ps["cls/b"] = jnp.zeros((cfg.classes,), jnp.float32)
+    return ps
+
+
+def _layer_norm(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _encoder(params, x, cfg: BertCfg):
+    """x int32 [B, T] -> hidden [B, T, d]; also returns DPQ reg loss."""
+    emb, reg = layers.embed(params, x, cfg.emb)
+    h = emb + params["pos/table"][None, :, :]
+    B, T, d = h.shape
+    hd = d // cfg.heads
+    mask = (x != 0)[:, None, None, :]                   # [B,1,1,T]
+    for l in range(cfg.layers_n):
+        qkv = h @ params[f"l{l}/wqkv"]                  # [B,T,3d]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(B, T, cfg.heads, hd).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        att = jnp.where(mask, att, -1e9)
+        att = jax.nn.softmax(att, -1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(B, T, d)
+        h = _layer_norm(h + ctx @ params[f"l{l}/wo"],
+                        params[f"l{l}/ln1g"], params[f"l{l}/ln1b"])
+        ffo = jax.nn.gelu(h @ params[f"l{l}/ff1"] + params[f"l{l}/ff1b"])
+        ffo = ffo @ params[f"l{l}/ff2"] + params[f"l{l}/ff2b"]
+        h = _layer_norm(h + ffo, params[f"l{l}/ln2g"], params[f"l{l}/ln2b"])
+    return h, reg
+
+
+def mlm_loss(params, x, y, w, cfg: BertCfg):
+    """Masked-LM loss. x = masked ids, y = original ids, w = mask weights."""
+    h, reg = _encoder(params, x, cfg)
+    logits = h @ params["mlm/w"] + params["mlm/b"]
+    logp = jax.nn.log_softmax(logits, -1)
+    tok = jnp.take_along_axis(logp, y[..., None], -1)[..., 0]
+    wf = w.astype(jnp.float32)
+    ce = -jnp.sum(tok * wf) / (jnp.sum(wf) + 1e-6)
+    return ce + cfg.reg_weight * reg, ce
+
+
+def cls_loss(params, x, y, cfg: BertCfg):
+    """Fine-tuning probe: first-token pooling + linear head. y int32 [B]."""
+    h, reg = _encoder(params, x, cfg)
+    pooled = h[:, 0, :]
+    logits = pooled @ params["cls/w"] + params["cls/b"]
+    logp = jax.nn.log_softmax(logits, -1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return ce + cfg.reg_weight * reg, ce, acc

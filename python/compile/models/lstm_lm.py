@@ -1,0 +1,64 @@
+"""LSTM language model (L2), the Zaremba et al. (2014) base model of the
+paper's LM experiments, with the input embedding layer swappable for any
+variant in layers.py. The softmax/output table stays uncompressed, matching
+Sec. 3: "we focus on the embedding table in the encoder side".
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+
+
+@dataclass(frozen=True)
+class LmCfg:
+    emb: layers.EmbedCfg
+    hidden: int
+    batch: int
+    seq: int
+    reg_weight: float = 1.0   # weight on the DPQ-VQ regularizer
+
+
+def init(rng, cfg: LmCfg):
+    d, h, v = cfg.emb.d, cfg.hidden, cfg.emb.vocab
+    r_emb, r1, r2, r3 = jax.random.split(rng, 4)
+    ps = layers.init_params(r_emb, cfg.emb)
+    sd = 1.0 / jnp.sqrt(jnp.asarray(h, jnp.float32))
+    ps["lstm/wx"] = jax.random.normal(r1, (d, 4 * h), jnp.float32) * (1.0 / jnp.sqrt(float(d)))
+    ps["lstm/wh"] = jax.random.normal(r2, (h, 4 * h), jnp.float32) * sd
+    ps["lstm/b"] = jnp.zeros((4 * h,), jnp.float32)
+    ps["out/w"] = jax.random.normal(r3, (h, v), jnp.float32) * sd
+    ps["out/b"] = jnp.zeros((v,), jnp.float32)
+    return ps
+
+
+def _lstm_scan(params, emb, h0, c0):
+    """emb: [B, T, d] -> hidden states [B, T, h]."""
+    wx, wh, b = params["lstm/wx"], params["lstm/wh"], params["lstm/b"]
+    hsz = wh.shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        z = x_t @ wx + h @ wh + b
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    xs = jnp.swapaxes(emb, 0, 1)                      # [T, B, d]
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xs)
+    return jnp.swapaxes(hs, 0, 1)                      # [B, T, h]
+
+
+def loss_fn(params, x, y, cfg: LmCfg):
+    """x, y: int32 [B, T]. Returns (total_loss, ce_loss)."""
+    emb, reg = layers.embed(params, x, cfg.emb)
+    B = x.shape[0]
+    h0 = jnp.zeros((B, cfg.hidden), jnp.float32)
+    hs = _lstm_scan(params, emb, h0, h0)
+    logits = hs @ params["out/w"] + params["out/b"]    # [B, T, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+    return ce + cfg.reg_weight * reg, ce

@@ -1,0 +1,130 @@
+"""Seq2seq NMT model (L2): GRU encoder + GRU decoder with dot-product
+attention (Luong et al. 2017 style). The *source/encoder* embedding is the
+compressed variant, the decoder embedding and output softmax stay full,
+matching the paper's Sec. 3 setup.
+
+Conventions: id 0 = PAD, id 1 = BOS, id 2 = EOS.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+
+PAD, BOS, EOS = 0, 1, 2
+
+
+@dataclass(frozen=True)
+class NmtCfg:
+    emb: layers.EmbedCfg        # source-side (compressed)
+    tgt_vocab: int
+    hidden: int
+    batch: int
+    src_len: int
+    tgt_len: int
+    reg_weight: float = 1.0
+
+
+def _gru_params(rng, din, h, prefix):
+    r1, r2 = jax.random.split(rng)
+    si = 1.0 / jnp.sqrt(jnp.asarray(din, jnp.float32))
+    sh = 1.0 / jnp.sqrt(jnp.asarray(h, jnp.float32))
+    return {
+        f"{prefix}/wx": jax.random.normal(r1, (din, 3 * h), jnp.float32) * si,
+        f"{prefix}/wh": jax.random.normal(r2, (h, 3 * h), jnp.float32) * sh,
+        f"{prefix}/b": jnp.zeros((3 * h,), jnp.float32),
+    }
+
+
+def init(rng, cfg: NmtCfg):
+    d, h = cfg.emb.d, cfg.hidden
+    r_emb, r_enc, r_dec, r_demb, r_att, r_out = jax.random.split(rng, 6)
+    ps = layers.init_params(r_emb, cfg.emb)
+    ps.update(_gru_params(r_enc, d, h, "enc"))
+    ps.update(_gru_params(r_dec, d, h, "dec"))
+    ps["dec/emb"] = jax.random.uniform(r_demb, (cfg.tgt_vocab, d), jnp.float32, -0.1, 0.1)
+    ps["att/w"] = jax.random.normal(r_att, (2 * h, h), jnp.float32) / jnp.sqrt(float(2 * h))
+    ps["out/w"] = jax.random.normal(r_out, (h, cfg.tgt_vocab), jnp.float32) / jnp.sqrt(float(h))
+    ps["out/b"] = jnp.zeros((cfg.tgt_vocab,), jnp.float32)
+    return ps
+
+
+def _gru_step(params, prefix, x_t, hprev):
+    wx, wh, b = (params[f"{prefix}/wx"], params[f"{prefix}/wh"], params[f"{prefix}/b"])
+    z = x_t @ wx + hprev @ wh + b
+    hsz = wh.shape[0]
+    r, u, n = z[..., :hsz], z[..., hsz:2 * hsz], z[..., 2 * hsz:]
+    r = jax.nn.sigmoid(r)
+    u = jax.nn.sigmoid(u)
+    # standard GRU candidate: tanh(x Wxn + b_n + r * (h Whn)). The z slice
+    # already contains h Whn once, so add (r - 1) * (h Whn) to gate it.
+    n = jnp.tanh(n + (r - 1.0) * (hprev @ wh[:, 2 * hsz:]))
+    return (1.0 - u) * n + u * hprev
+
+
+def _encode(params, src, cfg: NmtCfg):
+    emb, reg = layers.embed(params, src, cfg.emb)       # [B, Ts, d]
+    B = src.shape[0]
+    h0 = jnp.zeros((B, cfg.hidden), jnp.float32)
+
+    def step(h, x_t):
+        h = _gru_step(params, "enc", x_t, h)
+        return h, h
+
+    xs = jnp.swapaxes(emb, 0, 1)
+    hT, hs = jax.lax.scan(step, h0, xs)
+    states = jnp.swapaxes(hs, 0, 1)                     # [B, Ts, h]
+    mask = (src != PAD).astype(jnp.float32)             # [B, Ts]
+    return states, mask, hT, reg
+
+
+def _attend(params, dec_h, enc_states, enc_mask):
+    """Luong dot attention. dec_h [B,h]; enc_states [B,Ts,h] -> [B,h]."""
+    scores = jnp.einsum("bh,bth->bt", dec_h, enc_states)
+    scores = jnp.where(enc_mask > 0, scores, -1e9)
+    alpha = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bt,bth->bh", alpha, enc_states)
+    att = jnp.tanh(jnp.concatenate([ctx, dec_h], -1) @ params["att/w"])
+    return att
+
+
+def loss_fn(params, src, tgt_in, tgt_out, cfg: NmtCfg):
+    """Teacher-forced CE. src [B,Ts]; tgt_in/tgt_out [B,Tt]."""
+    enc_states, enc_mask, hT, reg = _encode(params, src, cfg)
+    demb = params["dec/emb"][tgt_in]                    # [B, Tt, d]
+
+    def step(h, x_t):
+        h = _gru_step(params, "dec", x_t, h)
+        att = _attend(params, h, enc_states, enc_mask)
+        return h, att
+
+    xs = jnp.swapaxes(demb, 0, 1)
+    _, atts = jax.lax.scan(step, hT, xs)
+    atts = jnp.swapaxes(atts, 0, 1)                     # [B, Tt, h]
+    logits = atts @ params["out/w"] + params["out/b"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_ll = jnp.take_along_axis(logp, tgt_out[..., None], axis=-1)[..., 0]
+    tmask = (tgt_out != PAD).astype(jnp.float32)
+    ce = -jnp.sum(tok_ll * tmask) / (jnp.sum(tmask) + 1e-6)
+    return ce + cfg.reg_weight * reg, ce
+
+
+def greedy_decode(params, src, cfg: NmtCfg):
+    """Greedy decoding for BLEU eval. src [B,Ts] -> hyp int32 [B,Tt]."""
+    enc_states, enc_mask, hT, _ = _encode(params, src, cfg)
+    B = src.shape[0]
+
+    def step(carry, _):
+        h, tok = carry
+        x_t = params["dec/emb"][tok]                    # [B, d]
+        h = _gru_step(params, "dec", x_t, h)
+        att = _attend(params, h, enc_states, enc_mask)
+        logits = att @ params["out/w"] + params["out/b"]
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return (h, nxt), nxt
+
+    tok0 = jnp.full((B,), BOS, jnp.int32)
+    _, toks = jax.lax.scan(step, (hT, tok0), None, length=cfg.tgt_len)
+    return jnp.swapaxes(toks, 0, 1)                     # [B, Tt]

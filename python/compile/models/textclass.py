@@ -1,0 +1,45 @@
+"""fastText-style text classifier (Joulin et al. 2017 / paper Table 2):
+mean pooling of word vectors + one hidden layer. The pooled embedding layer
+is the compressed one.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+
+
+@dataclass(frozen=True)
+class TextCfg:
+    emb: layers.EmbedCfg
+    hidden: int
+    classes: int
+    batch: int
+    seq: int
+    reg_weight: float = 1.0
+
+
+def init(rng, cfg: TextCfg):
+    r_emb, r1, r2 = jax.random.split(rng, 3)
+    ps = layers.init_params(r_emb, cfg.emb)
+    d, h = cfg.emb.d, cfg.hidden
+    ps["mlp/w1"] = jax.random.normal(r1, (d, h), jnp.float32) / jnp.sqrt(float(d))
+    ps["mlp/b1"] = jnp.zeros((h,), jnp.float32)
+    ps["mlp/w2"] = jax.random.normal(r2, (h, cfg.classes), jnp.float32) / jnp.sqrt(float(h))
+    ps["mlp/b2"] = jnp.zeros((cfg.classes,), jnp.float32)
+    return ps
+
+
+def loss_fn(params, x, y, cfg: TextCfg):
+    """x: int32 [B, T] (0 = pad), y: int32 [B]. -> (total, ce, accuracy)."""
+    emb, reg = layers.embed(params, x, cfg.emb)        # [B, T, d]
+    mask = (x != 0).astype(jnp.float32)[..., None]     # pad id 0
+    pooled = jnp.sum(emb * mask, axis=1) / (jnp.sum(mask, axis=1) + 1e-6)
+    hid = jnp.tanh(pooled @ params["mlp/w1"] + params["mlp/b1"])
+    logits = hid @ params["mlp/w2"] + params["mlp/b2"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return ce + cfg.reg_weight * reg, ce, acc

@@ -1,0 +1,76 @@
+"""Functional optimizers compiled *into* the train-step artifacts.
+
+The Rust coordinator owns the optimizer state as opaque named literals; the
+update rule itself lives inside the lowered XLA graph, so Python never runs
+at training time. Two rules cover the paper's setups:
+
+  - sgd   : plain SGD + global-norm gradient clipping (Zaremba et al. LM).
+  - adam  : Adam with bias correction (Transformer/BERT-style tasks; the
+            paper's SM3 is substituted with Adam, see DESIGN.md).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads: dict, max_norm: float) -> dict:
+    total = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    scale = jnp.minimum(1.0, max_norm / (total + 1e-8))
+    return {k: g * scale for k, g in grads.items()}
+
+
+class Sgd:
+    name = "sgd"
+
+    def __init__(self, clip=5.0):
+        self.clip = clip
+
+    def init_state(self, params: dict) -> dict:
+        return {}
+
+    def apply(self, params, grads, state, lr):
+        if self.clip is not None:
+            grads = clip_by_global_norm(grads, self.clip)
+        new_params = {k: p - lr * grads[k] for k, p in params.items()}
+        return new_params, {}
+
+
+class Adam:
+    name = "adam"
+
+    def __init__(self, b1=0.9, b2=0.999, eps=1e-8, clip=None):
+        self.b1, self.b2, self.eps, self.clip = b1, b2, eps, clip
+
+    def init_state(self, params: dict) -> dict:
+        st = {"opt/t": jnp.zeros((), jnp.float32)}
+        for k, p in params.items():
+            st[f"opt/m/{k}"] = jnp.zeros_like(p)
+            st[f"opt/v/{k}"] = jnp.zeros_like(p)
+        return st
+
+    def apply(self, params, grads, state, lr):
+        if self.clip is not None:
+            grads = clip_by_global_norm(grads, self.clip)
+        t = state["opt/t"] + 1.0
+        new_state = {"opt/t": t}
+        new_params = {}
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+        for k, p in params.items():
+            g = grads[k]
+            m = self.b1 * state[f"opt/m/{k}"] + (1.0 - self.b1) * g
+            v = self.b2 * state[f"opt/v/{k}"] + (1.0 - self.b2) * (g * g)
+            mhat = m / bc1
+            vhat = v / bc2
+            new_params[k] = p - lr * mhat / (jnp.sqrt(vhat) + self.eps)
+            new_state[f"opt/m/{k}"] = m
+            new_state[f"opt/v/{k}"] = v
+        return new_params, new_state
+
+
+def get(name: str):
+    if name == "sgd":
+        return Sgd()
+    if name == "adam":
+        return Adam()
+    raise ValueError(name)

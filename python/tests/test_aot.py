@@ -1,0 +1,115 @@
+"""AOT builder tests: registry integrity, manifest consistency with traced
+output shapes, and the state-roundtrip convention the Rust trainer relies
+on (train outputs = metrics + state in input order)."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+
+aot.REGISTRY.clear()
+aot.build_registry()
+ARTS = {a.name: a for a in aot.REGISTRY}
+
+
+class TestRegistry:
+    def test_no_duplicate_names(self):
+        names = [a.name for a in aot.REGISTRY]
+        assert len(names) == len(set(names))
+
+    def test_every_family_has_init_and_train(self):
+        trains = {n[:-6] for n in ARTS if n.endswith("_train")}
+        inits = {n[:-5] for n in ARTS if n.endswith("_init")}
+        # every train has a matching init except bert ft (shares bert init)
+        missing = {t for t in trains if t not in inits
+                   and not t.endswith("_ft")}
+        assert not missing, missing
+
+    def test_kinds_are_known(self):
+        assert {a.kind for a in aot.REGISTRY} <= {
+            "init", "train", "eval", "decode", "export"}
+
+    def test_train_outputs_are_metrics_then_state_in_input_order(self):
+        for a in aot.REGISTRY:
+            if a.kind != "train":
+                continue
+            state_in = [x.name for x in a.args if x.role == "state"]
+            n_metrics = len([r for r in a.out_roles if r == "metric"])
+            state_out = a.out_names[n_metrics:]
+            assert state_out == state_in, a.name
+
+    def test_train_inputs_end_with_lr(self):
+        for a in aot.REGISTRY:
+            if a.kind == "train":
+                assert a.args[-1].name == "lr"
+                assert a.args[-1].dtype == "f32"
+
+    def test_meta_carries_cr_accounting(self):
+        for a in aot.REGISTRY:
+            if a.meta.get("variant") in ("sx", "vq"):
+                assert a.meta["cr"] > 1.0, a.name
+
+
+class TestLoweringRoundtrip:
+    @pytest.mark.parametrize("name", [
+        "lm_ptbsmall_full_train",
+        "lm_ptbsmall_sx_K32D32_train",
+        "lm_ptbsmall_vq_K32D32_train",
+    ])
+    def test_train_step_numerics_match_direct_eval(self, name):
+        """Executing the lowered fn via jax.jit equals calling fn directly;
+        and state threading converges (2 steps on a learnable mapping)."""
+        a = ARTS[name]
+        init = ARTS[name.replace("_train", "_init")]
+        state = init.fn(jnp.asarray(0, jnp.int32))
+        rng = np.random.RandomState(0)
+        vocab = a.meta["vocab"]
+        x = rng.randint(0, vocab, (a.meta["batch"], a.meta["seq"]))
+        y = (x * 7 + 3) % vocab
+        args = list(state) + [jnp.asarray(x, jnp.int32),
+                              jnp.asarray(y, jnp.int32),
+                              jnp.asarray(0.5, jnp.float32)]
+        out1 = a.fn(*args)
+        out2 = jax.jit(a.fn)(*args)
+        np.testing.assert_allclose(out1[0], out2[0], rtol=1e-4, atol=1e-5)
+        # threading: feed state back, loss finite
+        state2 = out1[1:]
+        args2 = list(state2) + args[len(state):]
+        out3 = a.fn(*args2)
+        assert np.isfinite(float(out3[0]))
+
+    def test_export_matches_manifest_shapes(self):
+        a = ARTS["lm_ptb_sx_K32D32_export"]
+        sds = [x.sds() for x in a.args]
+        outs = jax.eval_shape(a.fn, *sds)
+        assert list(outs[0].shape) == [a.meta["vocab"], a.meta["D"]]
+        assert list(outs[2].shape) == [a.meta["vocab"], a.meta["d"]]
+
+
+class TestEmittedFiles:
+    ART_DIR = Path(__file__).resolve().parents[2] / "artifacts"
+
+    @pytest.mark.skipif(not (ART_DIR / "lm_ptb_full_train.manifest.json").exists(),
+                        reason="artifacts not built")
+    def test_manifest_matches_registry(self):
+        man = json.loads(
+            (self.ART_DIR / "lm_ptb_full_train.manifest.json").read_text())
+        a = ARTS["lm_ptb_full_train"]
+        assert [i["name"] for i in man["inputs"]] == [x.name for x in a.args]
+        assert [o["name"] for o in man["outputs"]] == a.out_names
+        assert man["meta"]["vocab"] == a.meta["vocab"]
+
+    @pytest.mark.skipif(not (ART_DIR / "lm_ptb_full_train.hlo.txt").exists(),
+                        reason="artifacts not built")
+    def test_hlo_text_parses_as_hlo_module(self):
+        txt = (self.ART_DIR / "lm_ptb_full_train.hlo.txt").read_text()
+        assert txt.startswith("HloModule")
+        assert "ENTRY" in txt

@@ -1,0 +1,141 @@
+"""Pallas kernels vs the pure-jnp oracle (ref.py) -- the core L1
+correctness signal. hypothesis sweeps shapes / K / D / block sizes."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dpq_sx, dpq_vq, pallas_util, reconstruct, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _mk(n, K, D, s, seed=0):
+    rng = np.random.RandomState(seed)
+    q3 = jnp.asarray(rng.randn(n, D, s), jnp.float32)
+    key3 = jnp.asarray(rng.randn(K, D, s), jnp.float32)
+    val3 = jnp.asarray(rng.randn(K, D, s), jnp.float32)
+    return q3, key3, val3
+
+
+shape_st = st.tuples(
+    st.integers(1, 200),          # n (exercises padding: not block-aligned)
+    st.sampled_from([2, 4, 16, 32]),   # K
+    st.sampled_from([1, 2, 8]),   # D
+    st.sampled_from([1, 2, 4]),   # s
+)
+
+
+class TestScores:
+    @given(shape_st)
+    def test_sx_scores_matches_ref(self, dims):
+        n, K, D, s = dims
+        q3, key3, _ = _mk(n, K, D, s)
+        got = dpq_sx.sx_scores(q3, key3)
+        want = ref.sx_scores_ref(q3, key3)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @given(shape_st)
+    def test_vq_scores_matches_ref(self, dims):
+        n, K, D, s = dims
+        q3, key3, _ = _mk(n, K, D, s)
+        got = dpq_vq.vq_scores(q3, key3)
+        want = ref.vq_scores_ref(q3, key3)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_vq_scores_are_negative_distances(self):
+        q3, key3, _ = _mk(13, 4, 2, 3)
+        scores = np.asarray(dpq_vq.vq_scores(q3, key3))
+        assert (scores <= 1e-5).all()
+
+    def test_identical_row_and_key_scores_zero_distance(self):
+        # a query equal to centroid k must have distance 0 to it
+        _, key3, _ = _mk(1, 8, 4, 2, seed=3)
+        q3 = key3[5][None]                      # [1, D, s]
+        scores = np.asarray(dpq_vq.vq_scores(q3, key3))
+        np.testing.assert_allclose(scores[0, :, 5], 0.0, atol=1e-5)
+
+    @pytest.mark.parametrize("block", [8, 32, 128])
+    def test_block_size_invariance(self, block):
+        q3, key3, _ = _mk(100, 16, 4, 4)
+        a = dpq_sx.sx_scores(q3, key3, block_n=block)
+        b = ref.sx_scores_ref(q3, key3)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+class TestSelectGather:
+    @given(shape_st)
+    def test_select_gather_matches_ref(self, dims):
+        n, K, D, s = dims
+        q3, key3, val3 = _mk(n, K, D, s)
+        scores = ref.sx_scores_ref(q3, key3)
+        h, codes = reconstruct.select_gather(scores, val3)
+        np.testing.assert_allclose(h, ref.select_gather_ref(scores, val3),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(codes, ref.codes_ref(scores))
+
+    @given(shape_st)
+    def test_gather_codes_matches_ref(self, dims):
+        n, K, D, s = dims
+        rng = np.random.RandomState(1)
+        codes = jnp.asarray(rng.randint(0, K, (n, D)), jnp.int32)
+        _, _, val3 = _mk(n, K, D, s)
+        got = reconstruct.gather_codes(codes, val3)
+        np.testing.assert_allclose(got, ref.gather_codes_ref(codes, val3),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_codes_within_range(self):
+        q3, key3, val3 = _mk(77, 8, 4, 2)
+        scores = ref.vq_scores_ref(q3, key3)
+        _, codes = reconstruct.select_gather(scores, val3)
+        codes = np.asarray(codes)
+        assert codes.min() >= 0 and codes.max() < 8
+
+    def test_roundtrip_codes_reconstruct(self):
+        """select_gather output == gather_codes(select codes)."""
+        q3, key3, val3 = _mk(40, 16, 8, 2)
+        scores = ref.sx_scores_ref(q3, key3)
+        h1, codes = reconstruct.select_gather(scores, val3)
+        h2 = reconstruct.gather_codes(codes, val3)
+        np.testing.assert_allclose(h1, h2, rtol=1e-6)
+
+
+class TestDistBn:
+    def test_bn_normalizes_over_batch(self):
+        q3, key3, _ = _mk(256, 8, 4, 2)
+        s = ref.dist_bn_ref(ref.sx_scores_ref(q3, key3))
+        s = np.asarray(s)
+        np.testing.assert_allclose(s.mean(axis=0), 0.0, atol=1e-4)
+        np.testing.assert_allclose(s.std(axis=0), 1.0, atol=1e-2)
+
+    def test_bn_preserves_argmax_monotonic_per_column(self):
+        # BN is a per-(j,k) affine map over N with positive scale; it can
+        # change the argmax across k. This just checks determinism/shape.
+        q3, key3, _ = _mk(64, 8, 4, 2)
+        s = ref.dist_bn_ref(ref.sx_scores_ref(q3, key3))
+        assert s.shape == (64, 4, 8)
+
+
+class TestPallasUtil:
+    @given(st.integers(1, 300), st.sampled_from([8, 32, 128]))
+    def test_pad_unpad_roundtrip(self, n, block):
+        x = jnp.arange(n * 3, dtype=jnp.float32).reshape(n, 3)
+        padded, orig = pallas_util.pad_rows(x, block)
+        assert padded.shape[0] % block == 0
+        np.testing.assert_array_equal(pallas_util.unpad_rows(padded, orig), x)
+
+    def test_block_for_fits_budget(self):
+        for (d, K, D) in [(64, 32, 16), (128, 128, 8), (256, 128, 128)]:
+            b = pallas_util.block_for(d, K, D)
+            resident = 2 * K * d * 4
+            per_row = (2 * d + D * K) * 4
+            assert resident + b * per_row <= pallas_util.VMEM_BUDGET * 1.01
+            assert b >= 8

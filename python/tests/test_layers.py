@@ -1,0 +1,201 @@
+"""L2 embedding-layer tests: forward semantics, gradient identities of the
+two approximation schemes (Eq. 5, Eq. 7), CR accounting, and whole-vocab
+code extraction / reconstruction consistency."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+from compile.kernels import ref
+from compile.layers import EmbedCfg
+
+
+def _cfg(variant, **kw):
+    base = dict(variant=variant, vocab=50, d=16, K=4, D=4)
+    base.update(kw)
+    return EmbedCfg(**base)
+
+
+def _params(cfg, seed=0):
+    return layers.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+IDS = jnp.asarray([[1, 2, 3], [4, 5, 1]], jnp.int32)
+
+
+class TestForward:
+    @pytest.mark.parametrize("variant", ["full", "sx", "vq", "lowrank",
+                                         "chen18"])
+    def test_shapes(self, variant):
+        cfg = _cfg(variant)
+        out, reg = layers.embed(_params(cfg), IDS, cfg)
+        assert out.shape == (2, 3, 16)
+        assert reg.shape == ()
+
+    def test_full_is_plain_lookup(self):
+        cfg = _cfg("full")
+        ps = _params(cfg)
+        out, _ = layers.embed(ps, IDS, cfg)
+        np.testing.assert_allclose(out[0, 0], ps["emb/table"][1])
+
+    @pytest.mark.parametrize("variant", ["sx", "vq"])
+    def test_same_id_same_vector(self, variant):
+        """Quantization is a per-row function: equal ids -> equal outputs
+        (within a batch, where BN statistics are shared)."""
+        cfg = _cfg(variant)
+        out, _ = layers.embed(_params(cfg), IDS, cfg)
+        np.testing.assert_allclose(out[0, 0], out[1, 2], rtol=1e-6)
+
+    @pytest.mark.parametrize("variant", ["sx", "vq"])
+    def test_forward_emits_hard_quantization(self, variant):
+        """Without BN, the forward output must equal the oracle's hard
+        quantization of the accessed query rows."""
+        cfg = _cfg(variant, dist_bn=False)
+        ps = _params(cfg)
+        out, _ = layers.embed(ps, IDS, cfg)
+        q_rows = ps["emb/q"][IDS.reshape(-1)]
+        key = ps["emb/key"] if variant == "sx" else ps["emb/kv"]
+        value = ps["emb/value"] if variant == "sx" else ps["emb/kv"]
+        metric = "dot" if variant == "sx" else "l2"
+        want, _ = ref.dpq_forward_hard_ref(q_rows, key, value, metric=metric)
+        np.testing.assert_allclose(out.reshape(-1, 16), want, rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_subspace_sharing_broadcasts(self):
+        cfg = _cfg("sx", share=True)
+        ps = _params(cfg)
+        assert ps["emb/key"].shape == (4, 1, 4)
+        out, _ = layers.embed(ps, IDS, cfg)
+        assert out.shape == (2, 3, 16)
+
+    def test_vq_reg_positive(self):
+        cfg = _cfg("vq")
+        _, reg = layers.embed(_params(cfg), IDS, cfg)
+        assert float(reg) > 0.0
+
+
+class TestGradients:
+    def test_sx_gradient_matches_soft_path(self):
+        """Eq. 5: backward == gradient of the tau=1 soft path."""
+        cfg = _cfg("sx", dist_bn=False)
+        ps = _params(cfg)
+
+        def through_layer(p):
+            out, _ = layers.embed(p, IDS, cfg)
+            return jnp.sum(out ** 2) * 0.0 + jnp.sum(out * w)
+
+        def soft_only(p):
+            q3 = ref.split_subspaces(p["emb/q"][IDS.reshape(-1)], cfg.D)
+            scores = ref.sx_scores_ref(q3, p["emb/key"])
+            soft = jax.nn.softmax(scores / cfg.tau, -1)
+            h = jnp.einsum("ndk,kds->nds", soft, p["emb/value"])
+            return jnp.sum(h.reshape(IDS.shape + (cfg.d,)) * w)
+
+        w = jax.random.normal(jax.random.PRNGKey(7), IDS.shape + (cfg.d,))
+        g1 = jax.grad(through_layer)(ps)
+        g2 = jax.grad(soft_only)(ps)
+        for k in ("emb/q", "emb/key", "emb/value"):
+            np.testing.assert_allclose(g1[k], g2[k], rtol=1e-4, atol=1e-6)
+
+    def test_vq_gradient_passes_straight_through_to_q(self):
+        """Eq. 7: d/dQ of sum(H * w) == w scattered to accessed rows."""
+        cfg = _cfg("vq", dist_bn=False, beta=0.0)
+        ps = _params(cfg)
+        w = jax.random.normal(jax.random.PRNGKey(8), IDS.shape + (cfg.d,))
+
+        def f(p):
+            out, _ = layers.embed(p, IDS, cfg)
+            return jnp.sum(out * w)
+
+        g = jax.grad(f)(ps)
+        expected = np.zeros_like(np.asarray(ps["emb/q"]))
+        for (b, t), idx in np.ndenumerate(np.asarray(IDS)):
+            expected[idx] += np.asarray(w)[b, t]
+        np.testing.assert_allclose(g["emb/q"], expected, rtol=1e-5, atol=1e-6)
+
+    def test_vq_reg_moves_centroids(self):
+        """The Sec. 2.3 regularizer must produce nonzero centroid grads."""
+        cfg = _cfg("vq", dist_bn=False)
+        ps = _params(cfg)
+
+        def f(p):
+            _, reg = layers.embed(p, IDS, cfg)
+            return reg
+
+        g = jax.grad(f)(ps)
+        assert float(jnp.max(jnp.abs(g["emb/kv"]))) > 0.0
+
+    def test_sx_grad_nonzero_for_all_tables(self):
+        cfg = _cfg("sx")
+        ps = _params(cfg)
+
+        def f(p):
+            out, _ = layers.embed(p, IDS, cfg)
+            return jnp.sum(out ** 2)
+
+        g = jax.grad(f)(ps)
+        for k in ("emb/q", "emb/key", "emb/value"):
+            assert float(jnp.max(jnp.abs(g[k]))) > 0.0, k
+
+
+class TestWholeVocab:
+    @pytest.mark.parametrize("variant", ["sx", "vq"])
+    def test_extract_codes_shape_range(self, variant):
+        cfg = _cfg(variant)
+        codes = layers.extract_codes(_params(cfg), cfg)
+        assert codes.shape == (50, 4)
+        c = np.asarray(codes)
+        assert c.min() >= 0 and c.max() < 4
+
+    @pytest.mark.parametrize("variant", ["sx", "vq"])
+    def test_reconstruct_equals_gather_of_extracted(self, variant):
+        cfg = _cfg(variant, dist_bn=False)
+        ps = _params(cfg)
+        table = layers.reconstruct_table(ps, cfg)
+        codes = layers.extract_codes(ps, cfg)
+        want = ref.gather_codes_ref(codes, layers.value_matrix(ps, cfg))
+        np.testing.assert_allclose(table, want, rtol=1e-6)
+
+    def test_full_rank_proposition1(self):
+        """Prop. 1: with full-rank one-hot codebook B, full-rank V^(j) and
+        KD >= d, the reconstructed table has rank d."""
+        cfg = _cfg("vq", vocab=200, d=16, K=8, D=4, dist_bn=False)
+        ps = _params(cfg)
+        table = np.asarray(layers.reconstruct_table(ps, cfg))
+        # random init at vocab >> K*D almost surely satisfies the premises
+        assert np.linalg.matrix_rank(table, tol=1e-5) == 16
+
+
+class TestCompressionRatio:
+    def test_full_cr_is_one(self):
+        assert _cfg("full").compression_ratio() == 1.0
+
+    def test_paper_formula(self):
+        """CR = 32nd / (nD log2 K + 32Kd) for DPQ without sharing."""
+        import math
+        cfg = _cfg("sx", vocab=10000, d=256, K=32, D=64)
+        want = (32 * 10000 * 256) / (10000 * 64 * math.log2(32)
+                                     + 32 * 32 * 256)
+        assert abs(cfg.compression_ratio() - want) < 1e-9
+
+    def test_sharing_increases_cr(self):
+        a = _cfg("sx", vocab=10000, d=256)
+        b = _cfg("sx", vocab=10000, d=256, share=True)
+        assert b.compression_ratio() > a.compression_ratio()
+
+    def test_cr_grows_with_vocab(self):
+        a = _cfg("sx", vocab=1000, d=64)
+        b = _cfg("sx", vocab=100000, d=64)
+        assert b.compression_ratio() > a.compression_ratio()
+
+    def test_lowrank_cr(self):
+        cfg = _cfg("lowrank", vocab=1000, d=64, rank=8)
+        want = (32 * 1000 * 64) / (32 * (1000 * 8 + 8 * 64))
+        assert abs(cfg.compression_ratio() - want) < 1e-9

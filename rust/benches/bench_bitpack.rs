@@ -1,0 +1,42 @@
+//! Codebook bit-packing throughput: pack / unpack / random access across
+//! K (bit widths). Supports the storage claims of paper Sec. 2.1.
+
+use dpq_embed::dpq::Codebook;
+use dpq_embed::tensor::TensorI;
+use dpq_embed::util::bench::{bench, section};
+use dpq_embed::util::Rng;
+
+fn main() {
+    let n = 50_000usize;
+    let dg = 32usize;
+    for k in [2usize, 8, 32, 128] {
+        section(&format!("n={n} D={dg} K={k}"));
+        let mut rng = Rng::new(k as u64);
+        let codes = TensorI::new(
+            vec![n, dg],
+            (0..n * dg).map(|_| rng.below(k) as i32).collect(),
+        )
+        .unwrap();
+        let cb = Codebook::from_codes(&codes, k).unwrap();
+        let m = bench("pack", 2, 20, || {
+            std::hint::black_box(Codebook::from_codes(&codes, k).unwrap());
+        });
+        println!("   -> {:.1} M codes/s", (n * dg) as f64 / m.mean_s / 1e6);
+        let m = bench("unpack to tensor", 2, 20, || {
+            std::hint::black_box(cb.to_tensor());
+        });
+        println!("   -> {:.1} M codes/s", (n * dg) as f64 / m.mean_s / 1e6);
+        let mut rng2 = Rng::new(7);
+        let rows: Vec<usize> = (0..1024).map(|_| rng2.below(n)).collect();
+        bench("random row access x1024", 5, 100, || {
+            for &r in &rows {
+                std::hint::black_box(cb.row(r));
+            }
+        });
+        println!(
+            "   storage: {} KiB ({} bits/code)",
+            cb.storage_bits() / 8 / 1024,
+            cb.bits()
+        );
+    }
+}

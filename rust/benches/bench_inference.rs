@@ -1,0 +1,66 @@
+//! Inference-path bench (paper Sec. 3.4 / Algorithm 1): embedding lookup
+//! from the compressed codebook vs a plain full-table row copy. The
+//! paper's claim: DPQ inference adds negligible cost. Also measures the
+//! batch (whole-table) reconstruction used at model-load time.
+
+use dpq_embed::dpq::{Codebook, CompressedEmbedding};
+use dpq_embed::tensor::{TensorF, TensorI};
+use dpq_embed::util::bench::{bench, section};
+use dpq_embed::util::Rng;
+
+fn toy(n: usize, k: usize, dg: usize, s: usize) -> (CompressedEmbedding, TensorF) {
+    let mut rng = Rng::new(1);
+    let codes = TensorI::new(vec![n, dg],
+                             (0..n * dg).map(|_| rng.below(k) as i32).collect())
+        .unwrap();
+    let values = TensorF::new(vec![k, dg, s],
+                              (0..k * dg * s).map(|_| rng.normal()).collect())
+        .unwrap();
+    let full = TensorF::new(vec![n, dg * s],
+                            (0..n * dg * s).map(|_| rng.normal()).collect())
+        .unwrap();
+    (
+        CompressedEmbedding::new(Codebook::from_codes(&codes, k).unwrap(),
+                                 values, false)
+            .unwrap(),
+        full,
+    )
+}
+
+fn main() {
+    // PTB-medium shape: n=2000 d=128 K=32 D=32; plus a large-vocab shape.
+    for (n, k, dg, s, label) in [
+        (2000usize, 32usize, 32usize, 4usize, "ptb-medium (n=2k, d=128)"),
+        (50000, 32, 16, 4, "large-vocab (n=50k, d=64)"),
+    ] {
+        section(label);
+        let (ce, full) = toy(n, k, dg, s);
+        let d = dg * s;
+        let mut rng = Rng::new(2);
+        let ids: Vec<usize> = (0..512).map(|_| rng.below(n)).collect();
+        let mut out = vec![0.0f32; d];
+
+        bench("full-table row copy x512", 20, 200, || {
+            for &i in &ids {
+                out.copy_from_slice(full.row(i));
+                std::hint::black_box(&out);
+            }
+        });
+        bench("dpq reconstruct_row x512 (Algorithm 1)", 20, 200, || {
+            for &i in &ids {
+                ce.reconstruct_row_into(i, &mut out);
+                std::hint::black_box(&out);
+            }
+        });
+        let m = bench("dpq reconstruct full table", 3, 20, || {
+            std::hint::black_box(ce.reconstruct_table());
+        });
+        println!(
+            "   -> {:.1} M rows/s whole-table; storage {} KiB vs {} KiB full (CR {:.1}x)",
+            n as f64 / m.mean_s / 1e6,
+            ce.storage_bits() / 8 / 1024,
+            n * d * 4 / 1024,
+            ce.compression_ratio()
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Post-hoc compressor benches (Table 5 baselines): fit + reconstruct
+//! cost of scalar quantization, k-means product quantization and Jacobi
+//! SVD low-rank on a trained-table-shaped matrix.
+
+use dpq_embed::quant::{Compressor, LowRank, ProductQuant, ScalarQuant};
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::bench::{bench, section};
+use dpq_embed::util::Rng;
+
+fn table(n: usize, d: usize) -> TensorF {
+    let mut rng = Rng::new(3);
+    TensorF::new(vec![n, d], (0..n * d).map(|_| rng.normal() * 0.1).collect())
+        .unwrap()
+}
+
+fn main() {
+    let t = table(2000, 128);
+    section("scalar quantization (n=2000, d=128)");
+    for bits in [4u32, 8] {
+        bench(&format!("fit {bits}-bit"), 2, 10, || {
+            std::hint::black_box(ScalarQuant::fit(&t, bits));
+        });
+    }
+    let sq = ScalarQuant::fit(&t, 8);
+    bench("reconstruct 8-bit", 2, 10, || {
+        std::hint::black_box(sq.reconstruct());
+    });
+
+    section("product quantization (k-means, n=2000, d=128)");
+    for (k, dg) in [(32usize, 16usize), (64, 32)] {
+        let m = bench(&format!("fit K={k} D={dg} (10 iters)"), 0, 3, || {
+            std::hint::black_box(ProductQuant::fit(&t, k, dg, 10,
+                                                   &mut Rng::new(5)));
+        });
+        println!("   -> {:.2} s per fit", m.mean_s);
+    }
+    let pq = ProductQuant::fit(&t, 32, 16, 10, &mut Rng::new(5));
+    bench("reconstruct PQ", 2, 10, || {
+        std::hint::black_box(pq.reconstruct());
+    });
+    println!("   CR {:.1}x", pq.compression_ratio(2000, 128));
+
+    section("low-rank SVD (one-sided Jacobi, n=2000, d=128)");
+    for rank in [8usize, 32] {
+        let m = bench(&format!("fit r={rank}"), 0, 3, || {
+            std::hint::black_box(LowRank::fit(&t, rank));
+        });
+        println!("   -> {:.2} s per fit", m.mean_s);
+    }
+    let lr = LowRank::fit(&t, 16);
+    bench("reconstruct low-rank", 2, 10, || {
+        std::hint::black_box(lr.reconstruct());
+    });
+}

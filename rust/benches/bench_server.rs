@@ -1,0 +1,78 @@
+//! Embedding-server throughput bench: closed-loop clients against the
+//! micro-batching TCP server (L3 serving path).
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use dpq_embed::dpq::{Codebook, CompressedEmbedding};
+use dpq_embed::server::{Client, EmbeddingServer};
+use dpq_embed::tensor::{TensorF, TensorI};
+use dpq_embed::util::bench::section;
+use dpq_embed::util::Rng;
+
+fn main() {
+    let (n, k, dg, s) = (10_000usize, 32usize, 16usize, 4usize);
+    let mut rng = Rng::new(1);
+    let codes = TensorI::new(vec![n, dg],
+                             (0..n * dg).map(|_| rng.below(k) as i32).collect())
+        .unwrap();
+    let values = TensorF::new(vec![k, dg, s],
+                              (0..k * dg * s).map(|_| rng.normal()).collect())
+        .unwrap();
+    let ce = CompressedEmbedding::new(
+        Codebook::from_codes(&codes, k).unwrap(), values, false).unwrap();
+
+    for (clients, binary) in [(1usize, false), (1, true), (4, false),
+                              (4, true), (8, false), (8, true)] {
+        section(&format!(
+            "{clients} client(s), 16 ids per request, {} protocol",
+            if binary { "binary" } else { "json" }
+        ));
+        let server = Arc::new(EmbeddingServer::new(ce.clone(), 64));
+        let (tx, rx) = mpsc::channel();
+        let s2 = server.clone();
+        let h = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let per_client = 400usize;
+        let t0 = Instant::now();
+        let d = 64usize; // dg * s
+        let ws: Vec<_> = (0..clients)
+            .map(|w| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    let mut rng = Rng::new(w as u64);
+                    for _ in 0..per_client {
+                        let ids: Vec<usize> =
+                            (0..16).map(|_| rng.below(10_000)).collect();
+                        if binary {
+                            c.lookup_bin(&ids, d).unwrap();
+                        } else {
+                            c.lookup(&ids).unwrap();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for w in ws {
+            w.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let reqs = clients * per_client;
+        println!(
+            "{} requests in {:.2}s = {:.0} req/s, {:.0} ids/s, {} batches",
+            reqs,
+            wall,
+            reqs as f64 / wall,
+            (reqs * 16) as f64 / wall,
+            server
+                .stats
+                .batches
+                .load(std::sync::atomic::Ordering::Relaxed)
+        );
+        let mut c = Client::connect(addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+}

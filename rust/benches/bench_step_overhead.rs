@@ -1,0 +1,60 @@
+//! Train-step overhead bench (paper Fig. 4): wall-clock of one train step
+//! for full vs DPQ-SX vs DPQ-VQ across K and D, through the real PJRT
+//! executables. Prints the relative overhead the paper reports.
+//!
+//! Requires `make artifacts`.
+
+use dpq_embed::coordinator::TaskGen;
+use dpq_embed::runtime::{self, Runtime};
+use dpq_embed::util::bench::{bench, section};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("lm_ptb_full_train.manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(dir).unwrap();
+    let mut step_time = |prefix: &str| -> Option<f64> {
+        if !rt.exists(&format!("{prefix}_train")) {
+            return None;
+        }
+        let init = rt.load(&format!("{prefix}_init")).unwrap();
+        let train = rt.load(&format!("{prefix}_train")).unwrap();
+        let mut state = runtime::run_init(&init, 7).unwrap();
+        let mut gen = TaskGen::from_manifest(&train.manifest, 7).unwrap();
+        let m = bench(prefix, 3, 15, || {
+            let b = gen.next_batch();
+            runtime::run_train(&train, &mut state, &b, 0.1).unwrap();
+        });
+        Some(m.mean_s)
+    };
+
+    section("LM train step (B=16, T=24, vocab=2000, d=128)");
+    let full = step_time("lm_ptb_full").unwrap();
+    let mut rows = Vec::new();
+    for v in ["sx", "vq"] {
+        for k in [2usize, 8, 32, 128] {
+            for d in [8usize, 32] {
+                if let Some(t) = step_time(&format!("lm_ptb_{v}_K{k}D{d}")) {
+                    rows.push((v, k, d, t));
+                }
+            }
+        }
+    }
+    println!("\n{:<8} {:>4} {:>4} {:>10} {:>10}", "variant", "K", "D",
+             "ms/step", "overhead");
+    println!("{:<8} {:>4} {:>4} {:>10.1} {:>10}", "full", "-", "-",
+             full * 1e3, "0.0%");
+    for (v, k, d, t) in rows {
+        println!(
+            "{v:<8} {k:>4} {d:>4} {:>10.1} {:>9.1}%",
+            t * 1e3,
+            100.0 * (t - full) / full
+        );
+    }
+    println!(
+        "\npaper Fig. 4: extra training time within ~10% for most K, D; \
+         growing with K*D as the score computation dominates."
+    );
+}

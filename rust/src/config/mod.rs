@@ -1,0 +1,198 @@
+//! Run configuration for the coordinator: which artifact family to train,
+//! for how long, at what learning-rate schedule, where to checkpoint.
+//! Parsed from simple `key = value` config files (TOML subset) and/or CLI
+//! `--key value` overrides -- the offline build has no serde/clap, so both
+//! parsers live here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Learning-rate schedule: constant warmup-free base LR with optional
+/// multiplicative decay after a step threshold (the Zaremba LM recipe).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub decay_after: usize,
+    pub decay: f32,
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        if step <= self.decay_after || self.decay >= 1.0 {
+            self.base
+        } else {
+            let epochs = (step - self.decay_after) as f32
+                / self.decay_after.max(1) as f32;
+            self.base * self.decay.powf(epochs.ceil())
+        }
+    }
+}
+
+/// A full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// artifact prefix, e.g. "lm_ptb_sx_K32D32"
+    pub artifact: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub lr: LrSchedule,
+    pub log_every: usize,
+    pub eval_batches: usize,
+    pub artifacts_dir: PathBuf,
+    pub checkpoint_dir: Option<PathBuf>,
+    pub checkpoint_every: usize,
+    /// export codes every N steps (0 = never); powers Fig. 6
+    pub export_every: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifact: "lm_ptb_sx_K32D32".into(),
+            steps: 300,
+            seed: 17,
+            lr: LrSchedule { base: 1.0, decay_after: usize::MAX, decay: 1.0 },
+            log_every: 50,
+            eval_batches: 8,
+            artifacts_dir: PathBuf::from("artifacts"),
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            export_every: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse `key = value` lines (comments with #, blank lines ok).
+    pub fn from_kv(text: &str) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        let kv = parse_kv(text)?;
+        cfg.apply(&kv)?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {path:?}: {e}"))?;
+        Self::from_kv(&text)
+    }
+
+    /// Apply overrides (CLI `--key value` pairs arrive as a map too).
+    pub fn apply(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in kv {
+            match k.as_str() {
+                "artifact" => self.artifact = v.clone(),
+                "steps" => self.steps = v.parse()?,
+                "seed" => self.seed = v.parse()?,
+                "lr" => self.lr.base = v.parse()?,
+                "lr_decay_after" => self.lr.decay_after = v.parse()?,
+                "lr_decay" => self.lr.decay = v.parse()?,
+                "log_every" => self.log_every = v.parse()?,
+                "eval_batches" => self.eval_batches = v.parse()?,
+                "artifacts_dir" => self.artifacts_dir = PathBuf::from(v),
+                "checkpoint_dir" => {
+                    self.checkpoint_dir = Some(PathBuf::from(v))
+                }
+                "checkpoint_every" => self.checkpoint_every = v.parse()?,
+                "export_every" => self.export_every = v.parse()?,
+                other => bail!("unknown config key: {other}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a TOML-subset `key = value` document into a string map. Values
+/// may be bare words, numbers, or double-quoted strings.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() || line.starts_with('[') {
+            continue; // section headers tolerated and ignored
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let v = v.trim().trim_matches('"').to_string();
+        out.insert(k.trim().to_string(), v);
+    }
+    Ok(out)
+}
+
+/// Parse CLI tail args of the form `--key value` into a map.
+pub fn parse_cli_overrides(args: &[String]) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --key, got {}", args[i]))?;
+        let v = args
+            .get(i + 1)
+            .ok_or_else(|| anyhow!("--{k} missing value"))?;
+        out.insert(k.replace('-', "_"), v.clone());
+        i += 2;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kv_document() {
+        let cfg = RunConfig::from_kv(
+            "# demo\nartifact = \"lm_ptb_full\"\nsteps = 42\nlr = 0.5\n\
+             [ignored section]\nseed = 9\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.artifact, "lm_ptb_full");
+        assert_eq!(cfg.steps, 42);
+        assert_eq!(cfg.lr.base, 0.5);
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(RunConfig::from_kv("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let kv = parse_cli_overrides(&[
+            "--steps".into(), "10".into(),
+            "--lr-decay".into(), "0.5".into(),
+        ])
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.steps, 10);
+        assert_eq!(cfg.lr.decay, 0.5);
+    }
+
+    #[test]
+    fn cli_rejects_bad_form() {
+        assert!(parse_cli_overrides(&["steps".into(), "10".into()]).is_err());
+        assert!(parse_cli_overrides(&["--steps".into()]).is_err());
+    }
+
+    #[test]
+    fn lr_schedule_decays() {
+        let s = LrSchedule { base: 1.0, decay_after: 100, decay: 0.5 };
+        assert_eq!(s.at(50), 1.0);
+        assert_eq!(s.at(100), 1.0);
+        assert!(s.at(150) < 1.0);
+        assert!(s.at(350) < s.at(150));
+    }
+
+    #[test]
+    fn lr_constant_when_no_decay() {
+        let s = LrSchedule { base: 0.3, decay_after: usize::MAX, decay: 1.0 };
+        assert_eq!(s.at(0), 0.3);
+        assert_eq!(s.at(10_000_000), 0.3);
+    }
+}

@@ -1,0 +1,165 @@
+//! Binary checkpoint format for training state: a simple tagged container
+//! of named tensors (name, dtype, shape, raw little-endian data). Used by
+//! the trainer for periodic snapshots and by the multi-stage experiments
+//! (Shu'17 / distillation) to hand trained tables between stages.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{State, Value};
+use crate::tensor::{TensorF, TensorI};
+
+const MAGIC: &[u8; 4] = b"DPQC";
+
+pub fn save(path: &Path, state: &State) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {path:?}"))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(state.names.len() as u64).to_le_bytes())?;
+    for (name, value) in state.entries() {
+        let value = value?;
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u64).to_le_bytes())?;
+        f.write_all(nb)?;
+        match &value {
+            Value::F(t) => {
+                f.write_all(&[0u8])?;
+                write_shape(&mut f, &t.shape)?;
+                for v in &t.data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Value::I(t) => {
+                f.write_all(&[1u8])?;
+                write_shape(&mut f, &t.shape)?;
+                for v in &t.data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<State> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let count = read_u64(&mut f)? as usize;
+    let mut names = Vec::with_capacity(count);
+    let mut dtypes = Vec::with_capacity(count);
+    let mut lits = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = read_u64(&mut f)? as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        names.push(String::from_utf8(nb).context("name utf8")?);
+        let mut tag = [0u8; 1];
+        f.read_exact(&mut tag)?;
+        let shape = read_shape(&mut f)?;
+        let numel: usize = shape.iter().product();
+        match tag[0] {
+            0 => {
+                let mut data = vec![0.0f32; numel];
+                let mut buf = [0u8; 4];
+                for v in data.iter_mut() {
+                    f.read_exact(&mut buf)?;
+                    *v = f32::from_le_bytes(buf);
+                }
+                dtypes.push("f32".to_string());
+                lits.push(TensorF::new(shape, data)?.to_literal()?);
+            }
+            1 => {
+                let mut data = vec![0i32; numel];
+                let mut buf = [0u8; 4];
+                for v in data.iter_mut() {
+                    f.read_exact(&mut buf)?;
+                    *v = i32::from_le_bytes(buf);
+                }
+                dtypes.push("i32".to_string());
+                lits.push(TensorI::new(shape, data)?.to_literal()?);
+            }
+            t => bail!("bad tensor tag {t}"),
+        }
+    }
+    State::from_literals(names, dtypes, lits)
+}
+
+fn write_shape(f: &mut std::fs::File, shape: &[usize]) -> Result<()> {
+    f.write_all(&(shape.len() as u64).to_le_bytes())?;
+    for &d in shape {
+        f.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_shape(f: &mut std::fs::File) -> Result<Vec<usize>> {
+    let rank = read_u64(f)? as usize;
+    if rank > 16 {
+        bail!("implausible rank {rank}");
+    }
+    (0..rank).map(|_| Ok(read_u64(f)? as usize)).collect()
+}
+
+fn read_u64(f: &mut std::fs::File) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    f.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> State {
+        State::from_literals(
+            vec!["emb/q".into(), "codes".into(), "scalar".into()],
+            vec!["f32".into(), "i32".into(), "f32".into()],
+            vec![
+                TensorF::new(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 9.9, -1e-7])
+                    .unwrap()
+                    .to_literal()
+                    .unwrap(),
+                TensorI::new(vec![4], vec![1, 2, 3, -4])
+                    .unwrap()
+                    .to_literal()
+                    .unwrap(),
+                TensorF::scalar(42.0).to_literal().unwrap(),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("dpq_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.ckpt");
+        let s = sample_state();
+        save(&p, &s).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.names, s.names);
+        for ((_, a), (_, b)) in back.entries().zip(s.entries()) {
+            match (a.unwrap(), b.unwrap()) {
+                (Value::F(x), Value::F(y)) => assert_eq!(x, y),
+                (Value::I(x), Value::I(y)) => assert_eq!(x, y),
+                _ => panic!("dtype changed"),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_magic() {
+        let dir = std::env::temp_dir().join("dpq_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.ckpt");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(load(&p).is_err());
+    }
+}

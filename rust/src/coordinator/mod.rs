@@ -1,0 +1,11 @@
+//! The L3 coordinator: owns the training loop over AOT train-step
+//! executables, the task-specific data generators, BLEU/PPL/accuracy
+//! evaluation, checkpointing, K/D sweep running and the experiment
+//! registry that regenerates every table and figure of the paper.
+
+pub mod checkpoint;
+pub mod experiments;
+pub mod report;
+pub mod trainer;
+
+pub use trainer::{TaskGen, TrainOutcome, Trainer};

@@ -1,0 +1,140 @@
+//! Report writer: renders experiment results as aligned markdown tables
+//! (mirroring the paper's tables) and CSV series (for the figures), and
+//! writes them under `reports/`.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+/// One experiment report accumulating tables / series / notes.
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    body: String,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Self {
+        let mut body = String::new();
+        let _ = writeln!(body, "# {id}: {title}\n");
+        Report { id: id.to_string(), title: title.to_string(), body }
+    }
+
+    pub fn note(&mut self, text: &str) {
+        let _ = writeln!(self.body, "{text}\n");
+    }
+
+    /// Append an aligned markdown table.
+    pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
+        let mut widths: Vec<usize> =
+            header.iter().map(|h| h.len()).collect();
+        for row in rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let w = widths.get(i).copied().unwrap_or(c.len());
+                let _ = write!(s, " {c:<w$} |");
+            }
+            s
+        };
+        let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+        let _ = writeln!(self.body, "{}", line(&hdr));
+        let sep: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(self.body, "{}", line(&sep));
+        for row in rows {
+            let _ = writeln!(self.body, "{}", line(row));
+        }
+        let _ = writeln!(self.body);
+    }
+
+    /// Append a CSV series block (figures): header + rows, fenced.
+    pub fn series(&mut self, name: &str, header: &[&str],
+                  rows: &[Vec<String>]) {
+        let _ = writeln!(self.body, "## series: {name}\n");
+        let _ = writeln!(self.body, "```csv");
+        let _ = writeln!(self.body, "{}", header.join(","));
+        for row in rows {
+            let _ = writeln!(self.body, "{}", row.join(","));
+        }
+        let _ = writeln!(self.body, "```\n");
+    }
+
+    pub fn render(&self) -> &str {
+        &self.body
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.md", self.id));
+        std::fs::write(&path, &self.body)?;
+        Ok(path)
+    }
+}
+
+/// Format helpers shared by experiments.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut r = Report::new("t", "demo");
+        r.table(&["method", "ppl"], &[
+            vec!["full".into(), "83.4".into()],
+            vec!["dpq-sx-long-name".into(), "82.0".into()],
+        ]);
+        let s = r.render();
+        assert!(s.contains("| method"));
+        assert!(s.contains("| dpq-sx-long-name |"));
+        // all rows equal width
+        let lens: Vec<usize> = s.lines()
+            .filter(|l| l.starts_with('|'))
+            .map(|l| l.len())
+            .collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{lens:?}");
+    }
+
+    #[test]
+    fn series_renders_csv() {
+        let mut r = Report::new("f", "fig");
+        r.series("ppl_vs_k", &["k", "ppl"],
+                 &[vec!["2".into(), "90".into()]]);
+        assert!(r.render().contains("k,ppl\n2,90"));
+    }
+
+    #[test]
+    fn save_writes_file() {
+        let dir = std::env::temp_dir().join("dpq_report_test");
+        let r = Report::new("table9", "x");
+        let p = r.save(&dir).unwrap();
+        assert!(p.exists());
+        assert!(std::fs::read_to_string(p).unwrap().contains("table9"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(f1(1.25), "1.2");
+        assert_eq!(pct(0.123), "12.3%");
+    }
+}

@@ -1,0 +1,338 @@
+//! Training-loop driver: given a RunConfig and the artifact family prefix,
+//! run init -> N train steps (fresh synthetic batches each step -- the
+//! synthetic sources are infinite streams, so per-step training loss on an
+//! unseen batch doubles as held-out loss), with periodic logging, metric
+//! history, codebook export (Fig. 6) and checkpointing.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::RunConfig;
+use crate::data::{batcher, synth};
+use crate::metrics;
+use crate::runtime::{self, Artifact, Runtime, State, Value};
+use crate::tensor::{TensorF, TensorI};
+use crate::util::Rng;
+
+/// Task-specific synthetic batch source, dispatched on manifest meta.
+pub enum TaskGen {
+    Lm { src: synth::MarkovLm, batch: usize, seq: usize },
+    Nmt {
+        src: synth::SynthNmt,
+        batch: usize,
+        src_len: usize,
+        tgt_len: usize,
+        /// kept from the last batch for BLEU scoring
+        last_refs: Vec<Vec<i32>>,
+        last_srcs: Vec<Vec<i32>>,
+    },
+    TextC { src: synth::SynthTextC, batch: usize, seq: usize, rng: Rng },
+    Mlm { src: synth::SynthMlm, batch: usize, seq: usize, rng: Rng },
+    /// BERT fine-tune probe: label = first content token in lower half of
+    /// the vocabulary (purely lexical -> learnable through the embedding).
+    Probe { src: synth::SynthMlm, batch: usize, seq: usize },
+    /// Shu'17 stage-2 code learning: random rows of a fixed target table.
+    CodeLearn { table: TensorF, batch: usize, rng: Rng },
+}
+
+impl TaskGen {
+    /// Build from an artifact manifest (task/vocab/shape metadata).
+    ///
+    /// The *structure* of each synthetic dataset (Markov successor table,
+    /// NMT lexical mapping, topic slices) is seeded from the dataset name
+    /// alone, so training / evaluation / BLEU scoring always see the same
+    /// underlying "language"; `seed` only varies the sampled stream.
+    pub fn from_manifest(m: &runtime::Manifest, seed: u64) -> Result<TaskGen> {
+        let task = m.meta_str("task").ok_or_else(|| anyhow!("meta.task"))?;
+        let vocab = m.meta_usize("vocab").unwrap_or(0);
+        let batch = m.meta_usize("batch").unwrap_or(16);
+        let dataset = m.meta_str("dataset").unwrap_or("");
+        let structure = fxhash(dataset);
+        Ok(match task {
+            "lm" => TaskGen::Lm {
+                src: synth::MarkovLm::with_stream(vocab, structure, seed),
+                batch,
+                seq: m.meta_usize("seq").ok_or_else(|| anyhow!("meta.seq"))?,
+            },
+            "nmt" => TaskGen::Nmt {
+                src: synth::SynthNmt::with_stream(
+                    vocab,
+                    m.meta_usize("tgt_vocab").unwrap_or(vocab),
+                    structure,
+                    seed,
+                ),
+                batch,
+                src_len: m.meta_usize("src_len").unwrap(),
+                tgt_len: m.meta_usize("tgt_len").unwrap(),
+                last_refs: vec![],
+                last_srcs: vec![],
+            },
+            // class slices are structural by construction; only sampling
+            // uses the stream seed.
+            "textc" => TaskGen::TextC {
+                src: synth::SynthTextC::new(
+                    vocab,
+                    m.meta_usize("classes").unwrap(),
+                    seed,
+                ),
+                batch,
+                seq: m.meta_usize("seq").unwrap(),
+                rng: Rng::new(seed ^ 0x17),
+            },
+            "bert" => TaskGen::Mlm {
+                src: synth::SynthMlm::with_stream(vocab, structure, seed),
+                batch,
+                seq: m.meta_usize("seq").unwrap(),
+                rng: Rng::new(seed ^ 0x23),
+            },
+            other => bail!("unknown task {other}"),
+        })
+    }
+
+    /// Produce the positional batch inputs the train artifact expects.
+    pub fn next_batch(&mut self) -> Vec<Value> {
+        match self {
+            TaskGen::Lm { src, batch, seq } => {
+                let b = batcher::lm_batch(src, *batch, *seq);
+                vec![Value::I(b.x), Value::I(b.y)]
+            }
+            TaskGen::Nmt { src, batch, src_len, tgt_len, last_refs, last_srcs } => {
+                let b = batcher::nmt_batch(src, *batch, *src_len, *tgt_len);
+                *last_refs = b.refs;
+                *last_srcs = b.srcs;
+                vec![Value::I(b.src), Value::I(b.tgt_in), Value::I(b.tgt_out)]
+            }
+            TaskGen::TextC { src, batch, seq, rng } => {
+                let b = batcher::class_batch(src, *batch, *seq, rng);
+                vec![Value::I(b.x), Value::I(b.y)]
+            }
+            TaskGen::Mlm { src, batch, seq, rng } => {
+                let b = batcher::mlm_batch(src, *batch, *seq, 0.2, rng);
+                vec![Value::I(b.x), Value::I(b.y), Value::I(b.w)]
+            }
+            TaskGen::Probe { src, batch, seq } => {
+                let half = (src.lm.vocab / 2) as i32;
+                let mut xs = Vec::with_capacity(*batch * *seq);
+                let mut ys = Vec::with_capacity(*batch);
+                for _ in 0..*batch {
+                    let s = src.sentence(*seq);
+                    ys.push(if s[1] < half { 0 } else { 1 });
+                    xs.extend(s);
+                }
+                vec![
+                    Value::I(TensorI::new(vec![*batch, *seq], xs).unwrap()),
+                    Value::I(TensorI::new(vec![*batch], ys).unwrap()),
+                ]
+            }
+            TaskGen::CodeLearn { table, batch, rng } => {
+                let n = table.rows();
+                let d = table.cols();
+                let ids: Vec<i32> =
+                    (0..*batch).map(|_| rng.below(n) as i32).collect();
+                let mut rows = Vec::with_capacity(*batch * d);
+                for &i in &ids {
+                    rows.extend_from_slice(table.row(i as usize));
+                }
+                vec![
+                    Value::I(TensorI::new(vec![*batch], ids).unwrap()),
+                    Value::F(TensorF::new(vec![*batch, d], rows).unwrap()),
+                ]
+            }
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Result of a training run.
+pub struct TrainOutcome {
+    pub state: State,
+    /// per-logged-step history: (step, metric values)
+    pub history: Vec<(usize, Vec<f32>)>,
+    /// mean metrics over the final `eval_batches` fresh batches (pre-update
+    /// loss on unseen data = held-out metric)
+    pub final_metrics: Vec<f32>,
+    pub metric_names: Vec<String>,
+    pub steps_per_sec: f64,
+    /// codebook snapshots if export_every > 0: (step, codes)
+    pub code_snapshots: Vec<(usize, TensorI)>,
+}
+
+impl TrainOutcome {
+    pub fn metric(&self, name: &str) -> Option<f32> {
+        self.metric_names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| self.final_metrics[i])
+    }
+
+    pub fn ppl(&self) -> Option<f64> {
+        self.metric("ce").map(|ce| metrics::perplexity(ce as f64))
+    }
+}
+
+/// The training coordinator for one artifact family.
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: RunConfig,
+    /// extra constant inputs appended after the generated batch (before
+    /// lr), e.g. the distillation target table or frozen codes.
+    pub extra_inputs: Vec<Value>,
+    pub quiet: bool,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: RunConfig) -> Self {
+        Trainer { rt, cfg, extra_inputs: vec![], quiet: false }
+    }
+
+    pub fn with_extra(mut self, extra: Vec<Value>) -> Self {
+        self.extra_inputs = extra;
+        self
+    }
+
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Run the configured number of steps; returns the outcome.
+    pub fn run(&self) -> Result<TrainOutcome> {
+        let prefix = &self.cfg.artifact;
+        let init = self.rt.load(&format!("{prefix}_init"))?;
+        let train = self.rt.load(&format!("{prefix}_train"))?;
+        let export = if self.cfg.export_every > 0 {
+            Some(self.rt.load(&format!("{prefix}_export"))?)
+        } else {
+            None
+        };
+        let mut state = runtime::run_init(&init, self.cfg.seed as i32)?;
+        let mut gen = TaskGen::from_manifest(&train.manifest, self.cfg.seed)?;
+        self.run_with(&train, export.as_deref(), &mut state, &mut gen)
+    }
+
+    /// Run with an externally-prepared state and generator (used by the
+    /// multi-stage baselines: distillation, Shu'17, fine-tuning).
+    pub fn run_with(
+        &self,
+        train: &Artifact,
+        export: Option<&Artifact>,
+        state: &mut State,
+        gen: &mut TaskGen,
+    ) -> Result<TrainOutcome> {
+        let metric_names = train.manifest.metric_names();
+        let mut history = Vec::new();
+        let mut code_snapshots = Vec::new();
+        let t0 = Instant::now();
+        let mut window: Vec<Vec<f32>> = Vec::new();
+        for step in 0..self.cfg.steps {
+            let mut batch = gen.next_batch();
+            batch.extend(self.extra_inputs.iter().cloned());
+            let lr = self.cfg.lr.at(step);
+            let out = runtime::run_train(train, state, &batch, lr)?;
+            window.push(out.metrics.clone());
+            if window.len() > self.cfg.eval_batches.max(1) {
+                window.remove(0);
+            }
+            if step % self.cfg.log_every.max(1) == 0
+                || step + 1 == self.cfg.steps
+            {
+                history.push((step, out.metrics.clone()));
+                if !self.quiet {
+                    let ms: Vec<String> = metric_names
+                        .iter()
+                        .zip(&out.metrics)
+                        .map(|(n, v)| format!("{n}={v:.4}"))
+                        .collect();
+                    eprintln!("[{}] step {:>5} lr={:.3} {}",
+                              self.cfg.artifact, step, lr, ms.join(" "));
+                }
+            }
+            if let Some(exp) = export {
+                if self.cfg.export_every > 0
+                    && (step % self.cfg.export_every == 0
+                        || step + 1 == self.cfg.steps)
+                {
+                    let out = runtime::run_aux(exp, state, &[])?;
+                    code_snapshots.push((step, out[0].as_i()?.clone()));
+                }
+            }
+            if let (Some(dir), true) = (
+                self.cfg.checkpoint_dir.as_ref(),
+                self.cfg.checkpoint_every > 0
+                    && step > 0
+                    && step % self.cfg.checkpoint_every.max(1) == 0,
+            ) {
+                checkpoint_now(dir, &self.cfg.artifact, step, state)?;
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        // mean of the trailing window = held-out metric (fresh batches)
+        let k = window.len().max(1);
+        let final_metrics = (0..metric_names.len())
+            .map(|i| window.iter().map(|m| m[i]).sum::<f32>() / k as f32)
+            .collect();
+        Ok(TrainOutcome {
+            state: state.clone(),
+            history,
+            final_metrics,
+            metric_names,
+            steps_per_sec: self.cfg.steps as f64 / elapsed.max(1e-9),
+            code_snapshots,
+        })
+    }
+
+    /// Greedy-decode BLEU for an NMT family: decode fresh batches and
+    /// score against the generator's references.
+    pub fn bleu(&self, state: &State, batches: usize) -> Result<f64> {
+        let prefix = &self.cfg.artifact;
+        let decode = self.rt.load(&format!("{prefix}_decode"))?;
+        let train = self.rt.load(&format!("{prefix}_train"))?;
+        let mut gen = TaskGen::from_manifest(&train.manifest,
+                                             self.cfg.seed ^ 0x5EED)?;
+        bleu_with(&decode, state, &mut gen, batches)
+    }
+}
+
+/// Decode + BLEU against generator references (shared with experiments
+/// that hold a decode artifact directly, e.g. the post-hoc PQ rows of
+/// Table 8 which swap the embedding table inside `state`).
+pub fn bleu_with(decode: &Artifact, state: &State, gen: &mut TaskGen,
+                 batches: usize) -> Result<f64> {
+    let mut pairs = Vec::new();
+    for _ in 0..batches {
+        let b = gen.next_batch(); // fills last_refs/last_srcs
+        let src = b[0].clone();
+        let (refs, _) = match gen {
+            TaskGen::Nmt { last_refs, last_srcs, .. } => (last_refs.clone(), last_srcs.clone()),
+            _ => bail!("bleu_with requires an NMT generator"),
+        };
+        let out = runtime::run_aux(decode, state, &[src])?;
+        let hyp = out[0].as_i()?;
+        if std::env::var("DPQ_DEBUG_DECODE").is_ok() && pairs.is_empty() {
+            for r in 0..3.min(refs.len()) {
+                eprintln!("ref[{r}]: {:?}", &refs[r]);
+                eprintln!("hyp[{r}]: {:?}", hyp.row(r));
+            }
+        }
+        for (r, rf) in refs.iter().enumerate() {
+            pairs.push((metrics::trim_hyp(hyp.row(r)), rf.clone()));
+        }
+    }
+    Ok(metrics::corpus_bleu(&pairs))
+}
+
+fn checkpoint_now(dir: &std::path::Path, artifact: &str, step: usize,
+                  state: &State) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{artifact}_step{step}.ckpt"));
+    super::checkpoint::save(&path, state)
+}

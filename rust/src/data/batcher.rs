@@ -1,0 +1,217 @@
+//! Batchers: convert the synthetic sources into the fixed-shape integer
+//! batches the AOT train/eval artifacts expect (shapes come from artifact
+//! manifests; callers pass batch/seq so shapes always agree).
+
+use super::synth::{MarkovLm, SynthMlm, SynthNmt, SynthTextC};
+use super::{BOS, EOS, PAD};
+use crate::tensor::TensorI;
+use crate::util::Rng;
+
+/// Language-model batch: x = tokens, y = next tokens (BPTT-style).
+pub struct LmBatch {
+    pub x: TensorI,
+    pub y: TensorI,
+}
+
+pub fn lm_batch(src: &mut MarkovLm, batch: usize, seq: usize) -> LmBatch {
+    let mut x = Vec::with_capacity(batch * seq);
+    let mut y = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let toks = src.tokens(seq + 1);
+        x.extend_from_slice(&toks[..seq]);
+        y.extend_from_slice(&toks[1..]);
+    }
+    LmBatch {
+        x: TensorI::new(vec![batch, seq], x).unwrap(),
+        y: TensorI::new(vec![batch, seq], y).unwrap(),
+    }
+}
+
+/// Seq2seq batch with teacher forcing: tgt_in = BOS + tgt, tgt_out = tgt +
+/// EOS, both padded to tgt_len; src padded to src_len.
+pub struct NmtBatch {
+    pub src: TensorI,
+    pub tgt_in: TensorI,
+    pub tgt_out: TensorI,
+    /// unpadded reference targets for BLEU
+    pub refs: Vec<Vec<i32>>,
+    pub srcs: Vec<Vec<i32>>,
+}
+
+pub fn nmt_batch(gen: &mut SynthNmt, batch: usize, src_len: usize,
+                 tgt_len: usize) -> NmtBatch {
+    let mut src = vec![PAD; batch * src_len];
+    let mut tin = vec![PAD; batch * tgt_len];
+    let mut tout = vec![PAD; batch * tgt_len];
+    let mut refs = Vec::with_capacity(batch);
+    let mut srcs = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let max_src = src_len.min(tgt_len - 1); // room for EOS on target
+        let (s, t) = gen.pair(3.min(max_src), max_src);
+        for (i, &v) in s.iter().enumerate() {
+            src[b * src_len + i] = v;
+        }
+        tin[b * tgt_len] = BOS;
+        for (i, &v) in t.iter().enumerate() {
+            if i + 1 < tgt_len {
+                tin[b * tgt_len + i + 1] = v;
+            }
+            tout[b * tgt_len + i] = v;
+        }
+        if t.len() < tgt_len {
+            tout[b * tgt_len + t.len()] = EOS;
+        }
+        refs.push(t);
+        srcs.push(s);
+    }
+    NmtBatch {
+        src: TensorI::new(vec![batch, src_len], src).unwrap(),
+        tgt_in: TensorI::new(vec![batch, tgt_len], tin).unwrap(),
+        tgt_out: TensorI::new(vec![batch, tgt_len], tout).unwrap(),
+        refs,
+        srcs,
+    }
+}
+
+/// Classification batch: x = padded token matrix, y = labels.
+pub struct ClassBatch {
+    pub x: TensorI,
+    pub y: TensorI,
+}
+
+pub fn class_batch(gen: &mut SynthTextC, batch: usize, seq: usize,
+                   rng: &mut Rng) -> ClassBatch {
+    let mut x = vec![PAD; batch * seq];
+    let mut y = vec![0i32; batch];
+    for b in 0..batch {
+        let len = seq / 2 + rng.below(seq / 2);
+        let (toks, label) = gen.doc(len);
+        for (i, &t) in toks.iter().take(seq).enumerate() {
+            x[b * seq + i] = t;
+        }
+        y[b] = label;
+    }
+    ClassBatch {
+        x: TensorI::new(vec![batch, seq], x).unwrap(),
+        y: TensorI::new(vec![batch], y).unwrap(),
+    }
+}
+
+/// MLM batch: x = masked ids, y = original ids, w = mask indicator.
+pub struct MlmBatch {
+    pub x: TensorI,
+    pub y: TensorI,
+    pub w: TensorI,
+}
+
+/// BERT-style masking: `mask_rate` of positions, 80% -> UNK-as-[MASK],
+/// 10% -> random token, 10% -> unchanged.
+pub fn mlm_batch(gen: &mut SynthMlm, batch: usize, seq: usize,
+                 mask_rate: f64, rng: &mut Rng) -> MlmBatch {
+    const MASK: i32 = super::UNK; // reuse UNK slot as [MASK]
+    let vocab = gen.lm.vocab;
+    let mut x = Vec::with_capacity(batch * seq);
+    let mut y = Vec::with_capacity(batch * seq);
+    let mut w = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let s = gen.sentence(seq);
+        for (i, &t) in s.iter().enumerate() {
+            y.push(t);
+            let maskable = i != 0 && i != seq - 1; // keep BOS/EOS intact
+            if maskable && rng.f64() < mask_rate {
+                w.push(1);
+                let roll = rng.f64();
+                if roll < 0.8 {
+                    x.push(MASK);
+                } else if roll < 0.9 {
+                    x.push((super::NUM_SPECIAL + rng.below(vocab - super::NUM_SPECIAL)) as i32);
+                } else {
+                    x.push(t);
+                }
+            } else {
+                w.push(0);
+                x.push(t);
+            }
+        }
+    }
+    MlmBatch {
+        x: TensorI::new(vec![batch, seq], x).unwrap(),
+        y: TensorI::new(vec![batch, seq], y).unwrap(),
+        w: TensorI::new(vec![batch, seq], w).unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn lm_batch_shifted_by_one() {
+        let mut lm = MarkovLm::new(100, 1);
+        let b = lm_batch(&mut lm, 4, 10);
+        assert_eq!(b.x.shape, vec![4, 10]);
+        // within a row, y[t] is the source's continuation; regenerate to
+        // check shapes only (stream is stateful), so check row-consistency:
+        for r in 0..4 {
+            assert_eq!(&b.x.row(r)[1..], &b.y.row(r)[..9]);
+        }
+    }
+
+    #[test]
+    fn nmt_batch_teacher_forcing_layout() {
+        let mut g = SynthNmt::new(200, 200, 2);
+        let b = nmt_batch(&mut g, 8, 10, 12);
+        for r in 0..8 {
+            assert_eq!(b.tgt_in.row(r)[0], BOS);
+            let t = &b.refs[r];
+            // tgt_out row begins with the reference then EOS then PAD
+            assert_eq!(&b.tgt_out.row(r)[..t.len()], &t[..]);
+            assert_eq!(b.tgt_out.row(r)[t.len()], EOS);
+            // tgt_in is tgt_out shifted right by one
+            assert_eq!(&b.tgt_in.row(r)[1..t.len() + 1], &t[..]);
+        }
+    }
+
+    #[test]
+    fn class_batch_labels_in_range() {
+        let mut g = SynthTextC::new(104, 4, 3);
+        let mut rng = Rng::new(4);
+        let b = class_batch(&mut g, 16, 20, &mut rng);
+        assert!(b.y.data.iter().all(|&l| (0..4).contains(&l)));
+        assert_eq!(b.x.shape, vec![16, 20]);
+    }
+
+    #[test]
+    fn mlm_batch_mask_invariants() {
+        let mut g = SynthMlm::new(150, 5);
+        let mut rng = Rng::new(6);
+        let b = mlm_batch(&mut g, 8, 16, 0.3, &mut rng);
+        let mut masked = 0;
+        for i in 0..8 * 16 {
+            if b.w.data[i] == 1 {
+                masked += 1;
+            } else {
+                // unmasked positions pass through unchanged
+                assert_eq!(b.x.data[i], b.y.data[i]);
+            }
+        }
+        let rate = masked as f64 / (8.0 * 14.0); // maskable positions
+        assert!((0.1..0.5).contains(&rate), "mask rate {rate}");
+    }
+
+    #[test]
+    fn prop_batches_never_exceed_vocab() {
+        prop_check(10, |rng| {
+            let vocab = 50 + rng.below(200);
+            let mut lm = MarkovLm::new(vocab, rng.next_u64());
+            let b = lm_batch(&mut lm, 4, 16);
+            prop_assert!(
+                b.x.data.iter().chain(&b.y.data).all(|&t| (t as usize) < vocab),
+                "token out of range (vocab {vocab})"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,179 @@
+//! Byte-pair-encoding subword learner + tokenizer, the in-repo stand-in
+//! for SentencePiece (paper Sec. 3 / WMT19 sub-words). Learns merges over
+//! a word-frequency table, then segments words greedily by learned merge
+//! rank. Word boundaries use the "_" prefix convention like the paper's
+//! code-visualization tables ("_Monday", "monopol", ...).
+
+use std::collections::HashMap;
+
+/// A learned BPE model: ordered merges + the derived token inventory.
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// merge rules in learn order: (left, right) -> merged
+    merges: Vec<(String, String)>,
+    ranks: HashMap<(String, String), usize>,
+}
+
+impl Bpe {
+    /// Learn `num_merges` merges from word counts.
+    pub fn learn(word_counts: &HashMap<String, usize>, num_merges: usize) -> Self {
+        // represent each distinct word as a symbol sequence, "_" marks BOW
+        let mut words: Vec<(Vec<String>, usize)> = word_counts
+            .iter()
+            .map(|(w, &c)| {
+                let mut syms = vec![format!("_{}", first_char(w))];
+                for ch in w.chars().skip(1) {
+                    syms.push(ch.to_string());
+                }
+                (syms, c)
+            })
+            .collect();
+        words.sort_by(|a, b| a.0.cmp(&b.0)); // determinism
+        let mut merges = Vec::new();
+        for _ in 0..num_merges {
+            // count adjacent pairs
+            let mut pair_counts: HashMap<(String, String), usize> = HashMap::new();
+            for (syms, c) in &words {
+                for w in syms.windows(2) {
+                    *pair_counts
+                        .entry((w[0].clone(), w[1].clone()))
+                        .or_insert(0) += c;
+                }
+            }
+            let best = pair_counts
+                .into_iter()
+                .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)));
+            let Some(((l, r), count)) = best else { break };
+            if count < 2 {
+                break;
+            }
+            let merged = format!("{l}{r}");
+            for (syms, _) in words.iter_mut() {
+                let mut i = 0;
+                while i + 1 < syms.len() {
+                    if syms[i] == l && syms[i + 1] == r {
+                        syms[i] = merged.clone();
+                        syms.remove(i + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            merges.push((l, r));
+        }
+        let ranks = merges
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, p)| (p, i))
+            .collect();
+        Bpe { merges, ranks }
+    }
+
+    pub fn num_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Segment one word into subword tokens by applying merges in rank
+    /// order (the standard greedy BPE segmenter).
+    pub fn segment(&self, word: &str) -> Vec<String> {
+        if word.is_empty() {
+            return vec![];
+        }
+        let mut syms = vec![format!("_{}", first_char(word))];
+        for ch in word.chars().skip(1) {
+            syms.push(ch.to_string());
+        }
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, pos)
+            for i in 0..syms.len().saturating_sub(1) {
+                if let Some(&r) =
+                    self.ranks.get(&(syms[i].clone(), syms[i + 1].clone()))
+                {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((_, i)) = best else { break };
+            let merged = format!("{}{}", syms[i], syms[i + 1]);
+            syms[i] = merged;
+            syms.remove(i + 1);
+        }
+        syms
+    }
+
+    /// Tokenize whitespace-split text into subwords.
+    pub fn tokenize(&self, text: &str) -> Vec<String> {
+        text.split_whitespace()
+            .flat_map(|w| self.segment(w))
+            .collect()
+    }
+}
+
+fn first_char(w: &str) -> char {
+    w.chars().next().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(pairs: &[(&str, usize)]) -> HashMap<String, usize> {
+        pairs.iter().map(|(w, c)| (w.to_string(), *c)).collect()
+    }
+
+    #[test]
+    fn learns_frequent_merge_first() {
+        let c = counts(&[("aaab", 100), ("aab", 50), ("xyz", 1)]);
+        let bpe = Bpe::learn(&c, 10);
+        assert!(bpe.num_merges() >= 1);
+        // 'a'+'a' dominates; "aaab" should compress below 4 symbols
+        assert!(bpe.segment("aaab").len() < 4);
+    }
+
+    #[test]
+    fn segment_unknown_word_falls_back_to_chars() {
+        let c = counts(&[("hello", 5)]);
+        let bpe = Bpe::learn(&c, 3);
+        let segs = bpe.segment("zq");
+        assert_eq!(segs, vec!["_z".to_string(), "q".to_string()]);
+    }
+
+    #[test]
+    fn segmentation_concat_reconstructs_word() {
+        let c = counts(&[("lowest", 5), ("lower", 7), ("low", 9), ("newest", 6)]);
+        let bpe = Bpe::learn(&c, 20);
+        for w in ["lowest", "lower", "low", "newest", "newer"] {
+            let joined: String = bpe.segment(w).concat();
+            assert_eq!(joined, format!("_{w}"), "word {w}");
+        }
+    }
+
+    #[test]
+    fn more_merges_fewer_tokens() {
+        let c = counts(&[("internationalization", 50), ("international", 80),
+                         ("nation", 90), ("nationalization", 40)]);
+        let small = Bpe::learn(&c, 2);
+        let large = Bpe::learn(&c, 40);
+        let w = "internationalization";
+        assert!(large.segment(w).len() <= small.segment(w).len());
+    }
+
+    #[test]
+    fn tokenize_splits_on_whitespace() {
+        let c = counts(&[("ab", 10)]);
+        let bpe = Bpe::learn(&c, 5);
+        let toks = bpe.tokenize("ab ab");
+        let joined = toks.concat();
+        assert_eq!(joined, "_ab_ab");
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = counts(&[("abc", 5), ("abd", 5), ("bcd", 5)]);
+        let a = Bpe::learn(&c, 10);
+        let b = Bpe::learn(&c, 10);
+        assert_eq!(a.segment("abcd"), b.segment("abcd"));
+    }
+}

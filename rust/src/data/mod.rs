@@ -1,0 +1,19 @@
+//! Data substrate: vocabulary, tokenizers (whitespace + in-repo BPE
+//! subword learner standing in for SentencePiece), synthetic corpus
+//! generators for every task family (see DESIGN.md "Substitutions"), and
+//! batchers (LM BPTT, padded seq2seq, classification, MLM masking).
+
+pub mod batcher;
+pub mod bpe;
+pub mod synth;
+pub mod vocab;
+
+pub use batcher::{ClassBatch, LmBatch, MlmBatch, NmtBatch};
+pub use vocab::Vocab;
+
+/// Reserved token ids shared across the pipeline (match python/compile).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+pub const NUM_SPECIAL: usize = 4;

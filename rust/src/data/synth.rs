@@ -1,0 +1,331 @@
+//! Synthetic workload generators -- the stand-ins for the paper's corpora
+//! (PTB/Wikitext LM, IWSLT/WMT NMT, AG-News-family classification, BERT
+//! pre-training text). Each generator produces a *learnable* task whose
+//! difficulty is controlled, so compression-induced capacity loss shows up
+//! in the metric exactly as it does on the real datasets (see DESIGN.md
+//! "Substitutions" for the argument).
+
+use super::bpe::Bpe;
+use super::{BOS, EOS, NUM_SPECIAL};
+use crate::util::Rng;
+
+/// Zipfian Markov-chain language source: unigram ranks are Zipf(s), and
+/// each token has a sparse successor distribution (low conditional
+/// entropy), so an LM that can represent tokens well predicts well.
+pub struct MarkovLm {
+    pub vocab: usize,
+    succ: Vec<[i32; 4]>, // per token: 4 preferred successors
+    rng: Rng,
+    state: i32,
+    #[allow(dead_code)]
+    zipf_s: f64,
+    /// mixing weight of the deterministic bigram structure
+    pub coherence: f64,
+}
+
+impl MarkovLm {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        Self::with_stream(vocab, seed, seed ^ 0xC0FFEE)
+    }
+
+    /// `structure_seed` fixes the language itself (the successor table);
+    /// `stream_seed` only varies which sentences are drawn. Training and
+    /// evaluation must share the structure seed or they would literally
+    /// speak different languages.
+    pub fn with_stream(vocab: usize, structure_seed: u64,
+                       stream_seed: u64) -> Self {
+        assert!(vocab > NUM_SPECIAL + 8);
+        let mut rng = Rng::new(structure_seed);
+        let succ = (0..vocab)
+            .map(|_| {
+                [
+                    sample_tok(&mut rng, vocab),
+                    sample_tok(&mut rng, vocab),
+                    sample_tok(&mut rng, vocab),
+                    sample_tok(&mut rng, vocab),
+                ]
+            })
+            .collect();
+        MarkovLm {
+            vocab,
+            succ,
+            rng: Rng::new(stream_seed),
+            state: NUM_SPECIAL as i32,
+            zipf_s: 1.1,
+            coherence: 0.85,
+        }
+    }
+
+    pub fn next_token(&mut self) -> i32 {
+        let t = if self.rng.f64() < self.coherence {
+            let opts = &self.succ[self.state as usize];
+            opts[self.rng.below(4)]
+        } else {
+            sample_tok(&mut self.rng, self.vocab)
+        };
+        self.state = t;
+        t
+    }
+
+    pub fn tokens(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.next_token()).collect()
+    }
+}
+
+fn sample_tok(rng: &mut Rng, vocab: usize) -> i32 {
+    (NUM_SPECIAL + rng.zipf(vocab - NUM_SPECIAL, 1.1)) as i32
+}
+
+/// Synthetic translation task: target = deterministic lexical relabel of
+/// the source with a local swap (tests reordering), plus EOS. Solvable to
+/// near-perfect BLEU by an attentive seq2seq, so embedding-compression
+/// damage is visible.
+pub struct SynthNmt {
+    pub src_vocab: usize,
+    pub tgt_vocab: usize,
+    map: Vec<i32>,
+    rng: Rng,
+    src_zipf: f64,
+}
+
+impl SynthNmt {
+    pub fn new(src_vocab: usize, tgt_vocab: usize, seed: u64) -> Self {
+        Self::with_stream(src_vocab, tgt_vocab, seed, seed ^ 0xBEEF)
+    }
+
+    /// `structure_seed` fixes the lexical mapping (the "language pair");
+    /// `stream_seed` varies the sampled sentences only.
+    pub fn with_stream(src_vocab: usize, tgt_vocab: usize,
+                       structure_seed: u64, stream_seed: u64) -> Self {
+        let mut rng = Rng::new(structure_seed);
+        // bijective-ish lexical mapping src -> tgt
+        let mut targets: Vec<i32> = (0..src_vocab)
+            .map(|i| (NUM_SPECIAL + (i * 7 + 5) % (tgt_vocab - NUM_SPECIAL)) as i32)
+            .collect();
+        rng.shuffle(&mut targets);
+        SynthNmt {
+            src_vocab,
+            tgt_vocab,
+            map: targets,
+            rng: Rng::new(stream_seed),
+            // head-heavy source unigrams: the frequent-word mappings are
+            // learnable within a few hundred steps (so BLEU moves), while
+            // the long tail still exercises the full embedding table.
+            src_zipf: 1.5,
+        }
+    }
+
+    /// One (src, tgt) pair; src length in [min_len, max_len].
+    pub fn pair(&mut self, min_len: usize, max_len: usize) -> (Vec<i32>, Vec<i32>) {
+        let len = min_len + self.rng.below(max_len - min_len + 1);
+        let src: Vec<i32> = (0..len)
+            .map(|_| {
+                (NUM_SPECIAL
+                    + self.rng.zipf(self.src_vocab - NUM_SPECIAL, self.src_zipf))
+                    as i32
+            })
+            .collect();
+        let mut tgt: Vec<i32> =
+            src.iter().map(|&s| self.map[s as usize]).collect();
+        // deterministic local reordering: swap each adjacent pair
+        let mut i = 0;
+        while i + 1 < tgt.len() {
+            tgt.swap(i, i + 1);
+            i += 2;
+        }
+        (src, tgt)
+    }
+
+    /// Reference translation of a given source (for BLEU scoring).
+    pub fn reference(&self, src: &[i32]) -> Vec<i32> {
+        let mut tgt: Vec<i32> =
+            src.iter().map(|&s| self.map[s as usize]).collect();
+        let mut i = 0;
+        while i + 1 < tgt.len() {
+            tgt.swap(i, i + 1);
+            i += 2;
+        }
+        tgt
+    }
+}
+
+/// Topic-mixture classification: class c prefers a slice of the vocabulary
+/// plus shared common words (the fastText regime of the paper's TextC
+/// datasets). Difficulty set by `noise` (share of off-topic tokens).
+pub struct SynthTextC {
+    pub vocab: usize,
+    pub classes: usize,
+    pub noise: f64,
+    rng: Rng,
+}
+
+impl SynthTextC {
+    pub fn new(vocab: usize, classes: usize, seed: u64) -> Self {
+        SynthTextC { vocab, classes, noise: 0.5, rng: Rng::new(seed) }
+    }
+
+    /// One (tokens, label) document of exactly `len` tokens.
+    pub fn doc(&mut self, len: usize) -> (Vec<i32>, i32) {
+        let label = self.rng.below(self.classes);
+        let usable = self.vocab - NUM_SPECIAL;
+        let slice = usable / self.classes;
+        let toks = (0..len)
+            .map(|_| {
+                if self.rng.f64() < self.noise {
+                    // shared/common word (zipf over whole vocab)
+                    (NUM_SPECIAL + self.rng.zipf(usable, 1.1)) as i32
+                } else {
+                    // topical word from the class slice
+                    (NUM_SPECIAL + label * slice + self.rng.below(slice)) as i32
+                }
+            })
+            .collect();
+        (toks, label as i32)
+    }
+}
+
+/// MLM corpus for the tiny-BERT experiment: Markov sentences with BOS
+/// framing; masking is applied by the batcher.
+pub struct SynthMlm {
+    pub lm: MarkovLm,
+}
+
+impl SynthMlm {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        SynthMlm { lm: MarkovLm::new(vocab, seed) }
+    }
+
+    pub fn with_stream(vocab: usize, structure_seed: u64,
+                       stream_seed: u64) -> Self {
+        SynthMlm { lm: MarkovLm::with_stream(vocab, structure_seed, stream_seed) }
+    }
+
+    pub fn sentence(&mut self, len: usize) -> Vec<i32> {
+        let mut s = vec![BOS];
+        s.extend(self.lm.tokens(len - 2));
+        s.push(EOS);
+        s
+    }
+}
+
+/// Word-shaped string corpus for the BPE learner tests / demos: renders
+/// Markov token ids as pseudo-words so `Bpe::learn` sees natural-ish
+/// morphology (shared stems + suffixes).
+pub fn pseudo_word(id: i32) -> String {
+    const STEMS: [&str; 12] = ["kan", "bor", "tel", "mun", "sar", "vik",
+                               "lod", "pra", "gim", "hol", "nek", "dus"];
+    const SUFFIXES: [&str; 8] = ["", "a", "en", "ir", "os", "ut", "ane", "ik"];
+    let i = id as usize;
+    format!("{}{}", STEMS[i % 12], SUFFIXES[(i / 12) % 8])
+}
+
+/// Learn a BPE model from a Markov corpus rendered as pseudo-words.
+pub fn bpe_from_markov(vocab: usize, tokens: usize, merges: usize,
+                       seed: u64) -> Bpe {
+    let mut lm = MarkovLm::new(vocab, seed);
+    let mut counts = std::collections::HashMap::new();
+    for t in lm.tokens(tokens) {
+        *counts.entry(pseudo_word(t)).or_insert(0) += 1;
+    }
+    Bpe::learn(&counts, merges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markov_tokens_in_range_and_skewed() {
+        let mut lm = MarkovLm::new(500, 1);
+        let toks = lm.tokens(20000);
+        assert!(toks.iter().all(|&t| (NUM_SPECIAL as i32) <= t && t < 500));
+        // head-heavy unigram: top-50 tokens should cover > 25% of mass
+        let mut counts = vec![0usize; 500];
+        for &t in &toks {
+            counts[t as usize] += 1;
+        }
+        counts.sort_by(|a, b| b.cmp(a));
+        let head: usize = counts[..50].iter().sum();
+        assert!(head * 4 > toks.len(), "head mass {head}/{}", toks.len());
+    }
+
+    #[test]
+    fn markov_is_predictable() {
+        // with coherence, successor entropy is low: the 4 designated
+        // successors should cover ~coherence of transitions
+        let mut lm = MarkovLm::new(200, 2);
+        let toks = lm.tokens(5000);
+        let lm2 = MarkovLm::new(200, 2); // same seed -> same succ table
+        let mut hits = 0;
+        for w in toks.windows(2) {
+            if lm2.succ[w[0] as usize].contains(&w[1]) {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / (toks.len() - 1) as f64;
+        assert!(rate > 0.7, "successor hit rate {rate}");
+    }
+
+    #[test]
+    fn markov_deterministic_per_seed() {
+        let a = MarkovLm::new(100, 7).tokens(50);
+        let b = MarkovLm::new(100, 7).tokens(50);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nmt_reference_matches_pair_generation() {
+        let mut g = SynthNmt::new(300, 300, 3);
+        let (src, tgt) = g.pair(4, 10);
+        assert_eq!(g.reference(&src), tgt);
+    }
+
+    #[test]
+    fn nmt_mapping_is_deterministic_function() {
+        let g = SynthNmt::new(300, 300, 4);
+        let src = vec![10, 11, 12, 13];
+        assert_eq!(g.reference(&src), g.reference(&src));
+        // relabel + adjacent swap: position 0 holds map[src[1]]
+        let r = g.reference(&src);
+        assert_eq!(r[0], g.map[11]);
+        assert_eq!(r[1], g.map[10]);
+    }
+
+    #[test]
+    fn textc_docs_are_classifiable_by_slice() {
+        let mut g = SynthTextC::new(404, 4, 5);
+        g.noise = 0.3;
+        let usable = 400;
+        let slice = usable / 4;
+        for _ in 0..50 {
+            let (toks, label) = g.doc(30);
+            // majority of tokens should land in the label's slice
+            let inslice = toks
+                .iter()
+                .filter(|&&t| {
+                    let x = t as usize - NUM_SPECIAL;
+                    x >= label as usize * slice && x < (label as usize + 1) * slice
+                })
+                .count();
+            assert!(inslice * 2 > toks.len() / 2,
+                    "label {label}: {inslice}/{}", toks.len());
+        }
+    }
+
+    #[test]
+    fn mlm_sentence_framed() {
+        let mut g = SynthMlm::new(200, 6);
+        let s = g.sentence(12);
+        assert_eq!(s.len(), 12);
+        assert_eq!(s[0], BOS);
+        assert_eq!(s[11], EOS);
+    }
+
+    #[test]
+    fn bpe_from_markov_learns_stems() {
+        let bpe = bpe_from_markov(300, 5000, 50, 7);
+        assert!(bpe.num_merges() > 10);
+        // frequent stem "kan" should segment to few tokens
+        assert!(bpe.segment("kana").len() <= 3);
+    }
+}

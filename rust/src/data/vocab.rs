@@ -1,0 +1,127 @@
+//! Frequency-ranked vocabulary with special tokens, built from an iterator
+//! of tokens. Id layout: 0=PAD, 1=BOS, 2=EOS, 3=UNK, then tokens by
+//! descending frequency (ties broken lexicographically for determinism).
+
+use std::collections::HashMap;
+
+use super::{NUM_SPECIAL, UNK};
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    token_to_id: HashMap<String, i32>,
+    id_to_token: Vec<String>,
+}
+
+impl Vocab {
+    /// Build from token counts, keeping the `max_size - NUM_SPECIAL` most
+    /// frequent tokens.
+    pub fn from_counts(counts: &HashMap<String, usize>, max_size: usize) -> Self {
+        let mut items: Vec<(&String, &usize)> = counts.iter().collect();
+        items.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
+        let mut id_to_token: Vec<String> =
+            ["<pad>", "<bos>", "<eos>", "<unk>"].iter().map(|s| s.to_string()).collect();
+        for (tok, _) in items.into_iter().take(max_size.saturating_sub(NUM_SPECIAL)) {
+            id_to_token.push(tok.clone());
+        }
+        let token_to_id = id_to_token
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as i32))
+            .collect();
+        Vocab { token_to_id, id_to_token }
+    }
+
+    pub fn from_corpus<'a>(tokens: impl Iterator<Item = &'a str>,
+                           max_size: usize) -> Self {
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for t in tokens {
+            *counts.entry(t.to_string()).or_insert(0) += 1;
+        }
+        Self::from_counts(&counts, max_size)
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_token.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_token.is_empty()
+    }
+
+    pub fn id(&self, token: &str) -> i32 {
+        *self.token_to_id.get(token).unwrap_or(&UNK)
+    }
+
+    pub fn token(&self, id: i32) -> &str {
+        self.id_to_token
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace().map(|t| self.id(t)).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| self.token(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{EOS, PAD};
+
+    fn sample() -> Vocab {
+        Vocab::from_corpus(
+            "the cat sat on the mat the cat".split_whitespace(), 100)
+    }
+
+    #[test]
+    fn specials_first() {
+        let v = sample();
+        assert_eq!(v.token(PAD), "<pad>");
+        assert_eq!(v.token(EOS), "<eos>");
+        assert_eq!(v.id("<unk>"), UNK);
+    }
+
+    #[test]
+    fn frequency_order() {
+        let v = sample();
+        // "the" (3) before "cat" (2) before singletons
+        assert!(v.id("the") < v.id("cat"));
+        assert!(v.id("cat") < v.id("mat"));
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = sample();
+        assert_eq!(v.id("zebra"), UNK);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_known() {
+        let v = sample();
+        let ids = v.encode("the cat sat");
+        assert_eq!(v.decode(&ids), "the cat sat");
+    }
+
+    #[test]
+    fn max_size_truncates() {
+        let v = Vocab::from_corpus(
+            "a b c d e f g h".split_whitespace(), NUM_SPECIAL + 3);
+        assert_eq!(v.len(), NUM_SPECIAL + 3);
+    }
+
+    #[test]
+    fn deterministic_ties() {
+        let a = Vocab::from_corpus("x y z".split_whitespace(), 10);
+        let b = Vocab::from_corpus("z y x".split_whitespace(), 10);
+        assert_eq!(a.id("x"), b.id("x"));
+        assert_eq!(a.id("z"), b.id("z"));
+    }
+}

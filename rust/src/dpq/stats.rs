@@ -1,0 +1,106 @@
+//! Code statistics from Appendix C: per-group code-usage histograms
+//! (Fig. 5 heat-maps), the rate of code change between checkpoints
+//! (Fig. 6), and codebook perplexity/utilization summaries.
+
+use crate::tensor::TensorI;
+
+/// Count_k^(j) = sum_i [C_i^(j) == k]  (Appendix C.1).
+/// codes: [n, D] -> histogram [D][K].
+pub fn code_distribution(codes: &TensorI, k: usize) -> Vec<Vec<usize>> {
+    let (n, dg) = (codes.shape[0], codes.shape[1]);
+    let mut hist = vec![vec![0usize; k]; dg];
+    for i in 0..n {
+        for (g, h) in hist.iter_mut().enumerate() {
+            h[codes.data[i * dg + g] as usize] += 1;
+        }
+    }
+    hist
+}
+
+/// Fraction of code slots used at least once, per group, averaged.
+pub fn utilization(codes: &TensorI, k: usize) -> f64 {
+    let hist = code_distribution(codes, k);
+    let used: usize = hist
+        .iter()
+        .map(|h| h.iter().filter(|&&c| c > 0).count())
+        .sum();
+    used as f64 / (hist.len() * k) as f64
+}
+
+/// Perplexity of the code distribution (2^entropy), averaged over groups.
+/// High perplexity = evenly used codes (the paper observes DPQ-VQ spreads
+/// usage more evenly than DPQ-SX).
+pub fn code_perplexity(codes: &TensorI, k: usize) -> f64 {
+    let hist = code_distribution(codes, k);
+    let n = codes.shape[0] as f64;
+    let mut total = 0.0;
+    for h in &hist {
+        let mut ent = 0.0;
+        for &c in h {
+            if c > 0 {
+                let p = c as f64 / n;
+                ent -= p * p.log2();
+            }
+        }
+        total += ent.exp2();
+    }
+    total / hist.len() as f64
+}
+
+/// Percentage of code bits changed between two checkpoints (Appendix C.2,
+/// Fig. 6). Operates on code *entries* (one K-way choice each).
+pub fn code_change_rate(prev: &TensorI, cur: &TensorI) -> f64 {
+    assert_eq!(prev.shape, cur.shape, "codebooks must have equal shape");
+    let changed = prev
+        .data
+        .iter()
+        .zip(&cur.data)
+        .filter(|(a, b)| a != b)
+        .count();
+    changed as f64 / prev.data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(shape: Vec<usize>, data: Vec<i32>) -> TensorI {
+        TensorI::new(shape, data).unwrap()
+    }
+
+    #[test]
+    fn distribution_counts() {
+        let c = codes(vec![3, 2], vec![0, 1, 0, 1, 2, 1]);
+        let h = code_distribution(&c, 3);
+        assert_eq!(h[0], vec![2, 0, 1]); // group 0 saw codes 0,0,2
+        assert_eq!(h[1], vec![0, 3, 0]); // group 1 saw 1,1,1
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let c = codes(vec![4, 1], vec![0, 0, 0, 0]);
+        assert!((utilization(&c, 4) - 0.25).abs() < 1e-9);
+        let c2 = codes(vec![4, 1], vec![0, 1, 2, 3]);
+        assert!((utilization(&c2, 4) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perplexity_uniform_equals_k() {
+        let c = codes(vec![4, 1], vec![0, 1, 2, 3]);
+        assert!((code_perplexity(&c, 4) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perplexity_concentrated_is_one() {
+        let c = codes(vec![5, 2], vec![1, 0, 1, 0, 1, 0, 1, 0, 1, 0]);
+        assert!((code_perplexity(&c, 4) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn change_rate() {
+        let a = codes(vec![2, 2], vec![0, 1, 2, 3]);
+        let b = codes(vec![2, 2], vec![0, 1, 2, 0]);
+        assert!((code_change_rate(&a, &b) - 0.25).abs() < 1e-9);
+        assert_eq!(code_change_rate(&a, &a), 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! # dpq-embed
+//!
+//! Reproduction of **"Differentiable Product Quantization for End-to-End
+//! Embedding Compression"** (Chen, Li, Sun -- ICML 2020) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L1/L2 (build-time Python)** -- Pallas DPQ kernels + JAX task graphs,
+//!   AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **L3 (this crate)** -- the runtime: PJRT artifact loading and
+//!   execution ([`runtime`]), synthetic data pipeline ([`data`]), training
+//!   coordinator and experiment harness ([`coordinator`]), compressed
+//!   embedding store ([`dpq`]), post-hoc compression baselines ([`quant`]),
+//!   metrics ([`metrics`]) and an embedding-lookup server ([`server`]).
+//!
+//! See DESIGN.md for the system inventory and the paper-experiment index,
+//! and EXPERIMENTS.md for measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dpq;
+pub mod jsonx;
+pub mod linalg;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,421 @@
+//! Dense linear-algebra substrate for the post-hoc compression baselines
+//! (Table 5 / Table 8): matmul, one-sided Jacobi SVD for the low-rank
+//! baseline, and k-means++ / Lloyd for the product-quantization baseline.
+//! Implemented from scratch -- the offline build has no BLAS/LAPACK.
+
+use crate::tensor::TensorF;
+use crate::util::Rng;
+
+/// C = A @ B for row-major 2-D tensors. [m,k] x [k,n] -> [m,n].
+pub fn matmul(a: &TensorF, b: &TensorF) -> TensorF {
+    assert_eq!(a.shape.len(), 2);
+    assert_eq!(b.shape.len(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    // ikj loop order: streams B rows, vectorizes the inner j loop.
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    TensorF { shape: vec![m, n], data: out }
+}
+
+pub fn transpose(a: &TensorF) -> TensorF {
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = a.data[i * n + j];
+        }
+    }
+    TensorF { shape: vec![n, m], data: out }
+}
+
+/// Thin SVD via one-sided Jacobi rotations on A [m, n] (m >= n is not
+/// required; we operate on columns of A). Returns (U [m,r], S [r], Vt [r,n])
+/// with r = min(m, n), singular values descending.
+pub fn svd(a: &TensorF, sweeps: usize) -> (TensorF, Vec<f32>, TensorF) {
+    let (m, n) = (a.shape[0], a.shape[1]);
+    // Work on column-major copy of A; V accumulates rotations.
+    let mut u = transpose(a).data; // u[j*m + i] = column j
+    let mut v = vec![0.0f32; n * n];
+    for j in 0..n {
+        v[j * n + j] = 1.0;
+    }
+    let eps = 1e-9f64;
+    for _ in 0..sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let x = u[p * m + i] as f64;
+                    let y = u[q * m + i] as f64;
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                off += apq * apq;
+                if apq.abs() < eps * (app * aqq).sqrt().max(1e-30) {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let x = u[p * m + i];
+                    let y = u[q * m + i];
+                    u[p * m + i] = (c as f32) * x - (s as f32) * y;
+                    u[q * m + i] = (s as f32) * x + (c as f32) * y;
+                }
+                for i in 0..n {
+                    let x = v[p * n + i];
+                    let y = v[q * n + i];
+                    v[p * n + i] = (c as f32) * x - (s as f32) * y;
+                    v[q * n + i] = (s as f32) * x + (c as f32) * y;
+                }
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+    }
+    // singular values = column norms of rotated A; U = normalized columns.
+    let r = n.min(m);
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f32> = (0..n)
+        .map(|j| (0..m).map(|i| u[j * m + i] * u[j * m + i]).sum::<f32>().sqrt())
+        .collect();
+    order.sort_by(|&x, &y| norms[y].partial_cmp(&norms[x]).unwrap());
+    let mut uu = vec![0.0f32; m * r];
+    let mut s = vec![0.0f32; r];
+    let mut vt = vec![0.0f32; r * n];
+    for (slot, &j) in order.iter().take(r).enumerate() {
+        s[slot] = norms[j];
+        let inv = if norms[j] > 1e-12 { 1.0 / norms[j] } else { 0.0 };
+        for i in 0..m {
+            uu[i * r + slot] = u[j * m + i] * inv;
+        }
+        for i in 0..n {
+            vt[slot * n + i] = v[j * n + i];
+        }
+    }
+    (
+        TensorF { shape: vec![m, r], data: uu },
+        s,
+        TensorF { shape: vec![r, n], data: vt },
+    )
+}
+
+/// Best rank-k approximation A ~= (U_k * S_k) @ Vt_k. Returns (A_kfactors):
+/// left [m, k] (U*S) and right [k, n] (Vt).
+pub fn low_rank_factors(a: &TensorF, k: usize) -> (TensorF, TensorF) {
+    let (u, s, vt) = svd(a, 30);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let k = k.min(s.len());
+    let mut left = vec![0.0f32; m * k];
+    for i in 0..m {
+        for j in 0..k {
+            left[i * k + j] = u.data[i * u.shape[1] + j] * s[j];
+        }
+    }
+    let mut right = vec![0.0f32; k * n];
+    right.copy_from_slice(&vt.data[..k * n]);
+    (
+        TensorF { shape: vec![m, k], data: left },
+        TensorF { shape: vec![k, n], data: right },
+    )
+}
+
+/// k-means++ initialization + Lloyd iterations over rows of `x` [n, d].
+/// Returns (centroids [k, d], assignment [n], inertia).
+pub fn kmeans(
+    x: &TensorF,
+    k: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> (TensorF, Vec<usize>, f64) {
+    let (n, d) = (x.shape[0], x.shape[1]);
+    assert!(k >= 1 && n >= 1);
+    let k = k.min(n);
+    // k-means++ seeding
+    let mut centroids = vec![0.0f32; k * d];
+    let first = rng.below(n);
+    centroids[..d].copy_from_slice(x.row(first));
+    let mut dist2: Vec<f64> = (0..n)
+        .map(|i| sq_dist(x.row(i), &centroids[..d]) as f64)
+        .collect();
+    for c in 1..k {
+        let pick = rng.weighted(&dist2);
+        let (dst, src) = centroids.split_at_mut(c * d);
+        let _ = dst;
+        src[..d].copy_from_slice(x.row(pick));
+        for i in 0..n {
+            let nd = sq_dist(x.row(i), &centroids[c * d..(c + 1) * d]) as f64;
+            if nd < dist2[i] {
+                dist2[i] = nd;
+            }
+        }
+    }
+    // Lloyd
+    let mut assign = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    for _ in 0..iters {
+        // assignment step
+        let mut new_inertia = 0.0f64;
+        for i in 0..n {
+            let (mut best, mut bd) = (0usize, f32::INFINITY);
+            for c in 0..k {
+                let dd = sq_dist(x.row(i), &centroids[c * d..(c + 1) * d]);
+                if dd < bd {
+                    bd = dd;
+                    best = c;
+                }
+            }
+            assign[i] = best;
+            new_inertia += bd as f64;
+        }
+        // update step
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assign[i];
+            counts[c] += 1;
+            for (j, &v) in x.row(i).iter().enumerate() {
+                sums[c * d + j] += v as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = sq_dist(x.row(a), &centroids[assign[a] * d..assign[a] * d + d]);
+                        let db = sq_dist(x.row(b), &centroids[assign[b] * d..assign[b] * d + d]);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids[c * d..(c + 1) * d].copy_from_slice(x.row(far));
+                continue;
+            }
+            for j in 0..d {
+                centroids[c * d + j] = (sums[c * d + j] / counts[c] as f64) as f32;
+            }
+        }
+        if (inertia - new_inertia).abs() < 1e-9 * inertia.max(1.0) {
+            inertia = new_inertia;
+            break;
+        }
+        inertia = new_inertia;
+    }
+    (
+        TensorF { shape: vec![k, d], data: centroids },
+        assign,
+        inertia,
+    )
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Numerical rank with relative tolerance (used by the Prop. 1 tests).
+pub fn rank(a: &TensorF, tol: f32) -> usize {
+    let (_, s, _) = svd(a, 30);
+    let smax = s.iter().cloned().fold(0.0f32, f32::max);
+    s.iter().filter(|&&x| x > tol * smax).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn randn(shape: Vec<usize>, seed: u64) -> TensorF {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        TensorF { shape, data: (0..n).map(|_| rng.normal()).collect() }
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = TensorF::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = TensorF::new(vec![2, 2], vec![5., 6., 7., 8.]).unwrap();
+        assert_eq!(matmul(&a, &b).data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = randn(vec![3, 5], 1);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn svd_reconstructs() {
+        let a = randn(vec![12, 8], 2);
+        let (u, s, vt) = svd(&a, 30);
+        // A ?= U diag(S) Vt
+        let mut us = u.clone();
+        for i in 0..u.shape[0] {
+            for j in 0..u.shape[1] {
+                us.data[i * u.shape[1] + j] *= s[j];
+            }
+        }
+        let rec = matmul(&us, &vt);
+        assert!(a.rel_err(&rec) < 1e-4, "rel err {}", a.rel_err(&rec));
+    }
+
+    #[test]
+    fn svd_singular_values_sorted_nonneg() {
+        let a = randn(vec![10, 6], 3);
+        let (_, s, _) = svd(&a, 30);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn svd_orthonormal_u() {
+        let a = randn(vec![20, 5], 4);
+        let (u, _, _) = svd(&a, 30);
+        let g = matmul(&transpose(&u), &u);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g.data[i * 5 + j] - want).abs() < 1e-3,
+                        "gram[{i}][{j}]={}", g.data[i * 5 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn low_rank_exact_when_rank_suffices() {
+        // A of true rank 3: random [10,3] @ [3,7]
+        let l = randn(vec![10, 3], 5);
+        let r = randn(vec![3, 7], 6);
+        let a = matmul(&l, &r);
+        let (lf, rf) = low_rank_factors(&a, 3);
+        let rec = matmul(&lf, &rf);
+        assert!(a.rel_err(&rec) < 1e-3, "rel err {}", a.rel_err(&rec));
+    }
+
+    #[test]
+    fn low_rank_error_decreases_with_rank() {
+        let a = randn(vec![20, 10], 7);
+        let errs: Vec<f32> = [1usize, 3, 6, 10]
+            .iter()
+            .map(|&k| {
+                let (l, r) = low_rank_factors(&a, k);
+                a.rel_err(&matmul(&l, &r))
+            })
+            .collect();
+        for w in errs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-5, "{errs:?}");
+        }
+        assert!(errs[3] < 1e-3); // full rank = exact
+    }
+
+    #[test]
+    fn kmeans_recovers_separated_clusters() {
+        let mut rng = Rng::new(8);
+        let mut data = Vec::new();
+        for c in 0..3 {
+            for _ in 0..40 {
+                data.push(c as f32 * 10.0 + 0.1 * rng.normal());
+                data.push(c as f32 * -5.0 + 0.1 * rng.normal());
+            }
+        }
+        let x = TensorF::new(vec![120, 2], data).unwrap();
+        let (cent, assign, inertia) = kmeans(&x, 3, 25, &mut rng);
+        assert_eq!(cent.shape, vec![3, 2]);
+        assert!(inertia < 10.0, "inertia {inertia}");
+        // all members of an input cluster share an assignment
+        for c in 0..3 {
+            let a0 = assign[c * 40];
+            assert!(assign[c * 40..(c + 1) * 40].iter().all(|&a| a == a0));
+        }
+    }
+
+    #[test]
+    fn kmeans_inertia_decreases_with_k() {
+        let x = randn(vec![100, 4], 9);
+        let mut prev = f64::INFINITY;
+        for k in [1, 2, 8, 32] {
+            let (_, _, inertia) = kmeans(&x, k, 20, &mut Rng::new(10));
+            assert!(inertia <= prev + 1e-6, "k={k}: {inertia} > {prev}");
+            prev = inertia;
+        }
+    }
+
+    #[test]
+    fn rank_of_low_rank_matrix() {
+        let l = randn(vec![16, 2], 11);
+        let r = randn(vec![2, 12], 12);
+        let a = matmul(&l, &r);
+        assert_eq!(rank(&a, 1e-4), 2);
+    }
+
+    #[test]
+    fn prop_svd_reconstruction_random_shapes() {
+        prop_check(12, |rng| {
+            let m = 2 + rng.below(12);
+            let n = 2 + rng.below(8);
+            let a = {
+                let total = m * n;
+                TensorF {
+                    shape: vec![m, n],
+                    data: (0..total).map(|_| rng.normal()).collect(),
+                }
+            };
+            let (u, s, vt) = svd(&a, 40);
+            let mut us = u.clone();
+            for i in 0..u.shape[0] {
+                for j in 0..u.shape[1] {
+                    us.data[i * u.shape[1] + j] *= s[j];
+                }
+            }
+            let rec = matmul(&us, &vt);
+            let err = a.rel_err(&rec);
+            prop_assert!(err < 1e-3, "m={m} n={n} err={err}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_kmeans_assignment_is_nearest() {
+        prop_check(10, |rng| {
+            let n = 10 + rng.below(60);
+            let d = 1 + rng.below(5);
+            let k = 1 + rng.below(6);
+            let x = TensorF {
+                shape: vec![n, d],
+                data: (0..n * d).map(|_| rng.normal()).collect(),
+            };
+            let (cent, assign, _) = kmeans(&x, k, 15, rng);
+            let k = cent.shape[0];
+            for i in 0..n {
+                let mine = sq_dist(x.row(i), cent.row(assign[i]));
+                for c in 0..k {
+                    let other = sq_dist(x.row(i), cent.row(c));
+                    prop_assert!(mine <= other + 1e-4,
+                                 "row {i}: assigned {} not nearest", assign[i]);
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,203 @@
+//! `repro` -- the launcher CLI for the DPQ reproduction.
+//!
+//! Subcommands:
+//!   repro list                          list available artifacts
+//!   repro train   [--artifact P ...]    train one artifact family
+//!   repro experiment <id|all> [--steps N]  regenerate a paper table/figure
+//!   repro experiment --list             list experiment ids
+//!   repro compress [--artifact P ...]   train + export compressed embedding
+//!   repro serve   [--addr A ...]        serve a compressed embedding
+//!   repro codes   [--artifact P ...]    print code statistics
+//!
+//! All flags are `--key value`; unknown keys are rejected with the list of
+//! valid ones (see config::RunConfig).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use dpq_embed::config::{parse_cli_overrides, RunConfig};
+use dpq_embed::coordinator::experiments::{self, ExpCfg};
+use dpq_embed::coordinator::Trainer;
+use dpq_embed::dpq::stats as dstats;
+use dpq_embed::metrics;
+use dpq_embed::runtime::Runtime;
+use dpq_embed::server::EmbeddingServer;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn take_or<'a>(kv: &'a BTreeMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    kv.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "list" => {
+            let kv = parse_cli_overrides(rest)?;
+            let rt = Runtime::new(take_or(&kv, "artifacts_dir", "artifacts"))?;
+            for name in rt.available()? {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        "train" => {
+            let kv = parse_cli_overrides(rest)?;
+            let mut cfg = RunConfig::default();
+            cfg.apply(&kv)?;
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let tr = Trainer::new(&rt, cfg.clone());
+            let out = tr.run()?;
+            let named: Vec<String> = out
+                .metric_names
+                .iter()
+                .zip(&out.final_metrics)
+                .map(|(n, v)| format!("{n}={v:.4}"))
+                .collect();
+            println!(
+                "done: {} steps, {:.2} steps/s, held-out {}",
+                cfg.steps, out.steps_per_sec, named.join(" ")
+            );
+            if let Some(ppl) = out.ppl() {
+                println!("perplexity: {ppl:.2}");
+            }
+            if cfg.artifact.starts_with("nmt_") {
+                let bleu = tr.bleu(&out.state, 4)?;
+                println!("BLEU (greedy, 4 fresh batches): {bleu:.2}");
+            }
+            if let Some(dir) = &cfg.checkpoint_dir {
+                std::fs::create_dir_all(dir)?;
+                let p = dir.join(format!("{}_final.ckpt", cfg.artifact));
+                dpq_embed::coordinator::checkpoint::save(&p, &out.state)?;
+                println!("checkpoint: {}", p.display());
+            }
+            Ok(())
+        }
+        "experiment" => {
+            if rest.iter().any(|a| a == "--list") {
+                for (id, desc) in experiments::registry() {
+                    println!("{id:<10} {desc}");
+                }
+                return Ok(());
+            }
+            let Some(id) = rest.first() else {
+                bail!("usage: repro experiment <id|all> [--steps N]")
+            };
+            let kv = parse_cli_overrides(&rest[1..])?;
+            let mut cfg = ExpCfg::default();
+            if let Some(s) = kv.get("steps") {
+                cfg.steps = s.parse()?;
+            }
+            if let Some(s) = kv.get("seed") {
+                cfg.seed = s.parse()?;
+            }
+            if let Some(s) = kv.get("reports_dir") {
+                cfg.reports_dir = s.into();
+            }
+            if let Some(s) = kv.get("artifacts_dir") {
+                cfg.artifacts_dir = s.into();
+            }
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            if id == "all" {
+                for (eid, _) in experiments::registry() {
+                    eprintln!("== experiment {eid} ==");
+                    experiments::run(eid, &rt, &cfg)?;
+                }
+            } else {
+                experiments::run(id, &rt, &cfg)?;
+            }
+            Ok(())
+        }
+        "compress" => {
+            let kv = parse_cli_overrides(rest)?;
+            let mut cfg = RunConfig::default();
+            cfg.apply(&kv)?;
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let tr = Trainer::new(&rt, cfg.clone()).quiet();
+            eprintln!("training {} for {} steps...", cfg.artifact, cfg.steps);
+            let out = tr.run()?;
+            let man = rt.load(&format!("{}_train", cfg.artifact))?;
+            let shared = man.manifest.meta_bool("share").unwrap_or(false);
+            let ce = experiments::compress_state(&rt, &cfg.artifact,
+                                                 &out.state, shared)?;
+            let path = std::path::PathBuf::from(
+                take_or(&kv, "out", "compressed.dpq"));
+            ce.save(&path)?;
+            println!(
+                "saved {} (vocab={} d={} K={} D={}): {} bits, CR {:.1}x",
+                path.display(), ce.vocab(), ce.d, ce.codebook.k,
+                ce.codebook.d_groups, ce.storage_bits(),
+                ce.compression_ratio()
+            );
+            Ok(())
+        }
+        "serve" => {
+            let kv = parse_cli_overrides(rest)?;
+            let path = std::path::PathBuf::from(
+                take_or(&kv, "embedding", "compressed.dpq"));
+            let emb = dpq_embed::dpq::CompressedEmbedding::load(&path)
+                .map_err(|e| anyhow!("load {path:?}: {e} (run `repro compress` first)"))?;
+            let addr = take_or(&kv, "addr", "127.0.0.1:7878").to_string();
+            let max_batch: usize = take_or(&kv, "max_batch", "64").parse()?;
+            println!(
+                "serving {} symbols x d={} ({} KiB compressed, CR {:.1}x)",
+                emb.vocab(), emb.d, emb.storage_bits() / 8 / 1024,
+                emb.compression_ratio()
+            );
+            let server = EmbeddingServer::new(emb, max_batch);
+            server.serve(&addr, |a| println!("listening on {a}"))?;
+            Ok(())
+        }
+        "codes" => {
+            let kv = parse_cli_overrides(rest)?;
+            let mut cfg = RunConfig::default();
+            cfg.apply(&kv)?;
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            let tr = Trainer::new(&rt, cfg.clone()).quiet();
+            let out = tr.run()?;
+            let ce = experiments::compress_state(&rt, &cfg.artifact,
+                                                 &out.state, false)?;
+            let codes = ce.codebook.to_tensor();
+            let k = ce.codebook.k;
+            println!("codebook {}x{} (K={k})", codes.shape[0], codes.shape[1]);
+            println!("utilization: {:.3}", dstats::utilization(&codes, k));
+            println!("code perplexity: {:.2}", dstats::code_perplexity(&codes, k));
+            if let Some(ce_metric) = out.metric("ce") {
+                println!("task ce: {:.4} (ppl {:.2})", ce_metric,
+                         metrics::perplexity(ce_metric as f64));
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other}; try `repro help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro -- DPQ embedding-compression reproduction (ICML 2020)\n\
+         \n\
+         commands:\n\
+         \x20 list                         list available AOT artifacts\n\
+         \x20 train      [--artifact P --steps N --lr X ...]\n\
+         \x20 experiment <id|all> [--steps N] | --list\n\
+         \x20 compress   [--artifact P --out F]\n\
+         \x20 serve      [--embedding F --addr A --max-batch N]\n\
+         \x20 codes      [--artifact P --steps N]\n\
+         \n\
+         run `make artifacts` first to build the AOT artifacts."
+    );
+}

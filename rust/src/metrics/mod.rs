@@ -1,0 +1,217 @@
+//! Task metrics: perplexity, corpus BLEU (n-gram precision + brevity
+//! penalty, the standard BLEU-4 of the NMT literature), accuracy, and a
+//! small latency-statistics helper for the benchmarks.
+
+use std::collections::HashMap;
+
+use crate::data::{EOS, PAD};
+
+/// Perplexity from mean cross-entropy (nats).
+pub fn perplexity(ce: f64) -> f64 {
+    ce.exp()
+}
+
+/// Truncate a hypothesis at the first EOS and drop padding.
+pub fn trim_hyp(ids: &[i32]) -> Vec<i32> {
+    let mut out = Vec::new();
+    for &t in ids {
+        if t == EOS {
+            break;
+        }
+        if t != PAD {
+            out.push(t);
+        }
+    }
+    out
+}
+
+fn ngram_counts(seq: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus-level BLEU-4 with +0 smoothing on counts but standard brevity
+/// penalty; returns 0..100. `pairs` = (hypothesis, reference).
+pub fn corpus_bleu(pairs: &[(Vec<i32>, Vec<i32>)]) -> f64 {
+    let max_n = 4;
+    let mut match_n = vec![0usize; max_n];
+    let mut total_n = vec![0usize; max_n];
+    let (mut hyp_len, mut ref_len) = (0usize, 0usize);
+    for (hyp, rf) in pairs {
+        hyp_len += hyp.len();
+        ref_len += rf.len();
+        for n in 1..=max_n {
+            let h = ngram_counts(hyp, n);
+            let r = ngram_counts(rf, n);
+            for (g, &c) in &h {
+                let rc = *r.get(g).unwrap_or(&0);
+                match_n[n - 1] += c.min(&rc + 0).min(rc);
+                total_n[n - 1] += c;
+            }
+        }
+    }
+    if hyp_len == 0 || match_n[0] == 0 {
+        // no unigram overlap at all: BLEU is 0 (avoid smoothed inflation)
+        return 0.0;
+    }
+    // geometric mean of clipped precisions; zero any order -> BLEU 0
+    let mut logsum = 0.0;
+    for n in 0..max_n {
+        if total_n[n] == 0 || match_n[n] == 0 {
+            // smooth very short corpora: count an epsilon match
+            let p = 1.0 / (2.0 * total_n[n].max(1) as f64);
+            logsum += p.ln();
+        } else {
+            logsum += (match_n[n] as f64 / total_n[n] as f64).ln();
+        }
+    }
+    let geo = (logsum / max_n as f64).exp();
+    let bp = if hyp_len > ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * geo
+}
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[i32], truth: &[i32]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(truth).filter(|(a, b)| a == b).count() as f64
+        / pred.len() as f64
+}
+
+/// Online latency statistics for benches (mean / p50 / p99 in seconds).
+#[derive(Default, Clone)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+    }
+
+    /// Merge another stats object's samples into this one.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx]
+    }
+
+    pub fn summary(&self, unit_per_sec: f64) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms thpt={:.1}/s",
+            self.count(),
+            self.mean() * 1e3,
+            self.percentile(50.0) * 1e3,
+            self.percentile(99.0) * 1e3,
+            unit_per_sec / self.mean().max(1e-12)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform() {
+        let v = 100.0f64;
+        assert!((perplexity(v.ln()) - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bleu_perfect_match_is_100() {
+        let pairs = vec![
+            (vec![5, 6, 7, 8, 9], vec![5, 6, 7, 8, 9]),
+            (vec![10, 11, 12, 13, 14, 15], vec![10, 11, 12, 13, 14, 15]),
+        ];
+        assert!((corpus_bleu(&pairs) - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bleu_no_overlap_is_near_zero() {
+        let pairs = vec![(vec![5, 6, 7, 8], vec![9, 10, 11, 12])];
+        assert!(corpus_bleu(&pairs) < 5.0);
+    }
+
+    #[test]
+    fn bleu_partial_between() {
+        let perfect = vec![(vec![5, 6, 7, 8, 9, 10], vec![5, 6, 7, 8, 9, 10])];
+        let partial = vec![(vec![5, 6, 7, 99, 98, 97], vec![5, 6, 7, 8, 9, 10])];
+        let b = corpus_bleu(&partial);
+        assert!(b > 0.0 && b < corpus_bleu(&perfect));
+    }
+
+    #[test]
+    fn bleu_brevity_penalty_applies() {
+        let short = vec![(vec![5, 6, 7], vec![5, 6, 7, 8, 9, 10, 11, 12])];
+        let full = vec![(vec![5, 6, 7, 8, 9, 10, 11, 12],
+                         vec![5, 6, 7, 8, 9, 10, 11, 12])];
+        assert!(corpus_bleu(&short) < corpus_bleu(&full) * 0.6);
+    }
+
+    #[test]
+    fn bleu_known_value_hand_computed() {
+        // hyp: a b c d ; ref: a b c e
+        // p1 = 3/4, p2 = 2/3, p3 = 1/2, p4 -> smoothed 1/(2*1)
+        let pairs = vec![(vec![10, 11, 12, 13], vec![10, 11, 12, 14])];
+        let want = 100.0
+            * ((0.75f64.ln() + (2.0 / 3.0f64).ln() + 0.5f64.ln()
+                + 0.5f64.ln())
+                / 4.0)
+                .exp();
+        assert!((corpus_bleu(&pairs) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trim_hyp_cuts_eos_and_pad() {
+        assert_eq!(trim_hyp(&[5, 6, EOS, 7, 8]), vec![5, 6]);
+        assert_eq!(trim_hyp(&[PAD, 5, PAD, 6]), vec![5, 6]);
+    }
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3, 4], &[1, 2, 0, 4]), 0.75);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn latency_stats_percentiles() {
+        let mut s = LatencyStats::default();
+        for i in 1..=100 {
+            s.record(i as f64 / 1000.0);
+        }
+        assert!((s.percentile(50.0) - 0.0505).abs() < 0.002);
+        assert!(s.percentile(99.0) >= 0.099);
+        assert!((s.mean() - 0.0505).abs() < 1e-9);
+    }
+}

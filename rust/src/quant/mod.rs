@@ -1,0 +1,316 @@
+//! Post-hoc embedding-table compressors: the traditional baselines of
+//! Table 5 and Table 8. Each takes a *trained* full table [n, d], produces
+//! a compact representation, and reconstructs an approximate table that the
+//! Rust coordinator feeds back into the full-variant eval artifact (whose
+//! embedding table is an ordinary input literal).
+
+use crate::dpq::{Codebook, CompressedEmbedding};
+use crate::linalg;
+use crate::tensor::{TensorF, TensorI};
+use crate::util::Rng;
+
+/// A fitted compressor: storage accounting + reconstruction.
+pub trait Compressor {
+    fn name(&self) -> String;
+    /// Total bits needed at inference for the embedding layer.
+    fn storage_bits(&self) -> usize;
+    fn reconstruct(&self) -> TensorF;
+    fn compression_ratio(&self, n: usize, d: usize) -> f64 {
+        (32.0 * n as f64 * d as f64) / self.storage_bits() as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar quantization (b-bit uniform, per-column min/max)
+// ---------------------------------------------------------------------------
+
+pub struct ScalarQuant {
+    pub bits: u32,
+    n: usize,
+    d: usize,
+    codes: Vec<u16>,       // n*d entries, < 2^bits
+    lo: Vec<f32>,          // per-column
+    step: Vec<f32>,        // per-column
+}
+
+impl ScalarQuant {
+    pub fn fit(table: &TensorF, bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= 16);
+        let (n, d) = (table.shape[0], table.shape[1]);
+        let levels = (1u32 << bits) - 1;
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for i in 0..n {
+            for (j, &v) in table.row(i).iter().enumerate() {
+                lo[j] = lo[j].min(v);
+                hi[j] = hi[j].max(v);
+            }
+        }
+        let step: Vec<f32> = (0..d)
+            .map(|j| ((hi[j] - lo[j]) / levels as f32).max(1e-12))
+            .collect();
+        let mut codes = vec![0u16; n * d];
+        for i in 0..n {
+            for (j, &v) in table.row(i).iter().enumerate() {
+                let q = ((v - lo[j]) / step[j]).round();
+                codes[i * d + j] = q.clamp(0.0, levels as f32) as u16;
+            }
+        }
+        ScalarQuant { bits, n, d, codes, lo, step }
+    }
+}
+
+impl Compressor for ScalarQuant {
+    fn name(&self) -> String {
+        format!("scalar{}bit", self.bits)
+    }
+
+    fn storage_bits(&self) -> usize {
+        // codes + per-column (lo, step) floats
+        self.n * self.d * self.bits as usize + 32 * 2 * self.d
+    }
+
+    fn reconstruct(&self) -> TensorF {
+        let mut data = vec![0.0f32; self.n * self.d];
+        for i in 0..self.n {
+            for j in 0..self.d {
+                data[i * self.d + j] =
+                    self.lo[j] + self.codes[i * self.d + j] as f32 * self.step[j];
+            }
+        }
+        TensorF { shape: vec![self.n, self.d], data }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Product quantization (k-means per subspace; Jegou et al. 2010)
+// ---------------------------------------------------------------------------
+
+pub struct ProductQuant {
+    pub k: usize,
+    pub d_groups: usize,
+    emb: CompressedEmbedding,
+}
+
+impl ProductQuant {
+    /// Split columns into `d_groups` subspaces, k-means each, store codes.
+    pub fn fit(table: &TensorF, k: usize, d_groups: usize, iters: usize,
+               rng: &mut Rng) -> Self {
+        let (n, d) = (table.shape[0], table.shape[1]);
+        assert!(d % d_groups == 0, "d={d} % D={d_groups} != 0");
+        let s = d / d_groups;
+        let mut codes = vec![0i32; n * d_groups];
+        let mut values = vec![0.0f32; k * d_groups * s];
+        for g in 0..d_groups {
+            // gather subspace columns
+            let mut sub = vec![0.0f32; n * s];
+            for i in 0..n {
+                sub[i * s..(i + 1) * s]
+                    .copy_from_slice(&table.row(i)[g * s..(g + 1) * s]);
+            }
+            let x = TensorF { shape: vec![n, s], data: sub };
+            let (cent, assign, _) = linalg::kmeans(&x, k, iters, rng);
+            let kk = cent.shape[0];
+            for i in 0..n {
+                codes[i * d_groups + g] = assign[i] as i32;
+            }
+            for c in 0..kk {
+                let base = (c * d_groups + g) * s;
+                values[base..base + s].copy_from_slice(cent.row(c));
+            }
+        }
+        let codes = TensorI::new(vec![n, d_groups], codes).unwrap();
+        let values = TensorF::new(vec![k, d_groups, s], values).unwrap();
+        let emb = CompressedEmbedding::new(
+            Codebook::from_codes(&codes, k).unwrap(), values, false)
+            .unwrap();
+        ProductQuant { k, d_groups, emb }
+    }
+
+    pub fn embedding(&self) -> &CompressedEmbedding {
+        &self.emb
+    }
+}
+
+impl Compressor for ProductQuant {
+    fn name(&self) -> String {
+        format!("pq_K{}_D{}", self.k, self.d_groups)
+    }
+
+    fn storage_bits(&self) -> usize {
+        self.emb.storage_bits()
+    }
+
+    fn reconstruct(&self) -> TensorF {
+        self.emb.reconstruct_table()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Low-rank factorization (truncated SVD)
+// ---------------------------------------------------------------------------
+
+pub struct LowRank {
+    pub rank: usize,
+    left: TensorF,   // [n, r]
+    right: TensorF,  // [r, d]
+}
+
+impl LowRank {
+    pub fn fit(table: &TensorF, rank: usize) -> Self {
+        let (left, right) = linalg::low_rank_factors(table, rank);
+        LowRank { rank, left, right }
+    }
+
+    /// Rank that yields (approximately) the requested compression ratio.
+    pub fn rank_for_cr(n: usize, d: usize, cr: f64) -> usize {
+        // 32 n d / (32 r (n + d)) = cr  =>  r = n d / (cr (n + d))
+        ((n * d) as f64 / (cr * (n + d) as f64)).round().max(1.0) as usize
+    }
+}
+
+impl Compressor for LowRank {
+    fn name(&self) -> String {
+        format!("lowrank{}", self.rank)
+    }
+
+    fn storage_bits(&self) -> usize {
+        32 * (self.left.numel() + self.right.numel())
+    }
+
+    fn reconstruct(&self) -> TensorF {
+        linalg::matmul(&self.left, &self.right)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn table(n: usize, d: usize, seed: u64) -> TensorF {
+        let mut rng = Rng::new(seed);
+        TensorF {
+            shape: vec![n, d],
+            data: (0..n * d).map(|_| rng.normal() * 0.1).collect(),
+        }
+    }
+
+    #[test]
+    fn scalar_quant_error_shrinks_with_bits() {
+        let t = table(200, 16, 1);
+        let mut prev = f32::INFINITY;
+        for bits in [2, 4, 6, 8] {
+            let sq = ScalarQuant::fit(&t, bits);
+            let err = t.rel_err(&sq.reconstruct());
+            assert!(err < prev, "bits={bits}: {err} !< {prev}");
+            prev = err;
+        }
+        assert!(prev < 0.01); // 8-bit is near-exact on smooth data
+    }
+
+    #[test]
+    fn scalar_quant_cr() {
+        let t = table(1000, 64, 2);
+        let sq = ScalarQuant::fit(&t, 8);
+        // paper Table 5: 8-bit scalar quant ~= 4x
+        let cr = sq.compression_ratio(1000, 64);
+        assert!((cr - 4.0).abs() < 0.1, "cr={cr}");
+    }
+
+    #[test]
+    fn pq_reconstruction_reasonable() {
+        let t = table(300, 16, 3);
+        let mut rng = Rng::new(4);
+        let pq = ProductQuant::fit(&t, 16, 4, 15, &mut rng);
+        let err = t.rel_err(&pq.reconstruct());
+        assert!(err < 0.9, "err={err}");
+        // more centroids -> lower error
+        let pq2 = ProductQuant::fit(&t, 64, 4, 15, &mut Rng::new(4));
+        assert!(t.rel_err(&pq2.reconstruct()) < err);
+    }
+
+    #[test]
+    fn pq_cr_formula() {
+        let t = table(1000, 64, 5);
+        let pq = ProductQuant::fit(&t, 32, 16, 5, &mut Rng::new(6));
+        let want = (32.0 * 1000.0 * 64.0)
+            / (1000.0 * 16.0 * 5.0 + 32.0 * 32.0 * 64.0);
+        assert!((pq.compression_ratio(1000, 64) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lowrank_exact_on_lowrank_input() {
+        let mut rng = Rng::new(7);
+        let l = TensorF {
+            shape: vec![50, 3],
+            data: (0..150).map(|_| rng.normal()).collect(),
+        };
+        let r = TensorF {
+            shape: vec![3, 12],
+            data: (0..36).map(|_| rng.normal()).collect(),
+        };
+        let t = linalg::matmul(&l, &r);
+        let lr = LowRank::fit(&t, 3);
+        assert!(t.rel_err(&lr.reconstruct()) < 1e-3);
+    }
+
+    #[test]
+    fn rank_for_cr_inverts() {
+        let r = LowRank::rank_for_cr(10000, 64, 10.0);
+        let bits = 32 * (10000 * r + r * 64);
+        let cr = (32.0 * 10000.0 * 64.0) / bits as f64;
+        assert!((cr - 10.0).abs() < 2.0, "r={r} cr={cr}");
+    }
+
+    #[test]
+    fn prop_scalar_quant_within_step_bound() {
+        prop_check(20, |rng| {
+            let n = 2 + rng.below(40);
+            let d = 1 + rng.below(12);
+            let t = TensorF {
+                shape: vec![n, d],
+                data: (0..n * d).map(|_| rng.normal()).collect(),
+            };
+            let bits = 2 + rng.below(7) as u32;
+            let sq = ScalarQuant::fit(&t, bits);
+            let rec = sq.reconstruct();
+            // every entry within half a quantization step
+            for j in 0..d {
+                let step = {
+                    let lo = (0..n).map(|i| t.row(i)[j]).fold(f32::INFINITY, f32::min);
+                    let hi = (0..n).map(|i| t.row(i)[j]).fold(f32::NEG_INFINITY, f32::max);
+                    (hi - lo) / ((1u32 << bits) - 1) as f32
+                };
+                for i in 0..n {
+                    let err = (t.row(i)[j] - rec.row(i)[j]).abs();
+                    prop_assert!(err <= 0.51 * step + 1e-6,
+                                 "err {err} > half step {step} (bits={bits})");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_pq_codes_in_range_and_cr_positive() {
+        prop_check(8, |rng| {
+            let n = 20 + rng.below(80);
+            let dgs = [1usize, 2, 4];
+            let d_groups = dgs[rng.below(3)];
+            let d = d_groups * (1 + rng.below(4));
+            let k = 2 + rng.below(14);
+            let t = TensorF {
+                shape: vec![n, d],
+                data: (0..n * d).map(|_| rng.normal()).collect(),
+            };
+            let pq = ProductQuant::fit(&t, k, d_groups, 8, rng);
+            let codes = pq.embedding().codebook.to_tensor();
+            prop_assert!(codes.data.iter().all(|&c| (c as usize) < k),
+                         "code out of range");
+            prop_assert!(pq.compression_ratio(n, d) > 0.0);
+            Ok(())
+        });
+    }
+}

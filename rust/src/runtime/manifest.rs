@@ -1,0 +1,198 @@
+//! Artifact manifest: the JSON sidecar `aot.py` writes next to each HLO
+//! text file, describing input/output names, shapes, dtypes and roles plus
+//! the experiment metadata (task, dataset, variant, K, D, CR, ...).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonx::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+    pub role: String,  // inputs: state|input; outputs: metric|state|output
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String, // init | train | eval | decode | export
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    let name = j
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("io spec missing name"))?
+        .to_string();
+    let shape = j
+        .get("shape")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("{name}: missing shape"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("{name}: bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("{name}: missing dtype"))?
+        .to_string();
+    if dtype != "f32" && dtype != "i32" {
+        bail!("{name}: unsupported dtype {dtype}");
+    }
+    let role = j
+        .get("role")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("{name}: missing role"))?
+        .to_string();
+    Ok(IoSpec { name, shape, dtype, role })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("missing name"))?
+            .to_string();
+        let kind = j
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("missing kind"))?
+            .to_string();
+        let inputs = j
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("missing inputs"))?
+            .iter()
+            .map(io_spec)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .get("outputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("missing outputs"))?
+            .iter()
+            .map(io_spec)
+            .collect::<Result<Vec<_>>>()?;
+        let meta = match j.get("meta") {
+            Some(Json::Obj(m)) => m.clone(),
+            _ => BTreeMap::new(),
+        };
+        Ok(Manifest { name, kind, inputs, outputs, meta })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn state_inputs(&self) -> Vec<&IoSpec> {
+        self.inputs.iter().filter(|s| s.role == "state").collect()
+    }
+
+    pub fn batch_inputs(&self) -> Vec<&IoSpec> {
+        self.inputs
+            .iter()
+            .filter(|s| s.role == "input" && s.name != "lr" && s.name != "seed")
+            .collect()
+    }
+
+    pub fn metric_outputs(&self) -> Vec<&IoSpec> {
+        self.outputs.iter().filter(|s| s.role == "metric").collect()
+    }
+
+    // ---- typed meta accessors ----
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn meta_bool(&self, key: &str) -> Option<bool> {
+        self.meta.get(key).and_then(|v| v.as_bool())
+    }
+
+    /// Metric names from meta (ordered), falling back to output roles.
+    pub fn metric_names(&self) -> Vec<String> {
+        if let Some(Json::Arr(a)) = self.meta.get("metrics") {
+            return a
+                .iter()
+                .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                .collect();
+        }
+        self.metric_outputs()
+            .iter()
+            .map(|s| s.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "name": "lm_ptb_sx_K32D32_train",
+      "kind": "train",
+      "inputs": [
+        {"name": "emb/key", "shape": [32, 32, 4], "dtype": "f32", "role": "state"},
+        {"name": "emb/q", "shape": [2000, 128], "dtype": "f32", "role": "state"},
+        {"name": "x", "shape": [16, 24], "dtype": "i32", "role": "input"},
+        {"name": "lr", "shape": [], "dtype": "f32", "role": "input"}
+      ],
+      "outputs": [
+        {"name": "ce", "shape": [], "dtype": "f32", "role": "metric"},
+        {"name": "emb/key", "shape": [32, 32, 4], "dtype": "f32", "role": "state"},
+        {"name": "emb/q", "shape": [2000, 128], "dtype": "f32", "role": "state"}
+      ],
+      "meta": {"task": "lm", "vocab": 2000, "cr": 18.25,
+               "metrics": ["ce"], "share": false}
+    }"#;
+
+    #[test]
+    fn parse_full_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.kind, "train");
+        assert_eq!(m.state_inputs().len(), 2);
+        assert_eq!(m.batch_inputs().len(), 1);
+        assert_eq!(m.metric_outputs().len(), 1);
+        assert_eq!(m.meta_usize("vocab"), Some(2000));
+        assert_eq!(m.meta_str("task"), Some("lm"));
+        assert_eq!(m.meta_bool("share"), Some(false));
+        assert_eq!(m.metric_names(), vec!["ce"]);
+        assert_eq!(m.inputs[0].shape, vec![32, 32, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let doc = DOC.replace("\"i32\"", "\"f64\"");
+        assert!(Manifest::parse(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"name": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn scalar_shapes_are_empty() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert!(m.inputs.last().unwrap().shape.is_empty());
+    }
+}

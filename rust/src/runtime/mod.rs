@@ -1,0 +1,385 @@
+//! PJRT runtime: loads AOT artifacts (HLO text + JSON manifest) produced
+//! by `python/compile/aot.py`, compiles them once on the PJRT CPU client,
+//! and exposes typed execution (init / train-step / eval / decode /
+//! export). Python never runs here -- this is the request/training path.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{IoSpec, Manifest};
+
+use crate::tensor::{TensorF, TensorI};
+
+/// A host-side value crossing the XLA boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F(TensorF),
+    I(TensorI),
+}
+
+impl Value {
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Value::F(t) => t.to_literal(),
+            Value::I(t) => t.to_literal(),
+        }
+    }
+
+    pub fn as_f(&self) -> Result<&TensorF> {
+        match self {
+            Value::F(t) => Ok(t),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i(&self) -> Result<&TensorI> {
+        match self {
+            Value::I(t) => Ok(t),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn scalar_f(&self) -> Result<f32> {
+        let t = self.as_f()?;
+        if t.data.len() != 1 {
+            bail!("expected scalar, shape {:?}", t.shape);
+        }
+        Ok(t.data[0])
+    }
+
+    pub fn from_literal(lit: &xla::Literal, dtype: &str) -> Result<Value> {
+        Ok(match dtype {
+            "f32" => Value::F(TensorF::from_literal(lit)?),
+            "i32" => Value::I(TensorI::from_literal(lit)?),
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+}
+
+/// One compiled artifact: manifest + PJRT executable.
+pub struct Artifact {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with positional literals; returns raw output literals in
+    /// manifest order. This is the hot-path entry: no host-side tensor
+    /// conversions beyond PJRT's own transfers.
+    pub fn execute_raw<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.manifest.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.manifest.name,
+                self.manifest.inputs.len(),
+                args.len()
+            );
+        }
+        let result = self.exe.execute::<L>(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.manifest.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple.decompose_tuple()
+            .map_err(|e| anyhow!("untuple result: {e:?}"))?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: manifest declares {} outputs, executable returned {}",
+                self.manifest.name,
+                self.manifest.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Execute with positional literals; returns typed outputs.
+    pub fn execute_literals(&self, args: &[xla::Literal]) -> Result<Vec<Value>> {
+        let parts = self.execute_raw(args)?;
+        parts
+            .iter()
+            .zip(&self.manifest.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, &spec.dtype))
+            .collect()
+    }
+
+    pub fn execute(&self, args: &[Value]) -> Result<Vec<Value>> {
+        let lits: Vec<xla::Literal> = args
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        self.execute_literals(&lits)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.manifest.name
+    }
+}
+
+/// PJRT client + compiled-executable cache, keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Artifact>>>,
+}
+
+impl Runtime {
+    /// `dir` is the artifacts directory (default: ./artifacts).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+            && self.dir.join(format!("{name}.manifest.json")).exists()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let hlo = self.dir.join(format!("{name}.hlo.txt"));
+        let man = self.dir.join(format!("{name}.manifest.json"));
+        let manifest = Manifest::load(&man)
+            .with_context(|| format!("manifest for {name}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO {hlo:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let art = std::sync::Arc::new(Artifact { manifest, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// All artifact names present in the directory.
+    pub fn available(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let p = entry?.path();
+            if let Some(fname) = p.file_name().and_then(|s| s.to_str()) {
+                if let Some(stem) = fname.strip_suffix(".manifest.json") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+/// Named state vector (parameters + optimizer slots) threaded through
+/// train steps. Keys follow the manifest's state input order.
+///
+/// Entries are stored as `xla::Literal`s so the training loop feeds the
+/// previous step's outputs straight back into `execute` without host-side
+/// tensor conversions (§Perf: this halves the per-step host copies).
+/// Typed access converts on demand via [`State::get`] / [`State::set`].
+#[derive(Clone)]
+pub struct State {
+    pub names: Vec<String>,
+    dtypes: Vec<String>,
+    lits: Vec<xla::Literal>,
+}
+
+impl State {
+    pub fn from_literals(names: Vec<String>, dtypes: Vec<String>,
+                         lits: Vec<xla::Literal>) -> Result<State> {
+        if names.len() != lits.len() || names.len() != dtypes.len() {
+            bail!("state arity mismatch");
+        }
+        Ok(State { names, dtypes, lits })
+    }
+
+    pub fn literals(&self) -> &[xla::Literal] {
+        &self.lits
+    }
+
+    fn index(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Typed (converting) read of one entry.
+    pub fn get(&self, name: &str) -> Option<Value> {
+        let i = self.index(name)?;
+        Value::from_literal(&self.lits[i], &self.dtypes[i]).ok()
+    }
+
+    /// Typed write of one entry (converts to a literal).
+    pub fn set(&mut self, name: &str, v: Value) -> Result<()> {
+        let i = self
+            .index(name)
+            .ok_or_else(|| anyhow!("no state entry {name}"))?;
+        self.lits[i] = v.to_literal()?;
+        self.dtypes[i] = match v {
+            Value::F(_) => "f32".into(),
+            Value::I(_) => "i32".into(),
+        };
+        Ok(())
+    }
+
+    /// Iterate typed entries (used by checkpointing; converts each).
+    pub fn entries(&self) -> impl Iterator<Item = (&str, Result<Value>)> {
+        self.names.iter().zip(self.lits.iter().zip(&self.dtypes)).map(
+            |(n, (l, d))| (n.as_str(), Value::from_literal(l, d)),
+        )
+    }
+
+    /// Total element count across all state tensors (for logging).
+    pub fn numel(&self) -> usize {
+        self.lits.iter().map(|l| l.element_count()).sum()
+    }
+}
+
+/// Run an `_init` artifact -> initial State.
+pub fn run_init(art: &Artifact, seed: i32) -> Result<State> {
+    if art.manifest.kind != "init" {
+        bail!("{} is not an init artifact", art.manifest.name);
+    }
+    let seed_lit = TensorI::scalar(seed).to_literal()?;
+    let out = art.execute_raw(&[seed_lit])?;
+    State::from_literals(
+        art.manifest.outputs.iter().map(|o| o.name.clone()).collect(),
+        art.manifest.outputs.iter().map(|o| o.dtype.clone()).collect(),
+        out,
+    )
+}
+
+/// Outcome of one train step: metric values in manifest order.
+pub struct StepOut {
+    pub metrics: Vec<f32>,
+}
+
+/// Run a `_train` artifact: state + batch inputs + lr. `batch` must match
+/// the manifest's non-state inputs minus the trailing lr.
+pub fn run_train(art: &Artifact, state: &mut State, batch: &[Value],
+                 lr: f32) -> Result<StepOut> {
+    if art.manifest.kind != "train" {
+        bail!("{} is not a train artifact", art.manifest.name);
+    }
+    let n_state = art.manifest.state_inputs().len();
+    let n_batch = art.manifest.inputs.len() - n_state - 1;
+    if batch.len() != n_batch {
+        bail!(
+            "{}: expected {} batch inputs, got {}",
+            art.manifest.name, n_batch, batch.len()
+        );
+    }
+    // state literals are borrowed straight into execute; only the (small)
+    // batch + lr are converted this step.
+    let mut extra: Vec<xla::Literal> = Vec::with_capacity(n_batch + 1);
+    for v in batch {
+        extra.push(v.to_literal()?);
+    }
+    extra.push(TensorF::scalar(lr).to_literal()?);
+    let mut args: Vec<&xla::Literal> =
+        Vec::with_capacity(art.manifest.inputs.len());
+    args.extend(state.lits.iter());
+    args.extend(extra.iter());
+    let out = art.execute_raw(&args)?;
+    let n_metrics = art.manifest.metric_outputs().len();
+    let metrics = out[..n_metrics]
+        .iter()
+        .map(|l| Ok(l.get_first_element::<f32>()?))
+        .collect::<Result<Vec<_>>>()?;
+    // feed outputs back as the new state -- no host conversion
+    state.lits = out.into_iter().skip(n_metrics).collect();
+    Ok(StepOut { metrics })
+}
+
+/// Run an `_eval` artifact: state + batch -> metrics.
+pub fn run_eval(art: &Artifact, state: &State, batch: &[Value]) -> Result<Vec<f32>> {
+    if art.manifest.kind != "eval" {
+        bail!("{} is not an eval artifact", art.manifest.name);
+    }
+    let extra: Vec<xla::Literal> = batch
+        .iter()
+        .map(|v| v.to_literal())
+        .collect::<Result<_>>()?;
+    let mut args: Vec<&xla::Literal> = state.lits.iter().collect();
+    args.extend(extra.iter());
+    let out = art.execute_raw(&args)?;
+    out.iter()
+        .map(|l| Ok(l.get_first_element::<f32>()?))
+        .collect()
+}
+
+/// Run a `_decode` / `_export`-style artifact: state + extra inputs.
+pub fn run_aux(art: &Artifact, state: &State, extra: &[Value]) -> Result<Vec<Value>> {
+    let extra_lits: Vec<xla::Literal> = extra
+        .iter()
+        .map(|v| v.to_literal())
+        .collect::<Result<_>>()?;
+    let mut args: Vec<&xla::Literal> = state.lits.iter().collect();
+    args.extend(extra_lits.iter());
+    let parts = art.execute_raw(&args)?;
+    parts
+        .iter()
+        .zip(&art.manifest.outputs)
+        .map(|(lit, spec)| Value::from_literal(lit, &spec.dtype))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime behavior against real artifacts is covered by
+    // rust/tests/integration.rs (requires `make artifacts` first).
+    use super::*;
+
+    #[test]
+    fn state_get_set() {
+        let mut s = State::from_literals(
+            vec!["a".into(), "b".into()],
+            vec!["f32".into(), "f32".into()],
+            vec![
+                TensorF::scalar(1.0).to_literal().unwrap(),
+                TensorF::scalar(2.0).to_literal().unwrap(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(s.get("b").unwrap().scalar_f().unwrap(), 2.0);
+        s.set("a", Value::F(TensorF::scalar(9.0))).unwrap();
+        assert_eq!(s.get("a").unwrap().scalar_f().unwrap(), 9.0);
+        assert!(s.set("zz", Value::F(TensorF::scalar(0.0))).is_err());
+        assert_eq!(s.numel(), 2);
+        assert_eq!(s.literals().len(), 2);
+    }
+
+    #[test]
+    fn state_arity_mismatch_rejected() {
+        assert!(State::from_literals(vec!["a".into()], vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn value_scalar_checks() {
+        let v = Value::F(TensorF::new(vec![2], vec![1.0, 2.0]).unwrap());
+        assert!(v.scalar_f().is_err());
+        assert!(v.as_i().is_err());
+    }
+}

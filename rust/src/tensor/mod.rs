@@ -1,0 +1,192 @@
+//! Minimal dense tensors used by the coordinator: row-major f32 / i32
+//! arrays with shape checking, plus the conversions to and from the xla
+//! crate's `Literal`. Heavy math happens inside the AOT-compiled XLA
+//! executables; these tensors carry data across the boundary and back and
+//! power the post-hoc compression baselines in `quant/`.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl TensorF {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        if numel(&shape) != data.len() {
+            bail!("shape {:?} != data len {}", shape, data.len());
+        }
+        Ok(TensorF { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = numel(&shape);
+        TensorF { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        TensorF { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Rows view for a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let cols = self.shape[1];
+        &mut self.data[i * cols..(i + 1) * cols]
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        self.shape[1]
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // scalar: vec1 of len 1 reshaped to rank 0
+            return Ok(lit.reshape(&[])?);
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = literal_dims(lit)?;
+        let data = lit.to_vec::<f32>().context("literal not f32")?;
+        TensorF::new(shape, data)
+    }
+
+    /// Frobenius norm of the difference (reconstruction-error metric).
+    pub fn rel_err(&self, other: &TensorF) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let num: f32 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let den: f32 = self.data.iter().map(|a| a * a).sum();
+        (num / den.max(1e-12)).sqrt()
+    }
+}
+
+impl TensorI {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        if numel(&shape) != data.len() {
+            bail!("shape {:?} != data len {}", shape, data.len());
+        }
+        Ok(TensorI { shape, data })
+    }
+
+    pub fn scalar(v: i32) -> Self {
+        TensorI { shape: vec![], data: vec![v] }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            return Ok(lit.reshape(&[])?);
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = literal_dims(lit)?;
+        let data = lit.to_vec::<i32>().context("literal not i32")?;
+        TensorI::new(shape, data)
+    }
+}
+
+fn literal_dims(lit: &xla::Literal) -> Result<Vec<usize>> {
+    let shape = lit.array_shape()?;
+    Ok(shape.dims().iter().map(|&d| d as usize).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(TensorF::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(TensorI::new(vec![2], vec![1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn rows_and_cols() {
+        let t = TensorF::new(vec![2, 3], (0..6).map(|x| x as f32).collect())
+            .unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let t = TensorF::new(vec![4], vec![1.0, -2.0, 3.0, 0.5]).unwrap();
+        assert_eq!(t.rel_err(&t), 0.0);
+    }
+
+    #[test]
+    fn rel_err_scales() {
+        let a = TensorF::new(vec![2], vec![1.0, 0.0]).unwrap();
+        let b = TensorF::new(vec![2], vec![0.0, 0.0]).unwrap();
+        assert!((a.rel_err(&b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = TensorF::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = TensorF::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = TensorF::scalar(3.5);
+        let lit = t.to_literal().unwrap();
+        let back = TensorF::from_literal(&lit).unwrap();
+        assert_eq!(back.data, vec![3.5]);
+        assert!(back.shape.is_empty());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = TensorI::new(vec![3], vec![7, -1, 2]).unwrap();
+        let back = TensorI::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,96 @@
+//! Micro-benchmark harness (the offline vendor set has no criterion):
+//! warmup + timed iterations with mean / stddev / throughput reporting.
+//! `cargo bench` targets (rust/benches/*) are plain mains built on this.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        let (scaled, unit) = scale(self.mean_s);
+        let (sd, sd_unit) = scale(self.stddev_s);
+        format!(
+            "{:<44} {:>10.3} {}  (+/- {:.3} {}, {} iters)",
+            self.name, scaled, unit, sd, sd_unit, self.iters
+        )
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_s.max(1e-12)
+    }
+}
+
+fn scale(s: f64) -> (f64, &'static str) {
+    if s >= 1.0 {
+        (s, "s ")
+    } else if s >= 1e-3 {
+        (s * 1e3, "ms")
+    } else if s >= 1e-6 {
+        (s * 1e6, "us")
+    } else {
+        (s * 1e9, "ns")
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples
+        .iter()
+        .map(|x| (x - mean) * (x - mean))
+        .sum::<f64>()
+        / samples.len() as f64;
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        stddev_s: var.sqrt(),
+    };
+    println!("{}", m.report());
+    m
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let m = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(m.mean_s >= 0.0);
+        assert_eq!(m.iters, 5);
+        assert!(m.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn scale_picks_unit() {
+        assert_eq!(scale(2.0).1, "s ");
+        assert_eq!(scale(2e-3).1, "ms");
+        assert_eq!(scale(2e-6).1, "us");
+        assert_eq!(scale(2e-9).1, "ns");
+    }
+}

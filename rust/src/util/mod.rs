@@ -1,0 +1,9 @@
+//! Small shared utilities: a deterministic PRNG (no external `rand` --
+//! this repository builds fully offline) and an in-repo property-testing
+//! helper used across the test suite.
+
+pub mod bench;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

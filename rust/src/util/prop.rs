@@ -1,0 +1,72 @@
+//! Minimal in-repo property-testing harness (the vendored crate set has no
+//! `proptest`). Usage mirrors the common pattern:
+//!
+//! ```ignore
+//! prop_check(100, |rng| {
+//!     let n = 1 + rng.below(50);
+//!     /* build a random case, return Err(msg) on violation */
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Each case is seeded deterministically from the case index, so a failure
+//! message pinpoints a reproducible seed.
+
+use super::rng::Rng;
+
+/// Run `cases` random checks; panics with the failing seed + message.
+pub fn prop_check<F>(cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xD1F9_u64.wrapping_mul(case + 1);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed (case {case}, seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Convenience assertion that returns Err instead of panicking, so checks
+/// compose inside `prop_check` closures.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_runs_all_cases() {
+        let mut count = 0;
+        prop_check(25, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn prop_check_reports_failure() {
+        prop_check(10, |rng| {
+            let x = rng.below(10);
+            if x > 5 {
+                return Err(format!("x={x}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,217 @@
+//! Integration tests over real AOT artifacts: the full L3 -> PJRT -> L2/L1
+//! path. Requires `make artifacts` (skipped with a clear message if the
+//! artifacts directory is missing).
+
+use dpq_embed::config::{LrSchedule, RunConfig};
+use dpq_embed::coordinator::experiments;
+use dpq_embed::coordinator::{checkpoint, TaskGen, Trainer};
+use dpq_embed::dpq::stats as dstats;
+use dpq_embed::metrics;
+use dpq_embed::quant::{Compressor, ProductQuant, ScalarQuant};
+use dpq_embed::runtime::{self, Runtime, Value};
+use dpq_embed::util::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    let mut d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    d.push("artifacts");
+    d
+}
+
+macro_rules! require_artifacts {
+    () => {{
+        let d = artifacts_dir();
+        if !d.join("lm_ptb_full_train.manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        Runtime::new(d).expect("pjrt runtime")
+    }};
+}
+
+fn quick_cfg(artifact: &str, steps: usize, lr: f32) -> RunConfig {
+    RunConfig {
+        artifact: artifact.into(),
+        steps,
+        seed: 11,
+        lr: LrSchedule { base: lr, decay_after: usize::MAX, decay: 1.0 },
+        log_every: steps,
+        eval_batches: 5,
+        artifacts_dir: artifacts_dir(),
+        checkpoint_dir: None,
+        checkpoint_every: 0,
+        export_every: 0,
+    }
+}
+
+#[test]
+fn lm_full_loss_decreases() {
+    let rt = require_artifacts!();
+    let tr = Trainer::new(&rt, quick_cfg("lm_ptb_full", 60, 1.0)).quiet();
+    let out = tr.run().unwrap();
+    let first = out.history.first().unwrap().1[0];
+    let last = out.final_metrics[0];
+    assert!(last < first - 1.0, "ce {first} -> {last}");
+}
+
+#[test]
+fn lm_dpq_variants_train_and_export_codes() {
+    let rt = require_artifacts!();
+    for v in ["sx", "vq"] {
+        let prefix = format!("lm_ptb_{v}_K32D32");
+        let tr = Trainer::new(&rt, quick_cfg(&prefix, 40, 1.0)).quiet();
+        let out = tr.run().unwrap();
+        assert!(out.final_metrics[0] < 7.0, "{v}: ce {}", out.final_metrics[0]);
+        // export: codes in range, table shape matches manifest meta
+        let exp = rt.load(&format!("{prefix}_export")).unwrap();
+        let res = runtime::run_aux(&exp, &out.state, &[]).unwrap();
+        let codes = res[0].as_i().unwrap();
+        let table = res[2].as_f().unwrap();
+        assert_eq!(codes.shape, vec![2000, 32]);
+        assert_eq!(table.shape, vec![2000, 128]);
+        assert!(codes.data.iter().all(|&c| (0..32).contains(&c)));
+        // runtime-side reconstruction equals the XLA-side gather
+        let ce = experiments::compress_state(&rt, &prefix, &out.state, false)
+            .unwrap();
+        let rec = ce.reconstruct_table();
+        let err = table.rel_err(&rec);
+        assert!(err < 1e-5, "{v}: reconstruct mismatch {err}");
+    }
+}
+
+#[test]
+fn train_state_roundtrips_through_checkpoint() {
+    let rt = require_artifacts!();
+    let tr = Trainer::new(&rt, quick_cfg("lm_ptb_full", 5, 1.0)).quiet();
+    let out = tr.run().unwrap();
+    let dir = std::env::temp_dir().join("dpq_integration_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("t.ckpt");
+    checkpoint::save(&p, &out.state).unwrap();
+    let back = checkpoint::load(&p).unwrap();
+    assert_eq!(back.names, out.state.names);
+    // evaluation with the restored state matches
+    let eval = rt.load("lm_ptb_full_eval").unwrap();
+    let mut gen = TaskGen::from_manifest(&eval.manifest, 3).unwrap();
+    let b = gen.next_batch();
+    let m1 = runtime::run_eval(&eval, &out.state, &b).unwrap();
+    let m2 = runtime::run_eval(&eval, &back, &b).unwrap();
+    assert!((m1[0] - m2[0]).abs() < 1e-6);
+}
+
+#[test]
+fn eval_with_posthoc_compressed_table_degrades_gracefully() {
+    let rt = require_artifacts!();
+    // enough steps that the embedding table actually matters to the loss
+    // (otherwise coarse quantization is indistinguishable from noise)
+    let tr = Trainer::new(&rt, quick_cfg("lm_ptb_full", 250, 1.0)).quiet();
+    let out = tr.run().unwrap();
+    let table = out.state.get("emb/table").unwrap().as_f().unwrap().clone();
+    let eval = rt.load("lm_ptb_full_eval").unwrap();
+    let mut gen = TaskGen::from_manifest(&eval.manifest, 5).unwrap();
+    let batches: Vec<Vec<Value>> = (0..4).map(|_| gen.next_batch()).collect();
+    let ce_of = |st: &runtime::State| -> f32 {
+        batches
+            .iter()
+            .map(|b| runtime::run_eval(&eval, st, b).unwrap()[0])
+            .sum::<f32>()
+            / batches.len() as f32
+    };
+    let base = ce_of(&out.state);
+    // 8-bit scalar quant: near-lossless (paper Table 5 top row)
+    let sq = ScalarQuant::fit(&table, 8);
+    let mut st8 = out.state.clone();
+    st8.set("emb/table", Value::F(sq.reconstruct())).unwrap();
+    let ce8 = ce_of(&st8);
+    assert!((ce8 - base).abs() < 0.05, "8-bit: {base} -> {ce8}");
+    // coarse PQ: visibly worse than near-lossless scalar quant (the
+    // Table 5 / Table 8 shape: aggressive post-hoc compression costs
+    // task metric)
+    let pq_coarse = ProductQuant::fit(&table, 8, 8, 8, &mut Rng::new(4));
+    let mut stc = out.state.clone();
+    stc.set("emb/table", Value::F(pq_coarse.reconstruct())).unwrap();
+    let cec = ce_of(&stc);
+    assert!(cec > ce8 + 0.02, "coarse PQ should cost ce: {ce8} vs {cec}");
+    // moderate PQ: usable and compact
+    let pq = ProductQuant::fit(&table, 32, 16, 8, &mut Rng::new(4));
+    let mut stp = out.state.clone();
+    stp.set("emb/table", Value::F(pq.reconstruct())).unwrap();
+    let cep = ce_of(&stp);
+    assert!(cep < cec + 1.0, "pq unusable: {cep}");
+    assert!(cep > ce8 - 0.05, "moderate PQ should not beat lossless: {cep}");
+    assert!(pq.compression_ratio(table.rows(), table.cols()) > 10.0);
+}
+
+#[test]
+fn nmt_trains_and_bleu_beats_untrained() {
+    let rt = require_artifacts!();
+    let prefix = "nmt_vien_full";
+    let tr = Trainer::new(&rt, quick_cfg(prefix, 150, 3e-3)).quiet();
+    // untrained BLEU
+    let init = rt.load(&format!("{prefix}_init")).unwrap();
+    let state0 = runtime::run_init(&init, 11).unwrap();
+    let bleu0 = tr.bleu(&state0, 2).unwrap();
+    let out = tr.run().unwrap();
+    let bleu1 = tr.bleu(&out.state, 2).unwrap();
+    assert!(bleu1 > bleu0 + 2.0, "bleu {bleu0} -> {bleu1}");
+}
+
+#[test]
+fn textc_accuracy_above_chance() {
+    let rt = require_artifacts!();
+    let tr = Trainer::new(&rt, quick_cfg("textc_agnews_sx_K32D16", 60, 3e-3))
+        .quiet();
+    let out = tr.run().unwrap();
+    let acc = out.metric("acc").unwrap();
+    assert!(acc > 0.4, "acc {acc} (chance = 0.25)");
+}
+
+#[test]
+fn code_snapshots_stabilize() {
+    let rt = require_artifacts!();
+    let mut cfg = quick_cfg("lm_ptb_vq_K32D32", 60, 1.0);
+    cfg.export_every = 15;
+    let tr = Trainer::new(&rt, cfg).quiet();
+    let out = tr.run().unwrap();
+    assert!(out.code_snapshots.len() >= 3);
+    let rates: Vec<f64> = out
+        .code_snapshots
+        .windows(2)
+        .map(|w| dstats::code_change_rate(&w[0].1, &w[1].1))
+        .collect();
+    // change rate must drop as training converges (Fig. 6 shape)
+    assert!(rates.last().unwrap() < rates.first().unwrap(),
+            "rates {rates:?}");
+}
+
+#[test]
+fn manifest_shapes_match_execution() {
+    let rt = require_artifacts!();
+    let train = rt.load("lm_ptb_full_train").unwrap();
+    let m = &train.manifest;
+    assert_eq!(m.kind, "train");
+    assert_eq!(m.inputs.last().unwrap().name, "lr");
+    let n_state = m.state_inputs().len();
+    // outputs = metrics + state (same names, same order)
+    let metric_n = m.metric_outputs().len();
+    let out_state: Vec<&str> = m.outputs[metric_n..]
+        .iter()
+        .map(|s| s.name.as_str())
+        .collect();
+    let in_state: Vec<&str> = m
+        .state_inputs()
+        .iter()
+        .map(|s| s.name.as_str())
+        .collect();
+    assert_eq!(out_state, in_state);
+    assert_eq!(n_state + 2 + 1, m.inputs.len()); // state + x,y + lr
+}
+
+#[test]
+fn perplexity_metric_consistency() {
+    // exp of the manifest-reported ce must equal TrainOutcome::ppl
+    let rt = require_artifacts!();
+    let tr = Trainer::new(&rt, quick_cfg("lm_ptb_full", 10, 1.0)).quiet();
+    let out = tr.run().unwrap();
+    let ce = out.metric("ce").unwrap() as f64;
+    assert!((out.ppl().unwrap() - metrics::perplexity(ce)).abs() < 1e-9);
+}

@@ -1,0 +1,80 @@
+//! End-to-end serving test: train a DPQ LM briefly, export the compressed
+//! embedding, serve it over TCP, and check served vectors equal both the
+//! local reconstruction and the XLA-side reconstructed table.
+
+use std::sync::{mpsc, Arc};
+
+use dpq_embed::config::{LrSchedule, RunConfig};
+use dpq_embed::coordinator::{experiments, Trainer};
+use dpq_embed::runtime::{self, Runtime};
+use dpq_embed::server::{Client, EmbeddingServer};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    let mut d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    d.push("artifacts");
+    d
+}
+
+#[test]
+fn serve_compressed_embedding_end_to_end() {
+    let d = artifacts_dir();
+    if !d.join("lm_ptb_sx_K32D32_train.manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::new(&d).unwrap();
+    let prefix = "lm_ptb_sx_K32D32";
+    let cfg = RunConfig {
+        artifact: prefix.into(),
+        steps: 20,
+        seed: 5,
+        lr: LrSchedule { base: 1.0, decay_after: usize::MAX, decay: 1.0 },
+        log_every: 50,
+        eval_batches: 3,
+        artifacts_dir: d,
+        checkpoint_dir: None,
+        checkpoint_every: 0,
+        export_every: 0,
+    };
+    let out = Trainer::new(&rt, cfg).quiet().run().unwrap();
+    // XLA-side reconstructed table (ground truth for the server)
+    let exp = rt.load(&format!("{prefix}_export")).unwrap();
+    let res = runtime::run_aux(&exp, &out.state, &[]).unwrap();
+    let xla_table = res[2].as_f().unwrap().clone();
+    let ce = experiments::compress_state(&rt, prefix, &out.state, false)
+        .unwrap();
+    assert!(ce.compression_ratio() > 5.0);
+
+    // save/load roundtrip through the on-disk format the CLI uses
+    let tmp = std::env::temp_dir().join("dpq_server_int.dpq");
+    ce.save(&tmp).unwrap();
+    let loaded = dpq_embed::dpq::CompressedEmbedding::load(&tmp).unwrap();
+
+    let server = Arc::new(EmbeddingServer::new(loaded, 32));
+    let (tx, rx) = mpsc::channel();
+    let s2 = server.clone();
+    let h = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    // multiple clients, overlapping lookups -> batching exercised
+    let mut clients: Vec<Client> =
+        (0..3).map(|_| Client::connect(addr).unwrap()).collect();
+    for (ci, c) in clients.iter_mut().enumerate() {
+        let ids: Vec<usize> = (0..16).map(|i| (ci * 37 + i * 13) % 2000).collect();
+        let vecs = c.lookup(&ids).unwrap();
+        assert_eq!(vecs.len(), 16);
+        for (row, &id) in vecs.iter().zip(&ids) {
+            assert_eq!(row.len(), 128);
+            for (a, b) in row.iter().zip(xla_table.row(id)) {
+                assert!((a - b).abs() < 1e-4,
+                        "client {ci} id {id}: {a} vs {b}");
+            }
+        }
+    }
+    let stats = clients[0].stats().unwrap();
+    assert!(stats.get("ids_served").unwrap().as_usize().unwrap() >= 48);
+    clients[0].shutdown().unwrap();
+    h.join().unwrap();
+}

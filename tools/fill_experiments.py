@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Inline generated reports into EXPERIMENTS.md placeholders.
+
+Each `<!-- TAG -->` marker is replaced by the body of the corresponding
+reports/<id>.md (minus its own H1 title). Idempotent: reruns refresh the
+blocks. Missing reports leave a note instead.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+MAP = {
+    "TABLE3": "table3", "TABLE4": "table4", "TABLE5": "table5",
+    "TABLE6": "table6", "TABLE7": "table7", "TABLE8": "table8",
+    "FIG3": "fig3", "FIG4": "fig4", "FIG5": "fig5", "FIG6": "fig6",
+    "NEIGHBORS": "neighbors", "CODES": "codes",
+}
+
+
+def body_of(report: Path) -> str:
+    lines = report.read_text().splitlines()
+    # drop the H1 title line and leading blanks
+    while lines and (lines[0].startswith("# ") or not lines[0].strip()):
+        lines.pop(0)
+    return "\n".join(lines).strip()
+
+
+def main():
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text()
+    for tag, rid in MAP.items():
+        report = ROOT / "reports" / f"{rid}.md"
+        if report.exists():
+            block = (f"<!-- {tag}:begin -->\n{body_of(report)}\n"
+                     f"<!-- {tag}:end -->")
+        else:
+            block = (f"<!-- {tag}:begin -->\n*(report not generated on this "
+                     f"machine yet -- run `repro experiment {rid}`)*\n"
+                     f"<!-- {tag}:end -->")
+        # replace either the bare placeholder or a previously filled block
+        pat = re.compile(
+            rf"<!-- {tag}:begin -->.*?<!-- {tag}:end -->|<!-- {tag} -->",
+            re.S)
+        if pat.search(text):
+            text = pat.sub(lambda _: block, text, count=1)
+        else:
+            print(f"warning: no placeholder for {tag}", file=sys.stderr)
+    exp.write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

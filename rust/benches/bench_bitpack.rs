@@ -3,10 +3,11 @@
 
 use dpq_embed::dpq::Codebook;
 use dpq_embed::tensor::TensorI;
-use dpq_embed::util::bench::{bench, section};
+use dpq_embed::util::bench::{self, bench, section};
 use dpq_embed::util::Rng;
 
 fn main() {
+    bench::init("bitpack");
     let n = 50_000usize;
     let dg = 32usize;
     for k in [2usize, 8, 32, 128] {

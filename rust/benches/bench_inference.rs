@@ -5,8 +5,8 @@
 
 use dpq_embed::dpq::{Codebook, CompressedEmbedding};
 use dpq_embed::tensor::{TensorF, TensorI};
-use dpq_embed::util::bench::{bench, section};
-use dpq_embed::util::Rng;
+use dpq_embed::util::bench::{self, bench, section};
+use dpq_embed::util::{pool, Rng};
 
 fn toy(n: usize, k: usize, dg: usize, s: usize) -> (CompressedEmbedding, TensorF) {
     let mut rng = Rng::new(1);
@@ -28,6 +28,9 @@ fn toy(n: usize, k: usize, dg: usize, s: usize) -> (CompressedEmbedding, TensorF
 }
 
 fn main() {
+    bench::init("inference");
+    println!("worker pool: {} thread(s) (DPQ_THREADS to change)",
+             pool::current_threads());
     // PTB-medium shape: n=2000 d=128 K=32 D=32; plus a large-vocab shape.
     for (n, k, dg, s, label) in [
         (2000usize, 32usize, 32usize, 4usize, "ptb-medium (n=2k, d=128)"),

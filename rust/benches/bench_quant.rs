@@ -4,7 +4,7 @@
 
 use dpq_embed::quant::{Compressor, LowRank, ProductQuant, ScalarQuant};
 use dpq_embed::tensor::TensorF;
-use dpq_embed::util::bench::{bench, section};
+use dpq_embed::util::bench::{self, bench, section};
 use dpq_embed::util::Rng;
 
 fn table(n: usize, d: usize) -> TensorF {
@@ -14,6 +14,7 @@ fn table(n: usize, d: usize) -> TensorF {
 }
 
 fn main() {
+    bench::init("quant");
     let t = table(2000, 128);
     section("scalar quantization (n=2000, d=128)");
     for bits in [4u32, 8] {

@@ -7,10 +7,13 @@ use std::time::Instant;
 use dpq_embed::dpq::{Codebook, CompressedEmbedding};
 use dpq_embed::server::{Client, EmbeddingServer};
 use dpq_embed::tensor::{TensorF, TensorI};
-use dpq_embed::util::bench::section;
-use dpq_embed::util::Rng;
+use dpq_embed::util::bench::{self, section};
+use dpq_embed::util::{pool, Rng};
 
 fn main() {
+    bench::init("server");
+    println!("worker pool: {} thread(s) (DPQ_THREADS to change)",
+             pool::current_threads());
     let (n, k, dg, s) = (10_000usize, 32usize, 16usize, 4usize);
     let mut rng = Rng::new(1);
     let codes = TensorI::new(vec![n, dg],
@@ -70,6 +73,17 @@ fn main() {
                 .stats
                 .batches
                 .load(std::sync::atomic::Ordering::Relaxed)
+        );
+        // sustained-lookup trail: mean seconds per request at this load
+        bench::record(
+            &format!(
+                "sustained_lookup_{}_{}c",
+                if binary { "bin" } else { "json" },
+                clients
+            ),
+            wall / reqs as f64,
+            0.0,
+            reqs,
         );
         let mut c = Client::connect(addr).unwrap();
         c.shutdown().unwrap();

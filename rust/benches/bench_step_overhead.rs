@@ -6,9 +6,10 @@
 
 use dpq_embed::coordinator::TaskGen;
 use dpq_embed::runtime::{self, Runtime};
-use dpq_embed::util::bench::{bench, section};
+use dpq_embed::util::bench::{self, bench, section};
 
 fn main() {
+    bench::init("step_overhead");
     let dir = std::path::Path::new("artifacts");
     if !dir.join("lm_ptb_full_train.manifest.json").exists() {
         eprintln!("SKIP: run `make artifacts` first");

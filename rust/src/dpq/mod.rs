@@ -11,6 +11,7 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::tensor::{TensorF, TensorI};
+use crate::util::pool;
 
 /// Bit-packed KD codebook: n symbols x D groups, `bits` bits per code.
 #[derive(Clone, Debug, PartialEq)]
@@ -141,7 +142,8 @@ impl CompressedEmbedding {
         let s = self.values.shape[2];
         debug_assert_eq!(out.len(), self.d);
         let bits = self.codebook.bits();
-        let mask = (1u64 << bits) - 1;
+        // same guarded mask as `get_bits`: 1u64 << 64 overflows in debug
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
         let packed = self.codebook.packed_words();
         let mut bit = row * dg * bits as usize;
         let values = &self.values.data;
@@ -165,13 +167,49 @@ impl CompressedEmbedding {
         out
     }
 
-    /// Reconstruct the full [n, d] table.
+    /// Shared pool-sharded gather: reconstruct `n_rows` rows into `out`
+    /// ([n_rows, d] row-major), the symbol id of output row `r` given by
+    /// `id_of(r)`. Single home for the chunk-sizing arithmetic used by
+    /// both whole-table reconstruction and the server batcher. Small
+    /// workloads run serial (`pool::workers_for`); rows are independent
+    /// gathers whose bits don't depend on chunk placement, so every
+    /// thread count produces identical output.
+    fn reconstruct_rows_with(
+        &self,
+        n_rows: usize,
+        id_of: impl Fn(usize) -> usize + Sync,
+        out: &mut [f32],
+    ) {
+        let d = self.d;
+        debug_assert_eq!(out.len(), n_rows * d);
+        if d == 0 || n_rows == 0 {
+            return;
+        }
+        pool::with_threads(pool::workers_for(n_rows * d), || {
+            let rows_per_chunk = pool::chunk_len(n_rows);
+            pool::par_chunks_mut(out, rows_per_chunk * d, |ci, chunk| {
+                let row0 = ci * rows_per_chunk;
+                for (ri, orow) in chunk.chunks_mut(d).enumerate() {
+                    self.reconstruct_row_into(id_of(row0 + ri), orow);
+                }
+            });
+        });
+    }
+
+    /// Reconstruct an arbitrary id list into `out` ([ids.len(), d]
+    /// row-major), sharded over the worker pool. Panics (slice bounds) if
+    /// an id is out of range -- callers validate first.
+    pub fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), ids.len() * self.d);
+        self.reconstruct_rows_with(ids.len(), |r| ids[r], out);
+    }
+
+    /// Reconstruct the full [n, d] table, sharded over the worker pool.
+    /// Used at model-load time and by the experiment harness.
     pub fn reconstruct_table(&self) -> TensorF {
         let n = self.codebook.n;
         let mut data = vec![0.0f32; n * self.d];
-        for i in 0..n {
-            self.reconstruct_row_into(i, &mut data[i * self.d..(i + 1) * self.d]);
-        }
+        self.reconstruct_rows_with(n, |r| r, &mut data);
         TensorF { shape: vec![n, self.d], data }
     }
 

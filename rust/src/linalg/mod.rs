@@ -2,11 +2,25 @@
 //! (Table 5 / Table 8): matmul, one-sided Jacobi SVD for the low-rank
 //! baseline, and k-means++ / Lloyd for the product-quantization baseline.
 //! Implemented from scratch -- the offline build has no BLAS/LAPACK.
+//!
+//! `matmul` and the k-means assignment step run on the shared worker pool
+//! (`util::pool`, thread count from `DPQ_THREADS`). Both are bit-exact
+//! with the serial path for any thread count: rows are independent work
+//! units and every per-element accumulation keeps the serial order.
 
 use crate::tensor::TensorF;
-use crate::util::Rng;
+use crate::util::{pool, Rng};
+
+/// k-dimension block size for `matmul`: keeps the active panel of B
+/// (KC x n f32 rows) resident in L2 while a row chunk streams over it.
+const MATMUL_KC: usize = 256;
 
 /// C = A @ B for row-major 2-D tensors. [m,k] x [k,n] -> [m,n].
+///
+/// Parallel over chunks of output rows; within a row the k loop runs in
+/// ascending blocks of [`MATMUL_KC`], so each output element accumulates
+/// in exactly the serial order (no float reassociation across chunk
+/// boundaries) and the result is bit-identical for every thread count.
 pub fn matmul(a: &TensorF, b: &TensorF) -> TensorF {
     assert_eq!(a.shape.len(), 2);
     assert_eq!(b.shape.len(), 2);
@@ -14,20 +28,41 @@ pub fn matmul(a: &TensorF, b: &TensorF) -> TensorF {
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
-    // ikj loop order: streams B rows, vectorizes the inner j loop.
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
+    if n == 0 {
+        return TensorF { shape: vec![m, n], data: out };
     }
+    // ~2 flops per (i, kk, j) triple; small products run serial
+    pool::with_threads(pool::workers_for(m * k * n), || {
+        let rows_per_chunk = pool::chunk_len(m);
+        pool::par_chunks_mut(&mut out, rows_per_chunk * n, |ci, ochunk| {
+            let row0 = ci * rows_per_chunk;
+            // k-blocked ikj: the k0 block loop is OUTSIDE the row loop, so
+            // one KC x n panel of B is reused across every row of the
+            // chunk before the next panel is touched. Each output element
+            // still accumulates over kk in ascending order (blocks are
+            // visited in order, rows within a block don't share elements),
+            // so the result is bit-identical to the serial ikj loop.
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + MATMUL_KC).min(k);
+                for (ri, orow) in ochunk.chunks_mut(n).enumerate() {
+                    let i = row0 + ri;
+                    let ablock = &a.data[i * k + k0..i * k + k1];
+                    for (kk, &av) in ablock.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[(k0 + kk) * n..(k0 + kk + 1) * n];
+                        // inner j loop vectorizes; streams the B row
+                        for j in 0..n {
+                            orow[j] += av * brow[j];
+                        }
+                    }
+                }
+                k0 = k1;
+            }
+        });
+    });
     TensorF { shape: vec![m, n], data: out }
 }
 
@@ -171,20 +206,39 @@ pub fn kmeans(
     }
     // Lloyd
     let mut assign = vec![0usize; n];
+    // (nearest centroid, squared distance) per row; the parallel
+    // assignment step writes here, the inertia fold below reads it.
+    let mut nearest: Vec<(u32, f32)> = vec![(0, 0.0); n];
     let mut inertia = f64::INFINITY;
     for _ in 0..iters {
-        // assignment step
-        let mut new_inertia = 0.0f64;
-        for i in 0..n {
-            let (mut best, mut bd) = (0usize, f32::INFINITY);
-            for c in 0..k {
-                let dd = sq_dist(x.row(i), &centroids[c * d..(c + 1) * d]);
-                if dd < bd {
-                    bd = dd;
-                    best = c;
+        // assignment step: rows are independent -> sharded across the
+        // pool (serial when n*k*d is too small to amortize a spawn).
+        // Each row's best-centroid scan is exactly the serial loop.
+        pool::with_threads(pool::workers_for(n * k * d), || {
+            let rows_per_chunk = pool::chunk_len(n);
+            let cent = &centroids;
+            pool::par_chunks_mut(&mut nearest, rows_per_chunk, |ci, chunk| {
+                let row0 = ci * rows_per_chunk;
+                for (o, slot) in chunk.iter_mut().enumerate() {
+                    let i = row0 + o;
+                    let (mut best, mut bd) = (0usize, f32::INFINITY);
+                    for c in 0..k {
+                        let dd = sq_dist(x.row(i), &cent[c * d..(c + 1) * d]);
+                        if dd < bd {
+                            bd = dd;
+                            best = c;
+                        }
+                    }
+                    *slot = (best as u32, bd);
                 }
-            }
-            assign[i] = best;
+            });
+        });
+        // inertia fold on the caller thread, in row order: bit-identical
+        // to the serial accumulation (per-row partials, nothing folded
+        // per chunk, so chunk boundaries cannot reassociate it).
+        let mut new_inertia = 0.0f64;
+        for (i, &(best, bd)) in nearest.iter().enumerate() {
+            assign[i] = best as usize;
             new_inertia += bd as f64;
         }
         // update step

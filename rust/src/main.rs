@@ -11,6 +11,12 @@
 //!
 //! All flags are `--key value`; unknown keys are rejected with the list of
 //! valid ones (see config::RunConfig).
+//!
+//! The global `--threads N` flag (any subcommand) pins the worker-pool
+//! size used by the parallel hot paths (matmul, k-means, post-hoc
+//! quantizer fits, table reconstruction, the server batcher). Default:
+//! the `DPQ_THREADS` env var, else all available cores. Results are
+//! bit-identical for every thread count.
 
 use std::collections::BTreeMap;
 
@@ -23,13 +29,38 @@ use dpq_embed::dpq::stats as dstats;
 use dpq_embed::metrics;
 use dpq_embed::runtime::Runtime;
 use dpq_embed::server::EmbeddingServer;
+use dpq_embed::util::pool;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = dispatch(&args) {
+    if let Err(e) = run(args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+fn run(mut args: Vec<String>) -> Result<()> {
+    apply_threads_flag(&mut args)?;
+    dispatch(&args)
+}
+
+/// Extract the global `--threads N` flag (valid for every subcommand) and
+/// configure the worker pool before dispatch.
+fn apply_threads_flag(args: &mut Vec<String>) -> Result<()> {
+    let Some(i) = args.iter().position(|a| a == "--threads") else {
+        return Ok(());
+    };
+    let n: usize = args
+        .get(i + 1)
+        .ok_or_else(|| anyhow!("--threads missing value"))?
+        .parse()
+        .map_err(|_| anyhow!("--threads expects a positive integer"))?;
+    if n == 0 {
+        bail!("--threads must be >= 1");
+    }
+    pool::set_threads(n);
+    args.drain(i..=i + 1);
+    Ok(())
 }
 
 fn take_or<'a>(kv: &'a BTreeMap<String, String>, key: &str, default: &'a str) -> &'a str {
@@ -197,6 +228,10 @@ fn print_usage() {
          \x20 compress   [--artifact P --out F]\n\
          \x20 serve      [--embedding F --addr A --max-batch N]\n\
          \x20 codes      [--artifact P --steps N]\n\
+         \n\
+         global flags:\n\
+         \x20 --threads N   worker-pool size for parallel hot paths\n\
+         \x20               (default: DPQ_THREADS env var, else all cores)\n\
          \n\
          run `make artifacts` first to build the AOT artifacts."
     );

@@ -7,7 +7,7 @@
 use crate::dpq::{Codebook, CompressedEmbedding};
 use crate::linalg;
 use crate::tensor::{TensorF, TensorI};
-use crate::util::Rng;
+use crate::util::{pool, Rng};
 
 /// A fitted compressor: storage accounting + reconstruction.
 pub trait Compressor {
@@ -34,27 +34,60 @@ pub struct ScalarQuant {
 }
 
 impl ScalarQuant {
+    /// Fit runs on the worker pool: the per-column min/max scan computes
+    /// chunk-local extrema merged in chunk order (min/max are exact, so
+    /// any merge order is bit-identical to the serial scan), and the code
+    /// assignment shards rows (each element quantized independently).
     pub fn fit(table: &TensorF, bits: u32) -> Self {
         assert!(bits >= 1 && bits <= 16);
         let (n, d) = (table.shape[0], table.shape[1]);
         let levels = (1u32 << bits) - 1;
+        let workers = pool::workers_for(n * d * 2);
         let mut lo = vec![f32::INFINITY; d];
         let mut hi = vec![f32::NEG_INFINITY; d];
-        for i in 0..n {
-            for (j, &v) in table.row(i).iter().enumerate() {
-                lo[j] = lo[j].min(v);
-                hi[j] = hi[j].max(v);
+        pool::with_threads(workers, || {
+            // chunk-local (lo, hi) partials, merged below
+            let rows_per_chunk = pool::chunk_len(n);
+            let n_chunks = n.div_ceil(rows_per_chunk).max(1);
+            let mut partials: Vec<(Vec<f32>, Vec<f32>)> =
+                vec![(vec![f32::INFINITY; d], vec![f32::NEG_INFINITY; d]);
+                     n_chunks];
+            pool::par_chunks_mut(&mut partials, 1, |ci, slot| {
+                let (plo, phi) = &mut slot[0];
+                let row0 = ci * rows_per_chunk;
+                let row1 = (row0 + rows_per_chunk).min(n);
+                for i in row0..row1 {
+                    for (j, &v) in table.row(i).iter().enumerate() {
+                        plo[j] = plo[j].min(v);
+                        phi[j] = phi[j].max(v);
+                    }
+                }
+            });
+            for (plo, phi) in &partials {
+                for j in 0..d {
+                    lo[j] = lo[j].min(plo[j]);
+                    hi[j] = hi[j].max(phi[j]);
+                }
             }
-        }
+        });
         let step: Vec<f32> = (0..d)
             .map(|j| ((hi[j] - lo[j]) / levels as f32).max(1e-12))
             .collect();
         let mut codes = vec![0u16; n * d];
-        for i in 0..n {
-            for (j, &v) in table.row(i).iter().enumerate() {
-                let q = ((v - lo[j]) / step[j]).round();
-                codes[i * d + j] = q.clamp(0.0, levels as f32) as u16;
-            }
+        if d > 0 {
+            pool::with_threads(workers, || {
+                let rows_per_chunk = pool::chunk_len(n);
+                let (lo_ref, step_ref) = (&lo, &step);
+                pool::par_chunks_mut(&mut codes, rows_per_chunk * d, |ci, chunk| {
+                    let row0 = ci * rows_per_chunk;
+                    for (o, out_row) in chunk.chunks_mut(d).enumerate() {
+                        for (j, &v) in table.row(row0 + o).iter().enumerate() {
+                            let q = ((v - lo_ref[j]) / step_ref[j]).round();
+                            out_row[j] = q.clamp(0.0, levels as f32) as u16;
+                        }
+                    }
+                });
+            });
         }
         ScalarQuant { bits, n, d, codes, lo, step }
     }
@@ -94,22 +127,42 @@ pub struct ProductQuant {
 
 impl ProductQuant {
     /// Split columns into `d_groups` subspaces, k-means each, store codes.
+    ///
+    /// Subspaces are fitted in parallel on the worker pool. Each group
+    /// draws a dedicated RNG stream ([`Rng::fork`], forked from `rng` in
+    /// group order before any worker runs), so the result is a pure
+    /// function of the seed -- independent of thread count and schedule.
+    /// Inside a pool worker the nested k-means runs its assignment step
+    /// serially (the pool forbids nested parallelism); a top-level call
+    /// with one group still parallelizes inside k-means.
     pub fn fit(table: &TensorF, k: usize, d_groups: usize, iters: usize,
                rng: &mut Rng) -> Self {
         let (n, d) = (table.shape[0], table.shape[1]);
         assert!(d % d_groups == 0, "d={d} % D={d_groups} != 0");
         let s = d / d_groups;
+        // per-group work slots: (rng stream, assignments, centroids)
+        let mut groups: Vec<(Rng, Vec<usize>, TensorF)> = (0..d_groups)
+            .map(|g| (rng.fork(g as u64), Vec::new(), TensorF::zeros(vec![0, 0])))
+            .collect();
+        // k-means dominates: ~n*k*s distance ops per Lloyd iteration/group
+        pool::with_threads(pool::workers_for(n * d * k * iters.max(1)), || {
+            pool::par_chunks_mut(&mut groups, 1, |g, slot| {
+                let (grng, assign_out, cent_out) = &mut slot[0];
+                // gather subspace columns
+                let mut sub = vec![0.0f32; n * s];
+                for i in 0..n {
+                    sub[i * s..(i + 1) * s]
+                        .copy_from_slice(&table.row(i)[g * s..(g + 1) * s]);
+                }
+                let x = TensorF { shape: vec![n, s], data: sub };
+                let (cent, assign, _) = linalg::kmeans(&x, k, iters, grng);
+                *assign_out = assign;
+                *cent_out = cent;
+            });
+        });
         let mut codes = vec![0i32; n * d_groups];
         let mut values = vec![0.0f32; k * d_groups * s];
-        for g in 0..d_groups {
-            // gather subspace columns
-            let mut sub = vec![0.0f32; n * s];
-            for i in 0..n {
-                sub[i * s..(i + 1) * s]
-                    .copy_from_slice(&table.row(i)[g * s..(g + 1) * s]);
-            }
-            let x = TensorF { shape: vec![n, s], data: sub };
-            let (cent, assign, _) = linalg::kmeans(&x, k, iters, rng);
+        for (g, (_, assign, cent)) in groups.iter().enumerate() {
             let kk = cent.shape[0];
             for i in 0..n {
                 codes[i * d_groups + g] = assign[i] as i32;

@@ -13,11 +13,24 @@
 //!   (row-major). Binary lookups skip JSON float formatting entirely --
 //!   see EXPERIMENTS.md §Perf for the measured speedup.
 //!
-//! Architecture: acceptor thread per connection pushes parsed requests to
-//! a bounded channel; a single batcher thread drains up to `max_batch`
-//! pending lookups, reconstructs rows in one pass over the codebook, and
-//! completes each waiting request. std-only (no tokio in the offline
-//! vendor set) -- the event loop is threads + channels.
+//! Architecture: one thread per connection parses requests and strictly
+//! validates ids -- every id must be a non-negative integer inside the
+//! vocab; malformed or out-of-range ids are rejected, never clamped or
+//! dropped (JSON with an `{"ok": false}` error object, binary with a
+//! `u32::MAX` length sentinel, which can never be a real frame length; a
+//! zero-length frame remains the valid response to an empty id list) --
+//! and pushes a [`Pending`] onto the shared [`BatchQueue`]. A batcher
+//! thread drains up to `max_batch` pending lookups at a time,
+//! concatenates their ids, and reconstructs the whole micro-batch into
+//! ONE flat row-major `Vec<f32>` sharded across the worker pool
+//! (`util::pool`, thread count from `DPQ_THREADS` / `--threads`; small
+//! batches run serial). Each pending request is then completed with a
+//! zero-copy [`RowsSlice`] view of that buffer -- no per-id
+//! `reconstruct_row` allocation, no `Vec<Vec<f32>>`, and no per-request
+//! copy before wire encoding. Each row's gather is independent of chunk
+//! placement, so served vectors are bit-identical for every thread
+//! count. std-only (no tokio in the offline vendor set) -- the event loop
+//! is threads + channels.
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -39,10 +52,50 @@ pub struct Stats {
     pub batches: AtomicU64,
 }
 
-/// A pending lookup: ids + completion slot.
+/// A request's reconstructed rows: a shared view into its micro-batch's
+/// flat buffer (row-major, `len` = ids * d). No per-request copy is made;
+/// the buffer is freed when the last handler finishes encoding its view.
+struct RowsSlice {
+    buf: Arc<Vec<f32>>,
+    start: usize,
+    len: usize,
+}
+
+impl RowsSlice {
+    fn as_slice(&self) -> &[f32] {
+        &self.buf[self.start..self.start + self.len]
+    }
+}
+
+/// A pending lookup: ids + completion slot. The batcher fills the slot
+/// with a [`RowsSlice`] view of the batch's flat reconstruction;
+/// connection handlers slice or chunk it per protocol. Ids are validated
+/// against the vocab by the connection handler BEFORE queueing -- the
+/// batcher reconstructs unchecked.
 struct Pending {
     ids: Vec<usize>,
-    done: Arc<(Mutex<Option<Vec<Vec<f32>>>>, Condvar)>,
+    done: Arc<(Mutex<Option<RowsSlice>>, Condvar)>,
+}
+
+/// Strictly parse the request's `ids` array: every element must be a
+/// non-negative integer JSON number. Anything else (negative, fractional,
+/// string, null) returns `Ok(None)` so the caller can reject -- never
+/// drop or saturate-clamp a malformed id (`-1 as usize` would silently
+/// become id 0). A missing or non-array `ids` is a hard protocol error.
+fn parse_ids(j: &Json, op: &str) -> Result<Option<Vec<usize>>> {
+    let arr = j
+        .get("ids")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("{op} without ids"))?;
+    Ok(arr
+        .iter()
+        .map(|x| match x.as_f64() {
+            Some(n) if n >= 0.0
+                && n.fract() == 0.0
+                && n <= usize::MAX as f64 => Some(n as usize),
+            _ => None,
+        })
+        .collect())
 }
 
 /// Micro-batching queue: lookups accumulate here; the batcher drains.
@@ -71,6 +124,49 @@ impl BatchQueue {
         }
         let take = q.len().min(self.max_batch);
         q.drain(..take).collect()
+    }
+}
+
+/// Reconstruct one drained micro-batch: every request's ids concatenated,
+/// decoded into a single flat row-major [total, d] buffer sharded across
+/// the worker pool (small batches run serial -- a thread spawn costs more
+/// than a few hundred row gathers), then handed back per request in queue
+/// order as contiguous slices. Each row's gather is independent of which
+/// chunk it lands in, so the served bits never depend on the thread count.
+fn run_batch(emb: &CompressedEmbedding, batch: &[Pending], stats: &Stats) {
+    let d = emb.d;
+    let total: usize = batch.iter().map(|p| p.ids.len()).sum();
+    let mut all_ids: Vec<usize> = Vec::with_capacity(total);
+    for p in batch {
+        all_ids.extend_from_slice(&p.ids);
+    }
+    // Handlers validate before queueing, so an out-of-range id here is a
+    // bug -- but an OOB panic (or an assert) would kill the batcher
+    // thread and leave every waiting handler blocked on its condvar
+    // forever. Keep the server alive in every build: log loudly and
+    // answer the whole batch with empty views, which handlers turn into
+    // explicit per-request errors.
+    let vocab = emb.vocab();
+    let valid = all_ids.iter().all(|&i| i < vocab);
+    if !valid {
+        eprintln!("server bug: unvalidated id reached the batcher; \
+                   rejecting the whole micro-batch");
+    }
+    let mut flat = vec![0.0f32; if valid { total * d } else { 0 }];
+    if valid {
+        emb.reconstruct_rows_into(&all_ids, &mut flat);
+        stats.ids_served.fetch_add(total as u64, Ordering::Relaxed);
+    }
+    // complete each request with a zero-copy view of the shared buffer
+    let flat = Arc::new(flat);
+    let mut off = 0;
+    for p in batch {
+        let len = if valid { p.ids.len() * d } else { 0 };
+        let rows = RowsSlice { buf: flat.clone(), start: off, len };
+        off += len;
+        let (slot, cv) = &*p.done;
+        *slot.lock().unwrap() = Some(rows);
+        cv.notify_one();
     }
 }
 
@@ -111,19 +207,7 @@ impl EmbeddingServer {
                         continue;
                     }
                     stats.batches.fetch_add(1, Ordering::Relaxed);
-                    for p in batch {
-                        let vecs: Vec<Vec<f32>> = p
-                            .ids
-                            .iter()
-                            .map(|&i| emb.reconstruct_row(i.min(emb.vocab() - 1)))
-                            .collect();
-                        stats
-                            .ids_served
-                            .fetch_add(p.ids.len() as u64, Ordering::Relaxed);
-                        let (slot, cv) = &*p.done;
-                        *slot.lock().unwrap() = Some(vecs);
-                        cv.notify_one();
-                    }
+                    run_batch(&emb, &batch, &stats);
                 }
             })
         };
@@ -137,8 +221,9 @@ impl EmbeddingServer {
                     let stats = self.stats.clone();
                     let stop = self.stop.clone();
                     let vocab = self.emb.vocab();
+                    let d = self.emb.d;
                     std::thread::spawn(move || {
-                        let _ = handle_conn(stream, queue, stats, stop, vocab);
+                        let _ = handle_conn(stream, queue, stats, stop, vocab, d);
                     });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -162,6 +247,7 @@ fn handle_conn(
     stats: Arc<Stats>,
     stop: Arc<AtomicBool>,
     vocab: usize,
+    d: usize,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     loop {
@@ -173,18 +259,17 @@ fn handle_conn(
         let j = Json::parse(&req).map_err(|e| anyhow!("bad request: {e}"))?;
         match j.get("op").and_then(|v| v.as_str()) {
             Some("lookup_bin") => {
-                let ids: Vec<usize> = j
-                    .get("ids")
-                    .and_then(|v| v.as_arr())
-                    .ok_or_else(|| anyhow!("lookup_bin without ids"))?
-                    .iter()
-                    .filter_map(|x| x.as_usize())
-                    .collect();
-                if ids.iter().any(|&i| i >= vocab) {
-                    // signal error as a zero-length frame
-                    stream.write_all(&0u32.to_le_bytes())?;
-                    continue;
-                }
+                // malformed or out-of-range ids -> rejection sentinel:
+                // u32::MAX is never a valid frame length (an empty id
+                // list legitimately answers with a zero-length payload)
+                let ids = match parse_ids(&j, "lookup_bin")? {
+                    Some(ids) if ids.iter().all(|&i| i < vocab) => ids,
+                    _ => {
+                        stream.write_all(&u32::MAX.to_le_bytes())?;
+                        continue;
+                    }
+                };
+                let n_ids = ids.len();
                 let done = Arc::new((Mutex::new(None), Condvar::new()));
                 queue.push(Pending { ids, done: done.clone() });
                 let (slot, cv) = &*done;
@@ -192,33 +277,44 @@ fn handle_conn(
                 while guard.is_none() {
                     guard = cv.wait(guard).unwrap();
                 }
-                let vecs = guard.take().unwrap();
+                let rows = guard.take().unwrap();
                 drop(guard);
-                let total: usize = vecs.iter().map(|v| v.len()).sum();
-                let mut payload = Vec::with_capacity(total * 4);
-                for row in &vecs {
-                    for v in row {
-                        payload.extend_from_slice(&v.to_le_bytes());
-                    }
+                // rows arrive as a view of the batch's flat buffer:
+                // encode straight to LE bytes, no per-row intermediates
+                let flat = rows.as_slice();
+                if flat.len() != n_ids * d {
+                    // batcher answered with the defensive empty view (a
+                    // co-batched request carried a bug-path invalid id):
+                    // reject explicitly rather than serve a short frame
+                    stream.write_all(&u32::MAX.to_le_bytes())?;
+                    continue;
+                }
+                if flat.len() as u64 * 4 >= u32::MAX as u64 {
+                    // fail loudly instead of wrapping the length prefix
+                    bail!("lookup_bin response too large for a u32 frame");
+                }
+                let mut payload = Vec::with_capacity(flat.len() * 4);
+                for v in flat {
+                    payload.extend_from_slice(&v.to_le_bytes());
                 }
                 stream.write_all(&(payload.len() as u32).to_le_bytes())?;
                 stream.write_all(&payload)?;
             }
             Some("lookup") => {
-                let ids: Vec<usize> = j
-                    .get("ids")
-                    .and_then(|v| v.as_arr())
-                    .ok_or_else(|| anyhow!("lookup without ids"))?
-                    .iter()
-                    .filter_map(|x| x.as_usize())
-                    .collect();
-                if ids.iter().any(|&i| i >= vocab) {
-                    write_frame(&mut stream, &Json::obj(vec![
-                        ("ok", Json::Bool(false)),
-                        ("error", Json::str("id out of range")),
-                    ]).to_string())?;
-                    continue;
-                }
+                // same validation as lookup_bin: malformed or
+                // out-of-range ids are rejected, never clamped/dropped
+                let ids = match parse_ids(&j, "lookup")? {
+                    Some(ids) if ids.iter().all(|&i| i < vocab) => ids,
+                    _ => {
+                        write_frame(&mut stream, &Json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("error", Json::str(
+                                "ids must be integers in [0, vocab)")),
+                        ]).to_string())?;
+                        continue;
+                    }
+                };
+                let n_ids = ids.len();
                 let done = Arc::new((Mutex::new(None), Condvar::new()));
                 queue.push(Pending { ids, done: done.clone() });
                 let (slot, cv) = &*done;
@@ -226,11 +322,23 @@ fn handle_conn(
                 while guard.is_none() {
                     guard = cv.wait(guard).unwrap();
                 }
-                let vecs = guard.take().unwrap();
+                let rows = guard.take().unwrap();
+                drop(guard);
+                if rows.as_slice().len() != n_ids * d {
+                    // defensive empty view from the batcher (see
+                    // run_batch): an explicit error, not ok:true with
+                    // a short vector list
+                    write_frame(&mut stream, &Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::str("batch reconstruction failed")),
+                    ]).to_string())?;
+                    continue;
+                }
                 let arr = Json::arr(
-                    vecs.into_iter()
-                        .map(|v| Json::arr(
-                            v.into_iter().map(|x| Json::num(x as f64)).collect()))
+                    rows.as_slice()
+                        .chunks(d.max(1))
+                        .map(|row| Json::arr(
+                            row.iter().map(|&x| Json::num(x as f64)).collect()))
                         .collect(),
                 );
                 write_frame(&mut stream, &Json::obj(vec![
@@ -273,6 +381,10 @@ pub fn read_frame(stream: &mut TcpStream) -> Result<String> {
 }
 
 pub fn write_frame(stream: &mut TcpStream, payload: &str) -> Result<()> {
+    if payload.len() as u64 >= u32::MAX as u64 {
+        // fail loudly instead of wrapping the u32 length prefix
+        bail!("frame too large: {} bytes", payload.len());
+    }
     stream.write_all(&(payload.len() as u32).to_le_bytes())?;
     stream.write_all(payload.as_bytes())?;
     Ok(())
@@ -326,10 +438,11 @@ impl Client {
         write_frame(&mut self.stream, &req.to_string())?;
         let mut len = [0u8; 4];
         self.stream.read_exact(&mut len)?;
-        let n = u32::from_le_bytes(len) as usize;
-        if n == 0 {
+        let n32 = u32::from_le_bytes(len);
+        if n32 == u32::MAX {
             bail!("server rejected lookup_bin (id out of range?)");
         }
+        let n = n32 as usize;
         let mut buf = vec![0u8; n];
         self.stream.read_exact(&mut buf)?;
         if n != ids.len() * d * 4 {
@@ -463,6 +576,86 @@ mod tests {
         assert!(c.lookup(&[99]).is_err());
         c.shutdown().unwrap();
         h.join().unwrap();
+    }
+
+    /// Regression: JSON and binary lookups must BOTH reject out-of-range
+    /// ids (never clamp), and the connection must keep serving in-range
+    /// requests afterwards.
+    #[test]
+    fn out_of_range_rejected_on_both_protocols() {
+        let emb = toy_emb(10, 4, 2, 2);
+        let d = emb.d;
+        let boundary = emb.reconstruct_row(9);
+        let server = Arc::new(EmbeddingServer::new(emb, 8));
+        let (tx, rx) = mpsc::channel();
+        let s2 = server.clone();
+        let h = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let mut c = Client::connect(addr).unwrap();
+        // vocab is 10: id 10 is the first invalid id on both protocols
+        assert!(c.lookup(&[3, 10]).is_err());
+        assert!(c.lookup_bin(&[3, 10], d).is_err());
+        // a clamping server would serve id 10 as row 9; a rejecting one
+        // still serves the real row 9 afterwards
+        let got = c.lookup_bin(&[9], d).unwrap();
+        assert_eq!(got[0], boundary);
+        // empty id lists are valid on both protocols (the binary
+        // rejection sentinel is u32::MAX, NOT a zero-length frame)
+        assert_eq!(c.lookup(&[]).unwrap().len(), 0);
+        assert_eq!(c.lookup_bin(&[], d).unwrap().len(), 0);
+        // malformed ids (negative, fractional) are rejected too -- a
+        // saturating/dropping parse would serve id 0 or a short response
+        let mut raw = TcpStream::connect(addr).unwrap();
+        for bad in [r#"{"op":"lookup","ids":[1,-2]}"#,
+                    r#"{"op":"lookup","ids":[1.5]}"#] {
+            write_frame(&mut raw, bad).unwrap();
+            let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+            assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false),
+                       "{bad} must be rejected");
+        }
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+
+    /// The sharded batcher must split the flat reconstruction back into
+    /// per-request slices in queue order, matching per-row reconstruction
+    /// exactly for every thread count.
+    #[test]
+    fn run_batch_splits_per_request_and_matches_serial() {
+        let emb = toy_emb(40, 8, 4, 3);
+        let stats = Stats::default();
+        let reqs: Vec<Vec<usize>> =
+            vec![vec![0, 5, 39], vec![], vec![7], vec![39, 0, 0, 12]];
+        for threads in [1usize, 2, 7] {
+            crate::util::pool::with_threads(threads, || {
+                let batch: Vec<Pending> = reqs
+                    .iter()
+                    .map(|ids| Pending {
+                        ids: ids.clone(),
+                        done: Arc::new((Mutex::new(None), Condvar::new())),
+                    })
+                    .collect();
+                run_batch(&emb, &batch, &stats);
+                for (p, ids) in batch.iter().zip(&reqs) {
+                    let rows = p.done.0.lock().unwrap().take().unwrap();
+                    let flat = rows.as_slice();
+                    assert_eq!(flat.len(), ids.len() * emb.d);
+                    for (ri, &id) in ids.iter().enumerate() {
+                        assert_eq!(
+                            &flat[ri * emb.d..(ri + 1) * emb.d],
+                            &emb.reconstruct_row(id)[..],
+                            "threads={threads} req row {ri}"
+                        );
+                    }
+                }
+            });
+        }
+        assert_eq!(
+            stats.ids_served.load(Ordering::Relaxed),
+            3 * reqs.iter().map(|r| r.len()).sum::<usize>() as u64
+        );
     }
 
     #[test]

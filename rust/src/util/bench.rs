@@ -1,8 +1,51 @@
 //! Micro-benchmark harness (the offline vendor set has no criterion):
 //! warmup + timed iterations with mean / stddev / throughput reporting.
 //! `cargo bench` targets (rust/benches/*) are plain mains built on this.
+//!
+//! Machine-readable trail: a bench main calls [`init`] once and every
+//! measurement is ALSO appended as one JSON object per line to
+//! `BENCH_<name>.json` in the working directory (append, never truncate,
+//! so the perf trajectory across PRs accumulates). Ad-hoc numbers (e.g.
+//! whole-run throughput) can be appended with [`record`].
 
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::OnceLock;
 use std::time::Instant;
+
+use crate::jsonx::Json;
+use crate::util::pool;
+
+static BENCH_FILE: OnceLock<PathBuf> = OnceLock::new();
+
+/// Route all measurements of this process to `BENCH_<name>.json`.
+pub fn init(name: &str) {
+    let _ = BENCH_FILE.set(PathBuf::from(format!("BENCH_{name}.json")));
+}
+
+/// Append one measurement as a JSON line (no-op before [`init`]).
+/// Records the resolved worker-pool thread count so speedups across
+/// `DPQ_THREADS` settings can be compared from the file alone.
+pub fn record(name: &str, mean_s: f64, stddev_s: f64, iters: usize) {
+    let Some(path) = BENCH_FILE.get() else { return };
+    let line = Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("mean_s", Json::num(mean_s)),
+        ("stddev_s", Json::num(stddev_s)),
+        ("iters", Json::num(iters as f64)),
+        ("per_sec", Json::num(1.0 / mean_s.max(1e-12))),
+        ("threads", Json::num(pool::current_threads() as f64)),
+    ])
+    .to_string();
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .and_then(|mut f| writeln!(f, "{line}"));
+    if let Err(e) = appended {
+        eprintln!("bench: could not append to {path:?}: {e}");
+    }
+}
 
 /// One benchmark measurement.
 pub struct Measurement {
@@ -64,6 +107,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
         stddev_s: var.sqrt(),
     };
     println!("{}", m.report());
+    record(&m.name, m.mean_s, m.stddev_s, m.iters);
     m
 }
 

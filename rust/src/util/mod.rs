@@ -1,8 +1,12 @@
 //! Small shared utilities: a deterministic PRNG (no external `rand` --
-//! this repository builds fully offline) and an in-repo property-testing
-//! helper used across the test suite.
+//! this repository builds fully offline), an in-repo property-testing
+//! helper used across the test suite, a micro-benchmark harness with
+//! machine-readable output ([`bench`]), and the scoped worker pool that
+//! powers every parallel hot path ([`pool`], thread count from
+//! `DPQ_THREADS` / `repro --threads`).
 
 pub mod bench;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 

@@ -1,0 +1,339 @@
+//! Shared parallel-compute substrate: a scoped worker pool over
+//! `std::thread::scope` (no external dependencies, no persistent threads)
+//! used by every hot path -- `linalg::matmul` / `kmeans`, the `quant`
+//! post-hoc fitters, `dpq::reconstruct_table`, and the server's sharded
+//! micro-batch reconstruction.
+//!
+//! # Thread-count resolution
+//!
+//! Highest priority first:
+//! 1. [`with_threads`] scoped override (thread-local; used by tests and
+//!    short sections that must pin a count),
+//! 2. [`set_threads`] process-wide override (the `repro --threads N` CLI
+//!    flag),
+//! 3. the `DPQ_THREADS` environment variable,
+//! 4. `std::thread::available_parallelism()`.
+//!
+//! Inside a pool worker the resolved count is always 1: nested `par_*`
+//! calls degrade to the serial path instead of oversubscribing (e.g.
+//! `ProductQuant::fit` parallelizes over subspaces, and each subspace's
+//! k-means then runs its assignment step serially).
+//!
+//! # Determinism
+//!
+//! Chunk/range boundaries are computed from the input length and the
+//! caller's chunk size -- and the usual chunk size ([`chunk_len`]) scales
+//! with the thread count, so boundaries DO vary across `DPQ_THREADS`
+//! settings. Bit-exactness therefore comes from a rule every kernel in
+//! this crate follows: a unit's output must not depend on which chunk it
+//! landed in. Concretely, (1) per-element/per-row arithmetic inside a
+//! chunk is exactly the serial loop's, (2) no float reduction crosses a
+//! chunk boundary -- reductions either use order-insensitive exact ops
+//! (min/max) or write per-ROW partials that the caller thread folds in
+//! row order. Under that rule every parallel kernel is bit-exact with
+//! `DPQ_THREADS=1` and with every other thread count (enforced by
+//! `rust/tests/parallel_equivalence.rs`). A kernel that folds per-CHUNK
+//! float sums would break the rule -- don't write one.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0); // 0 = unset
+
+thread_local! {
+    static SCOPED_THREADS: Cell<usize> = Cell::new(0); // 0 = unset
+    static IN_POOL: Cell<bool> = Cell::new(false);
+}
+
+fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("DPQ_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+/// Process-wide worker count override (0 restores env/auto resolution).
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The worker count `par_*` calls on this thread would use right now.
+pub fn current_threads() -> usize {
+    if IN_POOL.with(|c| c.get()) {
+        return 1; // no nested parallelism
+    }
+    let scoped = SCOPED_THREADS.with(|c| c.get());
+    if scoped > 0 {
+        return scoped;
+    }
+    let global = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if global > 0 {
+        return global;
+    }
+    env_threads()
+}
+
+/// Run `f` with the worker count pinned to `n` on this thread (restored on
+/// exit, panic-safe). The override is thread-local: it governs `par_*`
+/// calls made by `f` itself, not by threads `f` spawns.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            SCOPED_THREADS.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(SCOPED_THREADS.with(|c| c.replace(n)));
+    f()
+}
+
+/// Split `data` into consecutive `chunk_len`-element chunks (last one may
+/// be shorter) and run `f(chunk_index, chunk)` across the pool. Chunk
+/// boundaries are a pure function of `data.len()` and `chunk_len` -- but
+/// callers usually derive `chunk_len` from [`chunk_len`](chunk_len) which
+/// scales with the thread count, so `f` must follow the module's
+/// determinism rule: a unit's output may not depend on which chunk it
+/// lands in. Workers pull chunks from a shared queue (dynamic load
+/// balance); a panicking `f` propagates.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let workers = current_threads().min(n_chunks);
+    if workers <= 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let queue = Mutex::new(data.chunks_mut(chunk_len).enumerate());
+    let drain = || loop {
+        let next = queue.lock().unwrap().next();
+        match next {
+            Some((i, chunk)) => f(i, chunk),
+            None => break,
+        }
+    };
+    std::thread::scope(|s| {
+        // the caller participates in the drain instead of idling at the
+        // join, so only workers-1 threads are spawned
+        for _ in 1..workers {
+            s.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                drain();
+            });
+        }
+        let _guard = InPoolGuard::enter();
+        drain();
+    });
+}
+
+/// Marks the current thread as a pool worker for a scope (restores the
+/// previous flag on drop, panic-safe) -- used when the caller thread
+/// itself drains the queue, so nested `par_*` calls stay serial there too.
+struct InPoolGuard(bool);
+
+impl InPoolGuard {
+    fn enter() -> InPoolGuard {
+        InPoolGuard(IN_POOL.with(|c| c.replace(true)))
+    }
+}
+
+impl Drop for InPoolGuard {
+    fn drop(&mut self) {
+        IN_POOL.with(|c| c.set(self.0));
+    }
+}
+
+/// Run `f(start..end)` over `0..n` in `grain`-sized index ranges across
+/// the pool. Range boundaries depend only on `n` and `grain`; ranges are
+/// dispensed from an atomic cursor, so sibling ranges may run in any
+/// order -- `f` must only write state owned by its range. This is the
+/// index-range counterpart of [`par_chunks_mut`] for callers whose output
+/// is not one contiguous slice (e.g. the planned sharded multi-table
+/// serving, see ROADMAP); in-repo kernels currently all use the slice
+/// form.
+pub fn par_ranges<F>(n: usize, grain: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let grain = grain.max(1);
+    let workers = current_threads().min(n.div_ceil(grain));
+    if workers <= 1 {
+        let mut start = 0;
+        while start < n {
+            let end = (start + grain).min(n);
+            f(start..end);
+            start = end;
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let drain = || loop {
+        let start = cursor.fetch_add(grain, Ordering::Relaxed);
+        if start >= n {
+            break;
+        }
+        f(start..(start + grain).min(n));
+    };
+    std::thread::scope(|s| {
+        for _ in 1..workers {
+            s.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                drain();
+            });
+        }
+        let _guard = InPoolGuard::enter();
+        drain();
+    });
+}
+
+/// Chunk length that gives each worker a few units of `total` items
+/// (dynamic balance without excessive queue traffic). Always >= 1.
+pub fn chunk_len(total: usize) -> usize {
+    total.div_ceil(4 * current_threads().max(1)).max(1)
+}
+
+/// Spawning a scoped worker costs on the order of 10us; below this many
+/// scalar operations an extra worker costs more than it computes.
+const MIN_WORK_PER_WORKER: usize = 64 * 1024;
+
+/// Worker count worth spawning for an estimated `work` (scalar ops):
+/// capped so each worker gets at least [`MIN_WORK_PER_WORKER`], and never
+/// above the configured thread count. Callers wrap their `par_*` call in
+/// [`with_threads`]`(workers_for(est), ..)` so a 16-row micro-batch runs
+/// serially instead of paying thread spawn/join on every request.
+///
+/// An active [`with_threads`] pin is returned as-is: an explicit scoped
+/// pin means "use exactly this many workers" (how the equivalence tests
+/// force real multi-worker execution on small inputs). The global
+/// `--threads` / `DPQ_THREADS` / auto resolution acts as a ceiling under
+/// the heuristic instead.
+pub fn workers_for(work: usize) -> usize {
+    let cap = current_threads();
+    if SCOPED_THREADS.with(|c| c.get()) > 0 {
+        return cap; // explicit scoped pin wins over the work heuristic
+    }
+    (work / MIN_WORK_PER_WORKER).clamp(1, cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_chunks_mut_touches_every_element_once() {
+        for threads in [1usize, 2, 7] {
+            with_threads(threads, || {
+                let mut v = vec![0u32; 1000];
+                par_chunks_mut(&mut v, 13, |ci, chunk| {
+                    for (o, x) in chunk.iter_mut().enumerate() {
+                        *x += (ci * 13 + o) as u32 + 1;
+                    }
+                });
+                for (i, &x) in v.iter().enumerate() {
+                    assert_eq!(x, i as u32 + 1, "threads={threads} idx={i}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_empty_and_single() {
+        let mut empty: Vec<u8> = Vec::new();
+        par_chunks_mut(&mut empty, 4, |_, _| panic!("no chunks expected"));
+        let mut one = vec![1u8];
+        par_chunks_mut(&mut one, 4, |ci, c| {
+            assert_eq!((ci, c.len()), (0, 1));
+            c[0] = 9;
+        });
+        assert_eq!(one, vec![9]);
+    }
+
+    #[test]
+    fn par_ranges_covers_exactly() {
+        for threads in [1usize, 2, 7] {
+            with_threads(threads, || {
+                let hits = AtomicU64::new(0);
+                let sum = AtomicU64::new(0);
+                par_ranges(100, 7, |r| {
+                    for i in r {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                        sum.fetch_add(i as u64, Ordering::Relaxed);
+                    }
+                });
+                assert_eq!(hits.load(Ordering::Relaxed), 100);
+                assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+            });
+        }
+    }
+
+    #[test]
+    fn with_threads_restores_even_on_panic() {
+        // outer pin makes the expectation immune to concurrent tests
+        // touching the global override
+        with_threads(2, || {
+            let r = std::panic::catch_unwind(|| {
+                with_threads(3, || -> () { panic!("inner") })
+            });
+            assert!(r.is_err());
+            assert_eq!(current_threads(), 2);
+        });
+    }
+
+    #[test]
+    fn nested_calls_run_serial() {
+        with_threads(4, || {
+            let mut outer = vec![0usize; 8];
+            par_chunks_mut(&mut outer, 1, |_, chunk| {
+                // inside a worker the pool degrades to serial
+                assert_eq!(current_threads(), 1);
+                let mut inner = vec![0u8; 16];
+                par_chunks_mut(&mut inner, 4, |_, c| {
+                    for x in c.iter_mut() {
+                        *x = 1;
+                    }
+                });
+                chunk[0] = inner.iter().map(|&x| x as usize).sum();
+            });
+            assert!(outer.iter().all(|&x| x == 16));
+        });
+    }
+
+    #[test]
+    fn scoped_override_beats_global() {
+        // scoped override is thread-local, so this cannot race with other
+        // tests; only assert the resolution order, then restore.
+        with_threads(5, || assert_eq!(current_threads(), 5));
+    }
+
+    #[test]
+    fn workers_for_scales_with_work() {
+        // an explicit scoped pin wins outright, whatever the work size
+        with_threads(5, || assert_eq!(workers_for(1), 5));
+        with_threads(1, || assert_eq!(workers_for(usize::MAX / 2), 1));
+        // under global/env resolution the heuristic caps by work. Pin the
+        // global so the expectation is stable; concurrent tests are
+        // thread-count invariant, so the transient global is harmless.
+        set_threads(8);
+        assert_eq!(workers_for(0), 1);
+        assert_eq!(workers_for(MIN_WORK_PER_WORKER - 1), 1);
+        assert_eq!(workers_for(3 * MIN_WORK_PER_WORKER), 3);
+        assert_eq!(workers_for(usize::MAX / 2), 8); // capped at threads
+        set_threads(0);
+    }
+}

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): release build, full test suite,
+# and a compile of every bench target so bench code cannot bit-rot.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+cargo bench --no-run
+echo "tier1: OK"

@@ -1,0 +1,170 @@
+//! Minimal offline shim for the subset of the `anyhow` crate this
+//! workspace uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`]
+//! macros, and the [`Context`] extension trait. Error values carry a
+//! flattened message chain (context strings prepended `": "`-joined),
+//! which is what the CLI prints anyway. Mirrors anyhow's coherence trick:
+//! `Error` deliberately does NOT implement `std::error::Error`, so the
+//! blanket `From<E: std::error::Error>` impl and the `Context` impls do
+//! not overlap with the concrete `Error` impls.
+
+use std::fmt;
+
+/// Flattened error: message with any context chain already prepended.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (outermost first, anyhow-style).
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e:#}` (alternate) prints the full chain in real anyhow; the
+        // shim's message is already the full chain.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // include one level of source, the common case for io errors
+        match e.source() {
+            Some(src) => Error { msg: format!("{e}: {src}") },
+            None => Error::msg(&e),
+        }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Sealed conversion helper so `Context` applies both to results whose
+/// error is a `std::error::Error` and to `anyhow::Result` itself.
+mod private {
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible results.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: private::IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any Display value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error when a condition fails (anyhow::ensure!).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/ever")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = io_fail().context("loading config").unwrap_err();
+        assert!(e.to_string().starts_with("loading config: "), "{e}");
+    }
+
+    #[test]
+    fn with_context_and_chained() {
+        let e = io_fail()
+            .with_context(|| format!("step {}", 2))
+            .context("outer")
+            .unwrap_err();
+        let s = e.to_string();
+        assert!(s.starts_with("outer: step 2: "), "{s}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        let k = 7;
+        let e = anyhow!("inline {k}");
+        assert_eq!(e.to_string(), "inline 7");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+        fn g() -> Result<()> {
+            ensure!(1 + 1 == 3, "math broke");
+            Ok(())
+        }
+        assert_eq!(g().unwrap_err().to_string(), "math broke");
+    }
+}

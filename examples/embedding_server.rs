@@ -46,8 +46,7 @@ fn main() -> Result<()> {
         ce.compression_ratio()
     );
 
-    let server = Arc::new(EmbeddingServer::new(ce, 64));
-    let stats = server.stats.clone();
+    let server = Arc::new(EmbeddingServer::single("ptb", ce, 64));
     let (tx, rx) = mpsc::channel();
     let s2 = server.clone();
     let handle = std::thread::spawn(move || {
@@ -69,9 +68,9 @@ fn main() -> Result<()> {
                     let ids: Vec<usize> =
                         (0..8).map(|_| rng.below(2000)).collect();
                     let t = Instant::now();
-                    let v = c.lookup(&ids)?;
+                    let v = c.lookup("ptb", &ids)?;
                     lat.record(t.elapsed().as_secs_f64());
-                    assert_eq!(v.len(), 8);
+                    assert_eq!(v.n(), 8);
                 }
                 Ok(lat)
             })
@@ -82,7 +81,17 @@ fn main() -> Result<()> {
         all.merge(&w.join().unwrap()?);
     }
     let wall = t0.elapsed().as_secs_f64();
-    println!("lookup latency: {}", all.summary(1.0));
+    let stats = server
+        .registry()
+        .get("ptb")
+        .expect("table is loaded")
+        .stats
+        .clone();
+    println!("client-side lookup latency: {}", all.summary(1.0));
+    if let Some((p50, p99)) = stats.batch_latency() {
+        println!("server-side batch latency: p50 {:.3}ms p99 {:.3}ms",
+                 p50 * 1e3, p99 * 1e3);
+    }
     println!(
         "aggregate: {} requests ({} ids) in {wall:.2}s = {:.0} req/s, \
          {} batches formed",

@@ -1,92 +1,134 @@
 //! Embedding-server throughput bench: closed-loop clients against the
-//! micro-batching TCP server (L3 serving path).
+//! micro-batching multi-table TCP server (L3 serving path). Records
+//! sustained per-request latency AND the server-side batch p50/p99 (from
+//! the per-table latency ring, fetched over the `stats` op) to
+//! `BENCH_server.json`, so the perf trajectory has serving-latency
+//! numbers per protocol, client count, table count, and shard count.
 
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use dpq_embed::dpq::{Codebook, CompressedEmbedding};
-use dpq_embed::server::{Client, EmbeddingServer};
-use dpq_embed::tensor::{TensorF, TensorI};
+use dpq_embed::dpq::toy_embedding;
+use dpq_embed::quant::ScalarQuant;
+use dpq_embed::server::{
+    Client, EmbeddingServer, ServerConfig, TableRegistry,
+};
+use dpq_embed::tensor::TensorF;
 use dpq_embed::util::bench::{self, section};
 use dpq_embed::util::{pool, Rng};
+
+/// Run `clients` closed-loop workers against `server`, each issuing
+/// `per_client` requests of 16 random ids to its table, then append
+/// sustained latency + server-side batch percentiles under `tag`.
+fn drive(server: Arc<EmbeddingServer>, tables: &[(&str, usize)], clients: usize,
+         binary: bool, tag: &str) {
+    let (tx, rx) = mpsc::channel();
+    let s2 = server.clone();
+    let h = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let per_client = 400usize;
+    let t0 = Instant::now();
+    let ws: Vec<_> = (0..clients)
+        .map(|w| {
+            // client w hammers table w % tables.len()
+            let (table, vocab) = tables[w % tables.len()];
+            let table = table.to_string();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let mut rng = Rng::new(w as u64);
+                for _ in 0..per_client {
+                    let ids: Vec<usize> =
+                        (0..16).map(|_| rng.below(vocab)).collect();
+                    if binary {
+                        c.lookup_bin(&table, &ids).unwrap();
+                    } else {
+                        c.lookup(&table, &ids).unwrap();
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in ws {
+        w.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let reqs = clients * per_client;
+    let registry = server.registry();
+    let batches: u64 = registry
+        .list()
+        .iter()
+        .map(|e| e.stats.batches.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    println!(
+        "{} requests in {:.2}s = {:.0} req/s, {:.0} ids/s, {} batches",
+        reqs, wall, reqs as f64 / wall, (reqs * 16) as f64 / wall, batches
+    );
+    // sustained-lookup trail: mean seconds per request at this load
+    bench::record(&format!("sustained_lookup_{tag}"), wall / reqs as f64,
+                  0.0, reqs);
+    // server-side batch latency percentiles, over the wire (stats op)
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.stats(None).unwrap();
+    for (table, _) in tables {
+        let Some(t) = stats.get("tables").and_then(|m| m.get(table)) else {
+            continue;
+        };
+        if let (Some(p50), Some(p99)) = (
+            t.get("batch_p50_s").and_then(|v| v.as_f64()),
+            t.get("batch_p99_s").and_then(|v| v.as_f64()),
+        ) {
+            println!("  {table}: batch p50 {:.1}us p99 {:.1}us",
+                     p50 * 1e6, p99 * 1e6);
+            bench::record(&format!("batch_p50_{tag}_{table}"), p50, 0.0, reqs);
+            bench::record(&format!("batch_p99_{tag}_{table}"), p99, 0.0, reqs);
+        }
+    }
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
 
 fn main() {
     bench::init("server");
     println!("worker pool: {} thread(s) (DPQ_THREADS to change)",
              pool::current_threads());
     let (n, k, dg, s) = (10_000usize, 32usize, 16usize, 4usize);
-    let mut rng = Rng::new(1);
-    let codes = TensorI::new(vec![n, dg],
-                             (0..n * dg).map(|_| rng.below(k) as i32).collect())
-        .unwrap();
-    let values = TensorF::new(vec![k, dg, s],
-                              (0..k * dg * s).map(|_| rng.normal()).collect())
-        .unwrap();
-    let ce = CompressedEmbedding::new(
-        Codebook::from_codes(&codes, k).unwrap(), values, false).unwrap();
+    let ce = toy_embedding(n, k, dg, s, 1);
 
+    // single table, the PR-1 comparison grid
     for (clients, binary) in [(1usize, false), (1, true), (4, false),
                               (4, true), (8, false), (8, true)] {
+        let proto = if binary { "bin" } else { "json" };
         section(&format!(
-            "{clients} client(s), 16 ids per request, {} protocol",
-            if binary { "binary" } else { "json" }
-        ));
-        let server = Arc::new(EmbeddingServer::new(ce.clone(), 64));
-        let (tx, rx) = mpsc::channel();
-        let s2 = server.clone();
-        let h = std::thread::spawn(move || {
-            s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
-        });
-        let addr = rx.recv().unwrap();
-        let per_client = 400usize;
-        let t0 = Instant::now();
-        let d = 64usize; // dg * s
-        let ws: Vec<_> = (0..clients)
-            .map(|w| {
-                std::thread::spawn(move || {
-                    let mut c = Client::connect(addr).unwrap();
-                    let mut rng = Rng::new(w as u64);
-                    for _ in 0..per_client {
-                        let ids: Vec<usize> =
-                            (0..16).map(|_| rng.below(10_000)).collect();
-                        if binary {
-                            c.lookup_bin(&ids, d).unwrap();
-                        } else {
-                            c.lookup(&ids).unwrap();
-                        }
-                    }
-                })
-            })
-            .collect();
-        for w in ws {
-            w.join().unwrap();
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let reqs = clients * per_client;
-        println!(
-            "{} requests in {:.2}s = {:.0} req/s, {:.0} ids/s, {} batches",
-            reqs,
-            wall,
-            reqs as f64 / wall,
-            (reqs * 16) as f64 / wall,
-            server
-                .stats
-                .batches
-                .load(std::sync::atomic::Ordering::Relaxed)
-        );
-        // sustained-lookup trail: mean seconds per request at this load
-        bench::record(
-            &format!(
-                "sustained_lookup_{}_{}c",
-                if binary { "bin" } else { "json" },
-                clients
-            ),
-            wall / reqs as f64,
-            0.0,
-            reqs,
-        );
-        let mut c = Client::connect(addr).unwrap();
-        c.shutdown().unwrap();
-        h.join().unwrap();
+            "1 table, {clients} client(s), 16 ids per request, {proto}"));
+        let server = Arc::new(EmbeddingServer::single("emb", ce.clone(), 64));
+        drive(server, &[("emb", n)], clients, binary,
+              &format!("{proto}_{clients}c"));
     }
+
+    // two tables of different kinds behind one server: clients alternate
+    section("2 tables (dpq + scalar_quant), 4 clients, bin");
+    let mut rng = Rng::new(7);
+    let sq_table = TensorF {
+        shape: vec![4000, 32],
+        data: (0..4000 * 32).map(|_| rng.normal()).collect(),
+    };
+    let registry = TableRegistry::new(ServerConfig::default());
+    registry.insert("emb", Arc::new(ce.clone())).unwrap();
+    registry
+        .insert("sq", Arc::new(ScalarQuant::fit(&sq_table, 8)))
+        .unwrap();
+    drive(Arc::new(EmbeddingServer::new(registry)),
+          &[("emb", n), ("sq", 4000)], 4, true, "bin_4c_2tables");
+
+    // id-space partitioning: same table, 2 batcher shards
+    section("1 table, 2 batcher shards, 4 clients, bin");
+    let registry = TableRegistry::new(ServerConfig {
+        max_batch: 64,
+        shards_per_table: 2,
+    });
+    registry.insert("emb", Arc::new(ce.clone())).unwrap();
+    drive(Arc::new(EmbeddingServer::new(registry)),
+          &[("emb", n)], 4, true, "bin_4c_2shards");
 }

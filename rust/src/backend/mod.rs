@@ -1,0 +1,191 @@
+//! `EmbeddingBackend` -- the one lookup interface every embedding store
+//! in this crate serves through.
+//!
+//! The paper's inference claim (a DPQ codebook gather is as cheap as a
+//! full-table row read at a fraction of the memory) only pays off at
+//! production scale when one server hosts *many* compressed tables. The
+//! server therefore routes every lookup through this trait instead of
+//! hardcoding [`CompressedEmbedding`](crate::dpq::CompressedEmbedding):
+//! any row store that can gather ids into a flat `[n, d]` buffer and
+//! account for its own storage can be registered as a served table.
+//!
+//! Implementors in-crate:
+//! * [`crate::dpq::CompressedEmbedding`] -- the DPQ artifact (`kind = "dpq"`),
+//! * [`crate::quant::ScalarQuant`] -- b-bit uniform codes (`"scalar_quant"`),
+//! * [`crate::quant::LowRank`] -- truncated-SVD factors (`"low_rank"`),
+//! * [`DenseTable`] -- the uncompressed `[n, d]` baseline (`"dense"`).
+//!
+//! Gathers must be *deterministic across thread counts*: every impl
+//! routes through [`gather_rows_pooled`], which shards rows over the
+//! shared worker pool (`util::pool`) under the crate's determinism rule
+//! (a row's bits never depend on which chunk it landed in), so a served
+//! vector is bit-identical for every `DPQ_THREADS` setting.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::TensorF;
+use crate::util::pool;
+
+/// A row store the embedding server can host as one named table.
+///
+/// Object-safe on purpose: the registry holds `Arc<dyn EmbeddingBackend>`.
+pub trait EmbeddingBackend: Send + Sync {
+    /// Short scheme tag shown by `tables`/`stats` ("dpq", "dense", ...).
+    fn kind(&self) -> &'static str;
+
+    /// Embedding width (columns per row).
+    fn d(&self) -> usize;
+
+    /// Number of rows (valid ids are `0..vocab()`).
+    fn vocab(&self) -> usize;
+
+    /// Gather `ids` into `out` (`[ids.len(), d]` row-major). Callers
+    /// validate ids against [`vocab`](Self::vocab) first; an impl may
+    /// panic on an out-of-range id. Must be bit-identical for every
+    /// worker-pool size.
+    fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]);
+
+    /// Total inference-time storage in bits (codes + side tables).
+    fn storage_bits(&self) -> usize;
+}
+
+/// Compression ratio vs an f32 table of the same `[vocab, d]` shape.
+/// A free function (not a trait method) so the name cannot collide with
+/// the `quant::Compressor` method of the same purpose at call sites that
+/// import both traits.
+pub fn compression_ratio(b: &dyn EmbeddingBackend) -> f64 {
+    (32.0 * b.vocab() as f64 * b.d() as f64) / b.storage_bits().max(1) as f64
+}
+
+/// Shared pool-sharded gather: reconstruct `n_rows` rows into `out`
+/// (`[n_rows, d]` row-major), row `r`'s content produced by
+/// `row_into(r, slice)`. Single home for the chunk-sizing arithmetic used
+/// by every backend (and by whole-table reconstruction in `dpq`). Small
+/// workloads run serial (`pool::workers_for`); rows are independent, so
+/// every thread count produces identical bits.
+pub fn gather_rows_pooled(
+    d: usize,
+    n_rows: usize,
+    out: &mut [f32],
+    row_into: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(out.len(), n_rows * d);
+    if d == 0 || n_rows == 0 {
+        return;
+    }
+    pool::with_threads(pool::workers_for(n_rows * d), || {
+        let rows_per_chunk = pool::chunk_len(n_rows);
+        pool::par_chunks_mut(out, rows_per_chunk * d, |ci, chunk| {
+            let row0 = ci * rows_per_chunk;
+            for (ri, orow) in chunk.chunks_mut(d).enumerate() {
+                row_into(row0 + ri, orow);
+            }
+        });
+    });
+}
+
+/// The uncompressed baseline: a plain f32 `[n, d]` table served through
+/// the same interface as the compressed stores, so benches and tests can
+/// compare serving cost at CR 1.0.
+pub struct DenseTable {
+    table: TensorF,
+}
+
+impl DenseTable {
+    pub fn new(table: TensorF) -> Result<Self> {
+        if table.shape.len() != 2 {
+            bail!("DenseTable expects [n, d], got {:?}", table.shape);
+        }
+        Ok(DenseTable { table })
+    }
+
+    pub fn table(&self) -> &TensorF {
+        &self.table
+    }
+}
+
+impl EmbeddingBackend for DenseTable {
+    fn kind(&self) -> &'static str {
+        "dense"
+    }
+
+    fn d(&self) -> usize {
+        self.table.shape[1]
+    }
+
+    fn vocab(&self) -> usize {
+        self.table.shape[0]
+    }
+
+    fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), ids.len() * self.d());
+        gather_rows_pooled(self.d(), ids.len(), out, |r, orow| {
+            orow.copy_from_slice(self.table.row(ids[r]));
+        });
+    }
+
+    fn storage_bits(&self) -> usize {
+        32 * self.table.numel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::with_threads;
+    use crate::util::Rng;
+
+    fn toy_table(n: usize, d: usize, seed: u64) -> TensorF {
+        let mut rng = Rng::new(seed);
+        TensorF {
+            shape: vec![n, d],
+            data: (0..n * d).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    #[test]
+    fn dense_table_round_trips_rows() {
+        let t = toy_table(20, 6, 1);
+        let dt = DenseTable::new(t.clone()).unwrap();
+        assert_eq!(dt.vocab(), 20);
+        assert_eq!(dt.d(), 6);
+        assert_eq!(dt.storage_bits(), 32 * 120);
+        assert!((compression_ratio(&dt) - 1.0).abs() < 1e-12);
+        let ids = [3usize, 0, 19, 3];
+        let mut out = vec![0.0f32; ids.len() * 6];
+        dt.reconstruct_rows_into(&ids, &mut out);
+        for (r, &id) in ids.iter().enumerate() {
+            assert_eq!(&out[r * 6..(r + 1) * 6], t.row(id));
+        }
+    }
+
+    #[test]
+    fn dense_table_rejects_non_2d() {
+        assert!(DenseTable::new(TensorF::zeros(vec![2, 3, 4])).is_err());
+    }
+
+    #[test]
+    fn gather_is_thread_count_invariant() {
+        let t = toy_table(100, 16, 2);
+        let dt = DenseTable::new(t).unwrap();
+        let ids: Vec<usize> = (0..257).map(|i| (i * 37) % 100).collect();
+        let mut base = vec![0.0f32; ids.len() * 16];
+        with_threads(1, || dt.reconstruct_rows_into(&ids, &mut base));
+        for threads in [2usize, 7] {
+            let mut got = vec![0.0f32; ids.len() * 16];
+            with_threads(threads, || dt.reconstruct_rows_into(&ids, &mut got));
+            assert!(
+                got.iter().zip(&base).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn gather_handles_empty_and_zero_d() {
+        let dt = DenseTable::new(toy_table(4, 3, 3)).unwrap();
+        let mut out: Vec<f32> = Vec::new();
+        dt.reconstruct_rows_into(&[], &mut out);
+        gather_rows_pooled(0, 5, &mut out, |_, _| panic!("d=0 gathers nothing"));
+    }
+}

@@ -11,7 +11,6 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::tensor::{TensorF, TensorI};
-use crate::util::pool;
 
 /// Bit-packed KD codebook: n symbols x D groups, `bits` bits per code.
 #[derive(Clone, Debug, PartialEq)]
@@ -167,41 +166,16 @@ impl CompressedEmbedding {
         out
     }
 
-    /// Shared pool-sharded gather: reconstruct `n_rows` rows into `out`
-    /// ([n_rows, d] row-major), the symbol id of output row `r` given by
-    /// `id_of(r)`. Single home for the chunk-sizing arithmetic used by
-    /// both whole-table reconstruction and the server batcher. Small
-    /// workloads run serial (`pool::workers_for`); rows are independent
-    /// gathers whose bits don't depend on chunk placement, so every
-    /// thread count produces identical output.
-    fn reconstruct_rows_with(
-        &self,
-        n_rows: usize,
-        id_of: impl Fn(usize) -> usize + Sync,
-        out: &mut [f32],
-    ) {
-        let d = self.d;
-        debug_assert_eq!(out.len(), n_rows * d);
-        if d == 0 || n_rows == 0 {
-            return;
-        }
-        pool::with_threads(pool::workers_for(n_rows * d), || {
-            let rows_per_chunk = pool::chunk_len(n_rows);
-            pool::par_chunks_mut(out, rows_per_chunk * d, |ci, chunk| {
-                let row0 = ci * rows_per_chunk;
-                for (ri, orow) in chunk.chunks_mut(d).enumerate() {
-                    self.reconstruct_row_into(id_of(row0 + ri), orow);
-                }
-            });
-        });
-    }
-
     /// Reconstruct an arbitrary id list into `out` ([ids.len(), d]
-    /// row-major), sharded over the worker pool. Panics (slice bounds) if
-    /// an id is out of range -- callers validate first.
+    /// row-major), sharded over the worker pool via
+    /// [`backend::gather_rows_pooled`](crate::backend::gather_rows_pooled)
+    /// (small gathers run serial). Panics (slice bounds) if an id is out
+    /// of range -- callers validate first.
     pub fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]) {
         assert_eq!(out.len(), ids.len() * self.d);
-        self.reconstruct_rows_with(ids.len(), |r| ids[r], out);
+        crate::backend::gather_rows_pooled(self.d, ids.len(), out, |r, orow| {
+            self.reconstruct_row_into(ids[r], orow)
+        });
     }
 
     /// Reconstruct the full [n, d] table, sharded over the worker pool.
@@ -209,7 +183,9 @@ impl CompressedEmbedding {
     pub fn reconstruct_table(&self) -> TensorF {
         let n = self.codebook.n;
         let mut data = vec![0.0f32; n * self.d];
-        self.reconstruct_rows_with(n, |r| r, &mut data);
+        crate::backend::gather_rows_pooled(self.d, n, &mut data, |r, orow| {
+            self.reconstruct_row_into(r, orow)
+        });
         TensorF { shape: vec![n, self.d], data }
     }
 
@@ -273,13 +249,47 @@ impl CompressedEmbedding {
         let bits = next(&mut f)? as u32;
         let s = next(&mut f)? as usize;
         let shared = next(&mut f)? != 0;
-        let words = (n * dg * bits as usize).div_ceil(64);
+        // Header sanity BEFORE sizing any allocation from it: a corrupt
+        // or truncated-then-padded file must fail loudly here, not OOM or
+        // shift-overflow later. `bits` may exceed bits_for(k) (the format
+        // permits wider-than-minimal packing, up to one u64 per code) but
+        // never 0 or > 64.
+        if bits == 0 || bits > 64 {
+            bail!("corrupt header: bits={bits} (must be in 1..=64)");
+        }
+        if k < 2 {
+            bail!("corrupt header: K={k} (must be >= 2)");
+        }
+        let code_bits = n
+            .checked_mul(dg)
+            .and_then(|x| x.checked_mul(bits as usize))
+            .ok_or_else(|| anyhow::anyhow!(
+                "corrupt header: n={n} D={dg} bits={bits} overflows"))?;
+        let value_len = k
+            .checked_mul(dg)
+            .and_then(|x| x.checked_mul(s))
+            .ok_or_else(|| anyhow::anyhow!(
+                "corrupt header: K={k} D={dg} s={s} overflows"))?;
+        let words = code_bits.div_ceil(64);
+        // Check the declared payload against the actual file size before
+        // allocating for it: a truncated file is a typed "truncated"
+        // error up front, not a giant zeroed allocation followed by an
+        // EOF partway through the read.
+        let header_bytes = 4u128 + 6 * 8;
+        let expect = header_bytes + words as u128 * 8 + value_len as u128 * 4;
+        let actual = f.metadata().map(|m| m.len()).unwrap_or(u64::MAX) as u128;
+        if actual < expect {
+            bail!(
+                "truncated file: {path:?} is {actual} bytes, header \
+                 declares {expect}"
+            );
+        }
         let mut packed = vec![0u64; words];
         for w in packed.iter_mut() {
             f.read_exact(&mut u64buf)?;
             *w = u64::from_le_bytes(u64buf);
         }
-        let mut vals = vec![0.0f32; k * dg * s];
+        let mut vals = vec![0.0f32; value_len];
         let mut f32buf = [0u8; 4];
         for v in vals.iter_mut() {
             f.read_exact(&mut f32buf)?;
@@ -294,6 +304,55 @@ impl CompressedEmbedding {
     }
 }
 
+/// The DPQ artifact served as a registry table. Fully-qualified trait
+/// path on purpose: it keeps `EmbeddingBackend` out of this module's
+/// method-resolution scope, so the inherent `vocab`/`storage_bits`/
+/// `reconstruct_rows_into` stay unambiguous at every call site here.
+impl crate::backend::EmbeddingBackend for CompressedEmbedding {
+    fn kind(&self) -> &'static str {
+        "dpq"
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn vocab(&self) -> usize {
+        CompressedEmbedding::vocab(self)
+    }
+
+    fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]) {
+        CompressedEmbedding::reconstruct_rows_into(self, ids, out)
+    }
+
+    fn storage_bits(&self) -> usize {
+        CompressedEmbedding::storage_bits(self)
+    }
+}
+
+/// Deterministic random DPQ fixture (uniform codes, normal values) --
+/// the one shared toy-embedding builder for in-repo tests, benches and
+/// the serving examples. Hidden from docs: not part of the compression
+/// API.
+#[doc(hidden)]
+pub fn toy_embedding(n: usize, k: usize, dg: usize, s: usize, seed: u64)
+                     -> CompressedEmbedding {
+    let mut rng = crate::util::Rng::new(seed);
+    let codes = TensorI::new(
+        vec![n, dg],
+        (0..n * dg).map(|_| rng.below(k) as i32).collect(),
+    )
+    .unwrap();
+    let values = TensorF::new(
+        vec![k, dg, s],
+        (0..k * dg * s).map(|_| rng.normal()).collect(),
+    )
+    .unwrap();
+    CompressedEmbedding::new(Codebook::from_codes(&codes, k).unwrap(),
+                             values, false)
+        .unwrap()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,20 +360,7 @@ mod tests {
     use crate::util::{prop::prop_check, Rng};
 
     fn toy(n: usize, k: usize, dg: usize, s: usize, seed: u64) -> CompressedEmbedding {
-        let mut rng = Rng::new(seed);
-        let codes = TensorI::new(
-            vec![n, dg],
-            (0..n * dg).map(|_| rng.below(k) as i32).collect(),
-        )
-        .unwrap();
-        let values = TensorF::new(
-            vec![k, dg, s],
-            (0..k * dg * s).map(|_| rng.normal()).collect(),
-        )
-        .unwrap();
-        CompressedEmbedding::new(Codebook::from_codes(&codes, k).unwrap(),
-                                 values, false)
-            .unwrap()
+        toy_embedding(n, k, dg, s, seed)
     }
 
     #[test]
@@ -407,6 +453,101 @@ mod tests {
         assert_eq!(back.codebook, ce.codebook);
         assert_eq!(back.values, ce.values);
         assert_eq!(back.reconstruct_table(), ce.reconstruct_table());
+        // storage accounting must survive the trip bit-for-bit
+        assert_eq!(back.storage_bits(), ce.storage_bits());
+        assert_eq!(back.compression_ratio().to_bits(),
+                   ce.compression_ratio().to_bits());
+        assert_eq!(back.shared, ce.shared);
+    }
+
+    /// Regression for the PR-1 `bits == 64` shift-overflow fix: a
+    /// codebook packed at the maximum width (one full u64 per code, legal
+    /// in the on-disk format even when K is small) must reconstruct and
+    /// roundtrip through save/load. Built by struct literal because
+    /// `from_codes` always packs at the minimal width.
+    #[test]
+    fn save_load_roundtrip_at_bits_64() {
+        let (n, dg, k, s) = (6usize, 3usize, 4usize, 2usize);
+        let mut rng = Rng::new(9);
+        let codes: Vec<u64> = (0..n * dg).map(|_| rng.below(k) as u64).collect();
+        // bits=64 => code i occupies exactly word i of `packed`
+        let cb = Codebook { n, d_groups: dg, k, bits: 64, packed: codes.clone() };
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(cb.get(i / dg, i % dg), c as usize);
+        }
+        let values = TensorF::new(
+            vec![k, dg, s],
+            (0..k * dg * s).map(|_| rng.normal()).collect(),
+        )
+        .unwrap();
+        let ce = CompressedEmbedding {
+            codebook: cb,
+            values,
+            d: dg * s,
+            shared: false,
+        };
+        // reconstruction exercises the bits==64 mask guard
+        let manual: Vec<f32> = (0..dg)
+            .flat_map(|g| {
+                let code = codes[g] as usize;
+                let base = (code * dg + g) * s;
+                ce.values.data[base..base + s].to_vec()
+            })
+            .collect();
+        assert_eq!(ce.reconstruct_row(0), manual);
+        let dir = std::env::temp_dir().join("dpq_test_save");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("emb64.dpq");
+        ce.save(&path).unwrap();
+        let back = CompressedEmbedding::load(&path).unwrap();
+        assert_eq!(back.codebook, ce.codebook);
+        assert_eq!(back.codebook.bits(), 64);
+        assert_eq!(back.values, ce.values);
+        assert_eq!(back.reconstruct_table(), ce.reconstruct_table());
+        assert_eq!(back.storage_bits(), ce.storage_bits());
+        assert_eq!(back.compression_ratio().to_bits(),
+                   ce.compression_ratio().to_bits());
+    }
+
+    #[test]
+    fn load_rejects_bad_magic_and_truncation() {
+        let ce = toy(16, 8, 4, 2, 11);
+        let dir = std::env::temp_dir().join("dpq_test_save");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.dpq");
+        ce.save(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+
+        // bad magic
+        let mut corrupt = bytes.clone();
+        corrupt[0] = b'X';
+        let bad_magic = dir.join("bad_magic.dpq");
+        std::fs::write(&bad_magic, &corrupt).unwrap();
+        let err = CompressedEmbedding::load(&bad_magic).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        // truncation at several depths: mid-magic, mid-header, mid-codes,
+        // mid-values -- every one must be an error, never a short read
+        // silently zero-filled
+        for cut in [2usize, 20, bytes.len() / 2, bytes.len() - 3] {
+            let t = dir.join(format!("trunc_{cut}.dpq"));
+            std::fs::write(&t, &bytes[..cut]).unwrap();
+            assert!(
+                CompressedEmbedding::load(&t).is_err(),
+                "truncation at {cut}/{} must fail",
+                bytes.len()
+            );
+        }
+
+        // corrupt bits field (offset 4 + 3*8 = 28): 0 and 65 both rejected
+        for bad_bits in [0u64, 65] {
+            let mut c = bytes.clone();
+            c[28..36].copy_from_slice(&bad_bits.to_le_bytes());
+            let p = dir.join(format!("bad_bits_{bad_bits}.dpq"));
+            std::fs::write(&p, &c).unwrap();
+            let err = CompressedEmbedding::load(&p).unwrap_err();
+            assert!(err.to_string().contains("bits"), "{err}");
+        }
     }
 
     #[test]

@@ -10,11 +10,13 @@
 //!   execution ([`runtime`]), synthetic data pipeline ([`data`]), training
 //!   coordinator and experiment harness ([`coordinator`]), compressed
 //!   embedding store ([`dpq`]), post-hoc compression baselines ([`quant`]),
-//!   metrics ([`metrics`]) and an embedding-lookup server ([`server`]).
+//!   the [`backend::EmbeddingBackend`] serving abstraction, metrics
+//!   ([`metrics`]) and a multi-table embedding-lookup server ([`server`]).
 //!
 //! See DESIGN.md for the system inventory and the paper-experiment index,
 //! and EXPERIMENTS.md for measured results.
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -6,7 +6,7 @@
 //!   repro experiment <id|all> [--steps N]  regenerate a paper table/figure
 //!   repro experiment --list             list experiment ids
 //!   repro compress [--artifact P ...]   train + export compressed embedding
-//!   repro serve   [--addr A ...]        serve a compressed embedding
+//!   repro serve   [--table N=F ...]     serve compressed embedding tables
 //!   repro codes   [--artifact P ...]    print code statistics
 //!
 //! All flags are `--key value`; unknown keys are rejected with the list of
@@ -28,7 +28,7 @@ use dpq_embed::coordinator::Trainer;
 use dpq_embed::dpq::stats as dstats;
 use dpq_embed::metrics;
 use dpq_embed::runtime::Runtime;
-use dpq_embed::server::EmbeddingServer;
+use dpq_embed::server::{EmbeddingServer, ServerConfig, TableRegistry};
 use dpq_embed::util::pool;
 
 fn main() {
@@ -173,19 +173,62 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         "serve" => {
-            let kv = parse_cli_overrides(rest)?;
-            let path = std::path::PathBuf::from(
-                take_or(&kv, "embedding", "compressed.dpq"));
-            let emb = dpq_embed::dpq::CompressedEmbedding::load(&path)
-                .map_err(|e| anyhow!("load {path:?}: {e} (run `repro compress` first)"))?;
+            // `--table name=path` is repeatable, so peel those off before
+            // the map-based flag parser (which keeps only the last value
+            // per key) sees the rest.
+            let mut tables: Vec<(String, std::path::PathBuf)> = Vec::new();
+            let mut plain: Vec<String> = Vec::new();
+            let mut it = rest.iter();
+            while let Some(a) = it.next() {
+                if a == "--table" {
+                    let spec = it
+                        .next()
+                        .ok_or_else(|| anyhow!("--table missing name=path"))?;
+                    let (name, path) = spec.split_once('=').ok_or_else(|| {
+                        anyhow!("--table expects name=path, got {spec:?}")
+                    })?;
+                    tables.push((name.to_string(), path.into()));
+                } else {
+                    plain.push(a.clone());
+                }
+            }
+            let kv = parse_cli_overrides(&plain)?;
+            // legacy single-table form: --embedding F serves as "default"
+            if tables.is_empty() {
+                let path = std::path::PathBuf::from(
+                    take_or(&kv, "embedding", "compressed.dpq"));
+                tables.push(("default".to_string(), path));
+            }
             let addr = take_or(&kv, "addr", "127.0.0.1:7878").to_string();
             let max_batch: usize = take_or(&kv, "max_batch", "64").parse()?;
+            let shards_per_table: usize = take_or(&kv, "shards", "1").parse()?;
+            if max_batch == 0 || shards_per_table == 0 {
+                bail!("--max-batch and --shards must be >= 1");
+            }
+            let registry = TableRegistry::new(ServerConfig {
+                max_batch,
+                shards_per_table,
+            });
+            for (name, path) in &tables {
+                let emb = dpq_embed::dpq::CompressedEmbedding::load(path)
+                    .map_err(|e| anyhow!(
+                        "load {path:?}: {e} (run `repro compress` first)"))?;
+                println!(
+                    "table {name}: {} symbols x d={} ({} KiB compressed, \
+                     CR {:.1}x, {shards_per_table} shard(s))",
+                    emb.vocab(), emb.d, emb.storage_bits() / 8 / 1024,
+                    emb.compression_ratio()
+                );
+                registry.insert(name, std::sync::Arc::new(emb))?;
+            }
+            if let Some(def) = kv.get("default") {
+                registry.set_default(def)?;
+            }
             println!(
-                "serving {} symbols x d={} ({} KiB compressed, CR {:.1}x)",
-                emb.vocab(), emb.d, emb.storage_bits() / 8 / 1024,
-                emb.compression_ratio()
+                "default table: {} (v1 clients are routed here)",
+                registry.default_name().unwrap_or_default()
             );
-            let server = EmbeddingServer::new(emb, max_batch);
+            let server = EmbeddingServer::new(registry);
             server.serve(&addr, |a| println!("listening on {a}"))?;
             Ok(())
         }
@@ -226,7 +269,11 @@ fn print_usage() {
          \x20 train      [--artifact P --steps N --lr X ...]\n\
          \x20 experiment <id|all> [--steps N] | --list\n\
          \x20 compress   [--artifact P --out F]\n\
-         \x20 serve      [--embedding F --addr A --max-batch N]\n\
+         \x20 serve      [--table NAME=F ... --default NAME --addr A\n\
+         \x20             --max-batch N --shards N]\n\
+         \x20            (--table is repeatable: one server, many tables,\n\
+         \x20             routed by table name over protocol v2; legacy\n\
+         \x20             --embedding F serves one table named \"default\")\n\
          \x20 codes      [--artifact P --steps N]\n\
          \n\
          global flags:\n\

@@ -93,6 +93,40 @@ impl ScalarQuant {
     }
 }
 
+/// b-bit scalar codes served as a registry table. Fully-qualified trait
+/// path on purpose: keeping `EmbeddingBackend` out of this module's
+/// scope means `storage_bits`/`compression_ratio` calls here still
+/// resolve to the [`Compressor`] methods without turbofish.
+impl crate::backend::EmbeddingBackend for ScalarQuant {
+    fn kind(&self) -> &'static str {
+        "scalar_quant"
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn vocab(&self) -> usize {
+        self.n
+    }
+
+    fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), ids.len() * self.d);
+        let d = self.d;
+        crate::backend::gather_rows_pooled(d, ids.len(), out, |r, orow| {
+            let i = ids[r];
+            for j in 0..d {
+                orow[j] =
+                    self.lo[j] + self.codes[i * d + j] as f32 * self.step[j];
+            }
+        });
+    }
+
+    fn storage_bits(&self) -> usize {
+        Compressor::storage_bits(self)
+    }
+}
+
 impl Compressor for ScalarQuant {
     fn name(&self) -> String {
         format!("scalar{}bit", self.bits)
@@ -222,6 +256,43 @@ impl LowRank {
     }
 }
 
+/// Low-rank factors served as a registry table: row `i` is the `[1, r] x
+/// [r, d]` product `left[i, :] @ right`, accumulated serially per row so
+/// the served bits are identical for every worker-pool size (the blocked
+/// `linalg::matmul` used by [`Compressor::reconstruct`] may sum in a
+/// different order; serving always goes through this row kernel).
+impl crate::backend::EmbeddingBackend for LowRank {
+    fn kind(&self) -> &'static str {
+        "low_rank"
+    }
+
+    fn d(&self) -> usize {
+        self.right.shape[1]
+    }
+
+    fn vocab(&self) -> usize {
+        self.left.shape[0]
+    }
+
+    fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]) {
+        let d = self.right.shape[1];
+        assert_eq!(out.len(), ids.len() * d);
+        crate::backend::gather_rows_pooled(d, ids.len(), out, |ri, orow| {
+            orow.fill(0.0);
+            for (k, &lv) in self.left.row(ids[ri]).iter().enumerate() {
+                let rrow = self.right.row(k);
+                for j in 0..d {
+                    orow[j] += lv * rrow[j];
+                }
+            }
+        });
+    }
+
+    fn storage_bits(&self) -> usize {
+        Compressor::storage_bits(self)
+    }
+}
+
 impl Compressor for LowRank {
     fn name(&self) -> String {
         format!("lowrank{}", self.rank)
@@ -315,6 +386,35 @@ mod tests {
         let bits = 32 * (10000 * r + r * 64);
         let cr = (32.0 * 10000.0 * 64.0) / bits as f64;
         assert!((cr - 10.0).abs() < 2.0, "r={r} cr={cr}");
+    }
+
+    /// The serving-side row gather must agree with the batch
+    /// `reconstruct()` used by the experiment harness: bit-exact for
+    /// scalar quant (same formula), within float-reassociation tolerance
+    /// for low rank (matmul blocks its sums; the row kernel is serial).
+    #[test]
+    fn backend_rows_match_compressor_reconstruct() {
+        use crate::backend::EmbeddingBackend as _;
+        let t = table(60, 12, 8);
+        let ids: Vec<usize> = vec![0, 59, 7, 7, 31];
+
+        let sq = ScalarQuant::fit(&t, 6);
+        let full = Compressor::reconstruct(&sq);
+        let mut rows = vec![0.0f32; ids.len() * 12];
+        sq.reconstruct_rows_into(&ids, &mut rows);
+        for (r, &id) in ids.iter().enumerate() {
+            assert_eq!(&rows[r * 12..(r + 1) * 12], full.row(id), "sq id {id}");
+        }
+
+        let lr = LowRank::fit(&t, 4);
+        let full = Compressor::reconstruct(&lr);
+        let mut rows = vec![0.0f32; ids.len() * 12];
+        lr.reconstruct_rows_into(&ids, &mut rows);
+        for (r, &id) in ids.iter().enumerate() {
+            for (a, b) in rows[r * 12..(r + 1) * 12].iter().zip(full.row(id)) {
+                assert!((a - b).abs() < 1e-4, "lr id {id}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

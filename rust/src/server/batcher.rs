@@ -1,0 +1,284 @@
+//! Micro-batching primitives: the pending-lookup queue each batcher shard
+//! drains, the zero-copy result views handed back to connection handlers,
+//! and the batch runner that reconstructs one drained micro-batch through
+//! an [`EmbeddingBackend`] on the shared worker pool.
+//!
+//! A [`BatchQueue`] owns its closed flag *inside* the queue mutex: `push`
+//! observes close atomically with enqueue, and [`BatchQueue::close`]
+//! drains-and-fails everything still queued under the same lock, so no
+//! pending lookup can be stranded between a shard shutting down and a
+//! handler enqueueing -- a handler blocked on its condvar is always
+//! answered, with rows or with failure.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::backend::EmbeddingBackend;
+use crate::server::stats::Stats;
+
+/// A request's reconstructed rows: a shared view into its micro-batch's
+/// flat buffer (row-major, `len` = ids * d). No per-request copy is made;
+/// the buffer is freed when the last handler finishes encoding its view.
+pub(crate) struct RowsSlice {
+    buf: Arc<Vec<f32>>,
+    start: usize,
+    len: usize,
+}
+
+impl RowsSlice {
+    pub(crate) fn as_slice(&self) -> &[f32] {
+        &self.buf[self.start..self.start + self.len]
+    }
+}
+
+/// Completion slot a handler waits on: filled exactly once by a batcher
+/// shard (or by the failure path) with the request's [`RowsSlice`].
+pub(crate) type DoneSlot = (Mutex<Option<RowsSlice>>, Condvar);
+
+/// A pending lookup: ids + completion slot. Ids are validated against the
+/// table's vocab by the connection handler BEFORE queueing -- the batcher
+/// reconstructs unchecked (with a defensive release-build guard).
+pub(crate) struct Pending {
+    pub ids: Vec<usize>,
+    pub done: Arc<DoneSlot>,
+}
+
+impl Pending {
+    /// Build a pending lookup plus the slot its submitter will wait on.
+    pub(crate) fn new(ids: Vec<usize>) -> (Pending, Arc<DoneSlot>) {
+        let done = Arc::new((Mutex::new(None), Condvar::new()));
+        (Pending { ids, done: done.clone() }, done)
+    }
+
+    pub(crate) fn complete(&self, rows: RowsSlice) {
+        let (slot, cv) = &*self.done;
+        *slot.lock().unwrap() = Some(rows);
+        cv.notify_one();
+    }
+
+    /// Answer with an empty view: the submitter sees a length mismatch
+    /// (it never enqueues empty id lists) and reports a typed error.
+    pub(crate) fn fail(&self) {
+        self.complete(RowsSlice { buf: Arc::new(Vec::new()), start: 0, len: 0 });
+    }
+}
+
+/// Block until the slot is filled and take the result.
+pub(crate) fn wait_rows(done: &DoneSlot) -> RowsSlice {
+    let (slot, cv) = done;
+    let mut guard = slot.lock().unwrap();
+    while guard.is_none() {
+        guard = cv.wait(guard).unwrap();
+    }
+    guard.take().unwrap()
+}
+
+/// A request's assembled answer: either a zero-copy view of one shard's
+/// batch buffer (single-shard fast path) or an owned buffer stitched from
+/// several shards' views in id order.
+pub(crate) enum Answer {
+    View(RowsSlice),
+    Owned(Vec<f32>),
+}
+
+impl Answer {
+    pub(crate) fn as_slice(&self) -> &[f32] {
+        match self {
+            Answer::View(v) => v.as_slice(),
+            Answer::Owned(v) => v,
+        }
+    }
+}
+
+struct QueueInner {
+    q: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// Micro-batching queue: one per batcher shard. Lookups accumulate here;
+/// the shard's batcher thread drains up to `max_batch` at a time.
+pub struct BatchQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    pub max_batch: usize,
+}
+
+impl BatchQueue {
+    pub fn new(max_batch: usize) -> Self {
+        BatchQueue {
+            inner: Mutex::new(QueueInner { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    /// Enqueue, or -- if the queue is closed -- fail the pending lookup
+    /// immediately and return false. The closed check happens under the
+    /// queue lock, so a push can never race past [`close`](Self::close)'s
+    /// drain and strand a waiter.
+    pub(crate) fn push(&self, p: Pending) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            drop(g);
+            p.fail();
+            return false;
+        }
+        g.q.push_back(p);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Pop up to max_batch entries, waiting up to `timeout` for the first.
+    pub(crate) fn pop_batch(&self, timeout: Duration) -> Vec<Pending> {
+        let mut g = self.inner.lock().unwrap();
+        if g.q.is_empty() && !g.closed {
+            let (gg, _) = self.cv.wait_timeout(g, timeout).unwrap();
+            g = gg;
+        }
+        let take = g.q.len().min(self.max_batch);
+        g.q.drain(..take).collect()
+    }
+
+    /// Close the queue (idempotent): every still-queued pending lookup is
+    /// failed, every later push fails fast, and the shard's batcher
+    /// thread observes [`is_closed`](Self::is_closed) and exits.
+    pub fn close(&self) {
+        let rest: Vec<Pending> = {
+            let mut g = self.inner.lock().unwrap();
+            g.closed = true;
+            self.cv.notify_all();
+            g.q.drain(..).collect()
+        };
+        for p in &rest {
+            p.fail();
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+/// Reconstruct one drained micro-batch: every request's ids concatenated,
+/// decoded into a single flat row-major [total, d] buffer sharded across
+/// the worker pool (small batches run serial -- a thread spawn costs more
+/// than a few hundred row gathers), then handed back per request in queue
+/// order as contiguous slices. Each row's gather is independent of which
+/// chunk it lands in, so the served bits never depend on the thread
+/// count. Batch wall-clock time lands in the table's latency ring.
+pub(crate) fn run_batch(backend: &dyn EmbeddingBackend, batch: &[Pending], stats: &Stats) {
+    let t0 = Instant::now();
+    let d = backend.d();
+    let total: usize = batch.iter().map(|p| p.ids.len()).sum();
+    let mut all_ids: Vec<usize> = Vec::with_capacity(total);
+    for p in batch {
+        all_ids.extend_from_slice(&p.ids);
+    }
+    // Handlers validate before queueing, so an out-of-range id here is a
+    // bug -- but an OOB panic (or an assert) would kill the batcher
+    // thread and leave every waiting handler blocked on its condvar
+    // forever. Keep the server alive in every build: log loudly and
+    // answer the whole batch with empty views, which handlers turn into
+    // explicit per-request errors.
+    let vocab = backend.vocab();
+    let valid = all_ids.iter().all(|&i| i < vocab);
+    if !valid {
+        eprintln!("server bug: unvalidated id reached the batcher; \
+                   rejecting the whole micro-batch");
+    }
+    let mut flat = vec![0.0f32; if valid { total * d } else { 0 }];
+    if valid {
+        backend.reconstruct_rows_into(&all_ids, &mut flat);
+        stats.ids_served.fetch_add(total as u64,
+                                   std::sync::atomic::Ordering::Relaxed);
+    }
+    // complete each request with a zero-copy view of the shared buffer
+    let flat = Arc::new(flat);
+    let mut off = 0;
+    for p in batch {
+        let len = if valid { p.ids.len() * d } else { 0 };
+        p.complete(RowsSlice { buf: flat.clone(), start: off, len });
+        off += len;
+    }
+    stats.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    stats.record_batch_secs(t0.elapsed().as_secs_f64());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    use crate::dpq::{toy_embedding, CompressedEmbedding};
+
+    fn toy_emb(n: usize, k: usize, dg: usize, s: usize) -> CompressedEmbedding {
+        toy_embedding(n, k, dg, s, 1)
+    }
+
+    #[test]
+    fn batch_queue_drains_up_to_max() {
+        let q = BatchQueue::new(3);
+        for _ in 0..5 {
+            q.push(Pending::new(vec![0]).0);
+        }
+        let b1 = q.pop_batch(Duration::from_millis(1));
+        assert_eq!(b1.len(), 3);
+        let b2 = q.pop_batch(Duration::from_millis(1));
+        assert_eq!(b2.len(), 2);
+    }
+
+    #[test]
+    fn closed_queue_fails_pending_and_rejects_push() {
+        let q = BatchQueue::new(4);
+        let (p, done) = Pending::new(vec![1, 2]);
+        assert!(q.push(p));
+        q.close();
+        // the queued pending was answered with the failure view
+        assert_eq!(wait_rows(&done).as_slice().len(), 0);
+        // a late push fails fast instead of stranding its waiter
+        let (p2, done2) = Pending::new(vec![3]);
+        assert!(!q.push(p2));
+        assert_eq!(wait_rows(&done2).as_slice().len(), 0);
+        assert!(q.is_closed());
+        q.close(); // idempotent
+        assert!(q.pop_batch(Duration::from_millis(1)).is_empty());
+    }
+
+    /// The sharded batcher must split the flat reconstruction back into
+    /// per-request slices in queue order, matching per-row reconstruction
+    /// exactly for every thread count.
+    #[test]
+    fn run_batch_splits_per_request_and_matches_serial() {
+        let emb = toy_emb(40, 8, 4, 3);
+        let stats = Stats::default();
+        let reqs: Vec<Vec<usize>> =
+            vec![vec![0, 5, 39], vec![], vec![7], vec![39, 0, 0, 12]];
+        for threads in [1usize, 2, 7] {
+            crate::util::pool::with_threads(threads, || {
+                let batch: Vec<Pending> =
+                    reqs.iter().map(|ids| Pending::new(ids.clone()).0).collect();
+                run_batch(&emb, &batch, &stats);
+                for (p, ids) in batch.iter().zip(&reqs) {
+                    let rows = p.done.0.lock().unwrap().take().unwrap();
+                    let flat = rows.as_slice();
+                    assert_eq!(flat.len(), ids.len() * emb.d);
+                    for (ri, &id) in ids.iter().enumerate() {
+                        assert_eq!(
+                            &flat[ri * emb.d..(ri + 1) * emb.d],
+                            &emb.reconstruct_row(id)[..],
+                            "threads={threads} req row {ri}"
+                        );
+                    }
+                }
+            });
+        }
+        assert_eq!(
+            stats.ids_served.load(Ordering::Relaxed),
+            3 * reqs.iter().map(|r| r.len()).sum::<usize>() as u64
+        );
+        assert_eq!(stats.batches.load(Ordering::Relaxed), 3);
+        let (p50, p99) = stats.batch_latency().unwrap();
+        assert!(p50 >= 0.0 && p99 >= p50);
+    }
+}

@@ -1,191 +1,128 @@
-//! Embedding-lookup server: serves compressed (DPQ) embeddings over TCP
-//! with request micro-batching -- the L3 serving path demonstrating the
-//! paper's inference claim (codebook lookup + concat is as cheap as a full
-//! table lookup at a fraction of the memory).
+//! Multi-table embedding-lookup server: serves any number of named
+//! [`EmbeddingBackend`](crate::backend::EmbeddingBackend) tables (DPQ,
+//! scalar-quant, low-rank, dense) over TCP with request micro-batching --
+//! the L3 serving path demonstrating the paper's inference claim (a
+//! codebook lookup + concat is as cheap as a full table lookup at a
+//! fraction of the memory), at the scale where it pays: one server
+//! process hosting many compressed tables behind one protocol.
 //!
-//! Wire protocol: length-prefixed JSON frames (u32 LE byte length + JSON).
-//!   request:  {"op": "lookup", "ids": [1, 2, 3]}
-//!             {"op": "lookup_bin", "ids": [...]}   (raw f32-LE response)
-//!             {"op": "stats"}
-//!             {"op": "shutdown"}
-//!   response: {"ok": true, "vectors": [[...], ...]} | {"ok": true, ...}
-//!   lookup_bin response: u32 LE frame length, then n*d f32 LE values
-//!   (row-major). Binary lookups skip JSON float formatting entirely --
-//!   see EXPERIMENTS.md §Perf for the measured speedup.
+//! # Wire protocol v2 (and v1 compatibility)
 //!
-//! Architecture: one thread per connection parses requests and strictly
-//! validates ids -- every id must be a non-negative integer inside the
-//! vocab; malformed or out-of-range ids are rejected, never clamped or
-//! dropped (JSON with an `{"ok": false}` error object, binary with a
-//! `u32::MAX` length sentinel, which can never be a real frame length; a
-//! zero-length frame remains the valid response to an empty id list) --
-//! and pushes a [`Pending`] onto the shared [`BatchQueue`]. A batcher
-//! thread drains up to `max_batch` pending lookups at a time,
-//! concatenates their ids, and reconstructs the whole micro-batch into
-//! ONE flat row-major `Vec<f32>` sharded across the worker pool
-//! (`util::pool`, thread count from `DPQ_THREADS` / `--threads`; small
-//! batches run serial). Each pending request is then completed with a
-//! zero-copy [`RowsSlice`] view of that buffer -- no per-id
-//! `reconstruct_row` allocation, no `Vec<Vec<f32>>`, and no per-request
-//! copy before wire encoding. Each row's gather is independent of chunk
-//! placement, so served vectors are bit-identical for every thread
-//! count. std-only (no tokio in the offline vendor set) -- the event loop
-//! is threads + channels.
+//! Every request is a length-prefixed JSON frame: u32 LE byte length,
+//! then a JSON object. The `"v"` field selects the protocol version; a
+//! frame **without** `"v"` is protocol **v1** -- the original
+//! single-table protocol -- and is routed to the *default table* (the
+//! first loaded, unless overridden), so pre-v2 clients keep working
+//! unmodified. A `"v"` the server does not speak is answered with
+//! `{"ok": false, "code": "unsupported_version", "max_v": 2}` -- that
+//! frame IS the version negotiation: clients downshift to `max_v`.
+//!
+//! v2 requests (`"v": 2`) may carry `"table": "<name>"` on lookups and
+//! stats to route by table; omitting it means the default table.
+//!
+//! Ops:
+//!
+//! | op           | v   | request fields            | response |
+//! |--------------|-----|---------------------------|----------|
+//! | `lookup`     | 1,2 | `ids`, v2: `table`        | `{"ok":true,"n":..,"d":..,"vectors":[[..],..]}` |
+//! | `lookup_bin` | 1,2 | `ids`, v2: `table`        | binary, see below |
+//! | `stats`      | 1,2 | v2: optional `table`      | counters + `batch_p50_s`/`batch_p99_s` latency (per table) |
+//! | `tables`     | 2   |                           | `{"ok":true,"default":..,"tables":[{name,kind,vocab,d,..},..]}` |
+//! | `load`       | 2   | `table`, `path`           | hot-load a `.dpq` file as a new table |
+//! | `unload`     | 2   | `table`                   | hot-drop a table |
+//! | `shutdown`   | 1,2 |                           | `{"ok":true}`, then the server exits |
+//!
+//! **Binary lookup framing.** A v2 `lookup_bin` response is
+//! self-describing: u32 LE frame length, then a `u32 n | u32 d` header,
+//! then `n*d` f32 LE values (row-major) -- no client ever guesses the
+//! embedding width. A v1 `lookup_bin` response keeps the legacy layout
+//! (u32 LE length, then `n*d` f32 values, the caller knowing `d` out of
+//! band). Rejections use the `u32::MAX` length sentinel (never a real
+//! frame length; an empty id list answers with a real, short frame);
+//! under v2 the sentinel is followed by a JSON error frame naming the
+//! reason, so binary errors are as typed as JSON ones.
+//!
+//! **Errors.** Every `{"ok": false}` response carries a machine `"code"`
+//! (`bad_ids`, `no_such_table`, `unsupported_version`, `table_exists`,
+//! `load_failed`, `needs_v2`, `unknown_op`, `internal`, ...) beside the
+//! human `"error"` string; [`Client`] maps codes onto [`WireError`]
+//! variants. Malformed or out-of-range ids are rejected, never clamped
+//! or dropped.
+//!
+//! # Architecture
+//!
+//! One thread per connection parses frames, resolves the table in the
+//! [`TableRegistry`], and strictly validates ids against that table's
+//! vocab. Validated lookups are routed to the table's batcher shards
+//! (the id space is range-partitioned across `shards_per_table` shards;
+//! see [`registry`]), each of which drains micro-batches of up to
+//! `max_batch` lookups and reconstructs them into one flat buffer
+//! sharded across the worker pool (`util::pool`, thread count from
+//! `DPQ_THREADS` / `--threads`; small batches run serial). Single-shard
+//! answers are zero-copy views of the batch buffer. Row gathers are
+//! independent of chunk and shard placement, so served vectors are
+//! bit-identical for every thread count and shard count. std-only (no
+//! tokio in the offline vendor set) -- the event loop is threads +
+//! channels.
 
-use std::collections::VecDeque;
-use std::io::{Read, Write};
+pub mod batcher;
+pub mod protocol;
+pub mod registry;
+pub mod stats;
+
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::Result;
 
 use crate::dpq::CompressedEmbedding;
 use crate::jsonx::Json;
 
-/// Server statistics (exposed via the `stats` op).
-#[derive(Default)]
-pub struct Stats {
-    pub requests: AtomicU64,
-    pub ids_served: AtomicU64,
-    pub batches: AtomicU64,
-}
+pub use batcher::BatchQueue;
+pub use protocol::{
+    read_frame, write_frame, Client, Rows, TableDesc, WireError, VERSION,
+};
+pub use registry::{ServerConfig, TableEntry, TableRegistry};
+pub use stats::Stats;
 
-/// A request's reconstructed rows: a shared view into its micro-batch's
-/// flat buffer (row-major, `len` = ids * d). No per-request copy is made;
-/// the buffer is freed when the last handler finishes encoding its view.
-struct RowsSlice {
-    buf: Arc<Vec<f32>>,
-    start: usize,
-    len: usize,
-}
+use batcher::Answer;
+use protocol::{
+    err_frame, err_obj, frame_version, parse_ids, write_bin_reject,
+    write_bin_rows,
+};
 
-impl RowsSlice {
-    fn as_slice(&self) -> &[f32] {
-        &self.buf[self.start..self.start + self.len]
-    }
-}
-
-/// A pending lookup: ids + completion slot. The batcher fills the slot
-/// with a [`RowsSlice`] view of the batch's flat reconstruction;
-/// connection handlers slice or chunk it per protocol. Ids are validated
-/// against the vocab by the connection handler BEFORE queueing -- the
-/// batcher reconstructs unchecked.
-struct Pending {
-    ids: Vec<usize>,
-    done: Arc<(Mutex<Option<RowsSlice>>, Condvar)>,
-}
-
-/// Strictly parse the request's `ids` array: every element must be a
-/// non-negative integer JSON number. Anything else (negative, fractional,
-/// string, null) returns `Ok(None)` so the caller can reject -- never
-/// drop or saturate-clamp a malformed id (`-1 as usize` would silently
-/// become id 0). A missing or non-array `ids` is a hard protocol error.
-fn parse_ids(j: &Json, op: &str) -> Result<Option<Vec<usize>>> {
-    let arr = j
-        .get("ids")
-        .and_then(|v| v.as_arr())
-        .ok_or_else(|| anyhow!("{op} without ids"))?;
-    Ok(arr
-        .iter()
-        .map(|x| match x.as_f64() {
-            Some(n) if n >= 0.0
-                && n.fract() == 0.0
-                && n <= usize::MAX as f64 => Some(n as usize),
-            _ => None,
-        })
-        .collect())
-}
-
-/// Micro-batching queue: lookups accumulate here; the batcher drains.
-pub struct BatchQueue {
-    q: Mutex<VecDeque<Pending>>,
-    cv: Condvar,
-    pub max_batch: usize,
-}
-
-impl BatchQueue {
-    pub fn new(max_batch: usize) -> Self {
-        BatchQueue { q: Mutex::new(VecDeque::new()), cv: Condvar::new(), max_batch }
-    }
-
-    fn push(&self, p: Pending) {
-        self.q.lock().unwrap().push_back(p);
-        self.cv.notify_one();
-    }
-
-    /// Pop up to max_batch entries, waiting up to `timeout` for the first.
-    fn pop_batch(&self, timeout: Duration) -> Vec<Pending> {
-        let mut q = self.q.lock().unwrap();
-        if q.is_empty() {
-            let (qq, _) = self.cv.wait_timeout(q, timeout).unwrap();
-            q = qq;
-        }
-        let take = q.len().min(self.max_batch);
-        q.drain(..take).collect()
-    }
-}
-
-/// Reconstruct one drained micro-batch: every request's ids concatenated,
-/// decoded into a single flat row-major [total, d] buffer sharded across
-/// the worker pool (small batches run serial -- a thread spawn costs more
-/// than a few hundred row gathers), then handed back per request in queue
-/// order as contiguous slices. Each row's gather is independent of which
-/// chunk it lands in, so the served bits never depend on the thread count.
-fn run_batch(emb: &CompressedEmbedding, batch: &[Pending], stats: &Stats) {
-    let d = emb.d;
-    let total: usize = batch.iter().map(|p| p.ids.len()).sum();
-    let mut all_ids: Vec<usize> = Vec::with_capacity(total);
-    for p in batch {
-        all_ids.extend_from_slice(&p.ids);
-    }
-    // Handlers validate before queueing, so an out-of-range id here is a
-    // bug -- but an OOB panic (or an assert) would kill the batcher
-    // thread and leave every waiting handler blocked on its condvar
-    // forever. Keep the server alive in every build: log loudly and
-    // answer the whole batch with empty views, which handlers turn into
-    // explicit per-request errors.
-    let vocab = emb.vocab();
-    let valid = all_ids.iter().all(|&i| i < vocab);
-    if !valid {
-        eprintln!("server bug: unvalidated id reached the batcher; \
-                   rejecting the whole micro-batch");
-    }
-    let mut flat = vec![0.0f32; if valid { total * d } else { 0 }];
-    if valid {
-        emb.reconstruct_rows_into(&all_ids, &mut flat);
-        stats.ids_served.fetch_add(total as u64, Ordering::Relaxed);
-    }
-    // complete each request with a zero-copy view of the shared buffer
-    let flat = Arc::new(flat);
-    let mut off = 0;
-    for p in batch {
-        let len = if valid { p.ids.len() * d } else { 0 };
-        let rows = RowsSlice { buf: flat.clone(), start: off, len };
-        off += len;
-        let (slot, cv) = &*p.done;
-        *slot.lock().unwrap() = Some(rows);
-        cv.notify_one();
-    }
-}
-
-/// The embedding server over a compressed DPQ table.
+/// The embedding server over a [`TableRegistry`].
 pub struct EmbeddingServer {
-    pub emb: Arc<CompressedEmbedding>,
-    pub stats: Arc<Stats>,
-    queue: Arc<BatchQueue>,
-    stop: Arc<AtomicBool>,
+    registry: Arc<TableRegistry>,
 }
 
 impl EmbeddingServer {
-    pub fn new(emb: CompressedEmbedding, max_batch: usize) -> Self {
-        EmbeddingServer {
-            emb: Arc::new(emb),
-            stats: Arc::new(Stats::default()),
-            queue: Arc::new(BatchQueue::new(max_batch)),
-            stop: Arc::new(AtomicBool::new(false)),
-        }
+    pub fn new(registry: TableRegistry) -> Self {
+        EmbeddingServer { registry: Arc::new(registry) }
+    }
+
+    /// Convenience: one DPQ table (which is also the default table, so
+    /// v1 clients need no table name).
+    pub fn single(name: &str, emb: CompressedEmbedding, max_batch: usize) -> Self {
+        let registry = TableRegistry::new(ServerConfig {
+            max_batch,
+            ..ServerConfig::default()
+        });
+        registry
+            .insert(name, Arc::new(emb))
+            .expect("fresh registry cannot collide");
+        EmbeddingServer::new(registry)
+    }
+
+    /// The registry backing this server (hot load/unload, stats).
+    pub fn registry(&self) -> Arc<TableRegistry> {
+        self.registry.clone()
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.registry.stop_flag()
     }
 
     /// Bind + serve until a `shutdown` op arrives. Returns the bound
@@ -194,36 +131,18 @@ impl EmbeddingServer {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         on_bound(listener.local_addr()?);
-        // batcher thread
-        let batcher = {
-            let emb = self.emb.clone();
-            let queue = self.queue.clone();
-            let stop = self.stop.clone();
-            let stats = self.stats.clone();
-            std::thread::spawn(move || {
-                while !stop.load(Ordering::Relaxed) {
-                    let batch = queue.pop_batch(Duration::from_millis(20));
-                    if batch.is_empty() {
-                        continue;
-                    }
-                    stats.batches.fetch_add(1, Ordering::Relaxed);
-                    run_batch(&emb, &batch, &stats);
-                }
-            })
-        };
-        // accept loop. Connection threads are detached: a thread exits when
-        // its peer disconnects (or after serving `shutdown`). Joining them
-        // here would deadlock shutdown against idle-but-open clients.
-        while !self.stop.load(Ordering::Relaxed) {
+        let stop = self.registry.stop_flag();
+        // accept loop. Connection threads are detached: a thread exits
+        // when its peer disconnects (or after serving `shutdown`).
+        // Joining them here would deadlock shutdown against
+        // idle-but-open clients.
+        while !stop.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _)) => {
-                    let queue = self.queue.clone();
-                    let stats = self.stats.clone();
-                    let stop = self.stop.clone();
-                    let vocab = self.emb.vocab();
-                    let d = self.emb.d;
+                    let registry = self.registry.clone();
+                    let stop = stop.clone();
                     std::thread::spawn(move || {
-                        let _ = handle_conn(stream, queue, stats, stop, vocab, d);
+                        let _ = handle_conn(stream, registry, stop);
                     });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -232,128 +151,278 @@ impl EmbeddingServer {
                 Err(e) => return Err(e.into()),
             }
         }
-        let _ = batcher.join();
+        // closes every table's shard queues (failing queued lookups,
+        // typed) and joins the batcher threads
+        self.registry.shutdown();
         Ok(())
     }
+}
 
-    pub fn stop_flag(&self) -> Arc<AtomicBool> {
-        self.stop.clone()
+/// Resolve the request's table, validate ids, route through the batcher
+/// shards, and encode the response for one lookup op.
+fn lookup_op(
+    stream: &mut TcpStream,
+    registry: &TableRegistry,
+    j: &Json,
+    version: u64,
+    binary: bool,
+) -> Result<(), WireError> {
+    let op = if binary { "lookup_bin" } else { "lookup" };
+    let reject = |stream: &mut TcpStream, e: &WireError| -> Result<(), WireError> {
+        if binary {
+            write_bin_reject(stream, version, e)
+        } else {
+            write_frame(stream, &err_frame(e).to_string())
+        }
+    };
+    let named = if version >= 2 {
+        j.get("table").and_then(|v| v.as_str())
+    } else {
+        None // v1 frames always hit the default table
+    };
+    let entry = match registry.resolve(named) {
+        Ok(e) => e,
+        Err(e) => return reject(stream, &e),
+    };
+    let ids = match parse_ids(j, op) {
+        Err(e) => return reject(stream, &e),
+        // malformed or out-of-range ids -> rejection, never clamped
+        Ok(None) => {
+            return reject(stream, &WireError::Rejected {
+                code: "bad_ids".into(),
+                message: "ids must be integers in [0, vocab)".into(),
+            })
+        }
+        Ok(Some(ids)) => {
+            let vocab = entry.backend.vocab();
+            if ids.iter().any(|&i| i >= vocab) {
+                return reject(stream, &WireError::Rejected {
+                    code: "bad_ids".into(),
+                    message: format!("ids must be integers in [0, {vocab})"),
+                });
+            }
+            ids
+        }
+    };
+    let d = entry.backend.d();
+    let ans: Answer = match entry.lookup(&ids) {
+        Some(a) => a,
+        // batcher failed the request (table unloading / bug path): an
+        // explicit error, never ok:true with a short vector list
+        None => {
+            return reject(stream, &WireError::Rejected {
+                code: "internal".into(),
+                message: "batch reconstruction failed".into(),
+            })
+        }
+    };
+    let flat = ans.as_slice();
+    debug_assert_eq!(flat.len(), ids.len() * d);
+    if binary {
+        match write_bin_rows(stream, version, ids.len(), d, flat) {
+            Err(WireError::Malformed(m)) if version >= 2 => {
+                // v2 can still answer typed (nothing written yet on the
+                // TooLarge path); v1 has no in-band way, so propagate
+                // and drop the connection loudly
+                reject(stream, &WireError::Rejected {
+                    code: "too_large".into(),
+                    message: m,
+                })
+            }
+            other => other,
+        }
+    } else {
+        // Same frame-cap discipline as the binary path, applied BEFORE
+        // materializing the response. Rust float Display never uses
+        // scientific notation, so a shortest-roundtrip f32 can reach
+        // ~60 chars for subnormals; 64 bytes per value (incl separators)
+        // is a safe ceiling. The bound guarantees the encoded frame
+        // stays under what the peer's read_frame accepts -- reject typed
+        // instead of building a string the client would refuse
+        // (desyncing the connection).
+        if flat.len() as u64 * 64 > protocol::MAX_FRAME as u64 {
+            return reject(stream, &WireError::Rejected {
+                code: "too_large".into(),
+                message: format!(
+                    "{} rows x d={d} exceeds the JSON frame cap; use \
+                     lookup_bin or smaller batches", ids.len()),
+            });
+        }
+        let arr = Json::arr(
+            flat.chunks(d.max(1))
+                .map(|row| Json::arr(
+                    row.iter().map(|&x| Json::num(x as f64)).collect()))
+                .collect(),
+        );
+        write_frame(stream, &Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("table", Json::str(entry.name.as_str())),
+            ("n", Json::num(ids.len() as f64)),
+            ("d", Json::num(d as f64)),
+            ("vectors", arr),
+        ]).to_string())
+    }
+}
+
+/// Counters + ring-buffer latency percentiles for one table.
+fn table_stats_pairs(entry: &TableEntry) -> Vec<(&'static str, Json)> {
+    let mut pairs = vec![
+        ("requests",
+         Json::num(entry.stats.requests.load(Ordering::Relaxed) as f64)),
+        ("ids_served",
+         Json::num(entry.stats.ids_served.load(Ordering::Relaxed) as f64)),
+        ("batches",
+         Json::num(entry.stats.batches.load(Ordering::Relaxed) as f64)),
+    ];
+    if let Some((p50, p99)) = entry.stats.batch_latency() {
+        pairs.push(("batch_p50_s", Json::num(p50)));
+        pairs.push(("batch_p99_s", Json::num(p99)));
+    }
+    pairs
+}
+
+fn stats_op(
+    stream: &mut TcpStream,
+    registry: &TableRegistry,
+    j: &Json,
+    version: u64,
+) -> Result<(), WireError> {
+    if version >= 2 {
+        if let Some(name) = j.get("table").and_then(|v| v.as_str()) {
+            // one table, flat
+            let entry = match registry.resolve(Some(name)) {
+                Ok(e) => e,
+                Err(e) => return write_frame(stream, &err_frame(&e).to_string()),
+            };
+            let mut pairs = vec![
+                ("ok", Json::Bool(true)),
+                ("table", Json::str(entry.name.as_str())),
+            ];
+            pairs.extend(table_stats_pairs(&entry));
+            return write_frame(stream, &Json::obj(pairs).to_string());
+        }
+    }
+    // aggregate view: v1-compatible flat totals plus a per-table map
+    let entries = registry.list();
+    let (mut requests, mut ids_served, mut batches) = (0u64, 0u64, 0u64);
+    for e in &entries {
+        requests += e.stats.requests.load(Ordering::Relaxed);
+        ids_served += e.stats.ids_served.load(Ordering::Relaxed);
+        batches += e.stats.batches.load(Ordering::Relaxed);
+    }
+    let per_table = Json::Obj(
+        entries
+            .iter()
+            .map(|e| (e.name.clone(),
+                      Json::obj(table_stats_pairs(e))))
+            .collect(),
+    );
+    write_frame(stream, &Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("requests", Json::num(requests as f64)),
+        ("ids_served", Json::num(ids_served as f64)),
+        ("batches", Json::num(batches as f64)),
+        ("tables", per_table),
+    ]).to_string())
+}
+
+fn tables_op(stream: &mut TcpStream, registry: &TableRegistry) -> Result<(), WireError> {
+    let mut pairs = vec![("ok", Json::Bool(true)), ("v", Json::num(VERSION as f64))];
+    let default = registry.default_name();
+    if let Some(d) = &default {
+        pairs.push(("default", Json::str(d.as_str())));
+    }
+    pairs.push(("tables", Json::arr(
+        registry.list().iter().map(|e| e.desc_json()).collect())));
+    write_frame(stream, &Json::obj(pairs).to_string())
+}
+
+fn load_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Result<(), WireError> {
+    let (name, path) = match (
+        j.get("table").and_then(|v| v.as_str()),
+        j.get("path").and_then(|v| v.as_str()),
+    ) {
+        (Some(n), Some(p)) => (n, p),
+        _ => {
+            return write_frame(stream, &err_obj(
+                "bad_request", "load needs table and path", vec![]).to_string())
+        }
+    };
+    match registry.load_dpq(name, std::path::Path::new(path)) {
+        Ok(entry) => {
+            let mut pairs = vec![("ok", Json::Bool(true)),
+                                 ("table", entry.desc_json())];
+            let default = registry.default_name();
+            if let Some(d) = &default {
+                pairs.push(("default", Json::str(d.as_str())));
+            }
+            write_frame(stream, &Json::obj(pairs).to_string())
+        }
+        Err(e) => write_frame(stream, &err_frame(&e).to_string()),
+    }
+}
+
+fn unload_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Result<(), WireError> {
+    let Some(name) = j.get("table").and_then(|v| v.as_str()) else {
+        return write_frame(stream, &err_obj(
+            "bad_request", "unload needs table", vec![]).to_string());
+    };
+    match registry.unload(name) {
+        Ok(()) => write_frame(stream, &Json::obj(vec![
+            ("ok", Json::Bool(true)),
+        ]).to_string()),
+        Err(e) => write_frame(stream, &err_frame(&e).to_string()),
     }
 }
 
 fn handle_conn(
     mut stream: TcpStream,
-    queue: Arc<BatchQueue>,
-    stats: Arc<Stats>,
+    registry: Arc<TableRegistry>,
     stop: Arc<AtomicBool>,
-    vocab: usize,
-    d: usize,
-) -> Result<()> {
+) -> Result<(), WireError> {
     stream.set_nodelay(true)?;
     loop {
         let req = match read_frame(&mut stream) {
             Ok(r) => r,
             Err(_) => return Ok(()), // peer closed
         };
-        stats.requests.fetch_add(1, Ordering::Relaxed);
-        let j = Json::parse(&req).map_err(|e| anyhow!("bad request: {e}"))?;
+        let j = match Json::parse(&req) {
+            Ok(j) => j,
+            Err(e) => {
+                // answer typed and keep the connection: a JSON typo must
+                // not silently drop an otherwise-healthy client
+                write_frame(&mut stream, &err_obj(
+                    "malformed", &format!("bad request: {e}"), vec![])
+                    .to_string())?;
+                continue;
+            }
+        };
+        let version = match frame_version(&j) {
+            Ok(v) => v,
+            Err(e) => {
+                // version negotiation: name the highest version we speak
+                write_frame(&mut stream, &err_frame(&e).to_string())?;
+                continue;
+            }
+        };
         match j.get("op").and_then(|v| v.as_str()) {
             Some("lookup_bin") => {
-                // malformed or out-of-range ids -> rejection sentinel:
-                // u32::MAX is never a valid frame length (an empty id
-                // list legitimately answers with a zero-length payload)
-                let ids = match parse_ids(&j, "lookup_bin")? {
-                    Some(ids) if ids.iter().all(|&i| i < vocab) => ids,
-                    _ => {
-                        stream.write_all(&u32::MAX.to_le_bytes())?;
-                        continue;
-                    }
-                };
-                let n_ids = ids.len();
-                let done = Arc::new((Mutex::new(None), Condvar::new()));
-                queue.push(Pending { ids, done: done.clone() });
-                let (slot, cv) = &*done;
-                let mut guard = slot.lock().unwrap();
-                while guard.is_none() {
-                    guard = cv.wait(guard).unwrap();
-                }
-                let rows = guard.take().unwrap();
-                drop(guard);
-                // rows arrive as a view of the batch's flat buffer:
-                // encode straight to LE bytes, no per-row intermediates
-                let flat = rows.as_slice();
-                if flat.len() != n_ids * d {
-                    // batcher answered with the defensive empty view (a
-                    // co-batched request carried a bug-path invalid id):
-                    // reject explicitly rather than serve a short frame
-                    stream.write_all(&u32::MAX.to_le_bytes())?;
-                    continue;
-                }
-                if flat.len() as u64 * 4 >= u32::MAX as u64 {
-                    // fail loudly instead of wrapping the length prefix
-                    bail!("lookup_bin response too large for a u32 frame");
-                }
-                let mut payload = Vec::with_capacity(flat.len() * 4);
-                for v in flat {
-                    payload.extend_from_slice(&v.to_le_bytes());
-                }
-                stream.write_all(&(payload.len() as u32).to_le_bytes())?;
-                stream.write_all(&payload)?;
+                lookup_op(&mut stream, &registry, &j, version, true)?
             }
             Some("lookup") => {
-                // same validation as lookup_bin: malformed or
-                // out-of-range ids are rejected, never clamped/dropped
-                let ids = match parse_ids(&j, "lookup")? {
-                    Some(ids) if ids.iter().all(|&i| i < vocab) => ids,
-                    _ => {
-                        write_frame(&mut stream, &Json::obj(vec![
-                            ("ok", Json::Bool(false)),
-                            ("error", Json::str(
-                                "ids must be integers in [0, vocab)")),
-                        ]).to_string())?;
-                        continue;
-                    }
-                };
-                let n_ids = ids.len();
-                let done = Arc::new((Mutex::new(None), Condvar::new()));
-                queue.push(Pending { ids, done: done.clone() });
-                let (slot, cv) = &*done;
-                let mut guard = slot.lock().unwrap();
-                while guard.is_none() {
-                    guard = cv.wait(guard).unwrap();
-                }
-                let rows = guard.take().unwrap();
-                drop(guard);
-                if rows.as_slice().len() != n_ids * d {
-                    // defensive empty view from the batcher (see
-                    // run_batch): an explicit error, not ok:true with
-                    // a short vector list
-                    write_frame(&mut stream, &Json::obj(vec![
-                        ("ok", Json::Bool(false)),
-                        ("error", Json::str("batch reconstruction failed")),
-                    ]).to_string())?;
-                    continue;
-                }
-                let arr = Json::arr(
-                    rows.as_slice()
-                        .chunks(d.max(1))
-                        .map(|row| Json::arr(
-                            row.iter().map(|&x| Json::num(x as f64)).collect()))
-                        .collect(),
-                );
-                write_frame(&mut stream, &Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("vectors", arr),
-                ]).to_string())?;
+                lookup_op(&mut stream, &registry, &j, version, false)?
             }
-            Some("stats") => {
-                write_frame(&mut stream, &Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("requests", Json::num(stats.requests.load(Ordering::Relaxed) as f64)),
-                    ("ids_served", Json::num(stats.ids_served.load(Ordering::Relaxed) as f64)),
-                    ("batches", Json::num(stats.batches.load(Ordering::Relaxed) as f64)),
-                ]).to_string())?;
+            Some("stats") => stats_op(&mut stream, &registry, &j, version)?,
+            Some(op @ ("tables" | "load" | "unload")) if version < 2 => {
+                write_frame(&mut stream, &err_obj(
+                    "needs_v2",
+                    &format!("op {op} requires protocol v2 (send \"v\": 2)"),
+                    vec![])
+                    .to_string())?
             }
+            Some("tables") => tables_op(&mut stream, &registry)?,
+            Some("load") => load_op(&mut stream, &registry, &j)?,
+            Some("unload") => unload_op(&mut stream, &registry, &j)?,
             Some("shutdown") => {
                 stop.store(true, Ordering::Relaxed);
                 write_frame(&mut stream, &Json::obj(vec![
@@ -361,155 +430,35 @@ fn handle_conn(
                 ]).to_string())?;
                 return Ok(());
             }
-            other => bail!("unknown op {other:?}"),
+            other => {
+                write_frame(&mut stream, &err_obj(
+                    "unknown_op", &format!("unknown op {other:?}"), vec![])
+                    .to_string())?
+            }
         }
-    }
-}
-
-// ---- framing helpers (also used by the client below) ----
-
-pub fn read_frame(stream: &mut TcpStream) -> Result<String> {
-    let mut len = [0u8; 4];
-    stream.read_exact(&mut len)?;
-    let n = u32::from_le_bytes(len) as usize;
-    if n > 64 << 20 {
-        bail!("frame too large: {n}");
-    }
-    let mut buf = vec![0u8; n];
-    stream.read_exact(&mut buf)?;
-    Ok(String::from_utf8(buf)?)
-}
-
-pub fn write_frame(stream: &mut TcpStream, payload: &str) -> Result<()> {
-    if payload.len() as u64 >= u32::MAX as u64 {
-        // fail loudly instead of wrapping the u32 length prefix
-        bail!("frame too large: {} bytes", payload.len());
-    }
-    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
-    stream.write_all(payload.as_bytes())?;
-    Ok(())
-}
-
-/// Minimal blocking client for tests, benches and examples.
-pub struct Client {
-    stream: TcpStream,
-}
-
-impl Client {
-    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        Ok(Client { stream })
-    }
-
-    pub fn lookup(&mut self, ids: &[usize]) -> Result<Vec<Vec<f32>>> {
-        let req = Json::obj(vec![
-            ("op", Json::str("lookup")),
-            ("ids", Json::arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
-        ]);
-        write_frame(&mut self.stream, &req.to_string())?;
-        let resp = Json::parse(&read_frame(&mut self.stream)?)
-            .map_err(|e| anyhow!("bad response: {e}"))?;
-        if resp.get("ok").and_then(|v| v.as_bool()) != Some(true) {
-            bail!("server error: {:?}", resp.get("error"));
-        }
-        Ok(resp
-            .get("vectors")
-            .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow!("missing vectors"))?
-            .iter()
-            .map(|row| {
-                row.as_arr()
-                    .unwrap_or(&[])
-                    .iter()
-                    .filter_map(|x| x.as_f64().map(|f| f as f32))
-                    .collect()
-            })
-            .collect())
-    }
-
-    /// Binary lookup: same semantics as `lookup`, raw f32-LE response.
-    /// `d` is the embedding width (rows are returned flattened).
-    pub fn lookup_bin(&mut self, ids: &[usize], d: usize) -> Result<Vec<Vec<f32>>> {
-        let req = Json::obj(vec![
-            ("op", Json::str("lookup_bin")),
-            ("ids", Json::arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
-        ]);
-        write_frame(&mut self.stream, &req.to_string())?;
-        let mut len = [0u8; 4];
-        self.stream.read_exact(&mut len)?;
-        let n32 = u32::from_le_bytes(len);
-        if n32 == u32::MAX {
-            bail!("server rejected lookup_bin (id out of range?)");
-        }
-        let n = n32 as usize;
-        let mut buf = vec![0u8; n];
-        self.stream.read_exact(&mut buf)?;
-        if n != ids.len() * d * 4 {
-            bail!("unexpected payload size {n}");
-        }
-        Ok(buf
-            .chunks_exact(d * 4)
-            .map(|row| {
-                row.chunks_exact(4)
-                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                    .collect()
-            })
-            .collect())
-    }
-
-    pub fn stats(&mut self) -> Result<Json> {
-        write_frame(&mut self.stream, &Json::obj(vec![
-            ("op", Json::str("stats")),
-        ]).to_string())?;
-        Json::parse(&read_frame(&mut self.stream)?)
-            .map_err(|e| anyhow!("bad response: {e}"))
-    }
-
-    pub fn shutdown(&mut self) -> Result<()> {
-        write_frame(&mut self.stream, &Json::obj(vec![
-            ("op", Json::str("shutdown")),
-        ]).to_string())?;
-        let _ = read_frame(&mut self.stream);
-        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::{Read as _, Write as _};
     use std::sync::mpsc;
-    use std::time::Instant;
 
-    use crate::dpq::Codebook;
-    use crate::tensor::{TensorF, TensorI};
-    use crate::util::Rng;
+    use crate::backend::DenseTable;
+    use crate::tensor::TensorF;
 
     fn toy_emb(n: usize, k: usize, dg: usize, s: usize) -> CompressedEmbedding {
-        let mut rng = Rng::new(1);
-        let codes = TensorI::new(vec![n, dg],
-                                 (0..n * dg).map(|_| rng.below(k) as i32).collect())
-            .unwrap();
-        let values = TensorF::new(vec![k, dg, s],
-                                  (0..k * dg * s).map(|_| rng.normal()).collect())
-            .unwrap();
-        CompressedEmbedding::new(Codebook::from_codes(&codes, k).unwrap(),
-                                 values, false).unwrap()
+        crate::dpq::toy_embedding(n, k, dg, s, 1)
     }
 
-    #[test]
-    fn batch_queue_drains_up_to_max() {
-        let q = BatchQueue::new(3);
-        for _ in 0..5 {
-            q.push(Pending {
-                ids: vec![0],
-                done: Arc::new((Mutex::new(None), Condvar::new())),
-            });
-        }
-        let b1 = q.pop_batch(Duration::from_millis(1));
-        assert_eq!(b1.len(), 3);
-        let b2 = q.pop_batch(Duration::from_millis(1));
-        assert_eq!(b2.len(), 2);
+    fn spawn_server(server: Arc<EmbeddingServer>)
+        -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+        });
+        (rx.recv().unwrap(), h)
     }
 
     #[test]
@@ -517,94 +466,103 @@ mod tests {
         let emb = toy_emb(50, 8, 4, 3);
         let expect: Vec<Vec<f32>> =
             (0..5).map(|i| emb.reconstruct_row(i)).collect();
-        let server = Arc::new(EmbeddingServer::new(emb, 16));
-        let (tx, rx) = mpsc::channel();
-        let s2 = server.clone();
-        let h = std::thread::spawn(move || {
-            s2.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
-                .unwrap();
-        });
-        let addr = rx.recv().unwrap();
+        let server = Arc::new(EmbeddingServer::single("emb", emb, 16));
+        let (addr, h) = spawn_server(server.clone());
         let mut c = Client::connect(addr).unwrap();
-        let vecs = c.lookup(&[0, 1, 2, 3, 4]).unwrap();
-        for (got, want) in vecs.iter().zip(&expect) {
+        let rows = c.lookup("emb", &[0, 1, 2, 3, 4]).unwrap();
+        assert_eq!((rows.n(), rows.d()), (5, 12));
+        for (got, want) in rows.iter().zip(&expect) {
             for (a, b) in got.iter().zip(want) {
                 assert!((a - b).abs() < 1e-4);
             }
         }
-        let stats = c.stats().unwrap();
+        let stats = c.stats(None).unwrap();
         assert!(stats.get("ids_served").unwrap().as_usize().unwrap() >= 5);
+        // per-table latency shows up once a batch has been served
+        let t = stats.get("tables").unwrap().get("emb").unwrap();
+        assert!(t.get("batch_p50_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(t.get("batch_p99_s").unwrap().as_f64().unwrap() >= 0.0);
         c.shutdown().unwrap();
         h.join().unwrap();
     }
 
     #[test]
-    fn binary_lookup_matches_json_lookup() {
+    fn binary_lookup_matches_json_and_is_self_describing() {
         let emb = toy_emb(30, 8, 4, 2);
         let d = emb.d;
-        let server = Arc::new(EmbeddingServer::new(emb, 16));
-        let (tx, rx) = mpsc::channel();
-        let s2 = server.clone();
-        let h = std::thread::spawn(move || {
-            s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
-        });
-        let addr = rx.recv().unwrap();
+        let server = Arc::new(EmbeddingServer::single("emb", emb, 16));
+        let (addr, h) = spawn_server(server.clone());
         let mut c = Client::connect(addr).unwrap();
         let ids = [3usize, 7, 3, 29];
-        let a = c.lookup(&ids).unwrap();
-        let b = c.lookup_bin(&ids, d).unwrap();
-        for (x, y) in a.iter().zip(&b) {
-            for (p, q) in x.iter().zip(y) {
-                assert!((p - q).abs() < 1e-4);
+        let a = c.lookup("emb", &ids).unwrap();
+        // no d passed: the (n, d) header sizes the result
+        let b = c.lookup_bin("emb", &ids).unwrap();
+        assert_eq!((b.n(), b.d()), (ids.len(), d));
+        assert_eq!(a, b, "json and binary must decode identically");
+        // lookup_into with the right width
+        let mut out = vec![0.0f32; ids.len() * d];
+        assert_eq!(c.lookup_into("emb", &ids, &mut out).unwrap(), d);
+        assert_eq!(out, b.as_slice());
+        // ... and a wrong-width buffer is a typed error that leaves the
+        // connection usable
+        let mut bad = vec![0.0f32; ids.len() * (d - 1)];
+        match c.lookup_into("emb", &ids, &mut bad) {
+            Err(WireError::WidthMismatch { expected, got }) => {
+                assert_eq!((expected, got), (d - 1, d));
             }
+            other => panic!("expected WidthMismatch, got {other:?}"),
         }
-        assert!(c.lookup_bin(&[999], d).is_err());
+        assert_eq!(c.lookup_bin("emb", &ids).unwrap(), b);
+        // out-of-range id on binary: typed rejection, not a bare sentinel
+        match c.lookup_bin("emb", &[999]) {
+            Err(WireError::Rejected { code, .. }) => assert_eq!(code, "bad_ids"),
+            other => panic!("expected bad_ids rejection, got {other:?}"),
+        }
         c.shutdown().unwrap();
         h.join().unwrap();
     }
 
     #[test]
-    fn server_rejects_out_of_range() {
-        let server = Arc::new(EmbeddingServer::new(toy_emb(10, 4, 2, 2), 8));
-        let (tx, rx) = mpsc::channel();
-        let s2 = server.clone();
-        let h = std::thread::spawn(move || {
-            s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
-        });
-        let addr = rx.recv().unwrap();
+    fn server_rejects_out_of_range_and_unknown_table() {
+        let server = Arc::new(EmbeddingServer::single("emb", toy_emb(10, 4, 2, 2), 8));
+        let (addr, h) = spawn_server(server.clone());
         let mut c = Client::connect(addr).unwrap();
-        assert!(c.lookup(&[99]).is_err());
+        match c.lookup("emb", &[99]) {
+            Err(WireError::Rejected { code, .. }) => assert_eq!(code, "bad_ids"),
+            other => panic!("{other:?}"),
+        }
+        match c.lookup("nope", &[1]) {
+            Err(WireError::NoSuchTable(t)) => assert_eq!(t, "nope"),
+            other => panic!("{other:?}"),
+        }
         c.shutdown().unwrap();
         h.join().unwrap();
     }
 
     /// Regression: JSON and binary lookups must BOTH reject out-of-range
     /// ids (never clamp), and the connection must keep serving in-range
-    /// requests afterwards.
+    /// requests afterwards. Also exercises empty id lists and malformed
+    /// ids on raw v1 frames.
     #[test]
     fn out_of_range_rejected_on_both_protocols() {
         let emb = toy_emb(10, 4, 2, 2);
         let d = emb.d;
         let boundary = emb.reconstruct_row(9);
-        let server = Arc::new(EmbeddingServer::new(emb, 8));
-        let (tx, rx) = mpsc::channel();
-        let s2 = server.clone();
-        let h = std::thread::spawn(move || {
-            s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
-        });
-        let addr = rx.recv().unwrap();
+        let server = Arc::new(EmbeddingServer::single("emb", emb, 8));
+        let (addr, h) = spawn_server(server.clone());
         let mut c = Client::connect(addr).unwrap();
         // vocab is 10: id 10 is the first invalid id on both protocols
-        assert!(c.lookup(&[3, 10]).is_err());
-        assert!(c.lookup_bin(&[3, 10], d).is_err());
+        assert!(c.lookup("emb", &[3, 10]).is_err());
+        assert!(c.lookup_bin("emb", &[3, 10]).is_err());
         // a clamping server would serve id 10 as row 9; a rejecting one
         // still serves the real row 9 afterwards
-        let got = c.lookup_bin(&[9], d).unwrap();
-        assert_eq!(got[0], boundary);
+        let got = c.lookup_bin("emb", &[9]).unwrap();
+        assert_eq!(got.row(0), &boundary[..]);
         // empty id lists are valid on both protocols (the binary
-        // rejection sentinel is u32::MAX, NOT a zero-length frame)
-        assert_eq!(c.lookup(&[]).unwrap().len(), 0);
-        assert_eq!(c.lookup_bin(&[], d).unwrap().len(), 0);
+        // rejection sentinel is u32::MAX, NOT a short frame)
+        assert_eq!(c.lookup("emb", &[]).unwrap().n(), 0);
+        let empty = c.lookup_bin("emb", &[]).unwrap();
+        assert_eq!((empty.n(), empty.d()), (0, d));
         // malformed ids (negative, fractional) are rejected too -- a
         // saturating/dropping parse would serve id 0 or a short response
         let mut raw = TcpStream::connect(addr).unwrap();
@@ -619,49 +577,111 @@ mod tests {
         h.join().unwrap();
     }
 
-    /// The sharded batcher must split the flat reconstruction back into
-    /// per-request slices in queue order, matching per-row reconstruction
-    /// exactly for every thread count.
+    /// v1 compatibility: version-less frames resolve to the default
+    /// table, and a v1 `lookup_bin` response keeps the legacy headerless
+    /// layout (bare `u32::MAX` sentinel on rejection).
     #[test]
-    fn run_batch_splits_per_request_and_matches_serial() {
-        let emb = toy_emb(40, 8, 4, 3);
-        let stats = Stats::default();
-        let reqs: Vec<Vec<usize>> =
-            vec![vec![0, 5, 39], vec![], vec![7], vec![39, 0, 0, 12]];
-        for threads in [1usize, 2, 7] {
-            crate::util::pool::with_threads(threads, || {
-                let batch: Vec<Pending> = reqs
-                    .iter()
-                    .map(|ids| Pending {
-                        ids: ids.clone(),
-                        done: Arc::new((Mutex::new(None), Condvar::new())),
-                    })
-                    .collect();
-                run_batch(&emb, &batch, &stats);
-                for (p, ids) in batch.iter().zip(&reqs) {
-                    let rows = p.done.0.lock().unwrap().take().unwrap();
-                    let flat = rows.as_slice();
-                    assert_eq!(flat.len(), ids.len() * emb.d);
-                    for (ri, &id) in ids.iter().enumerate() {
-                        assert_eq!(
-                            &flat[ri * emb.d..(ri + 1) * emb.d],
-                            &emb.reconstruct_row(id)[..],
-                            "threads={threads} req row {ri}"
-                        );
-                    }
-                }
-            });
-        }
-        assert_eq!(
-            stats.ids_served.load(Ordering::Relaxed),
-            3 * reqs.iter().map(|r| r.len()).sum::<usize>() as u64
-        );
+    fn v1_frames_hit_default_table_with_legacy_binary_framing() {
+        let emb = toy_emb(20, 8, 4, 2);
+        let d = emb.d;
+        let expect = emb.reconstruct_row(7);
+        let registry = TableRegistry::new(ServerConfig::default());
+        registry.insert("main", Arc::new(emb)).unwrap();
+        registry
+            .insert("other", Arc::new(DenseTable::new(
+                TensorF::zeros(vec![4, 2])).unwrap()))
+            .unwrap();
+        let server = Arc::new(EmbeddingServer::new(registry));
+        let (addr, h) = spawn_server(server.clone());
+        let mut raw = TcpStream::connect(addr).unwrap();
+        // v1 JSON lookup: no "v", no "table" -> default table "main"
+        write_frame(&mut raw, r#"{"op":"lookup","ids":[7]}"#).unwrap();
+        let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        let row: Vec<f32> = resp.get("vectors").unwrap().as_arr().unwrap()[0]
+            .as_arr().unwrap().iter()
+            .map(|x| x.as_f64().unwrap() as f32).collect();
+        assert_eq!(row, expect);
+        // v1 binary lookup: legacy headerless payload of n*d f32
+        write_frame(&mut raw, r#"{"op":"lookup_bin","ids":[7,7]}"#).unwrap();
+        let mut len4 = [0u8; 4];
+        raw.read_exact(&mut len4).unwrap();
+        let len = u32::from_le_bytes(len4) as usize;
+        assert_eq!(len, 2 * d * 4, "v1 binary frame must have no header");
+        let mut buf = vec![0u8; len];
+        raw.read_exact(&mut buf).unwrap();
+        let vals: Vec<f32> = buf.chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect();
+        assert_eq!(&vals[..d], &expect[..]);
+        // v1 binary rejection: bare sentinel, no trailing error frame
+        write_frame(&mut raw, r#"{"op":"lookup_bin","ids":[999]}"#).unwrap();
+        raw.read_exact(&mut len4).unwrap();
+        assert_eq!(u32::from_le_bytes(len4), u32::MAX);
+        // the connection is still alive and still v1-routable
+        write_frame(&mut raw, r#"{"op":"stats"}"#).unwrap();
+        let stats = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+        assert!(stats.get("ids_served").unwrap().as_usize().unwrap() >= 3);
+        let mut c = Client::connect(addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap();
     }
 
     #[test]
-    fn timing_instant_smoke() {
-        // keep Instant import exercised even if other tests change
-        let t = Instant::now();
-        assert!(t.elapsed() < Duration::from_secs(5));
+    fn version_negotiation_rejects_unknown_versions() {
+        let server = Arc::new(EmbeddingServer::single("emb", toy_emb(10, 4, 2, 2), 8));
+        let (addr, h) = spawn_server(server.clone());
+        let mut raw = TcpStream::connect(addr).unwrap();
+        write_frame(&mut raw, r#"{"v":3,"op":"lookup","ids":[0]}"#).unwrap();
+        let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(resp.get("code").and_then(|v| v.as_str()),
+                   Some("unsupported_version"));
+        assert_eq!(resp.get("max_v").and_then(|v| v.as_usize()), Some(2));
+        // v2 admin ops are refused on v1 frames, typed
+        write_frame(&mut raw, r#"{"op":"tables"}"#).unwrap();
+        let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+        assert_eq!(resp.get("code").and_then(|v| v.as_str()), Some("needs_v2"));
+        // garbage JSON answers typed and keeps the connection
+        let garbage = "not json at all";
+        raw.write_all(&(garbage.len() as u32).to_le_bytes()).unwrap();
+        raw.write_all(garbage.as_bytes()).unwrap();
+        let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+        assert_eq!(resp.get("code").and_then(|v| v.as_str()), Some("malformed"));
+        let mut c = Client::connect(addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn hot_load_unload_over_the_wire() {
+        let emb = toy_emb(24, 8, 4, 2);
+        let row5 = emb.reconstruct_row(5);
+        let path = std::env::temp_dir().join("dpq_server_hot_load.dpq");
+        emb.save(&path).unwrap();
+        let server = Arc::new(EmbeddingServer::single(
+            "base", toy_emb(10, 4, 2, 2), 8));
+        let (addr, h) = spawn_server(server.clone());
+        let mut c = Client::connect(addr).unwrap();
+        assert_eq!(c.tables().unwrap().len(), 1);
+        let desc = c.admin_load("hot", path.to_str().unwrap()).unwrap();
+        assert_eq!((desc.kind.as_str(), desc.vocab, desc.d), ("dpq", 24, 8));
+        assert!(!desc.is_default, "first table stays default");
+        let got = c.lookup_bin("hot", &[5]).unwrap();
+        assert_eq!(got.row(0), &row5[..]);
+        // duplicate load is typed
+        match c.admin_load("hot", path.to_str().unwrap()) {
+            Err(WireError::TableExists(t)) => assert_eq!(t, "hot"),
+            other => panic!("{other:?}"),
+        }
+        let names: Vec<String> =
+            c.tables().unwrap().into_iter().map(|t| t.name).collect();
+        assert_eq!(names, vec!["base".to_string(), "hot".to_string()]);
+        c.admin_unload("hot").unwrap();
+        match c.lookup_bin("hot", &[5]) {
+            Err(WireError::NoSuchTable(t)) => assert_eq!(t, "hot"),
+            other => panic!("{other:?}"),
+        }
+        c.shutdown().unwrap();
+        h.join().unwrap();
     }
 }

@@ -1,0 +1,605 @@
+//! Wire protocol: versioned, table-routed frames plus the typed [`Client`].
+//!
+//! Every request is a length-prefixed JSON frame (u32 LE byte length +
+//! JSON object). A request carries its protocol version in `"v"`; a frame
+//! with no `"v"` field is protocol **v1** (the original single-table
+//! protocol) and is routed to the server's default table. See the
+//! [`server`](crate::server) module docs for the full op catalogue and
+//! framing of each response.
+//!
+//! Binary lookup responses are **self-describing** under v2: the frame
+//! payload starts with a `(n, d)` u32 LE header, so no client ever has to
+//! guess the embedding width (the v1 `lookup_bin(ids, d)` API wart). A
+//! v1 `lookup_bin` request still receives the legacy headerless payload.
+//!
+//! Errors are typed end to end: server rejections carry a machine
+//! `"code"` alongside the human `"error"` string, and the client maps
+//! them onto [`WireError`] variants (a width mismatch surfaces as
+//! [`WireError::WidthMismatch`], never a payload-size guess).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use crate::jsonx::Json;
+
+/// Highest protocol version this build speaks.
+pub const VERSION: u64 = 2;
+
+/// Hard cap on any single frame (requests and JSON responses).
+pub(crate) const MAX_FRAME: usize = 64 << 20;
+
+/// Typed wire/protocol error. Implements `std::error::Error`, so it
+/// converts into `anyhow::Error` at call sites that don't match on it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// Socket-level failure (connect, read, write, peer hangup).
+    Io(String),
+    /// A frame that violates the protocol (bad JSON, ragged rows, short
+    /// binary header, oversized frame).
+    Malformed(String),
+    /// The server does not speak the requested protocol version.
+    UnsupportedVersion { max: u64 },
+    /// The named table (or the default, when none was named) is not
+    /// loaded on the server.
+    NoSuchTable(String),
+    /// `load` would overwrite an already-registered table.
+    TableExists(String),
+    /// The caller's buffer implies a different embedding width than the
+    /// `(n, d)` header the server sent.
+    WidthMismatch { expected: usize, got: usize },
+    /// Any other server-side rejection; `code` is the machine-readable
+    /// discriminator from the wire (e.g. `"bad_ids"`, `"load_failed"`).
+    Rejected { code: String, message: String },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(m) => write!(f, "io error: {m}"),
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            WireError::UnsupportedVersion { max } => {
+                write!(f, "unsupported protocol version (server max v{max})")
+            }
+            WireError::NoSuchTable(t) => write!(f, "no such table {t:?}"),
+            WireError::TableExists(t) => write!(f, "table {t:?} already loaded"),
+            WireError::WidthMismatch { expected, got } => write!(
+                f,
+                "embedding width mismatch: caller buffer implies d={expected}, \
+                 server table has d={got}"
+            ),
+            WireError::Rejected { code, message } => {
+                write!(f, "server rejected request [{code}]: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e.to_string())
+    }
+}
+
+impl WireError {
+    /// Machine code used on the wire for this error.
+    pub(crate) fn code(&self) -> &str {
+        match self {
+            WireError::Io(_) => "io",
+            WireError::Malformed(_) => "malformed",
+            WireError::UnsupportedVersion { .. } => "unsupported_version",
+            WireError::NoSuchTable(_) => "no_such_table",
+            WireError::TableExists(_) => "table_exists",
+            WireError::WidthMismatch { .. } => "width_mismatch",
+            WireError::Rejected { code, .. } => code,
+        }
+    }
+
+    /// Reconstruct a typed error from a server `{"ok": false, ...}` frame.
+    pub fn from_response(j: &Json) -> WireError {
+        let msg = j
+            .get("error")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unknown server error")
+            .to_string();
+        let named = |key: &str| {
+            j.get(key).and_then(|v| v.as_str()).unwrap_or("?").to_string()
+        };
+        match j.get("code").and_then(|v| v.as_str()) {
+            Some("no_such_table") => WireError::NoSuchTable(named("table")),
+            Some("table_exists") => WireError::TableExists(named("table")),
+            Some("unsupported_version") => WireError::UnsupportedVersion {
+                max: j.get("max_v").and_then(|v| v.as_usize()).unwrap_or(1) as u64,
+            },
+            Some(code) => WireError::Rejected { code: code.into(), message: msg },
+            None => WireError::Rejected { code: "error".into(), message: msg },
+        }
+    }
+}
+
+/// Build a `{"ok": false}` response carrying a machine code; `extra`
+/// appends error-specific fields (e.g. the offending table name).
+pub(crate) fn err_obj(code: &str, msg: &str, extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::str(code)),
+        ("error", Json::str(msg)),
+    ];
+    pairs.extend(extra);
+    Json::obj(pairs)
+}
+
+/// The error frame for a typed [`WireError`], with its extra fields.
+pub(crate) fn err_frame(e: &WireError) -> Json {
+    let extra = match e {
+        WireError::UnsupportedVersion { max } => {
+            vec![("max_v", Json::num(*max as f64))]
+        }
+        WireError::NoSuchTable(t) | WireError::TableExists(t) => {
+            vec![("table", Json::str(t.as_str()))]
+        }
+        _ => Vec::new(),
+    };
+    err_obj(e.code(), &e.to_string(), extra)
+}
+
+/// Resolve a request frame's protocol version: no `"v"` field means v1.
+pub(crate) fn frame_version(j: &Json) -> Result<u64, WireError> {
+    match j.get("v") {
+        None => Ok(1),
+        Some(v) => match v.as_f64() {
+            Some(x) if x == 1.0 => Ok(1),
+            Some(x) if x == 2.0 => Ok(2),
+            _ => Err(WireError::UnsupportedVersion { max: VERSION }),
+        },
+    }
+}
+
+/// Strictly parse the request's `ids` array: every element must be a
+/// non-negative integer JSON number. Anything else (negative, fractional,
+/// string, null) returns `Ok(None)` so the caller can reject -- never
+/// drop or saturate-clamp a malformed id (`-1 as usize` would silently
+/// become id 0). A missing or non-array `ids` is an error.
+pub(crate) fn parse_ids(j: &Json, op: &str) -> Result<Option<Vec<usize>>, WireError> {
+    let arr = j
+        .get("ids")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| WireError::Malformed(format!("{op} without ids")))?;
+    Ok(arr
+        .iter()
+        .map(|x| match x.as_f64() {
+            Some(n) if n >= 0.0
+                && n.fract() == 0.0
+                && n <= usize::MAX as f64 => Some(n as usize),
+            _ => None,
+        })
+        .collect())
+}
+
+// ---- framing helpers (shared by server and client) ----
+
+pub fn read_frame(stream: &mut TcpStream) -> Result<String, WireError> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(WireError::Malformed(format!("frame too large: {n}")));
+    }
+    let mut buf = vec![0u8; n];
+    stream.read_exact(&mut buf)?;
+    String::from_utf8(buf)
+        .map_err(|e| WireError::Malformed(format!("frame not utf-8: {e}")))
+}
+
+pub fn write_frame(stream: &mut TcpStream, payload: &str) -> Result<(), WireError> {
+    if payload.len() as u64 >= u32::MAX as u64 {
+        // fail loudly instead of wrapping the u32 length prefix
+        return Err(WireError::Malformed(format!(
+            "frame too large: {} bytes", payload.len())));
+    }
+    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    Ok(())
+}
+
+/// Server side: encode a binary lookup response. v2 frames are
+/// self-describing (`u32 n | u32 d` header before the f32 rows); v1
+/// frames keep the legacy headerless payload.
+pub(crate) fn write_bin_rows(
+    stream: &mut TcpStream,
+    version: u64,
+    n: usize,
+    d: usize,
+    flat: &[f32],
+) -> Result<(), WireError> {
+    debug_assert_eq!(flat.len(), n * d);
+    let header = if version >= 2 { 8u64 } else { 0 };
+    let bytes = header + flat.len() as u64 * 4;
+    // Enforce the SAME bound the client's read side enforces (MAX_FRAME,
+    // not just the u32 prefix limit): a response the peer refuses to
+    // read would leave megabytes unread on the socket and desync every
+    // later frame on the connection.
+    if bytes > MAX_FRAME as u64 || n as u64 > u32::MAX as u64 || d as u64 > u32::MAX as u64 {
+        return Err(WireError::Malformed(format!(
+            "lookup_bin response of {bytes} bytes exceeds the frame cap \
+             ({MAX_FRAME})")));
+    }
+    let mut payload = Vec::with_capacity(bytes as usize);
+    if version >= 2 {
+        payload.extend_from_slice(&(n as u32).to_le_bytes());
+        payload.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for v in flat {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+    stream.write_all(&payload)?;
+    Ok(())
+}
+
+/// Server side: reject a binary lookup. The `u32::MAX` sentinel can never
+/// be a real frame length (an empty id list legitimately answers with a
+/// zero-length v1 payload / 8-byte v2 header). Under v2 the sentinel is
+/// followed by a JSON error frame so the rejection is self-describing;
+/// v1 keeps the bare sentinel.
+pub(crate) fn write_bin_reject(
+    stream: &mut TcpStream,
+    version: u64,
+    e: &WireError,
+) -> Result<(), WireError> {
+    stream.write_all(&u32::MAX.to_le_bytes())?;
+    if version >= 2 {
+        write_frame(stream, &err_frame(e).to_string())?;
+    }
+    Ok(())
+}
+
+/// A lookup result: `n` rows of width `d`, flat row-major storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rows {
+    n: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+impl Rows {
+    pub(crate) fn new(n: usize, d: usize, data: Vec<f32>) -> Rows {
+        debug_assert_eq!(data.len(), n * d);
+        Rows { n, d, data }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.d.max(1))
+    }
+
+    pub fn into_vecs(self) -> Vec<Vec<f32>> {
+        let d = self.d.max(1);
+        self.data.chunks_exact(d).map(|r| r.to_vec()).collect()
+    }
+}
+
+/// One served table as reported by the `tables` op.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableDesc {
+    pub name: String,
+    pub kind: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub storage_bits: usize,
+    pub compression_ratio: f64,
+    pub shards: usize,
+    pub is_default: bool,
+}
+
+impl TableDesc {
+    pub(crate) fn from_json(j: &Json, default_name: Option<&str>) -> Result<TableDesc, WireError> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| WireError::Malformed("table desc without name".into()))?
+            .to_string();
+        let get = |k: &str| j.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+        Ok(TableDesc {
+            is_default: default_name == Some(name.as_str()),
+            kind: j.get("kind").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+            vocab: get("vocab"),
+            d: get("d"),
+            storage_bits: get("storage_bits"),
+            compression_ratio: j
+                .get("compression_ratio")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            shards: get("shards").max(1),
+            name,
+        })
+    }
+}
+
+/// Blocking protocol-v2 client used by tests, benches, examples and the
+/// CLI. Every lookup names its table; `tables()` and the `admin_*` ops
+/// manage the server's registry hot.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream })
+    }
+
+    /// Send one JSON request frame and parse the JSON response; a
+    /// `{"ok": false}` response becomes a typed [`WireError`].
+    fn request(&mut self, req: Json) -> Result<Json, WireError> {
+        write_frame(&mut self.stream, &req.to_string())?;
+        let j = Json::parse(&read_frame(&mut self.stream)?)
+            .map_err(WireError::Malformed)?;
+        if j.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            Ok(j)
+        } else {
+            Err(WireError::from_response(&j))
+        }
+    }
+
+    fn lookup_req(op: &str, table: &str, ids: &[usize]) -> Json {
+        Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str(op)),
+            ("table", Json::str(table)),
+            ("ids", Json::arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
+        ])
+    }
+
+    /// JSON lookup against a named table.
+    pub fn lookup(&mut self, table: &str, ids: &[usize]) -> Result<Rows, WireError> {
+        let j = self.request(Self::lookup_req("lookup", table, ids))?;
+        let vecs = j
+            .get("vectors")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| WireError::Malformed("response without vectors".into()))?;
+        let n = vecs.len();
+        let d = j
+            .get("d")
+            .and_then(|v| v.as_usize())
+            .or_else(|| vecs.first().and_then(|r| r.as_arr()).map(|r| r.len()))
+            .unwrap_or(0);
+        let mut data = Vec::with_capacity(n * d);
+        for row in vecs {
+            let row = row
+                .as_arr()
+                .ok_or_else(|| WireError::Malformed("vectors row not an array".into()))?;
+            if row.len() != d {
+                return Err(WireError::Malformed(format!(
+                    "ragged response: row of {} values, d={d}", row.len())));
+            }
+            for x in row {
+                data.push(x.as_f64().ok_or_else(|| {
+                    WireError::Malformed("non-numeric vector entry".into())
+                })? as f32);
+            }
+        }
+        Ok(Rows::new(n, d, data))
+    }
+
+    /// Binary lookup: same semantics as [`lookup`](Self::lookup), raw
+    /// f32-LE rows. The response's `(n, d)` header sizes the result -- the
+    /// caller never passes (or guesses) the embedding width.
+    pub fn lookup_bin(&mut self, table: &str, ids: &[usize]) -> Result<Rows, WireError> {
+        write_frame(&mut self.stream,
+                    &Self::lookup_req("lookup_bin", table, ids).to_string())?;
+        self.read_bin_response()
+    }
+
+    /// Binary lookup straight into a caller buffer of `ids.len() * d`
+    /// floats. Returns the table's `d`. If the buffer implies a different
+    /// width than the response header, the error is a typed
+    /// [`WireError::WidthMismatch`] -- and the payload is still drained,
+    /// so the connection stays usable.
+    pub fn lookup_into(
+        &mut self,
+        table: &str,
+        ids: &[usize],
+        out: &mut [f32],
+    ) -> Result<usize, WireError> {
+        write_frame(&mut self.stream,
+                    &Self::lookup_req("lookup_bin", table, ids).to_string())?;
+        let rows = self.read_bin_response()?;
+        if rows.n() != ids.len() {
+            return Err(WireError::Malformed(format!(
+                "server answered {} rows for {} ids", rows.n(), ids.len())));
+        }
+        if out.len() != rows.n() * rows.d() {
+            let expected =
+                if ids.is_empty() { 0 } else { out.len() / ids.len() };
+            return Err(WireError::WidthMismatch { expected, got: rows.d() });
+        }
+        out.copy_from_slice(rows.as_slice());
+        Ok(rows.d())
+    }
+
+    fn read_bin_response(&mut self) -> Result<Rows, WireError> {
+        let mut len4 = [0u8; 4];
+        self.stream.read_exact(&mut len4)?;
+        let len32 = u32::from_le_bytes(len4);
+        if len32 == u32::MAX {
+            // v2 rejection sentinel: a JSON error frame follows
+            let j = Json::parse(&read_frame(&mut self.stream)?)
+                .map_err(WireError::Malformed)?;
+            return Err(WireError::from_response(&j));
+        }
+        let len = len32 as usize;
+        if len > MAX_FRAME {
+            return Err(WireError::Malformed(format!("frame too large: {len}")));
+        }
+        if len < 8 {
+            return Err(WireError::Malformed(format!(
+                "binary frame of {len} bytes is shorter than the (n, d) header")));
+        }
+        let mut buf = vec![0u8; len];
+        self.stream.read_exact(&mut buf)?;
+        let n = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+        let d = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        if len != 8 + n * d * 4 {
+            return Err(WireError::Malformed(format!(
+                "binary frame of {len} bytes does not match header n={n} d={d}")));
+        }
+        let data = buf[8..]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Rows::new(n, d, data))
+    }
+
+    /// List the served tables (name, kind, shape, storage, default flag).
+    pub fn tables(&mut self) -> Result<Vec<TableDesc>, WireError> {
+        let j = self.request(Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("tables")),
+        ]))?;
+        let default = j.get("default").and_then(|v| v.as_str()).map(str::to_string);
+        j.get("tables")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| WireError::Malformed("response without tables".into()))?
+            .iter()
+            .map(|t| TableDesc::from_json(t, default.as_deref()))
+            .collect()
+    }
+
+    /// Per-table serving stats; `table` narrows to one table's flat
+    /// object, `None` returns the aggregate plus a per-table map.
+    pub fn stats(&mut self, table: Option<&str>) -> Result<Json, WireError> {
+        let mut pairs = vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("stats")),
+        ];
+        if let Some(t) = table {
+            pairs.push(("table", Json::str(t)));
+        }
+        self.request(Json::obj(pairs))
+    }
+
+    /// Hot-load a `.dpq` artifact from a server-side path as a new table.
+    pub fn admin_load(&mut self, table: &str, path: &str) -> Result<TableDesc, WireError> {
+        let j = self.request(Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("load")),
+            ("table", Json::str(table)),
+            ("path", Json::str(path)),
+        ]))?;
+        let desc = j
+            .get("table")
+            .ok_or_else(|| WireError::Malformed("load response without table".into()))?;
+        TableDesc::from_json(desc, j.get("default").and_then(|v| v.as_str()))
+    }
+
+    /// Hot-unload a table; its in-flight lookups fail typed, later
+    /// lookups get [`WireError::NoSuchTable`].
+    pub fn admin_unload(&mut self, table: &str) -> Result<(), WireError> {
+        self.request(Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("unload")),
+            ("table", Json::str(table)),
+        ]))?;
+        Ok(())
+    }
+
+    pub fn shutdown(&mut self) -> Result<(), WireError> {
+        write_frame(&mut self.stream, &Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("shutdown")),
+        ]).to_string())?;
+        let _ = read_frame(&mut self.stream);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_version_resolution() {
+        let v1 = Json::parse(r#"{"op":"lookup","ids":[]}"#).unwrap();
+        assert_eq!(frame_version(&v1).unwrap(), 1);
+        let v1x = Json::parse(r#"{"v":1,"op":"lookup"}"#).unwrap();
+        assert_eq!(frame_version(&v1x).unwrap(), 1);
+        let v2 = Json::parse(r#"{"v":2,"op":"lookup"}"#).unwrap();
+        assert_eq!(frame_version(&v2).unwrap(), 2);
+        for bad in [r#"{"v":3}"#, r#"{"v":0}"#, r#"{"v":1.5}"#, r#"{"v":"2"}"#] {
+            let j = Json::parse(bad).unwrap();
+            assert_eq!(
+                frame_version(&j).unwrap_err(),
+                WireError::UnsupportedVersion { max: VERSION },
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_ids_strict() {
+        let ok = Json::parse(r#"{"ids":[0,3,12]}"#).unwrap();
+        assert_eq!(parse_ids(&ok, "lookup").unwrap(), Some(vec![0, 3, 12]));
+        for bad in [r#"{"ids":[1,-2]}"#, r#"{"ids":[1.5]}"#, r#"{"ids":["3"]}"#,
+                    r#"{"ids":[null]}"#] {
+            let j = Json::parse(bad).unwrap();
+            assert_eq!(parse_ids(&j, "lookup").unwrap(), None, "{bad}");
+        }
+        let missing = Json::parse(r#"{"op":"lookup"}"#).unwrap();
+        assert!(parse_ids(&missing, "lookup").is_err());
+    }
+
+    #[test]
+    fn wire_error_roundtrips_through_frames() {
+        for e in [
+            WireError::NoSuchTable("emb".into()),
+            WireError::TableExists("emb".into()),
+            WireError::UnsupportedVersion { max: VERSION },
+            WireError::Rejected { code: "bad_ids".into(),
+                                  message: "ids must be integers".into() },
+        ] {
+            let frame = err_frame(&e);
+            assert_eq!(frame.get("ok").and_then(|v| v.as_bool()), Some(false));
+            let back = WireError::from_response(&frame);
+            match (&e, &back) {
+                (WireError::Rejected { code: a, .. },
+                 WireError::Rejected { code: b, .. }) => assert_eq!(a, b),
+                _ => assert_eq!(e, back),
+            }
+        }
+    }
+
+    #[test]
+    fn rows_accessors() {
+        let r = Rows::new(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(r.n(), 3);
+        assert_eq!(r.d(), 2);
+        assert_eq!(r.row(1), &[3.0, 4.0]);
+        assert_eq!(r.iter().count(), 3);
+        assert_eq!(r.clone().into_vecs()[2], vec![5.0, 6.0]);
+        let empty = Rows::new(0, 0, vec![]);
+        assert!(empty.is_empty());
+        assert_eq!(empty.into_vecs().len(), 0);
+    }
+}

@@ -1,0 +1,501 @@
+//! [`TableRegistry`]: named [`EmbeddingBackend`] tables with hot
+//! `load`/`unload`/`list` admin ops, per-table [`Stats`], and per-table
+//! batcher shards.
+//!
+//! # Sharding
+//!
+//! Every table owns `shards_per_table` batcher shards; shard `s` of a
+//! table with vocab `n` serves the id range `[s*n/S, (s+1)*n/S)`. A
+//! request's ids are split by range, each sub-list queued on its shard,
+//! and the handler stitches the shard answers back in id order -- so two
+//! hot tables (or two halves of one huge vocab) never serialize behind
+//! one batcher thread. Each shard reconstructs its micro-batch through
+//! the shared worker pool (`util::pool`); row gathers are bit-identical
+//! for every shard count and thread count, so sharding is invisible in
+//! the served bytes. With one shard per table (the default) the answer
+//! is a zero-copy view of the batch buffer, exactly the PR-1 fast path.
+//!
+//! # Lifecycle
+//!
+//! `insert`/`load_dpq` spawn the table's shard threads immediately;
+//! `unload` closes the shard queues (failing any queued lookups, typed)
+//! and joins the threads. Dropping the registry shuts everything down.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::backend::{self, EmbeddingBackend};
+use crate::dpq::CompressedEmbedding;
+use crate::jsonx::Json;
+use crate::server::batcher::{run_batch, Answer, BatchQueue, Pending};
+use crate::server::protocol::WireError;
+use crate::server::stats::Stats;
+
+/// Serving knobs shared by every table in a registry.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Max pending lookups drained into one micro-batch per shard.
+    pub max_batch: usize,
+    /// Batcher shards per table; the id space is range-partitioned
+    /// across them. 1 keeps the single-queue zero-copy fast path.
+    pub shards_per_table: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_batch: 64, shards_per_table: 1 }
+    }
+}
+
+/// One served table: backend + stats + its batcher shards.
+pub struct TableEntry {
+    pub name: String,
+    pub backend: Arc<dyn EmbeddingBackend>,
+    pub stats: Arc<Stats>,
+    shards: Vec<Arc<BatchQueue>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl TableEntry {
+    fn spawn(
+        name: &str,
+        backend: Arc<dyn EmbeddingBackend>,
+        cfg: &ServerConfig,
+        stop: &Arc<AtomicBool>,
+    ) -> Arc<TableEntry> {
+        let stats = Arc::new(Stats::default());
+        let shards: Vec<Arc<BatchQueue>> = (0..cfg.shards_per_table.max(1))
+            .map(|_| Arc::new(BatchQueue::new(cfg.max_batch)))
+            .collect();
+        let handles = shards
+            .iter()
+            .map(|shard| {
+                let backend = backend.clone();
+                let shard = shard.clone();
+                let stats = stats.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) && !shard.is_closed() {
+                        let batch = shard.pop_batch(Duration::from_millis(20));
+                        if batch.is_empty() {
+                            continue;
+                        }
+                        run_batch(&*backend, &batch, &stats);
+                    }
+                    // close() fails anything still queued; calling it from
+                    // the exiting thread covers the global-stop path too
+                    shard.close();
+                })
+            })
+            .collect();
+        Arc::new(TableEntry {
+            name: name.to_string(),
+            backend,
+            stats,
+            shards,
+            handles: Mutex::new(handles),
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard owning `id` under range partitioning.
+    fn shard_of(&self, id: usize, vocab: usize) -> usize {
+        debug_assert!(id < vocab);
+        ((id as u128 * self.shards.len() as u128) / vocab as u128) as usize
+    }
+
+    /// Route one validated id list through this table's shards and
+    /// assemble the answer in id order. `None` means the batcher failed
+    /// the request (table unloading / server bug path); callers turn it
+    /// into a typed error. Ids MUST already be validated `< vocab`.
+    pub(crate) fn lookup(&self, ids: &[usize]) -> Option<Answer> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let d = self.backend.d();
+        if ids.is_empty() {
+            return Some(Answer::Owned(Vec::new()));
+        }
+        let n_shards = self.shards.len();
+        if n_shards == 1 {
+            let (p, done) = Pending::new(ids.to_vec());
+            self.shards[0].push(p);
+            let rows = crate::server::batcher::wait_rows(&done);
+            if rows.as_slice().len() != ids.len() * d {
+                return None;
+            }
+            return Some(Answer::View(rows));
+        }
+        let vocab = self.backend.vocab();
+        // split ids by owning shard, remembering each id's original slot
+        let mut positions: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        let mut sub_ids: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        for (pos, &id) in ids.iter().enumerate() {
+            let s = self.shard_of(id, vocab);
+            positions[s].push(pos);
+            sub_ids[s].push(id);
+        }
+        // all ids on one shard: keep the zero-copy fast path (positions
+        // are in request order, so the shard's view IS the answer)
+        if let Some(only) = (0..n_shards).find(|&s| sub_ids[s].len() == ids.len()) {
+            let (p, done) = Pending::new(std::mem::take(&mut sub_ids[only]));
+            self.shards[only].push(p);
+            let rows = crate::server::batcher::wait_rows(&done);
+            if rows.as_slice().len() != ids.len() * d {
+                return None;
+            }
+            return Some(Answer::View(rows));
+        }
+        // enqueue every non-empty sub-lookup BEFORE waiting on any, so
+        // the shards reconstruct concurrently
+        let mut waits = Vec::new();
+        for s in 0..n_shards {
+            if sub_ids[s].is_empty() {
+                continue;
+            }
+            let (p, done) = Pending::new(std::mem::take(&mut sub_ids[s]));
+            let n_sub = p.ids.len();
+            self.shards[s].push(p);
+            waits.push((s, n_sub, done));
+        }
+        let mut flat = vec![0.0f32; ids.len() * d];
+        let mut failed = false;
+        for (s, n_sub, done) in waits {
+            let rows = crate::server::batcher::wait_rows(&done);
+            let got = rows.as_slice();
+            if got.len() != n_sub * d {
+                failed = true;
+                continue; // keep draining the other shards' slots
+            }
+            for (k, &pos) in positions[s].iter().enumerate() {
+                flat[pos * d..(pos + 1) * d]
+                    .copy_from_slice(&got[k * d..(k + 1) * d]);
+            }
+        }
+        if failed { None } else { Some(Answer::Owned(flat)) }
+    }
+
+    /// Close this table's shards and join their threads (idempotent).
+    fn stop(&self) {
+        for shard in &self.shards {
+            shard.close();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// JSON description used by the `tables` / `load` responses.
+    pub fn desc_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            ("kind", Json::str(self.backend.kind())),
+            ("vocab", Json::num(self.backend.vocab() as f64)),
+            ("d", Json::num(self.backend.d() as f64)),
+            ("storage_bits", Json::num(self.backend.storage_bits() as f64)),
+            ("compression_ratio",
+             Json::num(backend::compression_ratio(&*self.backend))),
+            ("shards", Json::num(self.shards.len() as f64)),
+        ])
+    }
+}
+
+/// Named tables behind one server: lookup routing, default-table
+/// resolution for v1 frames, and hot admin ops.
+pub struct TableRegistry {
+    cfg: ServerConfig,
+    tables: RwLock<BTreeMap<String, Arc<TableEntry>>>,
+    default: Mutex<Option<String>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl TableRegistry {
+    pub fn new(cfg: ServerConfig) -> Self {
+        TableRegistry {
+            cfg,
+            tables: RwLock::new(BTreeMap::new()),
+            default: Mutex::new(None),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// The flag the accept loop and every batcher shard watch.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Register `backend` as table `name` and start its batcher shards.
+    /// The first inserted table becomes the default (v1 frames route to
+    /// it) until [`set_default`](Self::set_default) says otherwise.
+    pub fn insert(
+        &self,
+        name: &str,
+        backend: Arc<dyn EmbeddingBackend>,
+    ) -> Result<Arc<TableEntry>, WireError> {
+        if name.is_empty() || name.contains('=') {
+            return Err(WireError::Rejected {
+                code: "bad_table_name".into(),
+                message: format!("invalid table name {name:?}"),
+            });
+        }
+        // A zero-width or zero-vocab table could never serve a lookup,
+        // and d == 0 would additionally make the batcher's failure view
+        // (an empty slice) indistinguishable from a successful answer --
+        // the typed-failure guarantee depends on d >= 1.
+        if backend.d() == 0 || backend.vocab() == 0 {
+            return Err(WireError::Rejected {
+                code: "bad_table".into(),
+                message: format!(
+                    "table {name:?} has degenerate shape [{}, {}]",
+                    backend.vocab(), backend.d()),
+            });
+        }
+        if self.stop.load(Ordering::Relaxed) {
+            return Err(WireError::Rejected {
+                code: "shutting_down".into(),
+                message: "registry is shutting down".into(),
+            });
+        }
+        // Default election happens INSIDE the tables write lock (same
+        // lock order as `unload`: tables, then default) -- electing it
+        // after releasing the lock could race an `unload` of this very
+        // table and leave `default` naming a table that no longer
+        // exists, permanently breaking v1 routing.
+        let entry = {
+            let mut map = self.tables.write().unwrap();
+            if map.contains_key(name) {
+                return Err(WireError::TableExists(name.to_string()));
+            }
+            let entry = TableEntry::spawn(name, backend, &self.cfg, &self.stop);
+            map.insert(name.to_string(), entry.clone());
+            let mut def = self.default.lock().unwrap();
+            if def.is_none() {
+                *def = Some(name.to_string());
+            }
+            entry
+        };
+        Ok(entry)
+    }
+
+    /// Hot-load a `.dpq` artifact as a new table (the `load` admin op).
+    pub fn load_dpq(&self, name: &str, path: &Path) -> Result<Arc<TableEntry>, WireError> {
+        let emb = CompressedEmbedding::load(path).map_err(|e| WireError::Rejected {
+            code: "load_failed".into(),
+            message: format!("load {path:?}: {e}"),
+        })?;
+        self.insert(name, Arc::new(emb))
+    }
+
+    /// Drop a table: later lookups get `no_such_table`; lookups already
+    /// queued on its shards are failed, typed, not stranded. If the
+    /// default table is unloaded the first remaining table (by name)
+    /// becomes the default.
+    pub fn unload(&self, name: &str) -> Result<(), WireError> {
+        let entry = {
+            let mut map = self.tables.write().unwrap();
+            let entry = map
+                .remove(name)
+                .ok_or_else(|| WireError::NoSuchTable(name.to_string()))?;
+            let mut def = self.default.lock().unwrap();
+            if def.as_deref() == Some(name) {
+                *def = map.keys().next().cloned();
+            }
+            entry
+        };
+        entry.stop();
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<TableEntry>> {
+        self.tables.read().unwrap().get(name).cloned()
+    }
+
+    /// Route a request's optional table name: `None` means the default
+    /// table (v1 frames and table-less v2 frames).
+    pub fn resolve(&self, name: Option<&str>) -> Result<Arc<TableEntry>, WireError> {
+        match name {
+            Some(n) => self
+                .get(n)
+                .ok_or_else(|| WireError::NoSuchTable(n.to_string())),
+            None => {
+                let def = self.default.lock().unwrap().clone();
+                let def = def.ok_or_else(|| {
+                    WireError::NoSuchTable("(default: no tables loaded)".into())
+                })?;
+                self.get(&def)
+                    .ok_or_else(|| WireError::NoSuchTable(def))
+            }
+        }
+    }
+
+    pub fn default_name(&self) -> Option<String> {
+        self.default.lock().unwrap().clone()
+    }
+
+    pub fn set_default(&self, name: &str) -> Result<(), WireError> {
+        // existence check and assignment under the tables lock (same
+        // order as insert/unload) so a racing unload cannot leave the
+        // default naming a just-removed table
+        let map = self.tables.read().unwrap();
+        if !map.contains_key(name) {
+            return Err(WireError::NoSuchTable(name.to_string()));
+        }
+        *self.default.lock().unwrap() = Some(name.to_string());
+        Ok(())
+    }
+
+    /// All tables in name order.
+    pub fn list(&self) -> Vec<Arc<TableEntry>> {
+        self.tables.read().unwrap().values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tables.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stop every table's shards and join their threads (idempotent).
+    /// Leaves the table map readable so late `stats` frames still answer.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let entries = self.list();
+        for e in entries {
+            e.stop();
+        }
+    }
+}
+
+impl Drop for TableRegistry {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::DenseTable;
+    use crate::tensor::TensorF;
+    use crate::util::Rng;
+
+    fn dense(n: usize, d: usize, seed: u64) -> (Arc<DenseTable>, TensorF) {
+        let mut rng = Rng::new(seed);
+        let t = TensorF {
+            shape: vec![n, d],
+            data: (0..n * d).map(|_| rng.normal()).collect(),
+        };
+        (Arc::new(DenseTable::new(t.clone()).unwrap()), t)
+    }
+
+    fn cfg(shards: usize) -> ServerConfig {
+        ServerConfig { max_batch: 8, shards_per_table: shards }
+    }
+
+    #[test]
+    fn insert_resolve_default_unload() {
+        let reg = TableRegistry::new(cfg(1));
+        assert!(reg.resolve(None).is_err());
+        let (a, _) = dense(10, 4, 1);
+        let (b, _) = dense(20, 6, 2);
+        reg.insert("a", a).unwrap();
+        reg.insert("b", b).unwrap();
+        assert_eq!(
+            reg.insert("a", dense(5, 2, 3).0).unwrap_err(),
+            WireError::TableExists("a".into())
+        );
+        assert_eq!(reg.default_name().as_deref(), Some("a"));
+        assert_eq!(reg.resolve(None).unwrap().name, "a");
+        assert_eq!(reg.resolve(Some("b")).unwrap().name, "b");
+        assert_eq!(
+            reg.resolve(Some("zzz")).unwrap_err(),
+            WireError::NoSuchTable("zzz".into())
+        );
+        reg.set_default("b").unwrap();
+        assert_eq!(reg.resolve(None).unwrap().name, "b");
+        // unloading the default falls back to the first remaining table
+        reg.unload("b").unwrap();
+        assert_eq!(reg.default_name().as_deref(), Some("a"));
+        assert_eq!(reg.unload("b").unwrap_err(),
+                   WireError::NoSuchTable("b".into()));
+        assert_eq!(reg.list().len(), 1);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_table_names_and_degenerate_shapes() {
+        let reg = TableRegistry::new(cfg(1));
+        assert!(reg.insert("", dense(4, 2, 1).0).is_err());
+        assert!(reg.insert("a=b", dense(4, 2, 1).0).is_err());
+        // d == 0 would make the batcher failure view indistinguishable
+        // from a real (empty) answer; vocab == 0 can never serve an id
+        assert!(reg.insert("w0", dense(4, 0, 1).0).is_err());
+        assert!(reg.insert("v0", dense(0, 4, 1).0).is_err());
+        assert!(reg.is_empty());
+    }
+
+    /// Shard routing must be invisible in the answer: for every shard
+    /// count the assembled rows are bit-identical to a direct backend
+    /// gather, whichever shards the ids land on.
+    #[test]
+    fn sharded_lookup_matches_direct_gather() {
+        let (backend, table) = dense(50, 6, 7);
+        let patterns: Vec<Vec<usize>> = vec![
+            vec![0, 49, 25, 1, 48, 2, 47],     // straddles every shard
+            vec![3, 4, 5],                     // single-shard fast path
+            (0..50).rev().collect(),           // all ids, reversed
+            vec![49, 49, 0, 0, 24],            // duplicates across shards
+            vec![],
+        ];
+        for shards in [1usize, 2, 3, 7] {
+            let reg = TableRegistry::new(cfg(shards));
+            let entry = reg.insert("t", backend.clone()).unwrap();
+            assert_eq!(entry.shard_count(), shards);
+            for ids in &patterns {
+                let ans = entry.lookup(ids).unwrap();
+                let got = ans.as_slice();
+                assert_eq!(got.len(), ids.len() * 6);
+                for (r, &id) in ids.iter().enumerate() {
+                    assert_eq!(&got[r * 6..(r + 1) * 6], table.row(id),
+                               "shards={shards} id={id}");
+                }
+            }
+            reg.shutdown();
+        }
+    }
+
+    #[test]
+    fn lookup_after_unload_fails_typed_not_hung() {
+        let reg = TableRegistry::new(cfg(2));
+        let (backend, _) = dense(10, 4, 9);
+        let entry = reg.insert("t", backend).unwrap();
+        reg.unload("t").unwrap();
+        // the entry handle still exists, but its shards are closed: the
+        // lookup must return None promptly instead of blocking forever
+        assert!(entry.lookup(&[1, 2, 9]).is_none());
+    }
+
+    #[test]
+    fn shard_of_covers_range_evenly() {
+        let reg = TableRegistry::new(cfg(4));
+        let (backend, _) = dense(100, 2, 11);
+        let entry = reg.insert("t", backend).unwrap();
+        let mut counts = [0usize; 4];
+        for id in 0..100 {
+            let s = entry.shard_of(id, 100);
+            assert!(s < 4);
+            counts[s] += 1;
+        }
+        assert_eq!(counts, [25, 25, 25, 25]);
+        reg.shutdown();
+    }
+}

@@ -1,0 +1,104 @@
+//! Per-table serving statistics: lock-free counters plus a fixed-size
+//! ring of recent batch latencies (p50/p99 exposed via the `stats` op and
+//! recorded to `BENCH_server.json` by `benches/bench_server.rs`).
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Mutex;
+
+/// Ring capacity: percentiles reflect the most recent batches only, so a
+/// long-lived server reports current latency, not its lifetime average.
+pub const LATENCY_RING: usize = 512;
+
+/// One table's serving statistics. Counters are relaxed atomics (exact
+/// totals, no ordering requirements); the latency ring takes a short
+/// mutex per drained batch -- batches are the unit of batcher work, so
+/// the lock is far off the per-id hot path.
+#[derive(Default)]
+pub struct Stats {
+    /// Lookup requests routed to this table (JSON + binary).
+    pub requests: AtomicU64,
+    /// Ids reconstructed for this table.
+    pub ids_served: AtomicU64,
+    /// Micro-batches drained by this table's batcher shards.
+    pub batches: AtomicU64,
+    ring: Mutex<LatRing>,
+}
+
+#[derive(Default)]
+struct LatRing {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl Stats {
+    /// Record one drained batch's wall-clock reconstruction time.
+    pub fn record_batch_secs(&self, seconds: f64) {
+        let mut r = self.ring.lock().unwrap();
+        if r.buf.len() < LATENCY_RING {
+            r.buf.push(seconds);
+        } else {
+            let at = r.next;
+            r.buf[at] = seconds;
+        }
+        r.next = (r.next + 1) % LATENCY_RING;
+    }
+
+    /// `(p50, p99)` over the latency ring, `None` before the first batch.
+    pub fn batch_latency(&self) -> Option<(f64, f64)> {
+        let v = {
+            let r = self.ring.lock().unwrap();
+            if r.buf.is_empty() {
+                return None;
+            }
+            r.buf.clone()
+        };
+        let mut v = v;
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| v[((p / 100.0) * (v.len() - 1) as f64).round() as usize];
+        Some((pct(50.0), pct(99.0)))
+    }
+
+    /// Number of latency samples currently in the ring (capped at
+    /// [`LATENCY_RING`]).
+    pub fn latency_samples(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_empty_is_none() {
+        assert!(Stats::default().batch_latency().is_none());
+    }
+
+    #[test]
+    fn latency_percentiles_ordered() {
+        let s = Stats::default();
+        for i in 1..=100 {
+            s.record_batch_secs(i as f64 / 1000.0);
+        }
+        let (p50, p99) = s.batch_latency().unwrap();
+        assert!(p50 >= 0.045 && p50 <= 0.055, "p50={p50}");
+        assert!(p99 >= 0.098, "p99={p99}");
+        assert!(p50 <= p99);
+        assert_eq!(s.latency_samples(), 100);
+    }
+
+    #[test]
+    fn ring_wraps_and_forgets_old_samples() {
+        let s = Stats::default();
+        // fill with slow batches, then overwrite the whole ring with fast
+        for _ in 0..LATENCY_RING {
+            s.record_batch_secs(1.0);
+        }
+        for _ in 0..LATENCY_RING {
+            s.record_batch_secs(0.001);
+        }
+        assert_eq!(s.latency_samples(), LATENCY_RING);
+        let (p50, p99) = s.batch_latency().unwrap();
+        assert!(p50 < 0.01 && p99 < 0.01, "ring kept stale samples: {p50} {p99}");
+    }
+}

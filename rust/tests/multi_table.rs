@@ -1,0 +1,170 @@
+//! Multi-table serving acceptance test (no artifacts needed): one server
+//! hosting a DPQ table and a LowRank table with different embedding
+//! widths, routed by table name over protocol v2.
+//!
+//! Verifies, for DPQ_THREADS in {1, 2, 7} (via the process-wide pool
+//! override -- batcher threads resolve the worker count themselves, so a
+//! scoped thread-local pin can't reach them):
+//!   * served binary rows are BIT-equal to a direct
+//!     `EmbeddingBackend::reconstruct_rows_into` on both tables,
+//!   * a v1 (version-less) frame still resolves to the default table,
+//!   * the self-describing (n, d) binary header reports each table's
+//!     width and `lookup_into` mismatches are typed errors,
+//!   * hot load/unload admin ops work mid-serving,
+//!   * per-table stats carry batch-latency percentiles.
+//!
+//! Everything lives in ONE #[test] because `pool::set_threads` is
+//! process-wide: a sibling test running concurrently would race it.
+
+use std::sync::{mpsc, Arc};
+
+use dpq_embed::backend::EmbeddingBackend;
+use dpq_embed::dpq::{toy_embedding, CompressedEmbedding};
+use dpq_embed::quant::LowRank;
+use dpq_embed::server::{
+    read_frame, write_frame, Client, EmbeddingServer, ServerConfig,
+    TableRegistry, WireError,
+};
+use dpq_embed::jsonx::Json;
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::{pool, Rng};
+
+fn direct_rows(b: &dyn EmbeddingBackend, ids: &[usize]) -> Vec<f32> {
+    let mut out = vec![0.0f32; ids.len() * b.d()];
+    b.reconstruct_rows_into(ids, &mut out);
+    out
+}
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn multi_table_v2_routing_bit_exact_across_thread_counts() {
+    // two backends with DIFFERENT widths: DPQ d = 4*3 = 12, LowRank d = 20
+    let dpq = toy_embedding(300, 16, 4, 3, 5);
+    assert_eq!(dpq.d, 12);
+    let mut rng = Rng::new(17);
+    let table = TensorF {
+        shape: vec![120, 20],
+        data: (0..120 * 20).map(|_| rng.normal()).collect(),
+    };
+    let lr = Arc::new(LowRank::fit(&table, 5));
+    assert_eq!((lr.vocab(), lr.d()), (120, 20));
+    let dpq_backend: Arc<CompressedEmbedding> = Arc::new(dpq.clone());
+
+    // 2 shards per table so the id-space partitioning is exercised
+    let registry = TableRegistry::new(ServerConfig {
+        max_batch: 32,
+        shards_per_table: 2,
+    });
+    registry.insert("dpq", dpq_backend.clone()).unwrap();
+    registry.insert("lr", lr.clone()).unwrap();
+    assert_eq!(registry.default_name().as_deref(), Some("dpq"));
+
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (tx, rx) = mpsc::channel();
+    let s2 = server.clone();
+    let h = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut c = Client::connect(addr).unwrap();
+
+    // ---- bit-equality across worker-pool sizes, both tables ----
+    // 16k ids x d=12 is ~196k ops: past the pool's serial threshold, so
+    // 2- and 7-thread settings genuinely take the multi-worker path.
+    let mut baseline: Option<(Vec<f32>, Vec<f32>)> = None;
+    for threads in [1usize, 2, 7] {
+        pool::set_threads(threads);
+        let mut idrng = Rng::new(99); // same id sequence for every setting
+        let dpq_ids: Vec<usize> = (0..16384).map(|_| idrng.below(300)).collect();
+        let lr_ids: Vec<usize> = (0..512).map(|_| idrng.below(120)).collect();
+
+        let got_dpq = c.lookup_bin("dpq", &dpq_ids).unwrap();
+        assert_eq!((got_dpq.n(), got_dpq.d()), (dpq_ids.len(), 12));
+        assert!(
+            bits_equal(got_dpq.as_slice(), &direct_rows(&*dpq_backend, &dpq_ids)),
+            "dpq rows differ from direct gather at {threads} threads"
+        );
+
+        let got_lr = c.lookup_bin("lr", &lr_ids).unwrap();
+        assert_eq!((got_lr.n(), got_lr.d()), (lr_ids.len(), 20));
+        assert!(
+            bits_equal(got_lr.as_slice(), &direct_rows(&*lr, &lr_ids)),
+            "lr rows differ from direct gather at {threads} threads"
+        );
+
+        match &baseline {
+            None => baseline = Some((got_dpq.as_slice().to_vec(),
+                                     got_lr.as_slice().to_vec())),
+            Some((bd, bl)) => {
+                assert!(bits_equal(got_dpq.as_slice(), bd),
+                        "dpq bits changed between thread counts");
+                assert!(bits_equal(got_lr.as_slice(), bl),
+                        "lr bits changed between thread counts");
+            }
+        }
+    }
+    pool::set_threads(0); // restore env/auto resolution (DPQ_THREADS in tier-1)
+
+    // ---- the header kills the d-guessing wart: width mismatch is typed ----
+    let ids = [1usize, 7, 299];
+    let mut right = vec![0.0f32; ids.len() * 12];
+    assert_eq!(c.lookup_into("dpq", &ids, &mut right).unwrap(), 12);
+    assert!(bits_equal(&right, &direct_rows(&*dpq_backend, &ids)));
+    let mut wrong = vec![0.0f32; ids.len() * 20]; // lr width against dpq table
+    match c.lookup_into("dpq", &ids, &mut wrong) {
+        Err(WireError::WidthMismatch { expected: 20, got: 12 }) => {}
+        other => panic!("expected typed width mismatch, got {other:?}"),
+    }
+    // the connection survived the mismatch
+    assert_eq!(c.lookup_bin("dpq", &ids).unwrap().n(), 3);
+
+    // ---- v1 (version-less) frame resolves to the default table ----
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    write_frame(&mut raw, r#"{"op":"lookup","ids":[0,42]}"#).unwrap();
+    let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let vecs = resp.get("vectors").unwrap().as_arr().unwrap();
+    let want = direct_rows(&*dpq_backend, &[0, 42]);
+    for (r, row) in vecs.iter().enumerate() {
+        let row: Vec<f32> = row.as_arr().unwrap().iter()
+            .map(|x| x.as_f64().unwrap() as f32).collect();
+        assert!(bits_equal(&row, &want[r * 12..(r + 1) * 12]),
+                "v1 frame did not serve the default (dpq) table");
+    }
+
+    // ---- tables / stats / hot admin ops ----
+    let descs = c.tables().unwrap();
+    let names: Vec<&str> = descs.iter().map(|t| t.name.as_str()).collect();
+    assert_eq!(names, ["dpq", "lr"]);
+    let dpq_desc = &descs[0];
+    assert!(dpq_desc.is_default);
+    assert_eq!((dpq_desc.kind.as_str(), dpq_desc.vocab, dpq_desc.d, dpq_desc.shards),
+               ("dpq", 300, 12, 2));
+    assert_eq!((descs[1].kind.as_str(), descs[1].d), ("low_rank", 20));
+
+    let st = c.stats(Some("lr")).unwrap();
+    assert!(st.get("requests").unwrap().as_usize().unwrap() >= 3);
+    assert!(st.get("batch_p50_s").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(st.get("batch_p99_s").unwrap().as_f64().unwrap()
+            >= st.get("batch_p50_s").unwrap().as_f64().unwrap());
+
+    let hot_path = std::env::temp_dir().join("dpq_multi_table_hot.dpq");
+    let hot = toy_embedding(40, 8, 2, 4, 31);
+    hot.save(&hot_path).unwrap();
+    let desc = c.admin_load("hot", hot_path.to_str().unwrap()).unwrap();
+    assert_eq!((desc.kind.as_str(), desc.vocab, desc.d), ("dpq", 40, 8));
+    let got = c.lookup_bin("hot", &[0, 39]).unwrap();
+    assert!(bits_equal(got.as_slice(), &direct_rows(&hot, &[0, 39])));
+    c.admin_unload("hot").unwrap();
+    match c.lookup_bin("hot", &[0]) {
+        Err(WireError::NoSuchTable(t)) => assert_eq!(t, "hot"),
+        other => panic!("{other:?}"),
+    }
+
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}

@@ -159,7 +159,7 @@ fn server_batcher_bit_exact_across_thread_counts() {
     let expect: Vec<Vec<f32>> = (0..500).map(|i| emb.reconstruct_row(i)).collect();
     for t in THREADS {
         set_threads(t);
-        let server = Arc::new(EmbeddingServer::new(emb.clone(), 32));
+        let server = Arc::new(EmbeddingServer::single("default", emb.clone(), 32));
         let (tx, rx) = mpsc::channel();
         let s2 = server.clone();
         let h = std::thread::spawn(move || {
@@ -171,9 +171,10 @@ fn server_batcher_bit_exact_across_thread_counts() {
         for _ in 0..2 {
             let ids: Vec<usize> =
                 (0..3584).map(|_| idrng.below(500)).collect();
-            let got = c.lookup_bin(&ids, d).unwrap();
+            let got = c.lookup_bin("default", &ids).unwrap();
+            assert_eq!(got.d(), d);
             for (row, &id) in got.iter().zip(&ids) {
-                assert_eq!(row, &expect[id], "threads={t} id={id}");
+                assert_eq!(row, &expect[id][..], "threads={t} id={id}");
             }
         }
         c.shutdown().unwrap();

@@ -50,7 +50,7 @@ fn serve_compressed_embedding_end_to_end() {
     ce.save(&tmp).unwrap();
     let loaded = dpq_embed::dpq::CompressedEmbedding::load(&tmp).unwrap();
 
-    let server = Arc::new(EmbeddingServer::new(loaded, 32));
+    let server = Arc::new(EmbeddingServer::single("ptb", loaded, 32));
     let (tx, rx) = mpsc::channel();
     let s2 = server.clone();
     let h = std::thread::spawn(move || {
@@ -63,17 +63,16 @@ fn serve_compressed_embedding_end_to_end() {
         (0..3).map(|_| Client::connect(addr).unwrap()).collect();
     for (ci, c) in clients.iter_mut().enumerate() {
         let ids: Vec<usize> = (0..16).map(|i| (ci * 37 + i * 13) % 2000).collect();
-        let vecs = c.lookup(&ids).unwrap();
-        assert_eq!(vecs.len(), 16);
-        for (row, &id) in vecs.iter().zip(&ids) {
-            assert_eq!(row.len(), 128);
+        let rows = c.lookup("ptb", &ids).unwrap();
+        assert_eq!((rows.n(), rows.d()), (16, 128));
+        for (row, &id) in rows.iter().zip(&ids) {
             for (a, b) in row.iter().zip(xla_table.row(id)) {
                 assert!((a - b).abs() < 1e-4,
                         "client {ci} id {id}: {a} vs {b}");
             }
         }
     }
-    let stats = clients[0].stats().unwrap();
+    let stats = clients[0].stats(None).unwrap();
     assert!(stats.get("ids_served").unwrap().as_usize().unwrap() >= 48);
     clients[0].shutdown().unwrap();
     h.join().unwrap();

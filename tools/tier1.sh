@@ -1,10 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verification (see ROADMAP.md): release build, full test suite,
-# and a compile of every bench target so bench code cannot bit-rot.
+# a compile of every bench target and every example so neither can
+# bit-rot, and a second pass over the server integration tests with a
+# pinned 2-thread worker pool so the multi-table serving path is
+# exercised off the default thread heuristic.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
+cargo build --release --examples
+DPQ_THREADS=2 cargo test -q --test multi_table --test server_integration
 cargo bench --no-run
 echo "tier1: OK"

@@ -2,7 +2,9 @@
 //! four tables behind four different backends -- a DPQ codebook, an
 //! 8-bit scalar-quant table, a low-rank factorization, and the dense
 //! baseline -- routed by table name over protocol v2, with hot
-//! load/unload admin ops and per-table latency stats.
+//! load/unload admin ops, cross-table fan-out in one frame, a live
+//! registry snapshot (and offline restore), and per-table latency
+//! stats.
 //!
 //!     cargo run --release --example multi_table_server
 
@@ -35,6 +37,7 @@ fn main() -> Result<()> {
     let registry = TableRegistry::new(ServerConfig {
         max_batch: 64,
         shards_per_table: 2, // id space split across two batcher shards
+        ..ServerConfig::default()
     });
     registry.insert("dpq", Arc::new(dpq))?;
     registry.insert("sq8", Arc::new(sq))?;
@@ -79,6 +82,31 @@ fn main() -> Result<()> {
     c.admin_unload("hot")?;
     println!("  unloaded; lookup now fails: {}",
              c.lookup_bin("hot", &[7]).unwrap_err());
+
+    // cross-table fan-out: a recommender-style "user + item + context"
+    // lookup spanning three tables in ONE round trip
+    let sections = c.lookup_fanout(&[
+        ("dpq", &[11, 22, 33][..]),
+        ("sq8", &[5][..]),
+        ("lowrank", &[0, 1][..]),
+    ])?;
+    println!("\nfan-out: 3 tables, 1 frame ->");
+    for (name, rows) in ["dpq", "sq8", "lowrank"].iter().zip(&sections) {
+        println!("  {name:<8} {} rows x d={}", rows.n(), rows.d());
+    }
+
+    // snapshot the whole registry live, then restore it offline
+    let snap_dir = std::env::temp_dir().join("multi_table_demo_snapshot");
+    let manifest = c.admin_snapshot(snap_dir.to_str().unwrap())?;
+    println!("\nsnapshot -> {manifest}");
+    let restored = dpq_embed::server::TableRegistry::restore(
+        std::path::Path::new(&manifest), None)?;
+    println!(
+        "restored registry: {} tables, default {:?} (bit-identical rows; \
+         `repro serve --restore {manifest}` does the same)",
+        restored.len(), restored.default_name().unwrap_or_default()
+    );
+    restored.shutdown();
 
     // per-table serving stats with batch-latency percentiles
     let mut load_rng = Rng::new(7);

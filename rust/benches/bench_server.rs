@@ -127,8 +127,103 @@ fn main() {
     let registry = TableRegistry::new(ServerConfig {
         max_batch: 64,
         shards_per_table: 2,
+        ..ServerConfig::default()
     });
     registry.insert("emb", Arc::new(ce.clone())).unwrap();
     drive(Arc::new(EmbeddingServer::new(registry)),
           &[("emb", n)], 4, true, "bin_4c_2shards");
+
+    // cross-table fan-out: one frame spanning two tables vs two
+    // sequential binary lookups on the same connection
+    section("fan-out: 2 tables in one frame vs 2 sequential lookups");
+    let registry = TableRegistry::new(ServerConfig::default());
+    registry.insert("emb", Arc::new(ce.clone())).unwrap();
+    registry
+        .insert("sq", Arc::new(ScalarQuant::fit(&sq_table, 8)))
+        .unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (tx, rx) = mpsc::channel();
+    let s2 = server.clone();
+    let h = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut c = Client::connect(addr).unwrap();
+    let iters = 2000usize;
+    let mut rng = Rng::new(11);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let a: Vec<usize> = (0..16).map(|_| rng.below(n)).collect();
+        let b: Vec<usize> = (0..16).map(|_| rng.below(4000)).collect();
+        c.lookup_bin("emb", &a).unwrap();
+        c.lookup_bin("sq", &b).unwrap();
+    }
+    let seq = t0.elapsed().as_secs_f64() / iters as f64;
+    let mut rng = Rng::new(11);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let a: Vec<usize> = (0..16).map(|_| rng.below(n)).collect();
+        let b: Vec<usize> = (0..16).map(|_| rng.below(4000)).collect();
+        c.lookup_fanout(&[("emb", &a[..]), ("sq", &b[..])]).unwrap();
+    }
+    let fan = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "sequential {:.1}us vs fan-out {:.1}us per 2-table round \
+         ({:.2}x)",
+        seq * 1e6, fan * 1e6, seq / fan
+    );
+    bench::record("sequential_2tables", seq, 0.0, iters);
+    bench::record("fanout_2tables", fan, 0.0, iters);
+    c.shutdown().unwrap();
+    h.join().unwrap();
+
+    // eviction pressure: rotating hot loads under a memory budget that
+    // holds ~3.5 of the 6 tables, so (almost) every load evicts the LRU
+    section("eviction pressure: rotating table loads under --mem-budget");
+    let small: Vec<_> = (0..6u64)
+        .map(|i| toy_embedding(2000, 16, 8, 4, 100 + i))
+        .collect();
+    let per_bytes = (small[0].storage_bits() as u64).div_ceil(8);
+    let registry = TableRegistry::new(ServerConfig {
+        max_batch: 64,
+        shards_per_table: 1,
+        mem_budget_bytes: Some(3 * per_bytes + per_bytes / 2),
+    });
+    registry.insert("t0", Arc::new(small[0].clone())).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (tx, rx) = mpsc::channel();
+    let s2 = server.clone();
+    let h = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut c = Client::connect(addr).unwrap();
+    let cycles = 200usize;
+    let t0 = Instant::now();
+    for cyc in 0..cycles {
+        let i = 1 + (cyc % 5);
+        let name = format!("t{i}");
+        // (re)load the table if a previous cycle's budget pass evicted it
+        if server.registry().get(&name).is_none() {
+            server
+                .registry()
+                .insert(&name, Arc::new(small[i].clone()))
+                .unwrap();
+        }
+        let ids: Vec<usize> = (0..16).map(|_| rng.below(2000)).collect();
+        c.lookup_bin(&name, &ids).unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let reg = server.registry();
+    println!(
+        "{cycles} load+lookup cycles in {:.2}s ({:.0}/s): {} evictions, \
+         {} tables / {} bytes resident (budget {})",
+        wall, cycles as f64 / wall, reg.eviction_count(), reg.len(),
+        reg.resident_bytes(), 3 * per_bytes + per_bytes / 2
+    );
+    bench::record("eviction_cycle", wall / cycles as f64, 0.0, cycles);
+    bench::record("evictions_per_cycle",
+                  reg.eviction_count() as f64 / cycles as f64, 0.0, cycles);
+    c.shutdown().unwrap();
+    h.join().unwrap();
 }

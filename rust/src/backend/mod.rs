@@ -21,6 +21,8 @@
 //! (a row's bits never depend on which chunk it landed in), so a served
 //! vector is bit-identical for every `DPQ_THREADS` setting.
 
+use std::path::Path;
+
 use anyhow::{bail, Result};
 
 use crate::tensor::TensorF;
@@ -47,6 +49,136 @@ pub trait EmbeddingBackend: Send + Sync {
 
     /// Total inference-time storage in bits (codes + side tables).
     fn storage_bits(&self) -> usize;
+
+    /// Serialize this backend to `path` in its kind's binary artifact
+    /// format, such that [`load_backend`] with the same
+    /// [`kind`](Self::kind) reconstructs a backend serving bit-identical
+    /// rows. Registry snapshots (`TableRegistry::snapshot`) call this for
+    /// every resident table. The default refuses, so external impls that
+    /// never snapshot don't have to invent a format.
+    fn save_artifact(&self, path: &Path) -> Result<()> {
+        let _ = path;
+        bail!(
+            "backend kind {:?} does not support artifact serialization",
+            self.kind()
+        )
+    }
+}
+
+/// Deserialize a backend artifact previously written by
+/// [`EmbeddingBackend::save_artifact`], dispatching on the `kind` tag a
+/// snapshot manifest recorded for it. The returned backend serves rows
+/// bit-identical to the snapshotted one.
+pub fn load_backend(kind: &str, path: &Path) -> Result<std::sync::Arc<dyn EmbeddingBackend>> {
+    Ok(match kind {
+        "dpq" => std::sync::Arc::new(crate::dpq::CompressedEmbedding::load(path)?),
+        "dense" => std::sync::Arc::new(DenseTable::load(path)?),
+        "scalar_quant" => std::sync::Arc::new(crate::quant::ScalarQuant::load(path)?),
+        "low_rank" => std::sync::Arc::new(crate::quant::LowRank::load(path)?),
+        other => bail!("unknown backend kind {other:?} (not one of dpq, dense, scalar_quant, low_rank)"),
+    })
+}
+
+/// Shared helpers for the per-kind binary artifact formats: a 4-byte
+/// magic, a fixed number of u64 LE header dims, then a raw payload whose
+/// exact size is a function of the dims. `open` verifies magic, header,
+/// and total file size BEFORE any allocation is sized from the header, so
+/// corrupt or truncated artifacts fail loudly up front (the same
+/// discipline as `CompressedEmbedding::load`).
+pub(crate) mod artifact_io {
+    use std::io::{BufReader, BufWriter, Read, Write};
+    use std::path::Path;
+
+    use anyhow::{bail, Context, Result};
+
+    /// Create `path` and write `magic` + the u64 LE header `dims`.
+    pub fn create(path: &Path, magic: &[u8; 4], dims: &[u64])
+                  -> Result<BufWriter<std::fs::File>> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {path:?}"))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(magic)?;
+        for v in dims {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(w)
+    }
+
+    /// Open `path`, check `magic`, read `n_dims` header values, and verify
+    /// the file size matches `payload_bytes(dims)` exactly (`None` from
+    /// the closure means the dims overflow). Strict equality also rejects
+    /// trailing garbage.
+    pub fn open(
+        path: &Path,
+        magic: &[u8; 4],
+        n_dims: usize,
+        payload_bytes: impl FnOnce(&[u64]) -> Option<u128>,
+    ) -> Result<(BufReader<std::fs::File>, Vec<u64>)> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?;
+        let actual = f.metadata().map(|m| m.len()).unwrap_or(u64::MAX) as u128;
+        let mut r = BufReader::new(f);
+        let mut got = [0u8; 4];
+        r.read_exact(&mut got)?;
+        if &got != magic {
+            bail!("bad magic {got:?} in {path:?} (want {magic:?})");
+        }
+        let mut dims = vec![0u64; n_dims];
+        let mut b = [0u8; 8];
+        for v in dims.iter_mut() {
+            r.read_exact(&mut b)?;
+            *v = u64::from_le_bytes(b);
+        }
+        let payload = payload_bytes(&dims).ok_or_else(|| {
+            anyhow::anyhow!("corrupt header {dims:?} in {path:?}: size overflows")
+        })?;
+        let expect = 4 + 8 * n_dims as u128 + payload;
+        if actual != expect {
+            bail!(
+                "corrupt or truncated file {path:?}: {actual} bytes, \
+                 header declares {expect}"
+            );
+        }
+        Ok((r, dims))
+    }
+
+    /// Write a f32 slice as LE bytes.
+    pub fn write_f32s(w: &mut impl Write, vals: &[f32]) -> Result<()> {
+        for v in vals {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Read `n` LE f32 values.
+    pub fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; n];
+        let mut b = [0u8; 4];
+        for v in out.iter_mut() {
+            r.read_exact(&mut b)?;
+            *v = f32::from_le_bytes(b);
+        }
+        Ok(out)
+    }
+
+    /// Write a u16 slice as LE bytes.
+    pub fn write_u16s(w: &mut impl Write, vals: &[u16]) -> Result<()> {
+        for v in vals {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Read `n` LE u16 values.
+    pub fn read_u16s(r: &mut impl Read, n: usize) -> Result<Vec<u16>> {
+        let mut out = vec![0u16; n];
+        let mut b = [0u8; 2];
+        for v in out.iter_mut() {
+            r.read_exact(&mut b)?;
+            *v = u16::from_le_bytes(b);
+        }
+        Ok(out)
+    }
 }
 
 /// Compression ratio vs an f32 table of the same `[vocab, d]` shape.
@@ -92,6 +224,7 @@ pub struct DenseTable {
 }
 
 impl DenseTable {
+    /// Wrap an `[n, d]` tensor (rejects other ranks).
     pub fn new(table: TensorF) -> Result<Self> {
         if table.shape.len() != 2 {
             bail!("DenseTable expects [n, d], got {:?}", table.shape);
@@ -99,8 +232,30 @@ impl DenseTable {
         Ok(DenseTable { table })
     }
 
+    /// The underlying `[n, d]` table.
     pub fn table(&self) -> &TensorF {
         &self.table
+    }
+
+    /// Serialize as a `DPQD` artifact: magic, `n`/`d` header, raw f32 LE
+    /// rows. Bit-exact roundtrip through [`DenseTable::load`].
+    pub fn save(&self, path: &Path) -> Result<()> {
+        use std::io::Write as _;
+        let (n, d) = (self.table.shape[0], self.table.shape[1]);
+        let mut w = artifact_io::create(path, b"DPQD", &[n as u64, d as u64])?;
+        artifact_io::write_f32s(&mut w, &self.table.data)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a `DPQD` artifact written by [`DenseTable::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let (mut r, dims) = artifact_io::open(path, b"DPQD", 2, |d| {
+            (d[0] as u128).checked_mul(d[1] as u128)?.checked_mul(4)
+        })?;
+        let (n, d) = (dims[0] as usize, dims[1] as usize);
+        let data = artifact_io::read_f32s(&mut r, n * d)?;
+        DenseTable::new(TensorF { shape: vec![n, d], data })
     }
 }
 
@@ -126,6 +281,10 @@ impl EmbeddingBackend for DenseTable {
 
     fn storage_bits(&self) -> usize {
         32 * self.table.numel()
+    }
+
+    fn save_artifact(&self, path: &Path) -> Result<()> {
+        self.save(path)
     }
 }
 
@@ -179,6 +338,35 @@ mod tests {
                 "threads={threads}"
             );
         }
+    }
+
+    #[test]
+    fn dense_table_artifact_roundtrip_bit_exact() {
+        let t = toy_table(30, 5, 9);
+        let dt = DenseTable::new(t.clone()).unwrap();
+        let dir = std::env::temp_dir().join("dpq_backend_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dense.dense");
+        dt.save_artifact(&path).unwrap();
+        let back = load_backend("dense", &path).unwrap();
+        assert_eq!((back.kind(), back.vocab(), back.d()), ("dense", 30, 5));
+        assert_eq!(back.storage_bits(), dt.storage_bits());
+        let ids: Vec<usize> = vec![0, 29, 7, 7];
+        let mut a = vec![0.0f32; ids.len() * 5];
+        let mut b = vec![0.0f32; ids.len() * 5];
+        dt.reconstruct_rows_into(&ids, &mut a);
+        back.reconstruct_rows_into(&ids, &mut b);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // corrupt magic and truncation both fail loudly
+        let bytes = std::fs::read(&path).unwrap();
+        let bad = dir.join("bad.dense");
+        std::fs::write(&bad, &bytes[..bytes.len() - 2]).unwrap();
+        assert!(DenseTable::load(&bad).is_err());
+        let mut flipped = bytes.clone();
+        flipped[0] = b'X';
+        std::fs::write(&bad, &flipped).unwrap();
+        assert!(load_backend("dense", &bad).is_err());
+        assert!(load_backend("nope", &path).is_err());
     }
 
     #[test]

@@ -13,12 +13,17 @@ use anyhow::{anyhow, bail, Result};
 /// multiplicative decay after a step threshold (the Zaremba LM recipe).
 #[derive(Clone, Debug, PartialEq)]
 pub struct LrSchedule {
+    /// Base learning rate.
     pub base: f32,
+    /// Step after which decay kicks in (`usize::MAX` = never).
     pub decay_after: usize,
+    /// Multiplicative decay per `decay_after`-sized epoch past the
+    /// threshold (`>= 1.0` disables decay).
     pub decay: f32,
 }
 
 impl LrSchedule {
+    /// Learning rate in force at `step`.
     pub fn at(&self, step: usize) -> f32 {
         if step <= self.decay_after || self.decay >= 1.0 {
             self.base
@@ -35,13 +40,21 @@ impl LrSchedule {
 pub struct RunConfig {
     /// artifact prefix, e.g. "lm_ptb_sx_K32D32"
     pub artifact: String,
+    /// Training steps to run.
     pub steps: usize,
+    /// RNG seed for data generation and init.
     pub seed: u64,
+    /// Learning-rate schedule.
     pub lr: LrSchedule,
+    /// Print metrics every N steps.
     pub log_every: usize,
+    /// Held-out batches per evaluation.
     pub eval_batches: usize,
+    /// Directory holding the AOT artifacts.
     pub artifacts_dir: PathBuf,
+    /// Where to write checkpoints (`None` = don't).
     pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint every N steps (0 = only at the end).
     pub checkpoint_every: usize,
     /// export codes every N steps (0 = never); powers Fig. 6
     pub export_every: usize,
@@ -73,6 +86,7 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// Read and parse a `key = value` config file.
     pub fn from_file(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("read {path:?}: {e}"))?;

@@ -13,6 +13,7 @@ use crate::tensor::{TensorF, TensorI};
 
 const MAGIC: &[u8; 4] = b"DPQC";
 
+/// Write a checkpoint of the training state to `path`.
 pub fn save(path: &Path, state: &State) -> Result<()> {
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("create {path:?}"))?;
@@ -43,6 +44,7 @@ pub fn save(path: &Path, state: &State) -> Result<()> {
     Ok(())
 }
 
+/// Read a checkpoint written by [`save`].
 pub fn load(path: &Path) -> Result<State> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("open {path:?}"))?;

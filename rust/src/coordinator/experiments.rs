@@ -20,9 +20,13 @@ use crate::util::Rng;
 /// Global knobs for experiment scale (CPU budget).
 #[derive(Clone, Debug)]
 pub struct ExpCfg {
+    /// Training steps per run.
     pub steps: usize,
+    /// Base RNG seed.
     pub seed: u64,
+    /// Where reports are written.
     pub reports_dir: std::path::PathBuf,
+    /// Where the AOT artifacts live.
     pub artifacts_dir: std::path::PathBuf,
 }
 
@@ -37,6 +41,7 @@ impl Default for ExpCfg {
     }
 }
 
+/// `(experiment id, description)` pairs, in run order for `all`.
 pub fn registry() -> Vec<(&'static str, &'static str)> {
     vec![
         ("table3", "DPQ vs full embedding on ten datasets"),
@@ -55,6 +60,7 @@ pub fn registry() -> Vec<(&'static str, &'static str)> {
     ]
 }
 
+/// Run one experiment by id; returns the written report path.
 pub fn run(id: &str, rt: &Runtime, cfg: &ExpCfg) -> Result<std::path::PathBuf> {
     let rep = match id {
         "table3" => table3(rt, cfg)?,

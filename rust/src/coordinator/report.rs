@@ -9,18 +9,22 @@ use anyhow::Result;
 
 /// One experiment report accumulating tables / series / notes.
 pub struct Report {
+    /// Experiment id (also the output file stem).
     pub id: String,
+    /// Human title rendered as the heading.
     pub title: String,
     body: String,
 }
 
 impl Report {
+    /// Start a report with its heading line.
     pub fn new(id: &str, title: &str) -> Self {
         let mut body = String::new();
         let _ = writeln!(body, "# {id}: {title}\n");
         Report { id: id.to_string(), title: title.to_string(), body }
     }
 
+    /// Append a free-form paragraph.
     pub fn note(&mut self, text: &str) {
         let _ = writeln!(self.body, "{text}\n");
     }
@@ -67,10 +71,12 @@ impl Report {
         let _ = writeln!(self.body, "```\n");
     }
 
+    /// The rendered markdown so far.
     pub fn render(&self) -> &str {
         &self.body
     }
 
+    /// Write `<dir>/<id>.md`; returns the path.
     pub fn save(&self, dir: &Path) -> Result<PathBuf> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{}.md", self.id));
@@ -84,10 +90,12 @@ pub fn f2(x: f64) -> String {
     format!("{x:.2}")
 }
 
+/// Format with one decimal place.
 pub fn f1(x: f64) -> String {
     format!("{x:.1}")
 }
 
+/// Format a fraction as a percentage with one decimal.
 pub fn pct(x: f64) -> String {
     format!("{:.1}%", 100.0 * x)
 }

@@ -154,19 +154,23 @@ fn fxhash(s: &str) -> u64 {
 
 /// Result of a training run.
 pub struct TrainOutcome {
+    /// Final model state (the executable's state literals).
     pub state: State,
     /// per-logged-step history: (step, metric values)
     pub history: Vec<(usize, Vec<f32>)>,
     /// mean metrics over the final `eval_batches` fresh batches (pre-update
     /// loss on unseen data = held-out metric)
     pub final_metrics: Vec<f32>,
+    /// Names aligned with `final_metrics` / `history` columns.
     pub metric_names: Vec<String>,
+    /// Sustained training throughput.
     pub steps_per_sec: f64,
     /// codebook snapshots if export_every > 0: (step, codes)
     pub code_snapshots: Vec<(usize, TensorI)>,
 }
 
 impl TrainOutcome {
+    /// Final held-out value of the named metric, if produced.
     pub fn metric(&self, name: &str) -> Option<f32> {
         self.metric_names
             .iter()
@@ -174,6 +178,7 @@ impl TrainOutcome {
             .map(|i| self.final_metrics[i])
     }
 
+    /// Perplexity derived from the `ce` metric, if produced.
     pub fn ppl(&self) -> Option<f64> {
         self.metric("ce").map(|ce| metrics::perplexity(ce as f64))
     }
@@ -181,24 +186,30 @@ impl TrainOutcome {
 
 /// The training coordinator for one artifact family.
 pub struct Trainer<'rt> {
+    /// Artifact runtime to execute against.
     pub rt: &'rt Runtime,
+    /// Run configuration (steps, lr schedule, seeds, dirs).
     pub cfg: RunConfig,
     /// extra constant inputs appended after the generated batch (before
     /// lr), e.g. the distillation target table or frozen codes.
     pub extra_inputs: Vec<Value>,
+    /// Suppress per-log-step printing.
     pub quiet: bool,
 }
 
 impl<'rt> Trainer<'rt> {
+    /// Trainer with no extra inputs, printing enabled.
     pub fn new(rt: &'rt Runtime, cfg: RunConfig) -> Self {
         Trainer { rt, cfg, extra_inputs: vec![], quiet: false }
     }
 
+    /// Attach extra constant inputs (builder style).
     pub fn with_extra(mut self, extra: Vec<Value>) -> Self {
         self.extra_inputs = extra;
         self
     }
 
+    /// Silence per-step logging (builder style).
     pub fn quiet(mut self) -> Self {
         self.quiet = true;
         self

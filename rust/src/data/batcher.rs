@@ -9,10 +9,13 @@ use crate::util::Rng;
 
 /// Language-model batch: x = tokens, y = next tokens (BPTT-style).
 pub struct LmBatch {
+    /// `[batch, seq]` input tokens.
     pub x: TensorI,
+    /// `[batch, seq]` next-token targets.
     pub y: TensorI,
 }
 
+/// Draw one BPTT batch from a Markov LM source.
 pub fn lm_batch(src: &mut MarkovLm, batch: usize, seq: usize) -> LmBatch {
     let mut x = Vec::with_capacity(batch * seq);
     let mut y = Vec::with_capacity(batch * seq);
@@ -30,14 +33,19 @@ pub fn lm_batch(src: &mut MarkovLm, batch: usize, seq: usize) -> LmBatch {
 /// Seq2seq batch with teacher forcing: tgt_in = BOS + tgt, tgt_out = tgt +
 /// EOS, both padded to tgt_len; src padded to src_len.
 pub struct NmtBatch {
+    /// `[batch, src_len]` padded source tokens.
     pub src: TensorI,
+    /// `[batch, tgt_len]` teacher-forcing input (BOS + target).
     pub tgt_in: TensorI,
+    /// `[batch, tgt_len]` prediction target (target + EOS).
     pub tgt_out: TensorI,
     /// unpadded reference targets for BLEU
     pub refs: Vec<Vec<i32>>,
+    /// unpadded source sentences (for decode-time re-encoding)
     pub srcs: Vec<Vec<i32>>,
 }
 
+/// Draw one padded teacher-forcing batch from the synthetic NMT task.
 pub fn nmt_batch(gen: &mut SynthNmt, batch: usize, src_len: usize,
                  tgt_len: usize) -> NmtBatch {
     let mut src = vec![PAD; batch * src_len];
@@ -75,10 +83,13 @@ pub fn nmt_batch(gen: &mut SynthNmt, batch: usize, src_len: usize,
 
 /// Classification batch: x = padded token matrix, y = labels.
 pub struct ClassBatch {
+    /// `[batch, seq]` padded token matrix.
     pub x: TensorI,
+    /// `[batch]` class labels.
     pub y: TensorI,
 }
 
+/// Draw one padded classification batch.
 pub fn class_batch(gen: &mut SynthTextC, batch: usize, seq: usize,
                    rng: &mut Rng) -> ClassBatch {
     let mut x = vec![PAD; batch * seq];
@@ -99,12 +110,15 @@ pub fn class_batch(gen: &mut SynthTextC, batch: usize, seq: usize,
 
 /// MLM batch: x = masked ids, y = original ids, w = mask indicator.
 pub struct MlmBatch {
+    /// `[batch, seq]` masked input ids.
     pub x: TensorI,
+    /// `[batch, seq]` original ids (the prediction target).
     pub y: TensorI,
+    /// `[batch, seq]` 0/1 indicator of masked positions.
     pub w: TensorI,
 }
 
-/// BERT-style masking: `mask_rate` of positions, 80% -> UNK-as-[MASK],
+/// BERT-style masking: `mask_rate` of positions, 80% -> UNK-as-`[MASK]`,
 /// 10% -> random token, 10% -> unchanged.
 pub fn mlm_batch(gen: &mut SynthMlm, batch: usize, seq: usize,
                  mask_rate: f64, rng: &mut Rng) -> MlmBatch {

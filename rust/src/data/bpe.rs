@@ -70,6 +70,7 @@ impl Bpe {
         Bpe { merges, ranks }
     }
 
+    /// Number of learned merges.
     pub fn num_merges(&self) -> usize {
         self.merges.len()
     }

@@ -11,9 +11,13 @@ pub mod vocab;
 pub use batcher::{ClassBatch, LmBatch, MlmBatch, NmtBatch};
 pub use vocab::Vocab;
 
-/// Reserved token ids shared across the pipeline (match python/compile).
+/// Padding token id (reserved across the pipeline; match python/compile).
 pub const PAD: i32 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS: i32 = 1;
+/// End-of-sequence token id.
 pub const EOS: i32 = 2;
+/// Unknown-token id.
 pub const UNK: i32 = 3;
+/// Number of reserved special token ids (real tokens start here).
 pub const NUM_SPECIAL: usize = 4;

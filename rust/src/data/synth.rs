@@ -13,6 +13,7 @@ use crate::util::Rng;
 /// each token has a sparse successor distribution (low conditional
 /// entropy), so an LM that can represent tokens well predicts well.
 pub struct MarkovLm {
+    /// Vocabulary size (ids in `[NUM_SPECIAL, vocab)`).
     pub vocab: usize,
     succ: Vec<[i32; 4]>, // per token: 4 preferred successors
     rng: Rng,
@@ -24,6 +25,7 @@ pub struct MarkovLm {
 }
 
 impl MarkovLm {
+    /// Structure and stream both derived from one seed.
     pub fn new(vocab: usize, seed: u64) -> Self {
         Self::with_stream(vocab, seed, seed ^ 0xC0FFEE)
     }
@@ -56,6 +58,7 @@ impl MarkovLm {
         }
     }
 
+    /// Sample the next token of the chain.
     pub fn next_token(&mut self) -> i32 {
         let t = if self.rng.f64() < self.coherence {
             let opts = &self.succ[self.state as usize];
@@ -67,6 +70,7 @@ impl MarkovLm {
         t
     }
 
+    /// Sample `n` consecutive tokens.
     pub fn tokens(&mut self, n: usize) -> Vec<i32> {
         (0..n).map(|_| self.next_token()).collect()
     }
@@ -81,7 +85,9 @@ fn sample_tok(rng: &mut Rng, vocab: usize) -> i32 {
 /// near-perfect BLEU by an attentive seq2seq, so embedding-compression
 /// damage is visible.
 pub struct SynthNmt {
+    /// Source-side vocabulary size.
     pub src_vocab: usize,
+    /// Target-side vocabulary size.
     pub tgt_vocab: usize,
     map: Vec<i32>,
     rng: Rng,
@@ -89,6 +95,7 @@ pub struct SynthNmt {
 }
 
 impl SynthNmt {
+    /// Structure and stream both derived from one seed.
     pub fn new(src_vocab: usize, tgt_vocab: usize, seed: u64) -> Self {
         Self::with_stream(src_vocab, tgt_vocab, seed, seed ^ 0xBEEF)
     }
@@ -153,13 +160,17 @@ impl SynthNmt {
 /// plus shared common words (the fastText regime of the paper's TextC
 /// datasets). Difficulty set by `noise` (share of off-topic tokens).
 pub struct SynthTextC {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Number of classes.
     pub classes: usize,
+    /// Share of off-topic (shared) tokens per document.
     pub noise: f64,
     rng: Rng,
 }
 
 impl SynthTextC {
+    /// Generator with the default 0.5 noise share.
     pub fn new(vocab: usize, classes: usize, seed: u64) -> Self {
         SynthTextC { vocab, classes, noise: 0.5, rng: Rng::new(seed) }
     }
@@ -187,19 +198,24 @@ impl SynthTextC {
 /// MLM corpus for the tiny-BERT experiment: Markov sentences with BOS
 /// framing; masking is applied by the batcher.
 pub struct SynthMlm {
+    /// The underlying Markov sentence source.
     pub lm: MarkovLm,
 }
 
 impl SynthMlm {
+    /// Structure and stream both derived from one seed.
     pub fn new(vocab: usize, seed: u64) -> Self {
         SynthMlm { lm: MarkovLm::new(vocab, seed) }
     }
 
+    /// Separate structure seed (the language) from stream seed (the
+    /// sampled sentences); see [`MarkovLm::with_stream`].
     pub fn with_stream(vocab: usize, structure_seed: u64,
                        stream_seed: u64) -> Self {
         SynthMlm { lm: MarkovLm::with_stream(vocab, structure_seed, stream_seed) }
     }
 
+    /// One BOS ... EOS framed sentence of exactly `len` tokens.
     pub fn sentence(&mut self, len: usize) -> Vec<i32> {
         let mut s = vec![BOS];
         s.extend(self.lm.tokens(len - 2));

@@ -6,6 +6,7 @@ use std::collections::HashMap;
 
 use super::{NUM_SPECIAL, UNK};
 
+/// Frequency-ranked token <-> id mapping with the reserved specials.
 #[derive(Clone, Debug)]
 pub struct Vocab {
     token_to_id: HashMap<String, i32>,
@@ -31,6 +32,8 @@ impl Vocab {
         Vocab { token_to_id, id_to_token }
     }
 
+    /// Count tokens from an iterator, then build via
+    /// [`from_counts`](Self::from_counts).
     pub fn from_corpus<'a>(tokens: impl Iterator<Item = &'a str>,
                            max_size: usize) -> Self {
         let mut counts: HashMap<String, usize> = HashMap::new();
@@ -40,18 +43,22 @@ impl Vocab {
         Self::from_counts(&counts, max_size)
     }
 
+    /// Total ids, specials included.
     pub fn len(&self) -> usize {
         self.id_to_token.len()
     }
 
+    /// True when the vocabulary holds no ids at all.
     pub fn is_empty(&self) -> bool {
         self.id_to_token.is_empty()
     }
 
+    /// Id of `token` (UNK when out of vocabulary).
     pub fn id(&self, token: &str) -> i32 {
         *self.token_to_id.get(token).unwrap_or(&UNK)
     }
 
+    /// Token string of `id` (`"<unk>"` when out of range).
     pub fn token(&self, id: i32) -> &str {
         self.id_to_token
             .get(id as usize)
@@ -59,10 +66,12 @@ impl Vocab {
             .unwrap_or("<unk>")
     }
 
+    /// Whitespace-tokenize and map to ids.
     pub fn encode(&self, text: &str) -> Vec<i32> {
         text.split_whitespace().map(|t| self.id(t)).collect()
     }
 
+    /// Map ids back to a space-joined string.
     pub fn decode(&self, ids: &[i32]) -> String {
         ids.iter()
             .map(|&i| self.token(i))

@@ -15,8 +15,11 @@ use crate::tensor::{TensorF, TensorI};
 /// Bit-packed KD codebook: n symbols x D groups, `bits` bits per code.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Codebook {
+    /// Number of symbols (vocabulary size).
     pub n: usize,
+    /// Number of subspace groups D.
     pub d_groups: usize,
+    /// Centroids per group K (codes are in `0..k`).
     pub k: usize,
     bits: u32,
     packed: Vec<u64>,
@@ -29,6 +32,8 @@ pub fn bits_for(k: usize) -> u32 {
 }
 
 impl Codebook {
+    /// Pack an `[n, D]` integer code tensor at the minimal bit width
+    /// for `k`; codes outside `[0, k)` are rejected.
     pub fn from_codes(codes: &TensorI, k: usize) -> Result<Self> {
         if codes.shape.len() != 2 {
             bail!("codes must be [n, D], got {:?}", codes.shape);
@@ -46,15 +51,18 @@ impl Codebook {
         Ok(Codebook { n, d_groups, k, bits, packed })
     }
 
+    /// Code of symbol `row` in subspace `group`.
     pub fn get(&self, row: usize, group: usize) -> usize {
         let idx = (row * self.d_groups + group) * self.bits as usize;
         get_bits(&self.packed, idx, self.bits) as usize
     }
 
+    /// All D codes of one symbol.
     pub fn row(&self, row: usize) -> Vec<usize> {
         (0..self.d_groups).map(|g| self.get(row, g)).collect()
     }
 
+    /// Unpack into an `[n, D]` integer tensor.
     pub fn to_tensor(&self) -> TensorI {
         let mut data = Vec::with_capacity(self.n * self.d_groups);
         for i in 0..self.n {
@@ -70,6 +78,8 @@ impl Codebook {
         self.n * self.d_groups * self.bits as usize
     }
 
+    /// Bits per stored code (may exceed the minimum for `k` when a file
+    /// was written with wider packing).
     pub fn bits(&self) -> u32 {
         self.bits
     }
@@ -103,9 +113,11 @@ fn get_bits(buf: &[u64], bit_idx: usize, bits: u32) -> u64 {
 /// The inference-time artifact the paper ships: codebook + value matrix.
 #[derive(Clone, Debug)]
 pub struct CompressedEmbedding {
+    /// Per-symbol bit-packed codes.
     pub codebook: Codebook,
     /// [K, D, s] flattened row-major; s = d / D.
     pub values: TensorF,
+    /// Embedding width d = D * s.
     pub d: usize,
     /// subspace-sharing flag (affects storage accounting only; a shared
     /// value matrix is materialized as identical groups).
@@ -113,6 +125,8 @@ pub struct CompressedEmbedding {
 }
 
 impl CompressedEmbedding {
+    /// Pair a codebook with its `[K, D, s]` value matrix (shapes
+    /// cross-checked).
     pub fn new(codebook: Codebook, values: TensorF, shared: bool) -> Result<Self> {
         if values.shape.len() != 3 {
             bail!("values must be [K, D, s], got {:?}", values.shape);
@@ -127,11 +141,12 @@ impl CompressedEmbedding {
         Ok(CompressedEmbedding { codebook, values, d, shared })
     }
 
+    /// Number of symbols (rows) this embedding serves.
     pub fn vocab(&self) -> usize {
         self.codebook.n
     }
 
-    /// Algorithm 1: reconstruct one symbol embedding into `out` [d].
+    /// Algorithm 1: reconstruct one symbol embedding into `out` `[d]`.
     ///
     /// A row's codes are bit-contiguous in the packed codebook, so this
     /// walks a single bit cursor instead of re-deriving word/offset per
@@ -160,6 +175,8 @@ impl CompressedEmbedding {
         }
     }
 
+    /// Allocating convenience wrapper around
+    /// [`reconstruct_row_into`](Self::reconstruct_row_into).
     pub fn reconstruct_row(&self, row: usize) -> Vec<f32> {
         let mut out = vec![0.0; self.d];
         self.reconstruct_row_into(row, &mut out);
@@ -206,6 +223,9 @@ impl CompressedEmbedding {
     }
 
     // ---- binary serialization (magic, dims, packed codes, f32 values) ----
+
+    /// Write the `DPQE` artifact: magic, u64 header dims, packed code
+    /// words, f32 values. Bit-exact roundtrip through [`load`](Self::load).
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("create {path:?}"))?;
@@ -230,6 +250,9 @@ impl CompressedEmbedding {
         Ok(())
     }
 
+    /// Load a `DPQE` artifact written by [`save`](Self::save); corrupt
+    /// or truncated files fail loudly before any allocation is sized
+    /// from the header.
     pub fn load(path: &Path) -> Result<Self> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("open {path:?}"))?;
@@ -327,6 +350,10 @@ impl crate::backend::EmbeddingBackend for CompressedEmbedding {
 
     fn storage_bits(&self) -> usize {
         CompressedEmbedding::storage_bits(self)
+    }
+
+    fn save_artifact(&self, path: &Path) -> Result<()> {
+        CompressedEmbedding::save(self, path)
     }
 }
 

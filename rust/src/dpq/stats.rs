@@ -5,7 +5,7 @@
 use crate::tensor::TensorI;
 
 /// Count_k^(j) = sum_i [C_i^(j) == k]  (Appendix C.1).
-/// codes: [n, D] -> histogram [D][K].
+/// codes: `[n, D]` -> histogram `[D][K]`.
 pub fn code_distribution(codes: &TensorI, k: usize) -> Vec<Vec<usize>> {
     let (n, dg) = (codes.shape[0], codes.shape[1]);
     let mut hist = vec![vec![0usize; k]; dg];

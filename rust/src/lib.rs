@@ -14,7 +14,13 @@
 //!   ([`metrics`]) and a multi-table embedding-lookup server ([`server`]).
 //!
 //! See DESIGN.md for the system inventory and the paper-experiment index,
-//! and EXPERIMENTS.md for measured results.
+//! EXPERIMENTS.md for measured results, and `docs/ARCHITECTURE.md` /
+//! `docs/WIRE_PROTOCOL.md` for the serving subsystem and its wire
+//! format.
+
+// Every public item carries documentation; tier-1 builds rustdoc with
+// broken intra-doc links denied (tools/tier1.sh).
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod config;

@@ -66,6 +66,7 @@ pub fn matmul(a: &TensorF, b: &TensorF) -> TensorF {
     TensorF { shape: vec![m, n], data: out }
 }
 
+/// Transpose a 2-D tensor: `[m, n]` -> `[n, m]`.
 pub fn transpose(a: &TensorF) -> TensorF {
     let (m, n) = (a.shape[0], a.shape[1]);
     let mut out = vec![0.0f32; m * n];
@@ -78,7 +79,7 @@ pub fn transpose(a: &TensorF) -> TensorF {
 }
 
 /// Thin SVD via one-sided Jacobi rotations on A [m, n] (m >= n is not
-/// required; we operate on columns of A). Returns (U [m,r], S [r], Vt [r,n])
+/// required; we operate on columns of A). Returns (U `[m,r]`, S `[r]`, Vt `[r,n]`)
 /// with r = min(m, n), singular values descending.
 pub fn svd(a: &TensorF, sweeps: usize) -> (TensorF, Vec<f32>, TensorF) {
     let (m, n) = (a.shape[0], a.shape[1]);
@@ -175,7 +176,7 @@ pub fn low_rank_factors(a: &TensorF, k: usize) -> (TensorF, TensorF) {
 }
 
 /// k-means++ initialization + Lloyd iterations over rows of `x` [n, d].
-/// Returns (centroids [k, d], assignment [n], inertia).
+/// Returns (centroids `[k, d]`, assignment `[n]`, inertia).
 pub fn kmeans(
     x: &TensorF,
     k: usize,

@@ -67,6 +67,32 @@ fn take_or<'a>(kv: &'a BTreeMap<String, String>, key: &str, default: &'a str) ->
     kv.get(key).map(|s| s.as_str()).unwrap_or(default)
 }
 
+/// Parse a `--mem-budget` byte size: plain bytes or a binary-prefixed
+/// suffix (`64MiB`, `2g`, `512k`; K/M/G all mean KiB/MiB/GiB). The
+/// caller handles `none`/`off`/`0` (explicitly unlimited) before this.
+fn parse_mem_budget(s: &str) -> Result<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult): (&str, u64) = [
+        ("gib", 1u64 << 30), ("gb", 1 << 30), ("g", 1 << 30),
+        ("mib", 1 << 20), ("mb", 1 << 20), ("m", 1 << 20),
+        ("kib", 1 << 10), ("kb", 1 << 10), ("k", 1 << 10),
+    ]
+    .iter()
+    .find_map(|(suf, m)| t.strip_suffix(suf).map(|d| (d, *m)))
+    .unwrap_or((t.as_str(), 1));
+    let v: f64 = digits.trim().parse().map_err(|_| {
+        anyhow!("--mem-budget expects bytes or a K/M/G suffix, got {s:?}")
+    })?;
+    // validate the FINAL byte count, not the pre-multiply value: "0.5"
+    // (user forgot the suffix) would otherwise truncate to a 0-byte
+    // budget that evicts every unpinned table on every load
+    let bytes = (v * mult as f64) as u64;
+    if !v.is_finite() || bytes < 1 {
+        bail!("--mem-budget must be at least 1 byte, got {s:?}");
+    }
+    Ok(bytes)
+}
+
 fn dispatch(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         print_usage();
@@ -193,36 +219,87 @@ fn dispatch(args: &[String]) -> Result<()> {
                 }
             }
             let kv = parse_cli_overrides(&plain)?;
-            // legacy single-table form: --embedding F serves as "default"
-            if tables.is_empty() {
-                let path = std::path::PathBuf::from(
-                    take_or(&kv, "embedding", "compressed.dpq"));
-                tables.push(("default".to_string(), path));
-            }
             let addr = take_or(&kv, "addr", "127.0.0.1:7878").to_string();
             let max_batch: usize = take_or(&kv, "max_batch", "64").parse()?;
             let shards_per_table: usize = take_or(&kv, "shards", "1").parse()?;
             if max_batch == 0 || shards_per_table == 0 {
                 bail!("--max-batch and --shards must be >= 1");
             }
-            let registry = TableRegistry::new(ServerConfig {
-                max_batch,
-                shards_per_table,
-            });
+            // Outer None = flag absent; Some(None) = explicitly
+            // unlimited ("none"/"off"/"0" -- the way to drop a budget a
+            // --restore manifest recorded); Some(Some(b)) = b bytes.
+            let mem_budget: Option<Option<u64>> = match kv.get("mem_budget") {
+                None => None,
+                Some(s)
+                    if matches!(s.trim().to_ascii_lowercase().as_str(),
+                                "none" | "off" | "0") =>
+                {
+                    Some(None)
+                }
+                Some(s) => Some(Some(parse_mem_budget(s)?)),
+            };
+            let registry = if let Some(manifest) = kv.get("restore") {
+                // rebuild a whole registry from a snapshot manifest; the
+                // snapshot's recorded config applies unless a flag was
+                // given explicitly on this command line
+                let manifest = std::path::Path::new(manifest);
+                let mut cfg = TableRegistry::snapshot_config(manifest)?;
+                if kv.contains_key("max_batch") {
+                    cfg.max_batch = max_batch;
+                }
+                if kv.contains_key("shards") {
+                    cfg.shards_per_table = shards_per_table;
+                }
+                if let Some(b) = mem_budget {
+                    cfg.mem_budget_bytes = b;
+                }
+                let reg = TableRegistry::restore(manifest, Some(cfg))?;
+                println!(
+                    "restored {} table(s) from snapshot {}",
+                    reg.len(), manifest.display()
+                );
+                reg
+            } else {
+                // legacy single-table form: --embedding F serves as
+                // "default"
+                if tables.is_empty() {
+                    let path = std::path::PathBuf::from(
+                        take_or(&kv, "embedding", "compressed.dpq"));
+                    tables.push(("default".to_string(), path));
+                }
+                TableRegistry::new(ServerConfig {
+                    max_batch,
+                    shards_per_table,
+                    mem_budget_bytes: mem_budget.flatten(),
+                })
+            };
+            // `--table` flags load on top of either path (extra tables
+            // alongside a restored snapshot are fine)
             for (name, path) in &tables {
                 let emb = dpq_embed::dpq::CompressedEmbedding::load(path)
                     .map_err(|e| anyhow!(
                         "load {path:?}: {e} (run `repro compress` first)"))?;
-                println!(
-                    "table {name}: {} symbols x d={} ({} KiB compressed, \
-                     CR {:.1}x, {shards_per_table} shard(s))",
-                    emb.vocab(), emb.d, emb.storage_bits() / 8 / 1024,
-                    emb.compression_ratio()
-                );
                 registry.insert(name, std::sync::Arc::new(emb))?;
             }
             if let Some(def) = kv.get("default") {
                 registry.set_default(def)?;
+            }
+            for e in registry.list() {
+                println!(
+                    "table {}: {} symbols x d={} [{}] ({} KiB resident, \
+                     CR {:.1}x, {} shard(s))",
+                    e.name, e.backend.vocab(), e.backend.d(),
+                    e.backend.kind(), e.resident_bytes() / 1024,
+                    dpq_embed::backend::compression_ratio(&*e.backend),
+                    e.shard_count()
+                );
+            }
+            if let Some(b) = registry.config().mem_budget_bytes {
+                println!(
+                    "memory budget: {b} bytes (LRU eviction; the default \
+                     table is pinned), {} bytes resident",
+                    registry.resident_bytes()
+                );
             }
             println!(
                 "default table: {} (v1 clients are routed here)",
@@ -270,10 +347,15 @@ fn print_usage() {
          \x20 experiment <id|all> [--steps N] | --list\n\
          \x20 compress   [--artifact P --out F]\n\
          \x20 serve      [--table NAME=F ... --default NAME --addr A\n\
-         \x20             --max-batch N --shards N]\n\
+         \x20             --max-batch N --shards N\n\
+         \x20             --mem-budget BYTES|none --restore MANIFEST]\n\
          \x20            (--table is repeatable: one server, many tables,\n\
          \x20             routed by table name over protocol v2; legacy\n\
-         \x20             --embedding F serves one table named \"default\")\n\
+         \x20             --embedding F serves one table named \"default\";\n\
+         \x20             --mem-budget evicts least-recently-used tables\n\
+         \x20             past BYTES (K/M/G suffixes ok, default pinned);\n\
+         \x20             --restore rebuilds a registry from a snapshot\n\
+         \x20             manifest written by the `snapshot` wire op)\n\
          \x20 codes      [--artifact P --steps N]\n\
          \n\
          global flags:\n\

@@ -96,6 +96,7 @@ pub struct LatencyStats {
 }
 
 impl LatencyStats {
+    /// Record one sample (seconds).
     pub fn record(&mut self, seconds: f64) {
         self.samples.push(seconds);
     }
@@ -105,10 +106,12 @@ impl LatencyStats {
         self.samples.extend_from_slice(&other.samples);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> usize {
         self.samples.len()
     }
 
+    /// Mean of the samples in seconds (0.0 when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -116,6 +119,7 @@ impl LatencyStats {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// The `p`-th percentile (0..=100) in seconds (0.0 when empty).
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -126,6 +130,8 @@ impl LatencyStats {
         v[idx]
     }
 
+    /// One-line human summary; `unit_per_sec` scales the throughput
+    /// figure (e.g. ids per request).
     pub fn summary(&self, unit_per_sec: f64) -> String {
         format!(
             "n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms thpt={:.1}/s",

@@ -4,6 +4,12 @@
 //! Rust coordinator feeds back into the full-variant eval artifact (whose
 //! embedding table is an ordinary input literal).
 
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::backend::artifact_io;
 use crate::dpq::{Codebook, CompressedEmbedding};
 use crate::linalg;
 use crate::tensor::{TensorF, TensorI};
@@ -11,10 +17,13 @@ use crate::util::{pool, Rng};
 
 /// A fitted compressor: storage accounting + reconstruction.
 pub trait Compressor {
+    /// Human-readable scheme name (e.g. `"scalar8bit"`).
     fn name(&self) -> String;
     /// Total bits needed at inference for the embedding layer.
     fn storage_bits(&self) -> usize;
+    /// Materialize the approximate `[n, d]` table.
     fn reconstruct(&self) -> TensorF;
+    /// Compression ratio vs a 32-bit `[n, d]` table.
     fn compression_ratio(&self, n: usize, d: usize) -> f64 {
         (32.0 * n as f64 * d as f64) / self.storage_bits() as f64
     }
@@ -24,7 +33,10 @@ pub trait Compressor {
 // Scalar quantization (b-bit uniform, per-column min/max)
 // ---------------------------------------------------------------------------
 
+/// b-bit uniform scalar quantization with per-column `(lo, step)`
+/// ranges (paper Table 5's "scalar quant" baseline).
 pub struct ScalarQuant {
+    /// Bits per code (1..=16).
     pub bits: u32,
     n: usize,
     d: usize,
@@ -91,6 +103,42 @@ impl ScalarQuant {
         }
         ScalarQuant { bits, n, d, codes, lo, step }
     }
+
+    /// Serialize as a `DPQS` artifact: magic, `n`/`d`/`bits` header, u16
+    /// LE codes, then the per-column `lo` and `step` f32 vectors.
+    /// Bit-exact roundtrip through [`ScalarQuant::load`].
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = artifact_io::create(
+            path, b"DPQS",
+            &[self.n as u64, self.d as u64, self.bits as u64])?;
+        artifact_io::write_u16s(&mut w, &self.codes)?;
+        artifact_io::write_f32s(&mut w, &self.lo)?;
+        artifact_io::write_f32s(&mut w, &self.step)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a `DPQS` artifact written by [`ScalarQuant::save`]; corrupt
+    /// headers and out-of-range codes fail loudly.
+    pub fn load(path: &Path) -> Result<Self> {
+        let (mut r, dims) = artifact_io::open(path, b"DPQS", 3, |d| {
+            let nd = (d[0] as u128).checked_mul(d[1] as u128)?;
+            // codes (2 bytes each) + lo + step (4 bytes each per column)
+            nd.checked_mul(2)?.checked_add((d[1] as u128).checked_mul(8)?)
+        })?;
+        let (n, d, bits) = (dims[0] as usize, dims[1] as usize, dims[2] as u32);
+        if bits == 0 || bits > 16 {
+            bail!("corrupt header: bits={bits} (must be in 1..=16)");
+        }
+        let codes = artifact_io::read_u16s(&mut r, n * d)?;
+        let levels = (1u32 << bits) - 1;
+        if let Some(&bad) = codes.iter().find(|&&c| c as u32 > levels) {
+            bail!("corrupt code {bad} exceeds {levels} ({bits}-bit table)");
+        }
+        let lo = artifact_io::read_f32s(&mut r, d)?;
+        let step = artifact_io::read_f32s(&mut r, d)?;
+        Ok(ScalarQuant { bits, n, d, codes, lo, step })
+    }
 }
 
 /// b-bit scalar codes served as a registry table. Fully-qualified trait
@@ -125,6 +173,10 @@ impl crate::backend::EmbeddingBackend for ScalarQuant {
     fn storage_bits(&self) -> usize {
         Compressor::storage_bits(self)
     }
+
+    fn save_artifact(&self, path: &Path) -> Result<()> {
+        self.save(path)
+    }
 }
 
 impl Compressor for ScalarQuant {
@@ -153,8 +205,12 @@ impl Compressor for ScalarQuant {
 // Product quantization (k-means per subspace; Jegou et al. 2010)
 // ---------------------------------------------------------------------------
 
+/// Post-hoc product quantization (k-means per subspace; Jegou et al.
+/// 2010) -- the paper's strongest traditional baseline.
 pub struct ProductQuant {
+    /// Centroids per subspace.
     pub k: usize,
+    /// Number of subspaces D.
     pub d_groups: usize,
     emb: CompressedEmbedding,
 }
@@ -214,6 +270,7 @@ impl ProductQuant {
         ProductQuant { k, d_groups, emb }
     }
 
+    /// The fitted codes + centroids as a servable [`CompressedEmbedding`].
     pub fn embedding(&self) -> &CompressedEmbedding {
         &self.emb
     }
@@ -237,13 +294,17 @@ impl Compressor for ProductQuant {
 // Low-rank factorization (truncated SVD)
 // ---------------------------------------------------------------------------
 
+/// Low-rank factorization baseline: `table ~= left @ right` via
+/// truncated SVD.
 pub struct LowRank {
+    /// Retained rank r.
     pub rank: usize,
     left: TensorF,   // [n, r]
     right: TensorF,  // [r, d]
 }
 
 impl LowRank {
+    /// Factor `table` at the given rank.
     pub fn fit(table: &TensorF, rank: usize) -> Self {
         let (left, right) = linalg::low_rank_factors(table, rank);
         LowRank { rank, left, right }
@@ -253,6 +314,44 @@ impl LowRank {
     pub fn rank_for_cr(n: usize, d: usize, cr: f64) -> usize {
         // 32 n d / (32 r (n + d)) = cr  =>  r = n d / (cr (n + d))
         ((n * d) as f64 / (cr * (n + d) as f64)).round().max(1.0) as usize
+    }
+
+    /// Serialize as a `DPQL` artifact: magic, `n`/`rank`/`d` header, then
+    /// the `left [n, r]` and `right [r, d]` f32 factor matrices. Bit-exact
+    /// roundtrip through [`LowRank::load`], so a restored table serves the
+    /// same row products bit for bit (the row kernel accumulates serially
+    /// in a fixed order).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let (n, r, d) = (self.left.shape[0], self.left.shape[1],
+                         self.right.shape[1]);
+        let mut w = artifact_io::create(
+            path, b"DPQL", &[n as u64, r as u64, d as u64])?;
+        artifact_io::write_f32s(&mut w, &self.left.data)?;
+        artifact_io::write_f32s(&mut w, &self.right.data)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a `DPQL` artifact written by [`LowRank::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let (mut r, dims) = artifact_io::open(path, b"DPQL", 3, |d| {
+            let left = (d[0] as u128).checked_mul(d[1] as u128)?;
+            let right = (d[1] as u128).checked_mul(d[2] as u128)?;
+            left.checked_add(right)?.checked_mul(4)
+        })?;
+        let (n, rank, d) = (dims[0] as usize, dims[1] as usize, dims[2] as usize);
+        if rank == 0 {
+            bail!("corrupt header: rank=0");
+        }
+        let left = TensorF {
+            shape: vec![n, rank],
+            data: artifact_io::read_f32s(&mut r, n * rank)?,
+        };
+        let right = TensorF {
+            shape: vec![rank, d],
+            data: artifact_io::read_f32s(&mut r, rank * d)?,
+        };
+        Ok(LowRank { rank, left, right })
     }
 }
 
@@ -290,6 +389,10 @@ impl crate::backend::EmbeddingBackend for LowRank {
 
     fn storage_bits(&self) -> usize {
         Compressor::storage_bits(self)
+    }
+
+    fn save_artifact(&self, path: &Path) -> Result<()> {
+        self.save(path)
     }
 }
 
@@ -415,6 +518,51 @@ mod tests {
                 assert!((a - b).abs() < 1e-4, "lr id {id}: {a} vs {b}");
             }
         }
+    }
+
+    /// The snapshot artifact formats must roundtrip the serving-side row
+    /// gather bit for bit: a restored registry's answers are only
+    /// guaranteed identical if every backend kind reloads exactly.
+    #[test]
+    fn artifact_roundtrips_serve_identical_bits() {
+        use crate::backend::{load_backend, EmbeddingBackend};
+        let dir = std::env::temp_dir().join("dpq_quant_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = table(80, 12, 21);
+        let ids: Vec<usize> = vec![0, 79, 13, 13, 40];
+
+        let sq = ScalarQuant::fit(&t, 7);
+        let p = dir.join("t.scalar_quant");
+        sq.save(&p).unwrap();
+        let back = load_backend("scalar_quant", &p).unwrap();
+        assert_eq!((back.kind(), back.vocab(), back.d()), ("scalar_quant", 80, 12));
+        assert_eq!(back.storage_bits(), EmbeddingBackend::storage_bits(&sq));
+        let mut a = vec![0.0f32; ids.len() * 12];
+        let mut b = vec![0.0f32; ids.len() * 12];
+        sq.reconstruct_rows_into(&ids, &mut a);
+        back.reconstruct_rows_into(&ids, &mut b);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // a code pushed past the bit width is corruption, not data
+        let mut bytes = std::fs::read(&p).unwrap();
+        let header = 4 + 3 * 8;
+        bytes[header..header + 2].copy_from_slice(&u16::MAX.to_le_bytes());
+        let bad = dir.join("bad.scalar_quant");
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(ScalarQuant::load(&bad).is_err());
+
+        let lr = LowRank::fit(&t, 4);
+        let p = dir.join("t.low_rank");
+        lr.save(&p).unwrap();
+        let back = load_backend("low_rank", &p).unwrap();
+        assert_eq!((back.kind(), back.vocab(), back.d()), ("low_rank", 80, 12));
+        assert_eq!(back.storage_bits(), EmbeddingBackend::storage_bits(&lr));
+        lr.reconstruct_rows_into(&ids, &mut a);
+        back.reconstruct_rows_into(&ids, &mut b);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let bytes = std::fs::read(&p).unwrap();
+        let bad = dir.join("bad.low_rank");
+        std::fs::write(&bad, &bytes[..bytes.len() - 1]).unwrap();
+        assert!(LowRank::load(&bad).is_err());
     }
 
     #[test]

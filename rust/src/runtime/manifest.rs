@@ -9,20 +9,32 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::jsonx::Json;
 
+/// One typed input or output of an artifact.
 #[derive(Clone, Debug, PartialEq)]
 pub struct IoSpec {
+    /// Input/output name from the Python layer.
     pub name: String,
+    /// Static shape (row-major dims).
     pub shape: Vec<usize>,
-    pub dtype: String, // "f32" | "i32"
-    pub role: String,  // inputs: state|input; outputs: metric|state|output
+    /// Element type: `"f32"` or `"i32"`.
+    pub dtype: String,
+    /// Role tag -- inputs: `state` | `input`; outputs: `metric` |
+    /// `state` | `output`.
+    pub role: String,
 }
 
+/// The JSON sidecar describing an artifact's IO contract.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifact name (file stem of the HLO/manifest pair).
     pub name: String,
-    pub kind: String, // init | train | eval | decode | export
+    /// Artifact kind: `init` | `train` | `eval` | `decode` | `export`.
+    pub kind: String,
+    /// Input specs in positional order.
     pub inputs: Vec<IoSpec>,
+    /// Output specs in positional order.
     pub outputs: Vec<IoSpec>,
+    /// Free-form metadata recorded by `aot.py` (vocab sizes, flags...).
     pub meta: BTreeMap<String, Json>,
 }
 
@@ -56,6 +68,7 @@ fn io_spec(j: &Json) -> Result<IoSpec> {
 }
 
 impl Manifest {
+    /// Parse a manifest JSON document.
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
         let name = j
@@ -89,16 +102,19 @@ impl Manifest {
         Ok(Manifest { name, kind, inputs, outputs, meta })
     }
 
+    /// Read and parse a manifest file.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {path:?}"))?;
         Self::parse(&text)
     }
 
+    /// Inputs with role `state`, in order.
     pub fn state_inputs(&self) -> Vec<&IoSpec> {
         self.inputs.iter().filter(|s| s.role == "state").collect()
     }
 
+    /// Inputs with role `input` (the per-step batch), in order.
     pub fn batch_inputs(&self) -> Vec<&IoSpec> {
         self.inputs
             .iter()
@@ -106,23 +122,28 @@ impl Manifest {
             .collect()
     }
 
+    /// Outputs with role `metric`, in order.
     pub fn metric_outputs(&self) -> Vec<&IoSpec> {
         self.outputs.iter().filter(|s| s.role == "metric").collect()
     }
 
     // ---- typed meta accessors ----
+    /// Meta value as usize, if present and numeric.
     pub fn meta_usize(&self, key: &str) -> Option<usize> {
         self.meta.get(key).and_then(|v| v.as_usize())
     }
 
+    /// Meta value as f64, if present and numeric.
     pub fn meta_f64(&self, key: &str) -> Option<f64> {
         self.meta.get(key).and_then(|v| v.as_f64())
     }
 
+    /// Meta value as a string, if present.
     pub fn meta_str(&self, key: &str) -> Option<&str> {
         self.meta.get(key).and_then(|v| v.as_str())
     }
 
+    /// Meta value as a bool, if present.
     pub fn meta_bool(&self, key: &str) -> Option<bool> {
         self.meta.get(key).and_then(|v| v.as_bool())
     }

@@ -18,11 +18,14 @@ use crate::tensor::{TensorF, TensorI};
 /// A host-side value crossing the XLA boundary.
 #[derive(Clone, Debug)]
 pub enum Value {
+    /// An f32 tensor.
     F(TensorF),
+    /// An i32 tensor.
     I(TensorI),
 }
 
 impl Value {
+    /// Convert into an XLA literal.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             Value::F(t) => t.to_literal(),
@@ -30,6 +33,7 @@ impl Value {
         }
     }
 
+    /// The f32 tensor, or an error for i32 values.
     pub fn as_f(&self) -> Result<&TensorF> {
         match self {
             Value::F(t) => Ok(t),
@@ -37,6 +41,7 @@ impl Value {
         }
     }
 
+    /// The i32 tensor, or an error for f32 values.
     pub fn as_i(&self) -> Result<&TensorI> {
         match self {
             Value::I(t) => Ok(t),
@@ -44,6 +49,7 @@ impl Value {
         }
     }
 
+    /// The single f32 of a scalar-shaped value.
     pub fn scalar_f(&self) -> Result<f32> {
         let t = self.as_f()?;
         if t.data.len() != 1 {
@@ -52,6 +58,7 @@ impl Value {
         Ok(t.data[0])
     }
 
+    /// Copy a literal back into a typed value (`dtype` from the manifest).
     pub fn from_literal(lit: &xla::Literal, dtype: &str) -> Result<Value> {
         Ok(match dtype {
             "f32" => Value::F(TensorF::from_literal(lit)?),
@@ -63,6 +70,7 @@ impl Value {
 
 /// One compiled artifact: manifest + PJRT executable.
 pub struct Artifact {
+    /// The artifact's IO contract (shapes, dtypes, roles, meta).
     pub manifest: Manifest,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -111,6 +119,7 @@ impl Artifact {
             .collect()
     }
 
+    /// Execute with typed values (converts in and out).
     pub fn execute(&self, args: &[Value]) -> Result<Vec<Value>> {
         let lits: Vec<xla::Literal> = args
             .iter()
@@ -119,6 +128,7 @@ impl Artifact {
         self.execute_literals(&lits)
     }
 
+    /// The artifact's manifest name.
     pub fn name(&self) -> &str {
         &self.manifest.name
     }
@@ -143,10 +153,12 @@ impl Runtime {
         })
     }
 
+    /// The directory artifacts are loaded from.
     pub fn artifacts_dir(&self) -> &Path {
         &self.dir
     }
 
+    /// True when both the HLO text and manifest for `name` exist.
     pub fn exists(&self, name: &str) -> bool {
         self.dir.join(format!("{name}.hlo.txt")).exists()
             && self.dir.join(format!("{name}.manifest.json")).exists()
@@ -203,12 +215,14 @@ impl Runtime {
 /// Typed access converts on demand via [`State::get`] / [`State::set`].
 #[derive(Clone)]
 pub struct State {
+    /// Entry names, in the manifest's state-input order.
     pub names: Vec<String>,
     dtypes: Vec<String>,
     lits: Vec<xla::Literal>,
 }
 
 impl State {
+    /// Assemble from parallel name/dtype/literal vectors.
     pub fn from_literals(names: Vec<String>, dtypes: Vec<String>,
                          lits: Vec<xla::Literal>) -> Result<State> {
         if names.len() != lits.len() || names.len() != dtypes.len() {
@@ -217,6 +231,7 @@ impl State {
         Ok(State { names, dtypes, lits })
     }
 
+    /// The raw literals, in entry order (fed straight to `execute`).
     pub fn literals(&self) -> &[xla::Literal] {
         &self.lits
     }
@@ -273,6 +288,7 @@ pub fn run_init(art: &Artifact, seed: i32) -> Result<State> {
 
 /// Outcome of one train step: metric values in manifest order.
 pub struct StepOut {
+    /// Metric values, aligned with the manifest's metric outputs.
     pub metrics: Vec<f32>,
 }
 

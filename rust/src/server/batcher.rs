@@ -101,10 +101,12 @@ struct QueueInner {
 pub struct BatchQueue {
     inner: Mutex<QueueInner>,
     cv: Condvar,
+    /// Max pending lookups drained into one micro-batch.
     pub max_batch: usize,
 }
 
 impl BatchQueue {
+    /// Open queue draining up to `max_batch` (min 1) per pop.
     pub fn new(max_batch: usize) -> Self {
         BatchQueue {
             inner: Mutex::new(QueueInner { q: VecDeque::new(), closed: false }),
@@ -155,6 +157,7 @@ impl BatchQueue {
         }
     }
 
+    /// True once [`close`](Self::close) has run.
     pub fn is_closed(&self) -> bool {
         self.inner.lock().unwrap().closed
     }

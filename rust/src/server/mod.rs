@@ -20,27 +20,32 @@
 //! v2 requests (`"v": 2`) may carry `"table": "<name>"` on lookups and
 //! stats to route by table; omitting it means the default table.
 //!
-//! Ops:
+//! Ops (normative spec with framing diagrams: `docs/WIRE_PROTOCOL.md`):
 //!
-//! | op           | v   | request fields            | response |
-//! |--------------|-----|---------------------------|----------|
-//! | `lookup`     | 1,2 | `ids`, v2: `table`        | `{"ok":true,"n":..,"d":..,"vectors":[[..],..]}` |
-//! | `lookup_bin` | 1,2 | `ids`, v2: `table`        | binary, see below |
-//! | `stats`      | 1,2 | v2: optional `table`      | counters + `batch_p50_s`/`batch_p99_s` latency (per table) |
-//! | `tables`     | 2   |                           | `{"ok":true,"default":..,"tables":[{name,kind,vocab,d,..},..]}` |
-//! | `load`       | 2   | `table`, `path`           | hot-load a `.dpq` file as a new table |
-//! | `unload`     | 2   | `table`                   | hot-drop a table |
-//! | `shutdown`   | 1,2 |                           | `{"ok":true}`, then the server exits |
+//! | op              | v   | request fields            | response |
+//! |-----------------|-----|---------------------------|----------|
+//! | `lookup`        | 1,2 | `ids`, v2: `table`        | `{"ok":true,"n":..,"d":..,"vectors":[[..],..]}` |
+//! | `lookup_bin`    | 1,2 | `ids`, v2: `table`        | binary, see below |
+//! | `lookup_fanout` | 2   | `queries`: `[{table,ids},..]` | one multi-section binary frame, see below |
+//! | `stats`         | 1,2 | v2: optional `table`      | counters + `batch_p50_s`/`batch_p99_s` latency (per table) |
+//! | `tables`        | 2   |                           | `{"ok":true,"default":..,"tables":[{name,kind,vocab,d,..},..]}` |
+//! | `load`          | 2   | `table`, `path`           | hot-load a `.dpq` file as a new table |
+//! | `unload`        | 2   | `table`                   | hot-drop a table; reports `was_default` + the default now in force |
+//! | `snapshot`      | 2   | `dir`                     | serialize the registry into a server-side dir, `{"ok":true,"manifest":..}` |
+//! | `shutdown`      | 1,2 |                           | `{"ok":true}`, then the server exits |
 //!
 //! **Binary lookup framing.** A v2 `lookup_bin` response is
 //! self-describing: u32 LE frame length, then a `u32 n | u32 d` header,
 //! then `n*d` f32 LE values (row-major) -- no client ever guesses the
 //! embedding width. A v1 `lookup_bin` response keeps the legacy layout
 //! (u32 LE length, then `n*d` f32 values, the caller knowing `d` out of
-//! band). Rejections use the `u32::MAX` length sentinel (never a real
-//! frame length; an empty id list answers with a real, short frame);
-//! under v2 the sentinel is followed by a JSON error frame naming the
-//! reason, so binary errors are as typed as JSON ones.
+//! band). A `lookup_fanout` response is one frame of `u32 section_count`
+//! followed by one `(n, d)`-headed section per query, in request order --
+//! a multi-table recommender lookup in a single round trip. Rejections
+//! use the `u32::MAX` length sentinel (never a real frame length; an
+//! empty id list answers with a real, short frame); under v2 the
+//! sentinel is followed by a JSON error frame naming the reason, so
+//! binary errors are as typed as JSON ones.
 //!
 //! **Errors.** Every `{"ok": false}` response carries a machine `"code"`
 //! (`bad_ids`, `no_such_table`, `unsupported_version`, `table_exists`,
@@ -84,13 +89,16 @@ pub use batcher::BatchQueue;
 pub use protocol::{
     read_frame, write_frame, Client, Rows, TableDesc, WireError, VERSION,
 };
-pub use registry::{ServerConfig, TableEntry, TableRegistry};
+pub use registry::{
+    ServerConfig, TableEntry, TableRegistry, UnloadOutcome, SNAPSHOT_FORMAT,
+    SNAPSHOT_MANIFEST, SNAPSHOT_VERSION,
+};
 pub use stats::Stats;
 
 use batcher::Answer;
 use protocol::{
-    err_frame, err_obj, frame_version, parse_ids, write_bin_reject,
-    write_bin_rows,
+    err_frame, err_obj, frame_version, parse_ids, sections_payload_bytes,
+    write_bin_reject_frame, write_bin_rows, write_bin_sections,
 };
 
 /// The embedding server over a [`TableRegistry`].
@@ -99,6 +107,7 @@ pub struct EmbeddingServer {
 }
 
 impl EmbeddingServer {
+    /// Serve the given registry (tables can still be added hot).
     pub fn new(registry: TableRegistry) -> Self {
         EmbeddingServer { registry: Arc::new(registry) }
     }
@@ -121,6 +130,7 @@ impl EmbeddingServer {
         self.registry.clone()
     }
 
+    /// The flag the accept loop watches; setting it stops the server.
     pub fn stop_flag(&self) -> Arc<AtomicBool> {
         self.registry.stop_flag()
     }
@@ -158,6 +168,64 @@ impl EmbeddingServer {
     }
 }
 
+/// The standard error frame for `e`, annotated with `"evicted": true`
+/// when a `no_such_table` rejection names a table that was evicted under
+/// memory pressure (and not since reloaded) -- operators can tell
+/// "evicted" from "never existed" straight from the rejection.
+fn annotated_err_frame(registry: &TableRegistry, e: &WireError) -> Json {
+    let mut frame = err_frame(e);
+    if let WireError::NoSuchTable(t) = e {
+        if registry.was_evicted(t) {
+            if let Json::Obj(m) = &mut frame {
+                m.insert("evicted".into(), Json::Bool(true));
+            }
+        }
+    }
+    frame
+}
+
+/// Strictly parse and range-check a request's `ids` against `entry`'s
+/// vocab -- the ONE validation both `lookup`/`lookup_bin` and every
+/// `lookup_fanout` section go through, so id strictness can never
+/// diverge between the ops. Malformed or out-of-range ids are a typed
+/// `bad_ids` rejection, never clamped or dropped.
+fn validate_ids(
+    entry: &TableEntry,
+    j: &Json,
+    op: &str,
+) -> Result<Vec<usize>, WireError> {
+    let vocab = entry.backend.vocab();
+    let bad = || WireError::Rejected {
+        code: "bad_ids".into(),
+        message: format!(
+            "ids must be integers in [0, {vocab}) for table {:?}", entry.name),
+    };
+    match parse_ids(j, op)? {
+        None => Err(bad()),
+        Some(ids) => {
+            if ids.iter().any(|&i| i >= vocab) {
+                return Err(bad());
+            }
+            Ok(ids)
+        }
+    }
+}
+
+/// The error for a batcher that failed a request (`wait()` returned
+/// `None`): if the table was unloaded or evicted while the request was
+/// in flight, that is a routine, retryable `no_such_table` (annotated
+/// with `evicted` where applicable) -- only a failure on a table that
+/// is STILL registered is the genuine `internal` bug path.
+fn batch_failure_err(registry: &TableRegistry, entry: &TableEntry) -> WireError {
+    match registry.get(&entry.name) {
+        Some(current) if std::ptr::eq(&*current, entry) => WireError::Rejected {
+            code: "internal".into(),
+            message: "batch reconstruction failed".into(),
+        },
+        _ => WireError::NoSuchTable(entry.name.clone()),
+    }
+}
+
 /// Resolve the request's table, validate ids, route through the batcher
 /// shards, and encode the response for one lookup op.
 fn lookup_op(
@@ -169,10 +237,11 @@ fn lookup_op(
 ) -> Result<(), WireError> {
     let op = if binary { "lookup_bin" } else { "lookup" };
     let reject = |stream: &mut TcpStream, e: &WireError| -> Result<(), WireError> {
+        let frame = annotated_err_frame(registry, e);
         if binary {
-            write_bin_reject(stream, version, e)
+            write_bin_reject_frame(stream, version, &frame)
         } else {
-            write_frame(stream, &err_frame(e).to_string())
+            write_frame(stream, &frame.to_string())
         }
     };
     let named = if version >= 2 {
@@ -184,37 +253,18 @@ fn lookup_op(
         Ok(e) => e,
         Err(e) => return reject(stream, &e),
     };
-    let ids = match parse_ids(j, op) {
+    // malformed or out-of-range ids -> rejection, never clamped
+    let ids = match validate_ids(&entry, j, op) {
+        Ok(ids) => ids,
         Err(e) => return reject(stream, &e),
-        // malformed or out-of-range ids -> rejection, never clamped
-        Ok(None) => {
-            return reject(stream, &WireError::Rejected {
-                code: "bad_ids".into(),
-                message: "ids must be integers in [0, vocab)".into(),
-            })
-        }
-        Ok(Some(ids)) => {
-            let vocab = entry.backend.vocab();
-            if ids.iter().any(|&i| i >= vocab) {
-                return reject(stream, &WireError::Rejected {
-                    code: "bad_ids".into(),
-                    message: format!("ids must be integers in [0, {vocab})"),
-                });
-            }
-            ids
-        }
     };
     let d = entry.backend.d();
     let ans: Answer = match entry.lookup(&ids) {
         Some(a) => a,
-        // batcher failed the request (table unloading / bug path): an
-        // explicit error, never ok:true with a short vector list
-        None => {
-            return reject(stream, &WireError::Rejected {
-                code: "internal".into(),
-                message: "batch reconstruction failed".into(),
-            })
-        }
+        // batcher failed the request: an explicit error, never ok:true
+        // with a short vector list. Unloaded/evicted mid-flight answers
+        // no_such_table; a still-registered table is the bug path.
+        None => return reject(stream, &batch_failure_err(registry, &entry)),
     };
     let flat = ans.as_slice();
     debug_assert_eq!(flat.len(), ids.len() * d);
@@ -264,6 +314,106 @@ fn lookup_op(
     }
 }
 
+/// `lookup_fanout` (v2 only): resolve and validate EVERY `(table, ids)`
+/// pair, queue all sub-lookups on their tables' batcher shards, then
+/// assemble one multi-section binary response in request order. The op
+/// is all-or-nothing -- any unknown table or bad id rejects the whole
+/// frame BEFORE anything is queued, so a rejection never leaves half
+/// the sections in flight.
+fn fanout_op(
+    stream: &mut TcpStream,
+    registry: &TableRegistry,
+    j: &Json,
+    version: u64,
+) -> Result<(), WireError> {
+    let reject = |stream: &mut TcpStream, e: &WireError| -> Result<(), WireError> {
+        write_bin_reject_frame(stream, version, &annotated_err_frame(registry, e))
+    };
+    let Some(queries) = j.get("queries").and_then(|v| v.as_arr()) else {
+        return reject(stream, &WireError::Rejected {
+            code: "bad_request".into(),
+            message: "lookup_fanout needs a queries array of {table, ids}".into(),
+        });
+    };
+    let mut parts: Vec<(Arc<TableEntry>, Vec<usize>)> =
+        Vec::with_capacity(queries.len());
+    for q in queries {
+        let named = q.get("table").and_then(|v| v.as_str());
+        let entry = match registry.resolve(named) {
+            Ok(e) => e,
+            Err(e) => return reject(stream, &e),
+        };
+        // same strict validation as lookup/lookup_bin, shared helper
+        let ids = match validate_ids(&entry, q, "lookup_fanout") {
+            Ok(ids) => ids,
+            Err(e) => return reject(stream, &e),
+        };
+        parts.push((entry, ids));
+    }
+    // frame-cap discipline BEFORE queueing, same as every binary path:
+    // nothing has been written or enqueued when this rejects
+    let dims: Vec<(usize, usize)> = parts
+        .iter()
+        .map(|(e, ids)| (ids.len(), e.backend.d()))
+        .collect();
+    if sections_payload_bytes(&dims)
+        .filter(|&b| b <= protocol::MAX_FRAME as u64)
+        .is_none()
+    {
+        return reject(stream, &WireError::Rejected {
+            code: "too_large".into(),
+            message: format!(
+                "fan-out response over {} sections exceeds the frame cap; \
+                 split the request", parts.len()),
+        });
+    }
+    // queue EVERY table's sub-lookups before waiting on any, so the
+    // tables' batchers (and their shards) reconstruct concurrently --
+    // this is what makes the fan-out one round trip instead of a loop
+    let tickets: Vec<_> =
+        parts.iter().map(|(e, ids)| e.begin_lookup(ids)).collect();
+    let mut answers: Vec<Answer> = Vec::with_capacity(tickets.len());
+    let mut failed: Option<usize> = None;
+    for (k, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            Some(a) => answers.push(a),
+            // remember which section failed, keep draining the rest
+            None => failed = failed.or(Some(k)),
+        }
+    }
+    if let Some(k) = failed {
+        return reject(stream, &batch_failure_err(registry, &parts[k].0));
+    }
+    registry.note_fanout();
+    let sections: Vec<(usize, usize, &[f32])> = parts
+        .iter()
+        .zip(&answers)
+        .map(|((e, ids), a)| (ids.len(), e.backend.d(), a.as_slice()))
+        .collect();
+    write_bin_sections(stream, &sections)
+}
+
+/// `snapshot` (v2 only): serialize the whole registry into a
+/// server-side directory and answer with the manifest path.
+fn snapshot_op(
+    stream: &mut TcpStream,
+    registry: &TableRegistry,
+    j: &Json,
+) -> Result<(), WireError> {
+    let Some(dir) = j.get("dir").and_then(|v| v.as_str()) else {
+        return write_frame(stream, &err_obj(
+            "bad_request", "snapshot needs dir", vec![]).to_string());
+    };
+    match registry.snapshot(std::path::Path::new(dir)) {
+        Ok(manifest) => write_frame(stream, &Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("manifest", Json::str(manifest.to_string_lossy().as_ref())),
+            ("tables", Json::num(registry.len() as f64)),
+        ]).to_string()),
+        Err(e) => write_frame(stream, &err_frame(&e).to_string()),
+    }
+}
+
 /// Counters + ring-buffer latency percentiles for one table.
 fn table_stats_pairs(entry: &TableEntry) -> Vec<(&'static str, Json)> {
     let mut pairs = vec![
@@ -289,10 +439,17 @@ fn stats_op(
 ) -> Result<(), WireError> {
     if version >= 2 {
         if let Some(name) = j.get("table").and_then(|v| v.as_str()) {
-            // one table, flat
-            let entry = match registry.resolve(Some(name)) {
-                Ok(e) => e,
-                Err(e) => return write_frame(stream, &err_frame(&e).to_string()),
+            // one table, flat. `get`, NOT `resolve`: a monitoring poll
+            // must not stamp the LRU clock, or dashboards would make
+            // every table look equally recently used and corrupt the
+            // eviction order.
+            let entry = match registry.get(name) {
+                Some(e) => e,
+                None => {
+                    let e = WireError::NoSuchTable(name.to_string());
+                    return write_frame(
+                        stream, &annotated_err_frame(registry, &e).to_string());
+                }
             };
             let mut pairs = vec![
                 ("ok", Json::Bool(true)),
@@ -317,13 +474,31 @@ fn stats_op(
                       Json::obj(table_stats_pairs(e))))
             .collect(),
     );
-    write_frame(stream, &Json::obj(vec![
+    let mut pairs = vec![
         ("ok", Json::Bool(true)),
         ("requests", Json::num(requests as f64)),
         ("ids_served", Json::num(ids_served as f64)),
         ("batches", Json::num(batches as f64)),
-        ("tables", per_table),
-    ]).to_string())
+        ("fanout_requests", Json::num(registry.fanout_count() as f64)),
+        // memory-pressure telemetry: resident total, optional budget,
+        // eviction count, and which tables are currently evicted
+        ("resident_bytes", Json::num(registry.resident_bytes() as f64)),
+        ("evictions", Json::num(registry.eviction_count() as f64)),
+    ];
+    if let Some(b) = registry.config().mem_budget_bytes {
+        pairs.push(("mem_budget_bytes", Json::num(b as f64)));
+    }
+    let evicted = registry.evicted_tables();
+    if !evicted.is_empty() {
+        pairs.push(("evicted", Json::Obj(
+            evicted
+                .into_iter()
+                .map(|(name, count)| (name, Json::num(count as f64)))
+                .collect(),
+        )));
+    }
+    pairs.push(("tables", per_table));
+    write_frame(stream, &Json::obj(pairs).to_string())
 }
 
 fn tables_op(stream: &mut TcpStream, registry: &TableRegistry) -> Result<(), WireError> {
@@ -368,10 +543,22 @@ fn unload_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Resu
             "bad_request", "unload needs table", vec![]).to_string());
     };
     match registry.unload(name) {
-        Ok(()) => write_frame(stream, &Json::obj(vec![
-            ("ok", Json::Bool(true)),
-        ]).to_string()),
-        Err(e) => write_frame(stream, &err_frame(&e).to_string()),
+        // the outcome makes the default-table hand-off explicit on the
+        // wire: unloading the default re-elects (and names) a new one
+        Ok(out) => {
+            let mut pairs = vec![
+                ("ok", Json::Bool(true)),
+                ("was_default", Json::Bool(out.was_default)),
+            ];
+            if let Some(d) = &out.new_default {
+                pairs.push(("default", Json::str(d.as_str())));
+            }
+            write_frame(stream, &Json::obj(pairs).to_string())
+        }
+        // annotated: unloading an already-evicted table answers
+        // no_such_table with "evicted": true, same as the lookup paths
+        Err(e) => write_frame(
+            stream, &annotated_err_frame(registry, &e).to_string()),
     }
 }
 
@@ -413,16 +600,21 @@ fn handle_conn(
                 lookup_op(&mut stream, &registry, &j, version, false)?
             }
             Some("stats") => stats_op(&mut stream, &registry, &j, version)?,
-            Some(op @ ("tables" | "load" | "unload")) if version < 2 => {
+            Some(op @ ("tables" | "load" | "unload" | "snapshot"
+                       | "lookup_fanout")) if version < 2 => {
                 write_frame(&mut stream, &err_obj(
                     "needs_v2",
                     &format!("op {op} requires protocol v2 (send \"v\": 2)"),
                     vec![])
                     .to_string())?
             }
+            Some("lookup_fanout") => {
+                fanout_op(&mut stream, &registry, &j, version)?
+            }
             Some("tables") => tables_op(&mut stream, &registry)?,
             Some("load") => load_op(&mut stream, &registry, &j)?,
             Some("unload") => unload_op(&mut stream, &registry, &j)?,
+            Some("snapshot") => snapshot_op(&mut stream, &registry, &j)?,
             Some("shutdown") => {
                 stop.store(true, Ordering::Relaxed);
                 write_frame(&mut stream, &Json::obj(vec![
@@ -648,6 +840,57 @@ mod tests {
         let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
         assert_eq!(resp.get("code").and_then(|v| v.as_str()), Some("malformed"));
         let mut c = Client::connect(addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+
+    /// One fan-out frame must answer exactly what per-table lookups
+    /// would, section for section -- and reject the WHOLE frame, typed,
+    /// when any section is bad (all-or-nothing), leaving the connection
+    /// healthy.
+    #[test]
+    fn fanout_matches_per_table_lookups_and_rejects_whole_frame() {
+        let emb = toy_emb(40, 8, 4, 3); // d = 12
+        let registry = TableRegistry::new(ServerConfig::default());
+        registry.insert("emb", Arc::new(emb)).unwrap();
+        registry
+            .insert("dense", Arc::new(DenseTable::new(
+                TensorF::zeros(vec![40, 6])).unwrap()))
+            .unwrap();
+        let server = Arc::new(EmbeddingServer::new(registry));
+        let (addr, h) = spawn_server(server.clone());
+        let mut c = Client::connect(addr).unwrap();
+        let a = c.lookup_bin("emb", &[0, 5, 39]).unwrap();
+        let b = c.lookup_bin("dense", &[1, 2]).unwrap();
+        let sections = c.lookup_fanout(&[
+            ("emb", &[0, 5, 39][..]),
+            ("dense", &[1, 2][..]),
+            ("emb", &[][..]), // empty section stays self-describing
+        ]).unwrap();
+        assert_eq!(sections.len(), 3);
+        assert_eq!(sections[0], a, "section 0 must match lookup_bin");
+        assert_eq!(sections[1], b, "section 1 must match lookup_bin");
+        assert_eq!((sections[2].n(), sections[2].d()), (0, 12));
+        // all-or-nothing: a bad id in ANY section rejects the frame
+        match c.lookup_fanout(&[("emb", &[0][..]), ("dense", &[999][..])]) {
+            Err(WireError::Rejected { code, .. }) => assert_eq!(code, "bad_ids"),
+            other => panic!("{other:?}"),
+        }
+        match c.lookup_fanout(&[("nope", &[0][..])]) {
+            Err(WireError::NoSuchTable(t)) => assert_eq!(t, "nope"),
+            other => panic!("{other:?}"),
+        }
+        // the connection survived both rejections
+        assert_eq!(c.lookup_fanout(&[("emb", &[7][..])]).unwrap()[0],
+                   c.lookup_bin("emb", &[7]).unwrap());
+        // only complete fan-out frames are counted
+        let st = c.stats(None).unwrap();
+        assert_eq!(st.get("fanout_requests").unwrap().as_usize(), Some(2));
+        // the op is v2-only: a v1 frame gets the typed needs_v2 code
+        let mut raw = TcpStream::connect(addr).unwrap();
+        write_frame(&mut raw, r#"{"op":"lookup_fanout","queries":[]}"#).unwrap();
+        let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+        assert_eq!(resp.get("code").and_then(|v| v.as_str()), Some("needs_v2"));
         c.shutdown().unwrap();
         h.join().unwrap();
     }

@@ -179,6 +179,7 @@ pub(crate) fn parse_ids(j: &Json, op: &str) -> Result<Option<Vec<usize>>, WireEr
 
 // ---- framing helpers (shared by server and client) ----
 
+/// Read one length-prefixed JSON frame (enforces the 64 MiB cap).
 pub fn read_frame(stream: &mut TcpStream) -> Result<String, WireError> {
     let mut len = [0u8; 4];
     stream.read_exact(&mut len)?;
@@ -192,6 +193,7 @@ pub fn read_frame(stream: &mut TcpStream) -> Result<String, WireError> {
         .map_err(|e| WireError::Malformed(format!("frame not utf-8: {e}")))
 }
 
+/// Write one length-prefixed JSON frame (refuses oversized payloads).
 pub fn write_frame(stream: &mut TcpStream, payload: &str) -> Result<(), WireError> {
     if payload.len() as u64 >= u32::MAX as u64 {
         // fail loudly instead of wrapping the u32 length prefix
@@ -241,17 +243,72 @@ pub(crate) fn write_bin_rows(
 /// Server side: reject a binary lookup. The `u32::MAX` sentinel can never
 /// be a real frame length (an empty id list legitimately answers with a
 /// zero-length v1 payload / 8-byte v2 header). Under v2 the sentinel is
-/// followed by a JSON error frame so the rejection is self-describing;
-/// v1 keeps the bare sentinel.
-pub(crate) fn write_bin_reject(
+/// followed by the caller-built JSON error frame (usually
+/// [`err_frame`], possibly annotated -- e.g. `"evicted": true` on a
+/// `no_such_table` rejection) so the rejection is self-describing; v1
+/// keeps the bare sentinel.
+pub(crate) fn write_bin_reject_frame(
     stream: &mut TcpStream,
     version: u64,
-    e: &WireError,
+    frame: &Json,
 ) -> Result<(), WireError> {
     stream.write_all(&u32::MAX.to_le_bytes())?;
     if version >= 2 {
-        write_frame(stream, &err_frame(e).to_string())?;
+        write_frame(stream, &frame.to_string())?;
     }
+    Ok(())
+}
+
+/// Total payload bytes of a multi-section binary response over sections
+/// of `(n, d)` rows; `None` when a section or the sum overflows.
+pub(crate) fn sections_payload_bytes(
+    sections: &[(usize, usize)],
+) -> Option<u64> {
+    let mut total = 4u64; // u32 section count
+    for &(n, d) in sections {
+        let rows = (n as u64).checked_mul(d as u64)?.checked_mul(4)?;
+        total = total.checked_add(8)?.checked_add(rows)?;
+    }
+    Some(total)
+}
+
+/// Server side: encode a multi-section binary response (the
+/// `lookup_fanout` op, v2-only). Layout after the u32 LE frame length:
+/// a `u32 section_count`, then per section a `u32 n | u32 d` header
+/// followed by `n*d` f32 LE row-major values -- every section
+/// self-describing, sections in request order. The whole frame obeys the
+/// same `MAX_FRAME` cap as every other response; callers pre-check via
+/// [`sections_payload_bytes`] so nothing is written on the reject path.
+pub(crate) fn write_bin_sections(
+    stream: &mut TcpStream,
+    sections: &[(usize, usize, &[f32])],
+) -> Result<(), WireError> {
+    let dims: Vec<(usize, usize)> =
+        sections.iter().map(|&(n, d, _)| (n, d)).collect();
+    let bytes = sections_payload_bytes(&dims)
+        .filter(|&b| b <= MAX_FRAME as u64)
+        .ok_or_else(|| WireError::Malformed(format!(
+            "fan-out response over {} sections exceeds the frame cap \
+             ({MAX_FRAME})", sections.len())))?;
+    if sections.len() as u64 > u32::MAX as u64
+        || dims.iter().any(|&(n, d)| n as u64 > u32::MAX as u64
+                                     || d as u64 > u32::MAX as u64)
+    {
+        return Err(WireError::Malformed(
+            "fan-out section dims exceed u32".into()));
+    }
+    let mut payload = Vec::with_capacity(bytes as usize);
+    payload.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for &(n, d, flat) in sections {
+        debug_assert_eq!(flat.len(), n * d);
+        payload.extend_from_slice(&(n as u32).to_le_bytes());
+        payload.extend_from_slice(&(d as u32).to_le_bytes());
+        for v in flat {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+    stream.write_all(&payload)?;
     Ok(())
 }
 
@@ -269,30 +326,37 @@ impl Rows {
         Rows { n, d, data }
     }
 
+    /// Number of rows.
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Embedding width (from the response header).
     pub fn d(&self) -> usize {
         self.d
     }
 
+    /// True when the result holds no rows.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
 
+    /// Row `i` as a `d`-length slice.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.d..(i + 1) * self.d]
     }
 
+    /// All rows as one flat row-major slice.
     pub fn as_slice(&self) -> &[f32] {
         &self.data
     }
 
+    /// Iterate rows as slices.
     pub fn iter(&self) -> impl Iterator<Item = &[f32]> {
         self.data.chunks_exact(self.d.max(1))
     }
 
+    /// Convert into one `Vec<f32>` per row.
     pub fn into_vecs(self) -> Vec<Vec<f32>> {
         let d = self.d.max(1);
         self.data.chunks_exact(d).map(|r| r.to_vec()).collect()
@@ -302,13 +366,24 @@ impl Rows {
 /// One served table as reported by the `tables` op.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TableDesc {
+    /// Registry name lookups route by.
     pub name: String,
+    /// Backend scheme tag ("dpq", "dense", "scalar_quant", "low_rank").
     pub kind: String,
+    /// Number of rows; valid ids are `0..vocab`.
     pub vocab: usize,
+    /// Embedding width.
     pub d: usize,
+    /// Inference-time storage in bits (codes + side tables).
     pub storage_bits: usize,
+    /// Server-resident bytes (`storage_bits` rounded up to bytes), the
+    /// unit the registry memory budget is enforced in.
+    pub resident_bytes: usize,
+    /// Compression ratio vs an f32 table of the same shape.
     pub compression_ratio: f64,
+    /// Batcher shards range-partitioning this table's id space.
     pub shards: usize,
+    /// True for the table v1 (and table-less v2) frames route to.
     pub is_default: bool,
 }
 
@@ -326,6 +401,7 @@ impl TableDesc {
             vocab: get("vocab"),
             d: get("d"),
             storage_bits: get("storage_bits"),
+            resident_bytes: get("resident_bytes"),
             compression_ratio: j
                 .get("compression_ratio")
                 .and_then(|v| v.as_f64())
@@ -344,6 +420,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a server (TCP_NODELAY on).
     pub fn connect(addr: std::net::SocketAddr) -> Result<Self, WireError> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
@@ -373,6 +450,20 @@ impl Client {
     }
 
     /// JSON lookup against a named table.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use dpq_embed::server::Client;
+    ///
+    /// let mut c = Client::connect("127.0.0.1:7878".parse().unwrap())?;
+    /// let rows = c.lookup("emb", &[0, 1, 2])?;
+    /// assert_eq!(rows.n(), 3);
+    /// for row in rows.iter() {
+    ///     println!("{} values: {:?}", rows.d(), row);
+    /// }
+    /// # Ok::<(), dpq_embed::server::WireError>(())
+    /// ```
     pub fn lookup(&mut self, table: &str, ids: &[usize]) -> Result<Rows, WireError> {
         let j = self.request(Self::lookup_req("lookup", table, ids))?;
         let vecs = j
@@ -417,6 +508,26 @@ impl Client {
     /// width than the response header, the error is a typed
     /// [`WireError::WidthMismatch`] -- and the payload is still drained,
     /// so the connection stays usable.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use dpq_embed::server::{Client, WireError};
+    ///
+    /// let mut c = Client::connect("127.0.0.1:7878".parse().unwrap())?;
+    /// let ids = [3usize, 7, 11];
+    /// // caller owns the buffer: d = 64 here, no per-call allocation
+    /// let mut out = vec![0.0f32; ids.len() * 64];
+    /// match c.lookup_into("emb", &ids, &mut out) {
+    ///     Ok(d) => assert_eq!(d, 64),
+    ///     // a wrong-width buffer is a typed error, not a truncated read
+    ///     Err(WireError::WidthMismatch { expected, got }) => {
+    ///         eprintln!("buffer sized for d={expected}, table has d={got}");
+    ///     }
+    ///     Err(e) => return Err(e),
+    /// }
+    /// # Ok::<(), dpq_embed::server::WireError>(())
+    /// ```
     pub fn lookup_into(
         &mut self,
         table: &str,
@@ -439,12 +550,20 @@ impl Client {
         Ok(rows.d())
     }
 
-    fn read_bin_response(&mut self) -> Result<Rows, WireError> {
+    /// Read one binary response's payload, shared by every binary op:
+    /// handles the `u32::MAX` rejection sentinel (decodes the JSON error
+    /// frame that follows it into a typed error), enforces the frame
+    /// cap, and requires at least `min_len` bytes of header.
+    fn read_bin_payload(
+        &mut self,
+        min_len: usize,
+        what: &str,
+    ) -> Result<Vec<u8>, WireError> {
         let mut len4 = [0u8; 4];
         self.stream.read_exact(&mut len4)?;
         let len32 = u32::from_le_bytes(len4);
         if len32 == u32::MAX {
-            // v2 rejection sentinel: a JSON error frame follows
+            // rejection sentinel: a JSON error frame follows (v2)
             let j = Json::parse(&read_frame(&mut self.stream)?)
                 .map_err(WireError::Malformed)?;
             return Err(WireError::from_response(&j));
@@ -453,12 +572,19 @@ impl Client {
         if len > MAX_FRAME {
             return Err(WireError::Malformed(format!("frame too large: {len}")));
         }
-        if len < 8 {
+        if len < min_len {
             return Err(WireError::Malformed(format!(
-                "binary frame of {len} bytes is shorter than the (n, d) header")));
+                "{what} frame of {len} bytes is shorter than its \
+                 {min_len}-byte header")));
         }
         let mut buf = vec![0u8; len];
         self.stream.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn read_bin_response(&mut self) -> Result<Rows, WireError> {
+        let buf = self.read_bin_payload(8, "binary lookup")?;
+        let len = buf.len();
         let n = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
         let d = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
         if len != 8 + n * d * 4 {
@@ -470,6 +596,104 @@ impl Client {
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect();
         Ok(Rows::new(n, d, data))
+    }
+
+    /// Cross-table fan-out: one request frame carrying `(table, ids)`
+    /// pairs, answered as ONE multi-section binary response -- a
+    /// recommender-style "user + item + context" lookup costs a single
+    /// round trip instead of one per table. Sections come back in
+    /// request order, each self-describing (`(n, d)` header), and each
+    /// is bit-identical to what a per-table
+    /// [`lookup_bin`](Self::lookup_bin) would have returned. The op is
+    /// all-or-nothing: any unknown table or out-of-range id rejects the
+    /// whole frame, typed.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use dpq_embed::server::Client;
+    ///
+    /// let mut c = Client::connect("127.0.0.1:7878".parse().unwrap())?;
+    /// let sections = c.lookup_fanout(&[
+    ///     ("user", &[42][..]),
+    ///     ("item", &[7, 9, 11][..]),
+    /// ])?;
+    /// assert_eq!(sections.len(), 2);
+    /// assert_eq!(sections[1].n(), 3);
+    /// # Ok::<(), dpq_embed::server::WireError>(())
+    /// ```
+    pub fn lookup_fanout(
+        &mut self,
+        queries: &[(&str, &[usize])],
+    ) -> Result<Vec<Rows>, WireError> {
+        let qs = Json::arr(
+            queries
+                .iter()
+                .map(|(t, ids)| Json::obj(vec![
+                    ("table", Json::str(*t)),
+                    ("ids", Json::arr(
+                        ids.iter().map(|&i| Json::num(i as f64)).collect())),
+                ]))
+                .collect(),
+        );
+        write_frame(&mut self.stream, &Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("lookup_fanout")),
+            ("queries", qs),
+        ]).to_string())?;
+        let buf = self.read_bin_payload(4, "fan-out")?;
+        let len = buf.len();
+        let s = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+        let mut off = 4usize;
+        let mut out = Vec::with_capacity(s.min(1024));
+        for k in 0..s {
+            if off + 8 > len {
+                return Err(WireError::Malformed(format!(
+                    "fan-out frame truncated in section {k}'s header")));
+            }
+            let n = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+                as usize;
+            let d = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap())
+                as usize;
+            off += 8;
+            let bytes = (n as u64)
+                .checked_mul(d as u64)
+                .and_then(|x| x.checked_mul(4))
+                .filter(|&b| off as u64 + b <= len as u64)
+                .ok_or_else(|| WireError::Malformed(format!(
+                    "fan-out section {k} (n={n}, d={d}) overruns the frame")))?
+                as usize;
+            let data = buf[off..off + bytes]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            out.push(Rows::new(n, d, data));
+            off += bytes;
+        }
+        if off != len {
+            return Err(WireError::Malformed(format!(
+                "fan-out frame has {} trailing bytes after {s} sections",
+                len - off)));
+        }
+        Ok(out)
+    }
+
+    /// Ask the server to snapshot its whole registry into the
+    /// **server-side** directory `dir` (artifact files + versioned
+    /// manifest); returns the manifest path on the server's filesystem.
+    /// `repro serve --restore <manifest>` rebuilds the registry from it.
+    pub fn admin_snapshot(&mut self, dir: &str) -> Result<String, WireError> {
+        let j = self.request(Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("snapshot")),
+            ("dir", Json::str(dir)),
+        ]))?;
+        j.get("manifest")
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| {
+                WireError::Malformed("snapshot response without manifest".into())
+            })
     }
 
     /// List the served tables (name, kind, shape, storage, default flag).
@@ -525,6 +749,7 @@ impl Client {
         Ok(())
     }
 
+    /// Ask the server to exit (drains the acknowledgement).
     pub fn shutdown(&mut self) -> Result<(), WireError> {
         write_frame(&mut self.stream, &Json::obj(vec![
             ("v", Json::num(VERSION as f64)),

@@ -1,6 +1,7 @@
 //! [`TableRegistry`]: named [`EmbeddingBackend`] tables with hot
-//! `load`/`unload`/`list` admin ops, per-table [`Stats`], and per-table
-//! batcher shards.
+//! `load`/`unload`/`list` admin ops, per-table [`Stats`], per-table
+//! batcher shards, an optional memory budget with LRU eviction, and
+//! whole-registry snapshot/restore.
 //!
 //! # Sharding
 //!
@@ -19,11 +20,52 @@
 //!
 //! `insert`/`load_dpq` spawn the table's shard threads immediately;
 //! `unload` closes the shard queues (failing any queued lookups, typed)
-//! and joins the threads. Dropping the registry shuts everything down.
+//! and joins the threads. Unloading the **default** table explicitly
+//! re-elects the first remaining table (in name order) as the new
+//! default -- the returned [`UnloadOutcome`] names it, and the wire-level
+//! `unload` response carries it -- so the default name can never dangle
+//! on a table that no longer exists. Dropping the registry shuts
+//! everything down.
+//!
+//! # Memory budget and LRU eviction
+//!
+//! With [`ServerConfig::mem_budget_bytes`] set, the registry tracks the
+//! resident bytes of every table (via
+//! [`EmbeddingBackend::storage_bits`]) and, whenever an insert pushes
+//! the total over the budget, evicts least-recently-looked-up tables
+//! until the total fits again. Two tables are never evicted: the
+//! **default table** (pinned -- v1 clients route to it) and the table
+//! being inserted (evicting a table the operator just loaded would make
+//! the load a no-op). The budget is therefore *soft*: if only pinned
+//! tables remain, the registry stays over budget and keeps serving --
+//! and if the pinned tables ALONE exceed the budget (an insert bigger
+//! than the whole budget), nothing is evicted at all, since no sequence
+//! of evictions could reach the budget anyway.
+//! Lookups to an evicted table fail with the same typed
+//! `no_such_table` rejection as any unknown table (the JSON error frame
+//! additionally carries `"evicted": true`); reloading the table under
+//! the same name clears the marker. Eviction counts are surfaced by the
+//! aggregate `stats` op.
+//!
+//! # Snapshot / restore
+//!
+//! [`TableRegistry::snapshot`] serializes every resident table into a
+//! directory (one artifact file per table, via
+//! [`EmbeddingBackend::save_artifact`]) plus a versioned
+//! `manifest.json` recording table names, backend kinds, artifact
+//! files, shapes, the default table, and the serving config.
+//! [`TableRegistry::restore`] rebuilds a registry from the manifest
+//! that serves **bit-identical** rows (every artifact format roundtrips
+//! exactly). Every file -- artifacts and manifest alike -- is published
+//! with a write-then-rename, so a crash mid-snapshot never leaves a
+//! half-written file that an older manifest in the same directory could
+//! still point at. See
+//! `docs/WIRE_PROTOCOL.md` for the `snapshot` wire op and
+//! `docs/ARCHITECTURE.md` for the operational story.
 
 use std::collections::BTreeMap;
-use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -31,9 +73,40 @@ use std::time::Duration;
 use crate::backend::{self, EmbeddingBackend};
 use crate::dpq::CompressedEmbedding;
 use crate::jsonx::Json;
-use crate::server::batcher::{run_batch, Answer, BatchQueue, Pending};
+use crate::server::batcher::{run_batch, Answer, BatchQueue, DoneSlot, Pending};
 use crate::server::protocol::WireError;
 use crate::server::stats::Stats;
+
+/// Manifest `format` tag written by [`TableRegistry::snapshot`].
+pub const SNAPSHOT_FORMAT: &str = "dpq_registry_snapshot";
+
+/// Per-process sequence for snapshot temp-file names: two concurrent
+/// `snapshot` ops into the same directory must not share a temp path,
+/// or one could atomically rename the other's half-written bytes into
+/// place (the pid covers concurrent processes).
+static SNAP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A temp-file name unique to this process + call.
+fn snap_tmp_name(stem: &str) -> String {
+    let seq = SNAP_SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("{stem}.{}-{seq}.tmp", std::process::id())
+}
+
+/// Manifest schema version written by [`TableRegistry::snapshot`] and
+/// required by [`TableRegistry::restore`].
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// File name of the snapshot manifest inside a snapshot directory.
+pub const SNAPSHOT_MANIFEST: &str = "manifest.json";
+
+/// Most eviction-history entries kept (and serialized into aggregate
+/// `stats` frames): under rotating table names the history would
+/// otherwise grow -- and bloat every stats response -- forever. Oldest
+/// evictions are forgotten first; the total [`eviction_count`]
+/// (a plain counter) is never truncated.
+///
+/// [`eviction_count`]: TableRegistry::eviction_count
+pub const EVICTED_HISTORY: usize = 64;
 
 /// Serving knobs shared by every table in a registry.
 #[derive(Clone, Copy, Debug)]
@@ -43,21 +116,104 @@ pub struct ServerConfig {
     /// Batcher shards per table; the id space is range-partitioned
     /// across them. 1 keeps the single-queue zero-copy fast path.
     pub shards_per_table: usize,
+    /// Optional resident-bytes budget across all tables; exceeding it on
+    /// insert evicts least-recently-looked-up tables (the default table
+    /// and the table being inserted are pinned). `None` never evicts.
+    pub mem_budget_bytes: Option<u64>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 64, shards_per_table: 1 }
+        ServerConfig {
+            max_batch: 64,
+            shards_per_table: 1,
+            mem_budget_bytes: None,
+        }
     }
+}
+
+/// What [`TableRegistry::unload`] did to the default-table assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnloadOutcome {
+    /// The unloaded table was the default table.
+    pub was_default: bool,
+    /// The registry's default table AFTER the unload (`None` when the
+    /// registry is now empty). If `was_default`, this is the re-elected
+    /// default: the first remaining table in name order.
+    pub new_default: Option<String>,
 }
 
 /// One served table: backend + stats + its batcher shards.
 pub struct TableEntry {
+    /// Registry name this table is served under.
     pub name: String,
+    /// The row store behind this table.
     pub backend: Arc<dyn EmbeddingBackend>,
+    /// Serving counters and batch-latency percentiles for this table.
     pub stats: Arc<Stats>,
+    /// Logical LRU clock tick of the last lookup routed here (ticks come
+    /// from the owning registry's clock; larger = more recent).
+    last_used: AtomicU64,
     shards: Vec<Arc<BatchQueue>>,
     handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// An in-flight lookup whose sub-requests are already queued on the
+/// table's batcher shards. [`LookupTicket::wait`] blocks for the shard
+/// answers and assembles them in id order. Splitting enqueue from wait
+/// lets the cross-table fan-out op queue EVERY table's sub-lookups
+/// before waiting on any, so the tables' batchers reconstruct
+/// concurrently.
+pub(crate) enum LookupTicket {
+    /// Empty id list: answered without touching any shard.
+    Empty,
+    /// Whole request on one shard (also the 1-shard fast path): the
+    /// shard's buffer view IS the answer, zero-copy.
+    Single { n: usize, d: usize, done: Arc<DoneSlot> },
+    /// Ids split across shards: `waits` holds `(shard, n_sub, slot)` per
+    /// touched shard, `positions[shard][k]` the original slot of that
+    /// shard's k-th id.
+    Sharded {
+        n: usize,
+        d: usize,
+        waits: Vec<(usize, usize, Arc<DoneSlot>)>,
+        positions: Vec<Vec<usize>>,
+    },
+}
+
+impl LookupTicket {
+    /// Block for the shard answers and assemble them in request order.
+    /// `None` means a batcher failed the request (table unloading /
+    /// server bug path); callers turn it into a typed error.
+    pub(crate) fn wait(self) -> Option<Answer> {
+        match self {
+            LookupTicket::Empty => Some(Answer::Owned(Vec::new())),
+            LookupTicket::Single { n, d, done } => {
+                let rows = crate::server::batcher::wait_rows(&done);
+                if rows.as_slice().len() != n * d {
+                    return None;
+                }
+                Some(Answer::View(rows))
+            }
+            LookupTicket::Sharded { n, d, waits, positions } => {
+                let mut flat = vec![0.0f32; n * d];
+                let mut failed = false;
+                for (s, n_sub, done) in waits {
+                    let rows = crate::server::batcher::wait_rows(&done);
+                    let got = rows.as_slice();
+                    if got.len() != n_sub * d {
+                        failed = true;
+                        continue; // keep draining the other shards' slots
+                    }
+                    for (k, &pos) in positions[s].iter().enumerate() {
+                        flat[pos * d..(pos + 1) * d]
+                            .copy_from_slice(&got[k * d..(k + 1) * d]);
+                    }
+                }
+                if failed { None } else { Some(Answer::Owned(flat)) }
+            }
+        }
+    }
 }
 
 impl TableEntry {
@@ -96,13 +252,21 @@ impl TableEntry {
             name: name.to_string(),
             backend,
             stats,
+            last_used: AtomicU64::new(0),
             shards,
             handles: Mutex::new(handles),
         })
     }
 
+    /// Number of batcher shards range-partitioning this table's ids.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Bytes this table keeps resident at serve time (codes + side
+    /// tables), the unit the registry's memory budget is enforced in.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.backend.storage_bits() as u64).div_ceil(8)
     }
 
     /// Shard owning `id` under range partitioning.
@@ -111,25 +275,20 @@ impl TableEntry {
         ((id as u128 * self.shards.len() as u128) / vocab as u128) as usize
     }
 
-    /// Route one validated id list through this table's shards and
-    /// assemble the answer in id order. `None` means the batcher failed
-    /// the request (table unloading / server bug path); callers turn it
-    /// into a typed error. Ids MUST already be validated `< vocab`.
-    pub(crate) fn lookup(&self, ids: &[usize]) -> Option<Answer> {
+    /// Queue one validated id list on this table's shards WITHOUT
+    /// waiting; the returned ticket collects the answer. Ids MUST
+    /// already be validated `< vocab`.
+    pub(crate) fn begin_lookup(&self, ids: &[usize]) -> LookupTicket {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         let d = self.backend.d();
         if ids.is_empty() {
-            return Some(Answer::Owned(Vec::new()));
+            return LookupTicket::Empty;
         }
         let n_shards = self.shards.len();
         if n_shards == 1 {
             let (p, done) = Pending::new(ids.to_vec());
             self.shards[0].push(p);
-            let rows = crate::server::batcher::wait_rows(&done);
-            if rows.as_slice().len() != ids.len() * d {
-                return None;
-            }
-            return Some(Answer::View(rows));
+            return LookupTicket::Single { n: ids.len(), d, done };
         }
         let vocab = self.backend.vocab();
         // split ids by owning shard, remembering each id's original slot
@@ -145,14 +304,10 @@ impl TableEntry {
         if let Some(only) = (0..n_shards).find(|&s| sub_ids[s].len() == ids.len()) {
             let (p, done) = Pending::new(std::mem::take(&mut sub_ids[only]));
             self.shards[only].push(p);
-            let rows = crate::server::batcher::wait_rows(&done);
-            if rows.as_slice().len() != ids.len() * d {
-                return None;
-            }
-            return Some(Answer::View(rows));
+            return LookupTicket::Single { n: ids.len(), d, done };
         }
-        // enqueue every non-empty sub-lookup BEFORE waiting on any, so
-        // the shards reconstruct concurrently
+        // enqueue every non-empty sub-lookup BEFORE the caller waits on
+        // any, so the shards reconstruct concurrently
         let mut waits = Vec::new();
         for s in 0..n_shards {
             if sub_ids[s].is_empty() {
@@ -163,21 +318,15 @@ impl TableEntry {
             self.shards[s].push(p);
             waits.push((s, n_sub, done));
         }
-        let mut flat = vec![0.0f32; ids.len() * d];
-        let mut failed = false;
-        for (s, n_sub, done) in waits {
-            let rows = crate::server::batcher::wait_rows(&done);
-            let got = rows.as_slice();
-            if got.len() != n_sub * d {
-                failed = true;
-                continue; // keep draining the other shards' slots
-            }
-            for (k, &pos) in positions[s].iter().enumerate() {
-                flat[pos * d..(pos + 1) * d]
-                    .copy_from_slice(&got[k * d..(k + 1) * d]);
-            }
-        }
-        if failed { None } else { Some(Answer::Owned(flat)) }
+        LookupTicket::Sharded { n: ids.len(), d, waits, positions }
+    }
+
+    /// Route one validated id list through this table's shards and
+    /// assemble the answer in id order. `None` means the batcher failed
+    /// the request (table unloading / server bug path); callers turn it
+    /// into a typed error. Ids MUST already be validated `< vocab`.
+    pub(crate) fn lookup(&self, ids: &[usize]) -> Option<Answer> {
+        self.begin_lookup(ids).wait()
     }
 
     /// Close this table's shards and join their threads (idempotent).
@@ -200,6 +349,7 @@ impl TableEntry {
             ("vocab", Json::num(self.backend.vocab() as f64)),
             ("d", Json::num(self.backend.d() as f64)),
             ("storage_bits", Json::num(self.backend.storage_bits() as f64)),
+            ("resident_bytes", Json::num(self.resident_bytes() as f64)),
             ("compression_ratio",
              Json::num(backend::compression_ratio(&*self.backend))),
             ("shards", Json::num(self.shards.len() as f64)),
@@ -208,20 +358,34 @@ impl TableEntry {
 }
 
 /// Named tables behind one server: lookup routing, default-table
-/// resolution for v1 frames, and hot admin ops.
+/// resolution for v1 frames, hot admin ops, LRU eviction under a memory
+/// budget, and snapshot/restore.
 pub struct TableRegistry {
     cfg: ServerConfig,
     tables: RwLock<BTreeMap<String, Arc<TableEntry>>>,
     default: Mutex<Option<String>>,
+    /// Eviction history: table name -> (times evicted, tick of the last
+    /// eviction). A name is removed when a table is (re)inserted under
+    /// it; capped at [`EVICTED_HISTORY`] entries (oldest forgotten).
+    evicted: Mutex<BTreeMap<String, (u64, u64)>>,
+    /// Logical LRU clock; every successful `resolve` stamps the entry.
+    clock: AtomicU64,
+    evictions: AtomicU64,
+    fanout_requests: AtomicU64,
     stop: Arc<AtomicBool>,
 }
 
 impl TableRegistry {
+    /// Empty registry with the given serving knobs.
     pub fn new(cfg: ServerConfig) -> Self {
         TableRegistry {
             cfg,
             tables: RwLock::new(BTreeMap::new()),
             default: Mutex::new(None),
+            evicted: Mutex::new(BTreeMap::new()),
+            clock: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            fanout_requests: AtomicU64::new(0),
             stop: Arc::new(AtomicBool::new(false)),
         }
     }
@@ -231,9 +395,17 @@ impl TableRegistry {
         self.stop.clone()
     }
 
+    /// The serving knobs this registry was built with.
+    pub fn config(&self) -> ServerConfig {
+        self.cfg
+    }
+
     /// Register `backend` as table `name` and start its batcher shards.
     /// The first inserted table becomes the default (v1 frames route to
-    /// it) until [`set_default`](Self::set_default) says otherwise.
+    /// it) until [`set_default`](Self::set_default) says otherwise. If a
+    /// memory budget is configured and this insert pushes the resident
+    /// total over it, least-recently-looked-up tables are evicted (the
+    /// default table and `name` itself are pinned) before this returns.
     pub fn insert(
         &self,
         name: &str,
@@ -267,21 +439,108 @@ impl TableRegistry {
         // lock order as `unload`: tables, then default) -- electing it
         // after releasing the lock could race an `unload` of this very
         // table and leave `default` naming a table that no longer
-        // exists, permanently breaking v1 routing.
-        let entry = {
+        // exists, permanently breaking v1 routing. Budget enforcement
+        // runs under the same lock so two concurrent inserts can't both
+        // conclude "still under budget".
+        let (entry, evicted) = {
             let mut map = self.tables.write().unwrap();
             if map.contains_key(name) {
                 return Err(WireError::TableExists(name.to_string()));
             }
             let entry = TableEntry::spawn(name, backend, &self.cfg, &self.stop);
+            // fresh LRU stamp: a just-inserted table is the most recent
+            entry.last_used.store(
+                self.clock.fetch_add(1, Ordering::Relaxed) + 1,
+                Ordering::Relaxed,
+            );
             map.insert(name.to_string(), entry.clone());
-            let mut def = self.default.lock().unwrap();
-            if def.is_none() {
-                *def = Some(name.to_string());
+            {
+                let mut def = self.default.lock().unwrap();
+                if def.is_none() {
+                    *def = Some(name.to_string());
+                }
             }
-            entry
+            // a reloaded table is no longer "evicted"
+            self.evicted.lock().unwrap().remove(name);
+            let evicted = self.enforce_budget_locked(&mut map, name);
+            (entry, evicted)
         };
+        // join evicted tables' shard threads OUTSIDE the map lock: a
+        // shard mid-batch must not block every other table's lookups
+        for e in evicted {
+            e.stop();
+        }
         Ok(entry)
+    }
+
+    /// Evict least-recently-used tables until the resident total fits
+    /// the budget. Runs under the tables write lock; returns the removed
+    /// entries for the caller to stop outside the lock. The default
+    /// table and `protect` are never evicted, so the budget is soft when
+    /// only those remain.
+    fn enforce_budget_locked(
+        &self,
+        map: &mut BTreeMap<String, Arc<TableEntry>>,
+        protect: &str,
+    ) -> Vec<Arc<TableEntry>> {
+        let Some(budget) = self.cfg.mem_budget_bytes else {
+            return Vec::new();
+        };
+        // The default cannot change while the tables write lock is held
+        // (set_default/unload both need the tables lock), so one read
+        // is enough.
+        let def = self.default.lock().unwrap().clone();
+        let pinned = |e: &TableEntry| {
+            def.as_deref() == Some(e.name.as_str()) || e.name == protect
+        };
+        // Zero-gain guard: if the pinned tables ALONE exceed the budget
+        // (e.g. the fresh insert is bigger than the whole budget), no
+        // sequence of evictions can reach it -- destroying every
+        // unpinned table would take clients down for nothing. Stay
+        // (softly) over budget with everything resident instead.
+        let pinned_bytes: u64 = map
+            .values()
+            .filter(|e| pinned(e))
+            .map(|e| e.resident_bytes())
+            .sum();
+        if pinned_bytes > budget {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        loop {
+            let total: u64 = map.values().map(|e| e.resident_bytes()).sum();
+            if total <= budget {
+                break;
+            }
+            let victim = map
+                .values()
+                .filter(|e| !pinned(e))
+                .min_by_key(|e| e.last_used.load(Ordering::Relaxed))
+                .map(|e| e.name.clone());
+            let Some(name) = victim else {
+                break; // only pinned tables left: stay (softly) over budget
+            };
+            let entry = map.remove(&name).expect("victim chosen from this map");
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            let tick = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+            {
+                let mut ev = self.evicted.lock().unwrap();
+                let slot = ev.entry(name).or_insert((0, 0));
+                slot.0 += 1;
+                slot.1 = tick;
+                while ev.len() > EVICTED_HISTORY {
+                    // forget the stalest eviction, keep the history bounded
+                    let oldest = ev
+                        .iter()
+                        .min_by_key(|(_, (_, t))| *t)
+                        .map(|(k, _)| k.clone())
+                        .expect("non-empty map");
+                    ev.remove(&oldest);
+                }
+            }
+            out.push(entry);
+        }
+        out
     }
 
     /// Hot-load a `.dpq` artifact as a new table (the `load` admin op).
@@ -294,51 +553,69 @@ impl TableRegistry {
     }
 
     /// Drop a table: later lookups get `no_such_table`; lookups already
-    /// queued on its shards are failed, typed, not stranded. If the
-    /// default table is unloaded the first remaining table (by name)
-    /// becomes the default.
-    pub fn unload(&self, name: &str) -> Result<(), WireError> {
-        let entry = {
+    /// queued on its shards are failed, typed, not stranded. Unloading
+    /// the default table explicitly re-elects the first remaining table
+    /// (by name) as default; the returned [`UnloadOutcome`] reports the
+    /// default in force after the unload.
+    pub fn unload(&self, name: &str) -> Result<UnloadOutcome, WireError> {
+        let (entry, outcome) = {
             let mut map = self.tables.write().unwrap();
             let entry = map
                 .remove(name)
                 .ok_or_else(|| WireError::NoSuchTable(name.to_string()))?;
             let mut def = self.default.lock().unwrap();
-            if def.as_deref() == Some(name) {
+            let was_default = def.as_deref() == Some(name);
+            if was_default {
                 *def = map.keys().next().cloned();
             }
-            entry
+            (entry, UnloadOutcome { was_default, new_default: def.clone() })
         };
         entry.stop();
-        Ok(())
+        Ok(outcome)
     }
 
+    /// The table registered as `name`, if any.
     pub fn get(&self, name: &str) -> Option<Arc<TableEntry>> {
         self.tables.read().unwrap().get(name).cloned()
     }
 
     /// Route a request's optional table name: `None` means the default
-    /// table (v1 frames and table-less v2 frames).
+    /// table (v1 frames and table-less v2 frames). A successful resolve
+    /// stamps the table's LRU clock -- this is the "recently looked up"
+    /// signal eviction ranks by.
     pub fn resolve(&self, name: Option<&str>) -> Result<Arc<TableEntry>, WireError> {
-        match name {
+        let entry = match name {
             Some(n) => self
                 .get(n)
-                .ok_or_else(|| WireError::NoSuchTable(n.to_string())),
+                .ok_or_else(|| WireError::NoSuchTable(n.to_string()))?,
             None => {
                 let def = self.default.lock().unwrap().clone();
                 let def = def.ok_or_else(|| {
                     WireError::NoSuchTable("(default: no tables loaded)".into())
                 })?;
                 self.get(&def)
-                    .ok_or_else(|| WireError::NoSuchTable(def))
+                    .ok_or_else(|| WireError::NoSuchTable(def))?
             }
-        }
+        };
+        self.touch(&entry);
+        Ok(entry)
     }
 
+    /// Stamp `entry` as most-recently-used.
+    pub(crate) fn touch(&self, entry: &TableEntry) {
+        entry.last_used.store(
+            self.clock.fetch_add(1, Ordering::Relaxed) + 1,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// The current default table name (v1 frames route here).
     pub fn default_name(&self) -> Option<String> {
         self.default.lock().unwrap().clone()
     }
 
+    /// Make `name` the default table. The default is pinned: eviction
+    /// never removes it.
     pub fn set_default(&self, name: &str) -> Result<(), WireError> {
         // existence check and assignment under the tables lock (same
         // order as insert/unload) so a racing unload cannot leave the
@@ -356,12 +633,306 @@ impl TableRegistry {
         self.tables.read().unwrap().values().cloned().collect()
     }
 
+    /// Number of resident tables.
     pub fn len(&self) -> usize {
         self.tables.read().unwrap().len()
     }
 
+    /// True when no tables are resident.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Total resident bytes across all tables (the quantity the memory
+    /// budget bounds).
+    pub fn resident_bytes(&self) -> u64 {
+        self.list().iter().map(|e| e.resident_bytes()).sum()
+    }
+
+    /// Tables evicted under memory pressure since startup.
+    pub fn eviction_count(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// True if a table named `name` was evicted and not since reloaded.
+    pub fn was_evicted(&self, name: &str) -> bool {
+        self.evicted.lock().unwrap().contains_key(name)
+    }
+
+    /// Eviction history as `(table name, times evicted)`, for tables not
+    /// since reloaded (the most recent [`EVICTED_HISTORY`] names).
+    pub fn evicted_tables(&self) -> Vec<(String, u64)> {
+        self.evicted
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, (count, _))| (k.clone(), *count))
+            .collect()
+    }
+
+    /// Count one cross-table fan-out frame (surfaced by `stats`).
+    pub(crate) fn note_fanout(&self) {
+        self.fanout_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cross-table fan-out frames served since startup.
+    pub fn fanout_count(&self) -> u64 {
+        self.fanout_requests.load(Ordering::Relaxed)
+    }
+
+    // ---- snapshot / restore ----
+
+    /// Serialize the whole registry into `dir`: one artifact file per
+    /// table plus a versioned [`SNAPSHOT_MANIFEST`]. Returns the
+    /// manifest path. Every file (artifacts included) is written to a
+    /// temp file and renamed, so a crash mid-snapshot never publishes a
+    /// half-written file; after the manifest is published, artifact
+    /// files from PREVIOUS snapshots into the same directory that the
+    /// new manifest no longer references are removed (best-effort), so
+    /// a scheduled snapshot into a fixed directory does not grow
+    /// without bound as tables come and go. Backends are immutable once
+    /// registered, so a snapshot taken mid-serving is consistent;
+    /// tables loaded or unloaded while the snapshot runs may or may not
+    /// be included. Concurrent snapshots into the SAME directory are
+    /// never torn (unique temp names, and GC leaves `.tmp` files alone)
+    /// but may garbage-collect each other's just-published artifacts --
+    /// give each schedule its own directory.
+    pub fn snapshot(&self, dir: &Path) -> Result<PathBuf, WireError> {
+        let fail = |what: String| {
+            move |e: &dyn std::fmt::Display| WireError::Rejected {
+                code: "snapshot_failed".into(),
+                message: format!("{what}: {e}"),
+            }
+        };
+        std::fs::create_dir_all(dir)
+            .map_err(|e| fail(format!("create {dir:?}"))(&e))?;
+        let default = self.default_name();
+        let entries = self.list();
+        let mut tables = Vec::new();
+        let mut fresh: Vec<String> = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let file = format!(
+                "t{i:03}_{}.{}", sanitize_file_stem(&e.name), e.backend.kind());
+            // Artifacts get the same write-then-rename discipline as the
+            // manifest: re-snapshotting into the SAME directory must
+            // never half-overwrite an artifact the surviving (old)
+            // manifest still points at -- a same-shape partial rewrite
+            // would pass every size/shape check on restore and silently
+            // serve wrong bytes.
+            let tmp = dir.join(snap_tmp_name(&file));
+            if let Err(err) = e.backend.save_artifact(&tmp) {
+                let _ = std::fs::remove_file(&tmp); // no tmp litter on failure
+                return Err(fail(format!("serialize table {:?}", e.name))(&err));
+            }
+            std::fs::rename(&tmp, dir.join(&file))
+                .map_err(|err| fail(format!("publish table {:?}", e.name))(&err))?;
+            fresh.push(file.clone());
+            tables.push(Json::obj(vec![
+                ("name", Json::str(e.name.as_str())),
+                ("kind", Json::str(e.backend.kind())),
+                ("file", Json::str(file.as_str())),
+                ("vocab", Json::num(e.backend.vocab() as f64)),
+                ("d", Json::num(e.backend.d() as f64)),
+                ("storage_bits", Json::num(e.backend.storage_bits() as f64)),
+            ]));
+        }
+        let mut pairs = vec![
+            ("format", Json::str(SNAPSHOT_FORMAT)),
+            ("v", Json::num(SNAPSHOT_VERSION as f64)),
+            ("max_batch", Json::num(self.cfg.max_batch as f64)),
+            ("shards_per_table", Json::num(self.cfg.shards_per_table as f64)),
+        ];
+        if let Some(b) = self.cfg.mem_budget_bytes {
+            pairs.push(("mem_budget_bytes", Json::num(b as f64)));
+        }
+        if let Some(d) = &default {
+            // `default` and `list` are separate reads; only record a
+            // default the snapshot actually contains
+            if entries.iter().any(|e| &e.name == d) {
+                pairs.push(("default", Json::str(d.as_str())));
+            }
+        }
+        pairs.push(("tables", Json::arr(tables)));
+        let manifest = dir.join(SNAPSHOT_MANIFEST);
+        let tmp = dir.join(snap_tmp_name(SNAPSHOT_MANIFEST));
+        if let Err(e) = std::fs::write(&tmp, Json::obj(pairs).to_string()) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(fail("write manifest".into())(&e));
+        }
+        std::fs::rename(&tmp, &manifest)
+            .map_err(|e| fail("publish manifest".into())(&e))?;
+        // Best-effort garbage collection AFTER the manifest is live:
+        // snapshot artifacts (`t<index>_*`) that the fresh manifest does
+        // not reference are from previous snapshots into this directory
+        // (unloaded tables) and would otherwise accumulate forever under
+        // a snapshot schedule. Temp files are deliberately NOT collected
+        // here -- a concurrent snapshot's in-flight `.tmp` must survive
+        // (that is the whole point of the unique temp names); failed
+        // writes remove their own tmp above, so only a hard crash can
+        // leave one behind.
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if name.ends_with(".tmp") {
+                    continue;
+                }
+                let b = name.as_bytes();
+                // `t` + 1..n digits + `_` (format! pads to 3 but grows
+                // past 999 tables, so match any digit run)
+                let digits = b
+                    .get(1..)
+                    .map(|rest| {
+                        rest.iter().take_while(|c| c.is_ascii_digit()).count()
+                    })
+                    .unwrap_or(0);
+                let stale_artifact = b.first() == Some(&b't')
+                    && digits >= 1
+                    && b.get(1 + digits) == Some(&b'_')
+                    && !fresh.iter().any(|f| f == name);
+                if stale_artifact {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        Ok(manifest)
+    }
+
+    /// Parse and validate a snapshot manifest; `path` may be the
+    /// manifest file or the snapshot directory containing it.
+    fn read_manifest(path: &Path) -> Result<(Json, PathBuf), WireError> {
+        let manifest = if path.is_dir() {
+            path.join(SNAPSHOT_MANIFEST)
+        } else {
+            path.to_path_buf()
+        };
+        let fail = |m: String| WireError::Rejected {
+            code: "restore_failed".into(),
+            message: m,
+        };
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| fail(format!("read {manifest:?}: {e}")))?;
+        let j = Json::parse(&text)
+            .map_err(|e| fail(format!("parse {manifest:?}: {e}")))?;
+        if j.get("format").and_then(|v| v.as_str()) != Some(SNAPSHOT_FORMAT) {
+            return Err(fail(format!(
+                "{manifest:?} is not a {SNAPSHOT_FORMAT} manifest")));
+        }
+        match j.get("v").and_then(|v| v.as_usize()) {
+            Some(v) if v as u64 == SNAPSHOT_VERSION => {}
+            other => {
+                return Err(WireError::Rejected {
+                    code: "unsupported_snapshot".into(),
+                    message: format!(
+                        "snapshot version {other:?}; this build reads \
+                         v{SNAPSHOT_VERSION}"),
+                })
+            }
+        }
+        Ok((j, manifest))
+    }
+
+    /// The [`ServerConfig`] a snapshot manifest records, so callers can
+    /// apply per-field CLI overrides before [`restore`](Self::restore).
+    pub fn snapshot_config(path: &Path) -> Result<ServerConfig, WireError> {
+        let (j, _) = Self::read_manifest(path)?;
+        Ok(Self::config_from_manifest(&j))
+    }
+
+    fn config_from_manifest(j: &Json) -> ServerConfig {
+        let def = ServerConfig::default();
+        ServerConfig {
+            max_batch: j
+                .get("max_batch")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(def.max_batch)
+                .max(1),
+            shards_per_table: j
+                .get("shards_per_table")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(def.shards_per_table)
+                .max(1),
+            // same floor the CLI's --mem-budget parser enforces: a
+            // negative/NaN/zero value from a hand-edited manifest must
+            // not arm a 0-byte budget that evicts everything unpinned
+            mem_budget_bytes: j
+                .get("mem_budget_bytes")
+                .and_then(|v| v.as_f64())
+                .filter(|b| b.is_finite() && *b >= 1.0)
+                .map(|b| b as u64),
+        }
+    }
+
+    /// Rebuild a registry from a snapshot manifest (`path` may be the
+    /// manifest file or its directory). Every table is reloaded from its
+    /// recorded artifact and serves bytes **bit-identical** to the
+    /// snapshotted registry; the default table and serving config are
+    /// restored too (`cfg` overrides the recorded config wholesale when
+    /// given). The memory budget is NOT enforced against the snapshot's
+    /// own tables -- all of them are restored even if they exceed it
+    /// (a snapshot can legitimately be softly over budget); the budget
+    /// applies to loads made after the restore. Artifact shapes are
+    /// cross-checked against the manifest so a swapped file fails
+    /// loudly instead of serving the wrong table.
+    pub fn restore(path: &Path, cfg: Option<ServerConfig>) -> Result<TableRegistry, WireError> {
+        let (j, manifest) = Self::read_manifest(path)?;
+        let fail = |m: String| WireError::Rejected {
+            code: "restore_failed".into(),
+            message: m,
+        };
+        let cfg = cfg.unwrap_or_else(|| Self::config_from_manifest(&j));
+        // Budget enforcement is DISABLED while the snapshot's tables are
+        // re-inserted: a snapshot can legitimately be (softly) over its
+        // own budget, and restore must rebuild exactly the manifest's
+        // contents -- evicting one of them mid-rebuild would break the
+        // bit-identical guarantee. The budget is re-armed below, so it
+        // governs every load made after the restore completes.
+        let mut reg = TableRegistry::new(ServerConfig {
+            mem_budget_bytes: None,
+            ..cfg
+        });
+        let base = manifest
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let tables = j
+            .get("tables")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| fail("manifest without tables".into()))?;
+        let want_default = j.get("default").and_then(|v| v.as_str());
+        for t in tables {
+            let name = t
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| fail("table entry without name".into()))?;
+            let kind = t
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| fail(format!("table {name:?} without kind")))?;
+            let file = t
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| fail(format!("table {name:?} without file")))?;
+            let backend = backend::load_backend(kind, &base.join(file))
+                .map_err(|e| fail(format!("load table {name:?}: {e}")))?;
+            for (key, got) in [("vocab", backend.vocab()), ("d", backend.d())] {
+                if let Some(want) = t.get(key).and_then(|v| v.as_usize()) {
+                    if want != got {
+                        return Err(fail(format!(
+                            "table {name:?}: artifact has {key}={got} but \
+                             manifest declares {want}")));
+                    }
+                }
+            }
+            reg.insert(name, backend)?;
+        }
+        if let Some(d) = want_default {
+            reg.set_default(d).map_err(|_| fail(format!(
+                "manifest default {d:?} is not among the snapshot's tables")))?;
+        }
+        // re-arm the budget for post-restore loads
+        reg.cfg.mem_budget_bytes = cfg.mem_budget_bytes;
+        Ok(reg)
     }
 
     /// Stop every table's shards and join their threads (idempotent).
@@ -375,6 +946,20 @@ impl TableRegistry {
     }
 }
 
+/// File-name-safe version of a table name for snapshot artifacts (the
+/// manifest keeps the exact name; the index prefix keeps stems unique).
+fn sanitize_file_stem(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
 impl Drop for TableRegistry {
     fn drop(&mut self) {
         self.shutdown();
@@ -385,6 +970,8 @@ impl Drop for TableRegistry {
 mod tests {
     use super::*;
     use crate::backend::DenseTable;
+    use crate::dpq::toy_embedding;
+    use crate::quant::{LowRank, ScalarQuant};
     use crate::tensor::TensorF;
     use crate::util::Rng;
 
@@ -398,7 +985,11 @@ mod tests {
     }
 
     fn cfg(shards: usize) -> ServerConfig {
-        ServerConfig { max_batch: 8, shards_per_table: shards }
+        ServerConfig {
+            max_batch: 8,
+            shards_per_table: shards,
+            mem_budget_bytes: None,
+        }
     }
 
     #[test]
@@ -422,12 +1013,22 @@ mod tests {
         );
         reg.set_default("b").unwrap();
         assert_eq!(reg.resolve(None).unwrap().name, "b");
-        // unloading the default falls back to the first remaining table
-        reg.unload("b").unwrap();
+        // unloading the default explicitly re-elects the first remaining
+        // table; the outcome names it so callers never see a dangling
+        // default
+        let out = reg.unload("b").unwrap();
+        assert_eq!(out, UnloadOutcome {
+            was_default: true,
+            new_default: Some("a".into()),
+        });
         assert_eq!(reg.default_name().as_deref(), Some("a"));
         assert_eq!(reg.unload("b").unwrap_err(),
                    WireError::NoSuchTable("b".into()));
         assert_eq!(reg.list().len(), 1);
+        // unloading the last table leaves no default, explicitly
+        let out = reg.unload("a").unwrap();
+        assert_eq!(out, UnloadOutcome { was_default: true, new_default: None });
+        assert!(reg.default_name().is_none());
         reg.shutdown();
     }
 
@@ -496,6 +1097,241 @@ mod tests {
             counts[s] += 1;
         }
         assert_eq!(counts, [25, 25, 25, 25]);
+        reg.shutdown();
+    }
+
+    /// LRU eviction: the budget fires on insert, evicts the
+    /// least-recently-LOOKED-UP table (not insertion order), pins the
+    /// default, and marks the victim so operators can tell "evicted"
+    /// from "never existed".
+    #[test]
+    fn eviction_is_lru_and_pins_default() {
+        // three 10x4 dense tables at 160 bytes each; budget fits two
+        let bytes_per = 10 * 4 * 4u64;
+        let reg = TableRegistry::new(ServerConfig {
+            max_batch: 8,
+            shards_per_table: 1,
+            mem_budget_bytes: Some(2 * bytes_per),
+        });
+        reg.insert("base", dense(10, 4, 1).0).unwrap(); // default, pinned
+        reg.insert("hot", dense(10, 4, 2).0).unwrap();
+        assert_eq!(reg.eviction_count(), 0);
+        assert_eq!(reg.resident_bytes(), 2 * bytes_per);
+        // touch hot, then base: "hot" is now the stalest unpinned table
+        // (base is more recent AND pinned as default)
+        reg.resolve(Some("hot")).unwrap();
+        reg.resolve(Some("base")).unwrap();
+        // inserting a third table exceeds the budget; "base" is pinned
+        // (default) and "cold" is the fresh insert, so "hot" is evicted
+        // even though it was inserted after "base"
+        reg.insert("cold", dense(10, 4, 3).0).unwrap();
+        assert_eq!(reg.eviction_count(), 1);
+        assert!(reg.was_evicted("hot"));
+        assert!(reg.get("hot").is_none());
+        assert!(reg.get("base").is_some(), "default must be pinned");
+        assert!(reg.get("cold").is_some(), "fresh insert must be pinned");
+        assert_eq!(
+            reg.resolve(Some("hot")).unwrap_err(),
+            WireError::NoSuchTable("hot".into())
+        );
+        assert_eq!(reg.evicted_tables(), vec![("hot".into(), 1)]);
+        // reloading under the same name clears the eviction marker
+        reg.resolve(Some("cold")).unwrap(); // make "cold" recent
+        reg.insert("hot", dense(10, 4, 2).0).unwrap();
+        assert!(!reg.was_evicted("hot"));
+        assert_eq!(reg.eviction_count(), 2, "reload re-evicted the LRU");
+        // the budget is soft: with every survivor pinned, a huge insert
+        // stays resident and the registry stays over budget
+        let reg2 = TableRegistry::new(ServerConfig {
+            max_batch: 8,
+            shards_per_table: 1,
+            mem_budget_bytes: Some(bytes_per / 2),
+        });
+        reg2.insert("only", dense(10, 4, 5).0).unwrap();
+        assert_eq!(reg2.len(), 1);
+        assert!(reg2.resident_bytes() > bytes_per / 2);
+        // zero-gain guard: when the pinned tables alone exceed the
+        // budget, evicting unpinned tables cannot reach it -- so nothing
+        // is evicted and every table stays resident
+        let reg4 = TableRegistry::new(ServerConfig {
+            max_batch: 8,
+            shards_per_table: 1,
+            mem_budget_bytes: Some(3 * bytes_per),
+        });
+        reg4.insert("base", dense(10, 4, 6).0).unwrap(); // default, pinned
+        reg4.insert("y", dense(10, 4, 7).0).unwrap();
+        // "big" alone exceeds the budget: pinned (base + big) > budget,
+        // so "y" must NOT be sacrificed for nothing
+        let mut rng = Rng::new(8);
+        let big = Arc::new(DenseTable::new(TensorF {
+            shape: vec![100, 4],
+            data: (0..400).map(|_| rng.normal()).collect(),
+        }).unwrap());
+        reg4.insert("big", big).unwrap();
+        assert_eq!(reg4.eviction_count(), 0,
+                   "zero-gain eviction must not fire");
+        assert!(reg4.get("y").is_some());
+        assert!(reg4.resident_bytes() > 3 * bytes_per);
+        reg4.shutdown();
+
+        // genuine LRU ordering: with TWO unpinned candidates, the one
+        // whose last lookup is older goes, not the one inserted earlier
+        let reg3 = TableRegistry::new(ServerConfig {
+            max_batch: 8,
+            shards_per_table: 1,
+            mem_budget_bytes: Some(3 * bytes_per),
+        });
+        reg3.insert("base", dense(10, 4, 6).0).unwrap();
+        reg3.insert("t1", dense(10, 4, 7).0).unwrap();
+        reg3.insert("t2", dense(10, 4, 8).0).unwrap();
+        // t2 was inserted last (freshest), but touching t1 makes t2 the
+        // least-recently-looked-up candidate
+        reg3.resolve(Some("t1")).unwrap();
+        reg3.insert("t3", dense(10, 4, 9).0).unwrap();
+        assert!(reg3.was_evicted("t2"), "LRU victim must be t2");
+        assert!(reg3.get("t1").is_some());
+        assert_eq!(reg3.eviction_count(), 1);
+        reg.shutdown();
+        reg2.shutdown();
+        reg3.shutdown();
+    }
+
+    /// Snapshot -> restore must rebuild every backend kind bit-exactly,
+    /// preserve the default table, and roundtrip the serving config.
+    #[test]
+    fn snapshot_restore_all_kinds_bit_exact() {
+        let dir = std::env::temp_dir().join("dpq_registry_snapshot_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::new(3);
+        let table = TensorF {
+            shape: vec![40, 8],
+            data: (0..40 * 8).map(|_| rng.normal()).collect(),
+        };
+        let reg = TableRegistry::new(ServerConfig {
+            max_batch: 16,
+            shards_per_table: 2,
+            mem_budget_bytes: Some(1 << 20),
+        });
+        reg.insert("dpq", Arc::new(toy_embedding(30, 8, 4, 2, 7))).unwrap();
+        reg.insert("dense", Arc::new(DenseTable::new(table.clone()).unwrap()))
+            .unwrap();
+        reg.insert("sq", Arc::new(ScalarQuant::fit(&table, 6))).unwrap();
+        reg.insert("lr", Arc::new(LowRank::fit(&table, 3))).unwrap();
+        reg.set_default("sq").unwrap();
+        let manifest = reg.snapshot(&dir).unwrap();
+        assert_eq!(manifest, dir.join(SNAPSHOT_MANIFEST));
+
+        // restore from the directory (manifest path works too)
+        let back = TableRegistry::restore(&dir, None).unwrap();
+        assert_eq!(back.default_name().as_deref(), Some("sq"));
+        let cfg = back.config();
+        assert_eq!((cfg.max_batch, cfg.shards_per_table, cfg.mem_budget_bytes),
+                   (16, 2, Some(1 << 20)));
+        assert_eq!(back.len(), 4);
+        for e in reg.list() {
+            let r = back.get(&e.name).expect("restored table");
+            assert_eq!(r.backend.kind(), e.backend.kind());
+            assert_eq!(r.shard_count(), 2);
+            let ids: Vec<usize> =
+                (0..e.backend.vocab()).step_by(3).collect();
+            let d = e.backend.d();
+            let mut a = vec![0.0f32; ids.len() * d];
+            let mut b = vec![0.0f32; ids.len() * d];
+            e.backend.reconstruct_rows_into(&ids, &mut a);
+            r.backend.reconstruct_rows_into(&ids, &mut b);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "restored table {:?} is not bit-identical", e.name
+            );
+        }
+        // a snapshot of the restored registry must agree with the first
+        let dir2 = std::env::temp_dir().join("dpq_registry_snapshot_unit2");
+        let _ = std::fs::remove_dir_all(&dir2);
+        back.snapshot(&dir2).unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join(SNAPSHOT_MANIFEST)).unwrap(),
+                   std::fs::read_to_string(dir2.join(SNAPSHOT_MANIFEST)).unwrap());
+        reg.shutdown();
+        back.shutdown();
+    }
+
+    /// Restore must rebuild EXACTLY the snapshot's tables even when the
+    /// (possibly overridden) budget cannot hold them all -- the budget
+    /// is disarmed during the rebuild and re-armed for loads made
+    /// afterwards, where it evicts with the restored default pinned.
+    #[test]
+    fn restore_ignores_budget_until_after_rebuild() {
+        let dir = std::env::temp_dir().join("dpq_registry_restore_budget");
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = TableRegistry::new(cfg(1));
+        reg.insert("a", dense(10, 4, 1).0).unwrap();
+        reg.insert("b", dense(10, 4, 2).0).unwrap();
+        reg.insert("c", dense(10, 4, 3).0).unwrap();
+        reg.set_default("b").unwrap();
+        reg.snapshot(&dir).unwrap();
+        let bytes_per = 10 * 4 * 4u64;
+        let back = TableRegistry::restore(&dir, Some(ServerConfig {
+            max_batch: 8,
+            shards_per_table: 1,
+            mem_budget_bytes: Some(2 * bytes_per), // fits only 2 of the 3
+        }))
+        .unwrap();
+        // all three tables restored, zero evictions, default preserved
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.eviction_count(), 0);
+        assert_eq!(back.default_name().as_deref(), Some("b"));
+        assert!(back.resident_bytes() > 2 * bytes_per);
+        // the budget is armed for POST-restore loads: the next insert
+        // evicts down to the budget with "b" (default) + "d" (fresh)
+        // pinned, so both restored non-default tables go
+        back.insert("d", dense(10, 4, 4).0).unwrap();
+        assert_eq!(back.eviction_count(), 2);
+        assert!(back.get("b").is_some());
+        assert!(back.get("d").is_some());
+        assert!(back.get("a").is_none() && back.get("c").is_none());
+        assert_eq!(back.resident_bytes(), 2 * bytes_per);
+        reg.shutdown();
+        back.shutdown();
+    }
+
+    #[test]
+    fn restore_rejects_corrupt_manifests() {
+        let dir = std::env::temp_dir().join("dpq_registry_restore_bad");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // missing manifest
+        assert!(TableRegistry::restore(&dir, None).is_err());
+        // wrong format tag
+        std::fs::write(dir.join(SNAPSHOT_MANIFEST), r#"{"format":"nope"}"#)
+            .unwrap();
+        assert!(TableRegistry::restore(&dir, None).is_err());
+        // future version is a typed unsupported_snapshot
+        std::fs::write(
+            dir.join(SNAPSHOT_MANIFEST),
+            format!(r#"{{"format":"{SNAPSHOT_FORMAT}","v":99,"tables":[]}}"#),
+        )
+        .unwrap();
+        match TableRegistry::restore(&dir, None) {
+            Err(WireError::Rejected { code, .. }) => {
+                assert_eq!(code, "unsupported_snapshot")
+            }
+            other => panic!("{other:?}"),
+        }
+        // a manifest whose artifact shape disagrees with the file fails
+        // loudly instead of serving the wrong table
+        let reg = TableRegistry::new(cfg(1));
+        reg.insert("t", dense(10, 4, 1).0).unwrap();
+        reg.snapshot(&dir).unwrap();
+        let text = std::fs::read_to_string(dir.join(SNAPSHOT_MANIFEST)).unwrap();
+        std::fs::write(dir.join(SNAPSHOT_MANIFEST),
+                       text.replace("\"vocab\":10", "\"vocab\":11"))
+            .unwrap();
+        match TableRegistry::restore(&dir, None) {
+            Err(WireError::Rejected { code, message }) => {
+                assert_eq!(code, "restore_failed");
+                assert!(message.contains("vocab"), "{message}");
+            }
+            other => panic!("{other:?}"),
+        }
         reg.shutdown();
     }
 }

@@ -6,15 +6,21 @@
 
 use anyhow::{bail, Context, Result};
 
+/// Row-major f32 tensor (shape `[]` is a scalar of one element).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorF {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major values; `data.len()` equals the product of `shape`.
     pub data: Vec<f32>,
 }
 
+/// Row-major i32 tensor (ids, codes, labels).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorI {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major values; `data.len()` equals the product of `shape`.
     pub data: Vec<i32>,
 }
 
@@ -23,6 +29,7 @@ fn numel(shape: &[usize]) -> usize {
 }
 
 impl TensorF {
+    /// Build a tensor, checking `data.len()` against the shape product.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
         if numel(&shape) != data.len() {
             bail!("shape {:?} != data len {}", shape, data.len());
@@ -30,15 +37,18 @@ impl TensorF {
         Ok(TensorF { shape, data })
     }
 
+    /// All-zeros tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = numel(&shape);
         TensorF { shape, data: vec![0.0; n] }
     }
 
+    /// Rank-0 tensor holding one value.
     pub fn scalar(v: f32) -> Self {
         TensorF { shape: vec![], data: vec![v] }
     }
 
+    /// Total number of elements.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
@@ -49,19 +59,23 @@ impl TensorF {
         &self.data[i * cols..(i + 1) * cols]
     }
 
+    /// Mutable row view for a 2-D tensor.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let cols = self.shape[1];
         &mut self.data[i * cols..(i + 1) * cols]
     }
 
+    /// Leading dimension of a 2-D tensor.
     pub fn rows(&self) -> usize {
         self.shape[0]
     }
 
+    /// Trailing dimension of a 2-D tensor.
     pub fn cols(&self) -> usize {
         self.shape[1]
     }
 
+    /// Convert into an XLA literal of the same shape.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         if self.shape.is_empty() {
@@ -72,6 +86,7 @@ impl TensorF {
         Ok(lit.reshape(&dims)?)
     }
 
+    /// Copy an f32 XLA literal back into a tensor.
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = literal_dims(lit)?;
         let data = lit.to_vec::<f32>().context("literal not f32")?;
@@ -93,6 +108,7 @@ impl TensorF {
 }
 
 impl TensorI {
+    /// Build a tensor, checking `data.len()` against the shape product.
     pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
         if numel(&shape) != data.len() {
             bail!("shape {:?} != data len {}", shape, data.len());
@@ -100,19 +116,23 @@ impl TensorI {
         Ok(TensorI { shape, data })
     }
 
+    /// Rank-0 tensor holding one value.
     pub fn scalar(v: i32) -> Self {
         TensorI { shape: vec![], data: vec![v] }
     }
 
+    /// Leading dimension of a 2-D tensor.
     pub fn rows(&self) -> usize {
         self.shape[0]
     }
 
+    /// Rows view for a 2-D tensor.
     pub fn row(&self, i: usize) -> &[i32] {
         let cols = self.shape[1];
         &self.data[i * cols..(i + 1) * cols]
     }
 
+    /// Convert into an XLA literal of the same shape.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         if self.shape.is_empty() {
@@ -122,6 +142,7 @@ impl TensorI {
         Ok(lit.reshape(&dims)?)
     }
 
+    /// Copy an i32 XLA literal back into a tensor.
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = literal_dims(lit)?;
         let data = lit.to_vec::<i32>().context("literal not i32")?;

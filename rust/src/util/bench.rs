@@ -49,13 +49,18 @@ pub fn record(name: &str, mean_s: f64, stddev_s: f64, iters: usize) {
 
 /// One benchmark measurement.
 pub struct Measurement {
+    /// Benchmark name (also the JSON-line `bench` field).
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Standard deviation of the per-iteration seconds.
     pub stddev_s: f64,
 }
 
 impl Measurement {
+    /// Human-readable one-liner with auto-scaled units.
     pub fn report(&self) -> String {
         let (scaled, unit) = scale(self.mean_s);
         let (sd, sd_unit) = scale(self.stddev_s);
@@ -65,6 +70,7 @@ impl Measurement {
         )
     }
 
+    /// Iterations per second implied by the mean.
     pub fn per_sec(&self) -> f64 {
         1.0 / self.mean_s.max(1e-12)
     }

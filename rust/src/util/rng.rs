@@ -9,6 +9,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a generator (any u64, including 0, is fine).
     pub fn new(seed: u64) -> Self {
         // SplitMix64 expansion of the seed into the 256-bit state.
         let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -27,6 +28,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ salt.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output of the generator.
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
             .wrapping_mul(5)

@@ -58,6 +58,7 @@ fn multi_table_v2_routing_bit_exact_across_thread_counts() {
     let registry = TableRegistry::new(ServerConfig {
         max_batch: 32,
         shards_per_table: 2,
+        ..ServerConfig::default()
     });
     registry.insert("dpq", dpq_backend.clone()).unwrap();
     registry.insert("lr", lr.clone()).unwrap();

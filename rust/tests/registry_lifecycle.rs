@@ -1,0 +1,236 @@
+//! Registry lifecycle acceptance tests (no artifacts needed):
+//!
+//! * **snapshot -> restore**: a 2-table registry (DPQ + LowRank) is
+//!   snapshotted over the wire (`snapshot` op), the server is torn down,
+//!   and a registry restored from the manifest serves bytes
+//!   BIT-identical to the pre-snapshot server -- including one
+//!   cross-table fan-out frame spanning both tables, which must match
+//!   the per-table `lookup_bin` answers exactly.
+//! * **memory budget / LRU eviction**: eviction fires when a hot `load`
+//!   pushes the resident total past `--mem-budget`, evicts the
+//!   least-recently-looked-up table, pins the default, marks the victim
+//!   in `stats` (and on the rejection frame as `"evicted": true`), and
+//!   the server keeps serving the surviving tables -- a lookup to the
+//!   evicted table is a typed `no_such_table`, never a wedged batcher.
+
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+
+use dpq_embed::backend::EmbeddingBackend;
+use dpq_embed::dpq::toy_embedding;
+use dpq_embed::jsonx::Json;
+use dpq_embed::quant::LowRank;
+use dpq_embed::server::{
+    read_frame, write_frame, Client, EmbeddingServer, Rows, ServerConfig,
+    TableRegistry, WireError, SNAPSHOT_MANIFEST,
+};
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::Rng;
+
+fn spawn(server: Arc<EmbeddingServer>)
+    -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+fn bits_equal(a: &Rows, b: &Rows) -> bool {
+    a.n() == b.n()
+        && a.d() == b.d()
+        && a.as_slice().iter().zip(b.as_slice())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn snapshot_restore_serves_bit_identical_bytes_and_fanout_matches() {
+    let dir = std::env::temp_dir().join("dpq_lifecycle_snapshot");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // two backends with different widths: DPQ d = 12, LowRank d = 20
+    let dpq = toy_embedding(300, 16, 4, 3, 5);
+    let mut rng = Rng::new(17);
+    let table = TensorF {
+        shape: vec![120, 20],
+        data: (0..120 * 20).map(|_| rng.normal()).collect(),
+    };
+    let lr = LowRank::fit(&table, 5);
+
+    let registry = TableRegistry::new(ServerConfig {
+        max_batch: 32,
+        shards_per_table: 2,
+        mem_budget_bytes: None,
+    });
+    registry.insert("dpq", Arc::new(dpq)).unwrap();
+    registry.insert("lr", Arc::new(lr)).unwrap();
+    registry.set_default("lr").unwrap();
+
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    let dpq_ids: Vec<usize> = (0..64).map(|i| (i * 37) % 300).collect();
+    let lr_ids: Vec<usize> = (0..32).map(|i| (i * 11) % 120).collect();
+    let before_dpq = c.lookup_bin("dpq", &dpq_ids).unwrap();
+    let before_lr = c.lookup_bin("lr", &lr_ids).unwrap();
+
+    // acceptance: one fan-out frame spanning both tables matches the
+    // per-table lookups exactly
+    let sections = c
+        .lookup_fanout(&[("dpq", &dpq_ids[..]), ("lr", &lr_ids[..])])
+        .unwrap();
+    assert_eq!(sections.len(), 2);
+    assert!(bits_equal(&sections[0], &before_dpq),
+            "fan-out dpq section differs from lookup_bin");
+    assert!(bits_equal(&sections[1], &before_lr),
+            "fan-out lr section differs from lookup_bin");
+
+    // live snapshot over the wire, then tear the first server down
+    let manifest = c.admin_snapshot(dir.to_str().unwrap()).unwrap();
+    assert!(manifest.ends_with(SNAPSHOT_MANIFEST), "{manifest}");
+    assert!(std::path::Path::new(&manifest).is_file());
+    c.shutdown().unwrap();
+    h.join().unwrap();
+
+    // restore: same tables, same default, same shard config ...
+    let restored =
+        TableRegistry::restore(std::path::Path::new(&manifest), None).unwrap();
+    assert_eq!(restored.len(), 2);
+    assert_eq!(restored.default_name().as_deref(), Some("lr"));
+    let cfg = restored.config();
+    assert_eq!((cfg.max_batch, cfg.shards_per_table), (32, 2));
+
+    let server2 = Arc::new(EmbeddingServer::new(restored));
+    let (addr2, h2) = spawn(server2.clone());
+    let mut c2 = Client::connect(addr2).unwrap();
+    for t in c2.tables().unwrap() {
+        assert_eq!(t.shards, 2);
+        assert_eq!(t.is_default, t.name == "lr");
+    }
+
+    // ... and bit-identical served bytes, per table and fanned out
+    let after_dpq = c2.lookup_bin("dpq", &dpq_ids).unwrap();
+    let after_lr = c2.lookup_bin("lr", &lr_ids).unwrap();
+    assert!(bits_equal(&after_dpq, &before_dpq),
+            "restored dpq table serves different bytes");
+    assert!(bits_equal(&after_lr, &before_lr),
+            "restored lr table serves different bytes");
+    let sections = c2
+        .lookup_fanout(&[("dpq", &dpq_ids[..]), ("lr", &lr_ids[..])])
+        .unwrap();
+    assert!(bits_equal(&sections[0], &before_dpq));
+    assert!(bits_equal(&sections[1], &before_lr));
+    // restored sections stay self-describing (d from the header)
+    let sections = c2.lookup_fanout(&[("dpq", &dpq_ids[..2])]).unwrap();
+    assert_eq!((sections[0].n(), sections[0].d()), (2, 12));
+
+    c2.shutdown().unwrap();
+    h2.join().unwrap();
+}
+
+#[test]
+fn eviction_fires_at_budget_pins_default_and_stays_serving() {
+    use dpq_embed::backend::DenseTable;
+
+    let dense = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        Arc::new(DenseTable::new(TensorF {
+            shape: vec![10, 4],
+            data: (0..40).map(|_| rng.normal()).collect(),
+        }).unwrap())
+    };
+    let bytes_per_dense = 10 * 4 * 4u64; // 160
+
+    // the hot-loaded DPQ table that will push the registry over budget
+    let hot = toy_embedding(16, 8, 2, 2, 1);
+    let hot_bytes = (EmbeddingBackend::storage_bits(&hot) as u64).div_ceil(8);
+    let hot_path = std::env::temp_dir().join("dpq_lifecycle_hot.dpq");
+    hot.save(&hot_path).unwrap();
+
+    // budget fits both dense tables plus half the hot table: the load
+    // must evict exactly one table to fit
+    let registry = TableRegistry::new(ServerConfig {
+        max_batch: 8,
+        shards_per_table: 1,
+        mem_budget_bytes: Some(2 * bytes_per_dense + hot_bytes / 2),
+    });
+    registry.insert("base", dense(1)).unwrap(); // default -> pinned
+    registry.insert("aux", dense(2)).unwrap();
+
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    // LRU order: touch aux, then base, so aux is the stalest non-default
+    c.lookup_bin("aux", &[0, 1]).unwrap();
+    c.lookup_bin("base", &[2]).unwrap();
+
+    // hot load exceeds the budget -> aux is evicted (base is pinned as
+    // default, "hot" is pinned as the fresh insert)
+    let desc = c.admin_load("hot", hot_path.to_str().unwrap()).unwrap();
+    assert_eq!(desc.kind, "dpq");
+    let names: Vec<String> =
+        c.tables().unwrap().into_iter().map(|t| t.name).collect();
+    assert_eq!(names, vec!["base".to_string(), "hot".to_string()]);
+
+    // a lookup to the evicted table is a typed no_such_table on both
+    // protocols -- not a hang, not a wedged batcher
+    match c.lookup_bin("aux", &[0]) {
+        Err(WireError::NoSuchTable(t)) => assert_eq!(t, "aux"),
+        other => panic!("expected typed no_such_table, got {other:?}"),
+    }
+    match c.lookup("aux", &[0]) {
+        Err(WireError::NoSuchTable(t)) => assert_eq!(t, "aux"),
+        other => panic!("expected typed no_such_table, got {other:?}"),
+    }
+    // the JSON rejection frame distinguishes "evicted" from "never
+    // existed"
+    let mut raw = TcpStream::connect(addr).unwrap();
+    write_frame(&mut raw, r#"{"v":2,"op":"lookup","table":"aux","ids":[0]}"#)
+        .unwrap();
+    let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+    assert_eq!(resp.get("code").and_then(|v| v.as_str()), Some("no_such_table"));
+    assert_eq!(resp.get("evicted").and_then(|v| v.as_bool()), Some(true));
+    write_frame(&mut raw, r#"{"v":2,"op":"lookup","table":"ghost","ids":[0]}"#)
+        .unwrap();
+    let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+    assert_eq!(resp.get("code").and_then(|v| v.as_str()), Some("no_such_table"));
+    assert!(resp.get("evicted").is_none(),
+            "a never-loaded table must not be marked evicted");
+
+    // eviction telemetry in the aggregate stats
+    let st = c.stats(None).unwrap();
+    assert_eq!(st.get("evictions").unwrap().as_usize(), Some(1));
+    assert!(st.get("mem_budget_bytes").unwrap().as_f64().unwrap() > 0.0);
+    assert!(st.get("resident_bytes").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        st.get("evicted").unwrap().get("aux").unwrap().as_usize(), Some(1));
+
+    // the survivors keep serving: default pinned, fresh insert live
+    let row = c.lookup_bin("base", &[9]).unwrap();
+    assert_eq!((row.n(), row.d()), (1, 4));
+    let row = c.lookup_bin("hot", &[15]).unwrap();
+    assert_eq!((row.n(), row.d()), (1, 4));
+
+    // Reloading the evicted name serves again and clears its marker.
+    // This re-insert itself exceeds the budget; "base" is pinned
+    // (default) and "aux" is pinned (fresh insert), so "hot" -- the only
+    // candidate -- is evicted in turn.
+    let mut rng = Rng::new(3);
+    server
+        .registry()
+        .insert("aux", Arc::new(DenseTable::new(TensorF {
+            shape: vec![10, 4],
+            data: (0..40).map(|_| rng.normal()).collect(),
+        }).unwrap()))
+        .unwrap();
+    let st = c.stats(None).unwrap();
+    assert!(st.get("evicted").map(|e| e.get("aux").is_none()).unwrap_or(true),
+            "reload must clear the evicted marker");
+    let row = c.lookup_bin("aux", &[3]).unwrap();
+    assert_eq!((row.n(), row.d()), (1, 4));
+
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}

@@ -1,15 +1,26 @@
 #!/usr/bin/env bash
 # Tier-1 verification (see ROADMAP.md): release build, full test suite,
 # a compile of every bench target and every example so neither can
-# bit-rot, and a second pass over the server integration tests with a
+# bit-rot, a second pass over the server integration tests with a
 # pinned 2-thread worker pool so the multi-table serving path is
-# exercised off the default thread heuristic.
+# exercised off the default thread heuristic, a rustdoc build where a
+# broken intra-doc link is an error, and a docs-coverage check that
+# every file under docs/ is reachable from the README.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
 cargo build --release --examples
-DPQ_THREADS=2 cargo test -q --test multi_table --test server_integration
+DPQ_THREADS=2 cargo test -q --test multi_table --test server_integration \
+    --test registry_lifecycle
+RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps -q
+for f in docs/*.md; do
+    name="$(basename "$f")"
+    if ! grep -q "$name" README.md; then
+        echo "tier1: FAIL — $f is not referenced from README.md" >&2
+        exit 1
+    fi
+done
 cargo bench --no-run
 echo "tier1: OK"

@@ -2,9 +2,9 @@
 //! four tables behind four different backends -- a DPQ codebook, an
 //! 8-bit scalar-quant table, a low-rank factorization, and the dense
 //! baseline -- routed by table name over protocol v2, with hot
-//! load/unload admin ops, cross-table fan-out in one frame, a live
-//! registry snapshot (and offline restore), and per-table latency
-//! stats.
+//! load/unload admin ops, cross-table fan-out in one frame, a spill
+//! tier (demote + transparent reload-on-lookup), a live registry
+//! snapshot (and offline restore), and per-table latency stats.
 //!
 //!     cargo run --release --example multi_table_server
 
@@ -34,11 +34,15 @@ fn main() -> Result<()> {
     let lr = LowRank::fit(&random_table(1000, 48, &mut rng), 8);
     let dense = DenseTable::new(random_table(500, 16, &mut rng))?;
 
-    let registry = TableRegistry::new(ServerConfig {
+    // a spill tier so the demote/transparent-reload demo below works
+    let spill_dir = std::env::temp_dir().join("multi_table_demo_spill");
+    std::fs::create_dir_all(&spill_dir)?;
+    let registry = TableRegistry::open(ServerConfig {
         max_batch: 64,
         shards_per_table: 2, // id space split across two batcher shards
+        spill_dir: Some(spill_dir),
         ..ServerConfig::default()
-    });
+    })?;
     registry.insert("dpq", Arc::new(dpq))?;
     registry.insert("sq8", Arc::new(sq))?;
     registry.insert("lowrank", Arc::new(lr))?;
@@ -94,6 +98,26 @@ fn main() -> Result<()> {
     for (name, rows) in ["dpq", "sq8", "lowrank"].iter().zip(&sections) {
         println!("  {name:<8} {} rows x d={}", rows.n(), rows.d());
     }
+
+    // tiered residency: demote a cold table to the spill tier, watch it
+    // report residency "spilled", then let a lookup transparently
+    // reload it (bit-identical bytes, exactly one promote)
+    let before = c.lookup_bin("dense", &[0, 1])?;
+    let file = c.admin_demote("dense")?;
+    let st = c.stats(Some("dense"))?;
+    println!(
+        "\ndemoted \"dense\" -> {} (residency {})",
+        file, st.get("residency").and_then(|v| v.as_str()).unwrap_or("?")
+    );
+    let after = c.lookup_bin("dense", &[0, 1])?;
+    assert_eq!(before, after, "transparent reload must be bit-exact");
+    let st = c.stats(None)?;
+    println!(
+        "  lookup transparently reloaded it: {} spill(s), {} promote(s), \
+         rows bit-identical",
+        st.get("spills").and_then(|v| v.as_usize()).unwrap_or(0),
+        st.get("promotes").and_then(|v| v.as_usize()).unwrap_or(0),
+    );
 
     // snapshot the whole registry live, then restore it offline
     let snap_dir = std::env::temp_dir().join("multi_table_demo_snapshot");

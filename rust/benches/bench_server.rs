@@ -188,6 +188,7 @@ fn main() {
         max_batch: 64,
         shards_per_table: 1,
         mem_budget_bytes: Some(3 * per_bytes + per_bytes / 2),
+        ..ServerConfig::default()
     });
     registry.insert("t0", Arc::new(small[0].clone())).unwrap();
     let server = Arc::new(EmbeddingServer::new(registry));
@@ -226,4 +227,62 @@ fn main() {
                   reg.eviction_count() as f64 / cycles as f64, 0.0, cycles);
     c.shutdown().unwrap();
     h.join().unwrap();
+
+    // spill tier: cold-promote latency vs resident lookups. Each cycle
+    // demotes the table and pays one transparent reload on the next
+    // lookup; the resident grid is the same lookup with the table hot.
+    section("spill tier: promote_cold vs lookup_resident");
+    let spill_dir = std::env::temp_dir().join("dpq_bench_server_spill");
+    let _ = std::fs::remove_dir_all(&spill_dir);
+    std::fs::create_dir_all(&spill_dir).unwrap();
+    let registry = TableRegistry::open(ServerConfig {
+        max_batch: 64,
+        spill_dir: Some(spill_dir.clone()),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    registry.insert("emb", Arc::new(ce.clone())).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (tx, rx) = mpsc::channel();
+    let s2 = server.clone();
+    let h = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut c = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(13);
+    // resident baseline
+    let iters = 400usize;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let ids: Vec<usize> = (0..16).map(|_| rng.below(n)).collect();
+        c.lookup_bin("emb", &ids).unwrap();
+    }
+    let resident = t0.elapsed().as_secs_f64() / iters as f64;
+    // cold: demote, then the first lookup pays the reload
+    let cold_cycles = 25usize;
+    let mut rng = Rng::new(13);
+    let t0 = Instant::now();
+    for _ in 0..cold_cycles {
+        server.registry().demote("emb").unwrap();
+        let ids: Vec<usize> = (0..16).map(|_| rng.below(n)).collect();
+        c.lookup_bin("emb", &ids).unwrap();
+    }
+    let cold = t0.elapsed().as_secs_f64() / cold_cycles as f64;
+    let reg = server.registry();
+    let (p50, p99) = reg.promote_latency().unwrap_or((0.0, 0.0));
+    println!(
+        "resident lookup {:.1}us vs cold (demote+reload) {:.1}us per \
+         request ({:.1}x); promote p50 {:.1}us p99 {:.1}us over {} promotes",
+        resident * 1e6, cold * 1e6, cold / resident.max(1e-12),
+        p50 * 1e6, p99 * 1e6, reg.promote_count()
+    );
+    bench::record("promote_cold", cold, 0.0, cold_cycles);
+    bench::record("lookup_resident", resident, 0.0, iters);
+    bench::record("lookup_resident_vs_spilled",
+                  cold / resident.max(1e-12), 0.0, cold_cycles);
+    bench::record("promote_p50_s", p50, 0.0, cold_cycles);
+    c.shutdown().unwrap();
+    h.join().unwrap();
+    let _ = std::fs::remove_dir_all(&spill_dir);
 }

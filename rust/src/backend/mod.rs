@@ -53,9 +53,12 @@ pub trait EmbeddingBackend: Send + Sync {
     /// Serialize this backend to `path` in its kind's binary artifact
     /// format, such that [`load_backend`] with the same
     /// [`kind`](Self::kind) reconstructs a backend serving bit-identical
-    /// rows. Registry snapshots (`TableRegistry::snapshot`) call this for
-    /// every resident table. The default refuses, so external impls that
-    /// never snapshot don't have to invent a format.
+    /// rows. Registry snapshots (`TableRegistry::snapshot`) call this
+    /// for every resident table, and the registry's spill tier
+    /// (`--spill-dir` demotion + transparent reload) reuses the exact
+    /// same format -- one serialization path, two lifecycles. The
+    /// default refuses, so external impls that never snapshot or spill
+    /// don't have to invent a format.
     fn save_artifact(&self, path: &Path) -> Result<()> {
         let _ = path;
         bail!(

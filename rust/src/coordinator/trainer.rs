@@ -48,7 +48,7 @@ impl TaskGen {
         let vocab = m.meta_usize("vocab").unwrap_or(0);
         let batch = m.meta_usize("batch").unwrap_or(16);
         let dataset = m.meta_str("dataset").unwrap_or("");
-        let structure = fxhash(dataset);
+        let structure = crate::util::fnv1a64(dataset);
         Ok(match task {
             "lm" => TaskGen::Lm {
                 src: synth::MarkovLm::with_stream(vocab, structure, seed),
@@ -141,15 +141,6 @@ impl TaskGen {
             }
         }
     }
-}
-
-fn fxhash(s: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 /// Result of a training run.

@@ -225,6 +225,41 @@ fn dispatch(args: &[String]) -> Result<()> {
             if max_batch == 0 || shards_per_table == 0 {
                 bail!("--max-batch and --shards must be >= 1");
             }
+            // Spill tier: --spill-dir arms eviction-to-disk + transparent
+            // reload; --spill picks what budget evictions do with victims
+            // (disk = demote, drop = PR-3 discard; the `demote` admin op
+            // works either way as long as a spill dir is set).
+            // Outer None = flag absent; Some(None) = explicitly no spill
+            // tier ("none"/"off" -- the way to drop a spill dir a
+            // --restore manifest recorded, mirroring --mem-budget none);
+            // Some(Some(dir)) = use dir.
+            let spill_dir: Option<Option<std::path::PathBuf>> =
+                match kv.get("spill_dir") {
+                    None => None,
+                    Some(s)
+                        if matches!(s.trim().to_ascii_lowercase().as_str(),
+                                    "none" | "off") =>
+                    {
+                        Some(None)
+                    }
+                    Some(s) => Some(Some(std::path::PathBuf::from(s))),
+                };
+            let spill_on_evict: Option<bool> = match kv.get("spill") {
+                None => None,
+                Some(s) => match s.trim().to_ascii_lowercase().as_str() {
+                    "disk" => Some(true),
+                    "drop" => Some(false),
+                    other => bail!("--spill expects disk|drop, got {other:?}"),
+                },
+            };
+            // (the restore path re-checks this against the merged config
+            // below, since the manifest may itself record a spill dir)
+            if spill_on_evict.is_some()
+                && spill_dir.clone().flatten().is_none()
+                && !kv.contains_key("restore")
+            {
+                bail!("--spill needs --spill-dir (no spill tier configured)");
+            }
             // Outer None = flag absent; Some(None) = explicitly
             // unlimited ("none"/"off"/"0" -- the way to drop a budget a
             // --restore manifest recorded); Some(Some(b)) = b bytes.
@@ -253,6 +288,20 @@ fn dispatch(args: &[String]) -> Result<()> {
                 if let Some(b) = mem_budget {
                     cfg.mem_budget_bytes = b;
                 }
+                if let Some(sd) = spill_dir.clone() {
+                    // Some(None) = --spill-dir none: drop the recorded tier
+                    cfg.spill_dir = sd;
+                }
+                if let Some(on) = spill_on_evict {
+                    cfg.spill_on_evict = on;
+                }
+                // same loud failure as the non-restore path: an explicit
+                // --spill policy with no spill dir anywhere (flag OR
+                // manifest) would otherwise be silently inert
+                if spill_on_evict.is_some() && cfg.spill_dir.is_none() {
+                    bail!("--spill needs a spill tier: pass --spill-dir \
+                           (the restored manifest records none)");
+                }
                 let reg = TableRegistry::restore(manifest, Some(cfg))?;
                 println!(
                     "restored {} table(s) from snapshot {}",
@@ -267,11 +316,16 @@ fn dispatch(args: &[String]) -> Result<()> {
                         take_or(&kv, "embedding", "compressed.dpq"));
                     tables.push(("default".to_string(), path));
                 }
-                TableRegistry::new(ServerConfig {
+                // `open`, not `new`: a configured spill dir that does
+                // not exist must fail loudly at startup, not at the
+                // first eviction
+                TableRegistry::open(ServerConfig {
                     max_batch,
                     shards_per_table,
                     mem_budget_bytes: mem_budget.flatten(),
-                })
+                    spill_dir: spill_dir.flatten(),
+                    spill_on_evict: spill_on_evict.unwrap_or(true),
+                })?
             };
             // `--table` flags load on top of either path (extra tables
             // alongside a restored snapshot are fine)
@@ -294,11 +348,24 @@ fn dispatch(args: &[String]) -> Result<()> {
                     e.shard_count()
                 );
             }
-            if let Some(b) = registry.config().mem_budget_bytes {
+            let cfg = registry.config();
+            if let Some(b) = cfg.mem_budget_bytes {
                 println!(
                     "memory budget: {b} bytes (LRU eviction; the default \
                      table is pinned), {} bytes resident",
                     registry.resident_bytes()
+                );
+            }
+            if let Some(d) = &cfg.spill_dir {
+                println!(
+                    "spill tier: {} (budget evictions {} victims; demoted \
+                     tables reload transparently on lookup)",
+                    d.display(),
+                    if cfg.spill_on_evict {
+                        "demote to disk"
+                    } else {
+                        "drop (--spill drop)"
+                    }
                 );
             }
             println!(
@@ -348,12 +415,19 @@ fn print_usage() {
          \x20 compress   [--artifact P --out F]\n\
          \x20 serve      [--table NAME=F ... --default NAME --addr A\n\
          \x20             --max-batch N --shards N\n\
-         \x20             --mem-budget BYTES|none --restore MANIFEST]\n\
+         \x20             --mem-budget BYTES|none --restore MANIFEST\n\
+         \x20             --spill-dir DIR|none --spill disk|drop]\n\
          \x20            (--table is repeatable: one server, many tables,\n\
          \x20             routed by table name over protocol v2; legacy\n\
          \x20             --embedding F serves one table named \"default\";\n\
          \x20             --mem-budget evicts least-recently-used tables\n\
          \x20             past BYTES (K/M/G suffixes ok, default pinned);\n\
+         \x20             --spill-dir DIR turns eviction into demotion:\n\
+         \x20             victims spill to DIR (must exist) and reload\n\
+         \x20             transparently on the next lookup (\"none\" drops\n\
+         \x20             a tier a --restore manifest recorded); --spill\n\
+         \x20             drop keeps discard-on-evict while still allowing\n\
+         \x20             the `demote` admin op;\n\
          \x20             --restore rebuilds a registry from a snapshot\n\
          \x20             manifest written by the `snapshot` wire op)\n\
          \x20 codes      [--artifact P --steps N]\n\

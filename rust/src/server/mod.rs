@@ -30,7 +30,8 @@
 //! | `stats`         | 1,2 | v2: optional `table`      | counters + `batch_p50_s`/`batch_p99_s` latency (per table) |
 //! | `tables`        | 2   |                           | `{"ok":true,"default":..,"tables":[{name,kind,vocab,d,..},..]}` |
 //! | `load`          | 2   | `table`, `path`           | hot-load a `.dpq` file as a new table |
-//! | `unload`        | 2   | `table`                   | hot-drop a table; reports `was_default` + the default now in force |
+//! | `unload`        | 2   | `table`                   | hot-drop a table (resident or spilled); reports `was_default` + the default now in force |
+//! | `demote`        | 2   | `table`                   | spill a resident table to the `--spill-dir` tier; next lookup reloads it |
 //! | `snapshot`      | 2   | `dir`                     | serialize the registry into a server-side dir, `{"ok":true,"manifest":..}` |
 //! | `shutdown`      | 1,2 |                           | `{"ok":true}`, then the server exits |
 //!
@@ -49,10 +50,12 @@
 //!
 //! **Errors.** Every `{"ok": false}` response carries a machine `"code"`
 //! (`bad_ids`, `no_such_table`, `unsupported_version`, `table_exists`,
-//! `load_failed`, `needs_v2`, `unknown_op`, `internal`, ...) beside the
-//! human `"error"` string; [`Client`] maps codes onto [`WireError`]
-//! variants. Malformed or out-of-range ids are rejected, never clamped
-//! or dropped.
+//! `load_failed`, `reload_failed`, `needs_v2`, `unknown_op`, `internal`,
+//! ...) beside the human `"error"` string; [`Client`] maps codes onto
+//! [`WireError`] variants. Malformed or out-of-range ids are rejected,
+//! never clamped or dropped. A `no_such_table` rejection carries the
+//! three-state `"residency"` field (`evicted` / `spilled` / `lost`)
+//! when the registry knows where the table went.
 //!
 //! # Architecture
 //!
@@ -90,10 +93,11 @@ pub use protocol::{
     read_frame, write_frame, Client, Rows, TableDesc, WireError, VERSION,
 };
 pub use registry::{
-    ServerConfig, TableEntry, TableRegistry, UnloadOutcome, SNAPSHOT_FORMAT,
-    SNAPSHOT_MANIFEST, SNAPSHOT_VERSION,
+    Residency, ServerConfig, SpilledTable, TableEntry, TableRegistry,
+    UnloadOutcome, SNAPSHOT_FORMAT, SNAPSHOT_MANIFEST, SNAPSHOT_VERSION,
+    SPILL_FORMAT, SPILL_MANIFEST,
 };
-pub use stats::Stats;
+pub use stats::{LatencyRing, Stats};
 
 use batcher::Answer;
 use protocol::{
@@ -168,16 +172,30 @@ impl EmbeddingServer {
     }
 }
 
-/// The standard error frame for `e`, annotated with `"evicted": true`
-/// when a `no_such_table` rejection names a table that was evicted under
-/// memory pressure (and not since reloaded) -- operators can tell
-/// "evicted" from "never existed" straight from the rejection.
+/// The standard error frame for `e`, annotated with the three-state
+/// `"residency"` field when a `no_such_table` rejection names a table
+/// the registry knows something about: `"evicted"` (dropped under
+/// memory pressure, not since reloaded), `"spilled"` (demoted to the
+/// spill tier -- seen by requests whose table was demoted mid-flight;
+/// a retry transparently reloads it) or `"lost"` (spilled but its
+/// artifact is gone). For v2 compatibility the legacy boolean
+/// `"evicted": true` still accompanies `"residency": "evicted"`.
 fn annotated_err_frame(registry: &TableRegistry, e: &WireError) -> Json {
     let mut frame = err_frame(e);
     if let WireError::NoSuchTable(t) = e {
-        if registry.was_evicted(t) {
+        let residency = match registry.residency(t) {
+            Some(Residency::Spilled) => Some("spilled"),
+            Some(Residency::Lost) => Some("lost"),
+            Some(Residency::Resident) => None, // raced a reload: retryable
+            None if registry.was_evicted(t) => Some("evicted"),
+            None => None,
+        };
+        if let Some(r) = residency {
             if let Json::Obj(m) = &mut frame {
-                m.insert("evicted".into(), Json::Bool(true));
+                m.insert("residency".into(), Json::str(r));
+                if r == "evicted" {
+                    m.insert("evicted".into(), Json::Bool(true));
+                }
             }
         }
     }
@@ -212,10 +230,13 @@ fn validate_ids(
 }
 
 /// The error for a batcher that failed a request (`wait()` returned
-/// `None`): if the table was unloaded or evicted while the request was
-/// in flight, that is a routine, retryable `no_such_table` (annotated
-/// with `evicted` where applicable) -- only a failure on a table that
-/// is STILL registered is the genuine `internal` bug path.
+/// `None`): if the table was unloaded, evicted or DEMOTED while the
+/// request was in flight, that is a routine, retryable `no_such_table`
+/// (annotated with `residency`/`evicted` where applicable; a demoted
+/// table's retry transparently reloads it) -- only a failure on a table
+/// that is STILL resident is the genuine `internal` bug path. Applies
+/// to whole `lookup_fanout` frames too: one demoted-mid-flight section
+/// rejects the entire frame, keeping the op all-or-nothing.
 fn batch_failure_err(registry: &TableRegistry, entry: &TableEntry) -> WireError {
     match registry.get(&entry.name) {
         Some(current) if std::ptr::eq(&*current, entry) => WireError::Rejected {
@@ -326,7 +347,20 @@ fn fanout_op(
     j: &Json,
     version: u64,
 ) -> Result<(), WireError> {
+    // Settle the budget before EVERY response (answer or rejection):
+    // if a section promoted under frame-wide protection, the registry
+    // may be softly over budget once the frame no longer needs all of
+    // its tables resident. Settling BEFORE the response bytes keeps
+    // the observable rule simple: when a fan-out answer arrives, the
+    // registry is back within budget.
+    let promotes_before = registry.promote_count();
+    let settle = |registry: &TableRegistry| {
+        if registry.promote_count() != promotes_before {
+            registry.enforce_budget();
+        }
+    };
     let reject = |stream: &mut TcpStream, e: &WireError| -> Result<(), WireError> {
+        settle(registry);
         write_bin_reject_frame(stream, version, &annotated_err_frame(registry, e))
     };
     let Some(queries) = j.get("queries").and_then(|v| v.as_arr()) else {
@@ -335,11 +369,23 @@ fn fanout_op(
             message: "lookup_fanout needs a queries array of {table, ids}".into(),
         });
     };
+    // Every table named by the frame is protected from eviction while
+    // the frame's promotions run: under a tight budget, section N's
+    // transparent reload could otherwise demote section M's table and
+    // every retry would re-play the same promote/evict cycle, never
+    // completing. The registry may go softly over budget for the
+    // frame; `settle` re-enforces before the frame is answered.
+    // (Sections routed to the DEFAULT table need no entry here -- the
+    // default is always pinned.)
+    let protect: Vec<&str> = queries
+        .iter()
+        .filter_map(|q| q.get("table").and_then(|v| v.as_str()))
+        .collect();
     let mut parts: Vec<(Arc<TableEntry>, Vec<usize>)> =
         Vec::with_capacity(queries.len());
     for q in queries {
         let named = q.get("table").and_then(|v| v.as_str());
-        let entry = match registry.resolve(named) {
+        let entry = match registry.resolve_protected(named, &protect) {
             Ok(e) => e,
             Err(e) => return reject(stream, &e),
         };
@@ -390,6 +436,7 @@ fn fanout_op(
         .zip(&answers)
         .map(|((e, ids), a)| (ids.len(), e.backend.d(), a.as_slice()))
         .collect();
+    settle(registry);
     write_bin_sections(stream, &sections)
 }
 
@@ -414,20 +461,54 @@ fn snapshot_op(
     }
 }
 
-/// Counters + ring-buffer latency percentiles for one table.
-fn table_stats_pairs(entry: &TableEntry) -> Vec<(&'static str, Json)> {
+/// Counters + ring-buffer latency percentiles for one table's [`Stats`]
+/// (resident tables and spilled tables share the shape -- counters ride
+/// across the spill tier).
+fn stats_pairs(stats: &Stats) -> Vec<(&'static str, Json)> {
     let mut pairs = vec![
         ("requests",
-         Json::num(entry.stats.requests.load(Ordering::Relaxed) as f64)),
+         Json::num(stats.requests.load(Ordering::Relaxed) as f64)),
         ("ids_served",
-         Json::num(entry.stats.ids_served.load(Ordering::Relaxed) as f64)),
+         Json::num(stats.ids_served.load(Ordering::Relaxed) as f64)),
         ("batches",
-         Json::num(entry.stats.batches.load(Ordering::Relaxed) as f64)),
+         Json::num(stats.batches.load(Ordering::Relaxed) as f64)),
     ];
-    if let Some((p50, p99)) = entry.stats.batch_latency() {
+    if let Some((p50, p99)) = stats.batch_latency() {
         pairs.push(("batch_p50_s", Json::num(p50)));
         pairs.push(("batch_p99_s", Json::num(p99)));
     }
+    pairs
+}
+
+/// The per-table stats object for a spilled table: residency (probed
+/// against the spill tier, so an out-of-band deleted artifact reports
+/// `"lost"` here instead of surprising the next lookup), the recorded
+/// shape, and the carried-over serving counters.
+fn spilled_stats_pairs(
+    registry: &TableRegistry,
+    s: &Arc<SpilledTable>,
+) -> Vec<(&'static str, Json)> {
+    let mut residency = registry.probe_spilled(s);
+    if residency == Residency::Lost {
+        // A promotion may have consumed the artifact after this slot
+        // was fetched: probing the STALE slot then looks "lost" for a
+        // table that is resident and serving. Only alarm when the map
+        // still holds this very slot; otherwise report the snapshot's
+        // stale-but-true "spilled".
+        match registry.slot_of(s.name()) {
+            Some(registry::Slot::Spilled(cur)) if Arc::ptr_eq(&cur, s) => {}
+            _ => residency = Residency::Spilled,
+        }
+    }
+    let mut pairs = vec![
+        ("residency", Json::str(residency.as_str())),
+        ("kind", Json::str(s.kind())),
+        ("vocab", Json::num(s.vocab() as f64)),
+        ("d", Json::num(s.d() as f64)),
+        ("spilled_bytes", Json::num(s.spilled_bytes() as f64)),
+        ("spill_file", Json::str(s.file())),
+    ];
+    pairs.extend(stats_pairs(s.stats()));
     pairs
 }
 
@@ -439,39 +520,67 @@ fn stats_op(
 ) -> Result<(), WireError> {
     if version >= 2 {
         if let Some(name) = j.get("table").and_then(|v| v.as_str()) {
-            // one table, flat. `get`, NOT `resolve`: a monitoring poll
-            // must not stamp the LRU clock, or dashboards would make
-            // every table look equally recently used and corrupt the
-            // eviction order.
-            let entry = match registry.get(name) {
-                Some(e) => e,
+            // One table, flat, from ONE consistent slot read (separate
+            // resident/spilled reads could race a promotion and answer
+            // no_such_table for a live table). NOT `resolve`: a
+            // monitoring poll must not stamp the LRU clock (dashboards
+            // would corrupt the eviction order) nor promote a spilled
+            // table (polling must not defeat the operator's demote).
+            let mut pairs = vec![("ok", Json::Bool(true))];
+            match registry.slot_of(name) {
+                Some(registry::Slot::Resident(entry)) => {
+                    pairs.push(("table", Json::str(entry.name.as_str())));
+                    pairs.push(("residency",
+                                Json::str(Residency::Resident.as_str())));
+                    pairs.extend(stats_pairs(&entry.stats));
+                }
+                Some(registry::Slot::Spilled(s)) => {
+                    pairs.push(("table", Json::str(s.name())));
+                    pairs.extend(spilled_stats_pairs(registry, &s));
+                }
                 None => {
                     let e = WireError::NoSuchTable(name.to_string());
                     return write_frame(
                         stream, &annotated_err_frame(registry, &e).to_string());
                 }
-            };
-            let mut pairs = vec![
-                ("ok", Json::Bool(true)),
-                ("table", Json::str(entry.name.as_str())),
-            ];
-            pairs.extend(table_stats_pairs(&entry));
+            }
             return write_frame(stream, &Json::obj(pairs).to_string());
         }
     }
     // aggregate view: v1-compatible flat totals plus a per-table map
-    let entries = registry.list();
+    // covering BOTH tiers (spilled tables stay stats-visible). ONE map
+    // snapshot feeds totals and the per-table map, so a table demoted
+    // mid-poll is never counted in both tiers.
+    let slots = registry.snapshot_slots();
     let (mut requests, mut ids_served, mut batches) = (0u64, 0u64, 0u64);
-    for e in &entries {
-        requests += e.stats.requests.load(Ordering::Relaxed);
-        ids_served += e.stats.ids_served.load(Ordering::Relaxed);
-        batches += e.stats.batches.load(Ordering::Relaxed);
+    for (_, slot) in &slots {
+        let stats = match slot {
+            registry::Slot::Resident(e) => &*e.stats,
+            registry::Slot::Spilled(s) => s.stats(),
+        };
+        requests += stats.requests.load(Ordering::Relaxed);
+        ids_served += stats.ids_served.load(Ordering::Relaxed);
+        batches += stats.batches.load(Ordering::Relaxed);
     }
     let per_table = Json::Obj(
-        entries
+        slots
             .iter()
-            .map(|e| (e.name.clone(),
-                      Json::obj(table_stats_pairs(e))))
+            .map(|(name, slot)| {
+                let pairs = match slot {
+                    registry::Slot::Resident(e) => {
+                        let mut pairs = vec![
+                            ("residency",
+                             Json::str(Residency::Resident.as_str())),
+                        ];
+                        pairs.extend(stats_pairs(&e.stats));
+                        pairs
+                    }
+                    registry::Slot::Spilled(s) => {
+                        spilled_stats_pairs(registry, s)
+                    }
+                };
+                (name.clone(), Json::obj(pairs))
+            })
             .collect(),
     );
     let mut pairs = vec![
@@ -484,7 +593,15 @@ fn stats_op(
         // eviction count, and which tables are currently evicted
         ("resident_bytes", Json::num(registry.resident_bytes() as f64)),
         ("evictions", Json::num(registry.eviction_count() as f64)),
+        // spill-tier telemetry: demotions, transparent reloads, and the
+        // reload-latency ring operators size cold-start SLOs from
+        ("spills", Json::num(registry.spill_count() as f64)),
+        ("promotes", Json::num(registry.promote_count() as f64)),
     ];
+    if let Some((p50, p99)) = registry.promote_latency() {
+        pairs.push(("promote_p50_s", Json::num(p50)));
+        pairs.push(("promote_p99_s", Json::num(p99)));
+    }
     if let Some(b) = registry.config().mem_budget_bytes {
         pairs.push(("mem_budget_bytes", Json::num(b as f64)));
     }
@@ -507,9 +624,51 @@ fn tables_op(stream: &mut TcpStream, registry: &TableRegistry) -> Result<(), Wir
     if let Some(d) = &default {
         pairs.push(("default", Json::str(d.as_str())));
     }
+    // one consistent slot snapshot: a table demoted mid-request must
+    // appear in exactly one of the two listings
+    let slots = registry.snapshot_slots();
     pairs.push(("tables", Json::arr(
-        registry.list().iter().map(|e| e.desc_json()).collect())));
+        slots
+            .iter()
+            .filter_map(|(_, s)| match s {
+                registry::Slot::Resident(e) => Some(e.desc_json()),
+                registry::Slot::Spilled(_) => None,
+            })
+            .collect())));
+    // spilled tables are still registered -- list their names so an
+    // operator reading `tables` sees the whole registry (full spill
+    // detail lives in `stats`)
+    let spilled: Vec<Json> = slots
+        .iter()
+        .filter_map(|(_, s)| match s {
+            registry::Slot::Spilled(sp) => Some(Json::str(sp.name())),
+            registry::Slot::Resident(_) => None,
+        })
+        .collect();
+    if !spilled.is_empty() {
+        pairs.push(("spilled", Json::arr(spilled)));
+    }
     write_frame(stream, &Json::obj(pairs).to_string())
+}
+
+/// `demote` (v2 only): explicitly spill a resident table to the
+/// `--spill-dir` tier. The next lookup transparently reloads it.
+fn demote_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Result<(), WireError> {
+    let Some(name) = j.get("table").and_then(|v| v.as_str()) else {
+        return write_frame(stream, &err_obj(
+            "bad_request", "demote needs table", vec![]).to_string());
+    };
+    match registry.demote(name) {
+        Ok(slot) => write_frame(stream, &Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("table", Json::str(slot.name())),
+            ("residency", Json::str(Residency::Spilled.as_str())),
+            ("file", Json::str(slot.file())),
+            ("spilled_bytes", Json::num(slot.spilled_bytes() as f64)),
+        ]).to_string()),
+        Err(e) => write_frame(
+            stream, &annotated_err_frame(registry, &e).to_string()),
+    }
 }
 
 fn load_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Result<(), WireError> {
@@ -600,7 +759,7 @@ fn handle_conn(
                 lookup_op(&mut stream, &registry, &j, version, false)?
             }
             Some("stats") => stats_op(&mut stream, &registry, &j, version)?,
-            Some(op @ ("tables" | "load" | "unload" | "snapshot"
+            Some(op @ ("tables" | "load" | "unload" | "demote" | "snapshot"
                        | "lookup_fanout")) if version < 2 => {
                 write_frame(&mut stream, &err_obj(
                     "needs_v2",
@@ -614,6 +773,7 @@ fn handle_conn(
             Some("tables") => tables_op(&mut stream, &registry)?,
             Some("load") => load_op(&mut stream, &registry, &j)?,
             Some("unload") => unload_op(&mut stream, &registry, &j)?,
+            Some("demote") => demote_op(&mut stream, &registry, &j)?,
             Some("snapshot") => snapshot_op(&mut stream, &registry, &j)?,
             Some("shutdown") => {
                 stop.store(true, Ordering::Relaxed);

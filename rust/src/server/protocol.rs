@@ -739,7 +739,8 @@ impl Client {
     }
 
     /// Hot-unload a table; its in-flight lookups fail typed, later
-    /// lookups get [`WireError::NoSuchTable`].
+    /// lookups get [`WireError::NoSuchTable`]. A SPILLED table can be
+    /// unloaded too (its spill artifact is garbage-collected).
     pub fn admin_unload(&mut self, table: &str) -> Result<(), WireError> {
         self.request(Json::obj(vec![
             ("v", Json::num(VERSION as f64)),
@@ -747,6 +748,26 @@ impl Client {
             ("table", Json::str(table)),
         ]))?;
         Ok(())
+    }
+
+    /// Demote a resident table to the server's spill tier (`--spill-dir`):
+    /// its memory is released and the NEXT lookup to it transparently
+    /// reloads it. Returns the spill artifact's file name on the server.
+    /// Typed rejections: `spill_disabled` (server has no spill tier),
+    /// `not_resident` (already spilled), `no_such_table`, `demote_failed`
+    /// (artifact write failed -- the table stays resident and serving).
+    pub fn admin_demote(&mut self, table: &str) -> Result<String, WireError> {
+        let j = self.request(Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("demote")),
+            ("table", Json::str(table)),
+        ]))?;
+        j.get("file")
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| {
+                WireError::Malformed("demote response without file".into())
+            })
     }
 
     /// Ask the server to exit (drains the acknowledgement).

@@ -43,9 +43,46 @@
 //! of evictions could reach the budget anyway.
 //! Lookups to an evicted table fail with the same typed
 //! `no_such_table` rejection as any unknown table (the JSON error frame
-//! additionally carries `"evicted": true`); reloading the table under
-//! the same name clears the marker. Eviction counts are surfaced by the
-//! aggregate `stats` op.
+//! additionally carries `"evicted": true` and `"residency": "evicted"`);
+//! reloading the table under the same name clears the marker. Eviction
+//! counts are surfaced by the aggregate `stats` op.
+//!
+//! # Tiered residency: the spill tier
+//!
+//! With [`ServerConfig::spill_dir`] set, the registry is a two-tier
+//! store and every registered table is in one of three residency
+//! states:
+//!
+//! ```text
+//!               budget eviction / `demote` op
+//!            ------------------------------------>
+//!   Resident                                        Spilled
+//!            <------------------------------------
+//!               transparent reload on next lookup       | artifact
+//!               (single-flight `Promoting` claim)       | deleted
+//!                                                       v out-of-band
+//!                                                     Lost
+//! ```
+//!
+//! A budget eviction (or an explicit `demote` admin op) serializes the
+//! victim through its kind's [`EmbeddingBackend::save_artifact`] format
+//! into the spill directory (write-then-rename, tracked by a
+//! [`SPILL_MANIFEST`] rewritten on every transition) instead of
+//! discarding it. A later lookup to a spilled table transparently
+//! reloads it: the first caller claims the slot's single-flight
+//! `Promoting` gate and performs the reload while concurrent callers
+//! block on the gate and then re-resolve (exactly one reload happens,
+//! however many clients hammer the cold table). Promotion re-enters the
+//! LRU and may evict another table to make room -- the promoted table
+//! and the default are pinned for that pass, and a per-request cycle
+//! guard bounds promotion attempts so a resolve can never thrash-loop
+//! between promoting and being re-demoted. A spilled table whose
+//! artifact is corrupt answers a typed `reload_failed` rejection (the
+//! registry keeps serving its other tables); one whose artifact was
+//! deleted out-of-band is reported as `Lost` by `stats` instead of
+//! panicking anything. Without a spill dir (or with
+//! [`ServerConfig::spill_on_evict`] off), budget eviction drops tables
+//! exactly as before.
 //!
 //! # Snapshot / restore
 //!
@@ -70,12 +107,15 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use std::sync::Condvar;
+use std::time::Instant;
+
 use crate::backend::{self, EmbeddingBackend};
 use crate::dpq::CompressedEmbedding;
 use crate::jsonx::Json;
 use crate::server::batcher::{run_batch, Answer, BatchQueue, DoneSlot, Pending};
 use crate::server::protocol::WireError;
-use crate::server::stats::Stats;
+use crate::server::stats::{LatencyRing, Stats};
 
 /// Manifest `format` tag written by [`TableRegistry::snapshot`].
 pub const SNAPSHOT_FORMAT: &str = "dpq_registry_snapshot";
@@ -108,8 +148,24 @@ pub const SNAPSHOT_MANIFEST: &str = "manifest.json";
 /// [`eviction_count`]: TableRegistry::eviction_count
 pub const EVICTED_HISTORY: usize = 64;
 
+/// File name of the spill-tier manifest inside a spill directory: the
+/// durable record of which tables are currently spilled (name, kind,
+/// artifact file, shape), rewritten write-then-rename on every
+/// demote/promote/unload transition so the directory is always
+/// inspectable offline.
+pub const SPILL_MANIFEST: &str = "spill.json";
+
+/// Manifest `format` tag written into [`SPILL_MANIFEST`].
+pub const SPILL_FORMAT: &str = "dpq_spill_tier";
+
+/// Cycle guard: most promotions one `resolve` performs before giving up
+/// with a typed rejection. Each attempt re-resolves from the table map,
+/// so a table demoted out from under its own promotion (budget thrash)
+/// is bounded per request instead of looping forever.
+const PROMOTE_ATTEMPTS: usize = 3;
+
 /// Serving knobs shared by every table in a registry.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Max pending lookups drained into one micro-batch per shard.
     pub max_batch: usize,
@@ -120,6 +176,17 @@ pub struct ServerConfig {
     /// insert evicts least-recently-looked-up tables (the default table
     /// and the table being inserted are pinned). `None` never evicts.
     pub mem_budget_bytes: Option<u64>,
+    /// Optional spill-tier directory. When set, budget evictions (with
+    /// [`spill_on_evict`](Self::spill_on_evict)) and the `demote` admin
+    /// op serialize tables here instead of discarding them, and a lookup
+    /// to a spilled table transparently reloads it. The directory must
+    /// exist: [`TableRegistry::open`] fails loudly when it is missing.
+    pub spill_dir: Option<PathBuf>,
+    /// Whether budget evictions demote victims to the spill tier (true,
+    /// the default) or drop them exactly as a spill-less registry would
+    /// (false -- the `--spill drop` policy). Meaningless without
+    /// [`spill_dir`](Self::spill_dir).
+    pub spill_on_evict: bool,
 }
 
 impl Default for ServerConfig {
@@ -128,8 +195,166 @@ impl Default for ServerConfig {
             max_batch: 64,
             shards_per_table: 1,
             mem_budget_bytes: None,
+            spill_dir: None,
+            spill_on_evict: true,
         }
     }
+}
+
+/// Where a registered table currently lives (see the module docs'
+/// state diagram). Surfaced by `stats` and on `no_such_table`
+/// rejection frames as the three-state `residency` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// In memory, batcher shards running.
+    Resident,
+    /// Serialized in the spill tier; the next lookup promotes it.
+    Spilled,
+    /// Spilled, but its artifact is missing (deleted out-of-band).
+    /// Lookups answer `reload_failed`; `stats` keeps reporting the
+    /// table so operators see what was lost.
+    Lost,
+}
+
+impl Residency {
+    /// Wire string for this state (`"resident"` / `"spilled"` /
+    /// `"lost"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Residency::Resident => "resident",
+            Residency::Spilled => "spilled",
+            Residency::Lost => "lost",
+        }
+    }
+}
+
+/// Lifecycle phase of a spilled slot. `Spilling` and `Promoting` are
+/// the two in-transition phases; both are single-holder claims that
+/// concurrent accessors wait out on the slot's condvar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SpillPhase {
+    /// The evictor/demoter is still writing the artifact.
+    Spilling,
+    /// Artifact published; a lookup may claim promotion.
+    Ready,
+    /// Exactly one reload is in flight (the single-flight gate).
+    Promoting,
+    /// The artifact was observed missing. Advisory: a later probe or
+    /// promotion attempt re-checks the filesystem, so an out-of-band
+    /// restore of the file heals the slot.
+    Lost,
+}
+
+/// A table demoted to the spill tier: its serving metadata plus the
+/// single-flight promotion gate. The table's [`Stats`] ride along so
+/// counters survive a demote/promote round trip.
+pub struct SpilledTable {
+    name: String,
+    kind: String,
+    /// Artifact file name inside the spill directory.
+    file: String,
+    vocab: usize,
+    d: usize,
+    storage_bits: usize,
+    stats: Arc<Stats>,
+    state: Mutex<SpillPhase>,
+    cv: Condvar,
+}
+
+impl SpilledTable {
+    fn from_entry(entry: &TableEntry) -> SpilledTable {
+        let kind = entry.backend.kind();
+        SpilledTable {
+            name: entry.name.clone(),
+            kind: kind.to_string(),
+            file: spill_file_name(&entry.name, kind),
+            vocab: entry.backend.vocab(),
+            d: entry.backend.d(),
+            storage_bits: entry.backend.storage_bits(),
+            stats: entry.stats.clone(),
+            state: Mutex::new(SpillPhase::Spilling),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Registry name this table is served under.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Backend scheme tag recorded at demote time ("dpq", "dense", ...).
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    /// Artifact file name inside the spill directory.
+    pub fn file(&self) -> &str {
+        &self.file
+    }
+
+    /// Number of rows the spilled table serves once promoted.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Embedding width of the spilled table.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Bytes the table will occupy once promoted back (the amount the
+    /// demotion freed from the budget).
+    pub fn spilled_bytes(&self) -> u64 {
+        (self.storage_bits as u64).div_ceil(8)
+    }
+
+    /// The table's serving counters, carried across the spill tier.
+    pub fn stats(&self) -> &Stats {
+        &self.stats
+    }
+
+    fn set_phase(&self, phase: SpillPhase) {
+        *self.state.lock().unwrap() = phase;
+        self.cv.notify_all();
+    }
+
+    /// Block until the slot is out of its in-transition phases
+    /// (`Spilling`/`Promoting`); the artifact's on-disk state is only
+    /// defined outside them. Used by `snapshot` so racing a demotion
+    /// fails neither the snapshot nor the demote.
+    fn wait_settled(&self) {
+        let mut ph = self.state.lock().unwrap();
+        while matches!(*ph, SpillPhase::Spilling | SpillPhase::Promoting) {
+            ph = self.cv.wait(ph).unwrap();
+        }
+    }
+}
+
+/// One name's residency slot in the table map. Crate-visible so the
+/// server's `stats` op can read a name's residency in ONE consistent
+/// map access instead of racing separate resident/spilled reads.
+#[derive(Clone)]
+pub(crate) enum Slot {
+    /// In memory, batcher shards running.
+    Resident(Arc<TableEntry>),
+    /// Demoted to the spill tier.
+    Spilled(Arc<SpilledTable>),
+}
+
+/// A budget-eviction victim chosen under the tables lock, finished
+/// (artifact write / shard stop) after the lock is released.
+struct Eviction {
+    entry: Arc<TableEntry>,
+    /// `Some`: demote to this spill slot; `None`: drop (PR-3 behavior).
+    spill_to: Option<Arc<SpilledTable>>,
+}
+
+/// Deterministic spill artifact name for a table. The FNV-1a hash of
+/// the RAW name keeps two names that sanitize identically (`"a/b"` vs
+/// `"a_b"`) from sharing a file.
+fn spill_file_name(name: &str, kind: &str) -> String {
+    let h = crate::util::fnv1a64(name);
+    format!("spill_{h:016x}_{}.{kind}", sanitize_file_stem(name))
 }
 
 /// What [`TableRegistry::unload`] did to the default-table assignment.
@@ -217,13 +442,15 @@ impl LookupTicket {
 }
 
 impl TableEntry {
+    /// Spawn a table's batcher shards. `stats` is fresh for an insert
+    /// and the carried-over counters for a spill-tier promotion.
     fn spawn(
         name: &str,
         backend: Arc<dyn EmbeddingBackend>,
         cfg: &ServerConfig,
         stop: &Arc<AtomicBool>,
+        stats: Arc<Stats>,
     ) -> Arc<TableEntry> {
-        let stats = Arc::new(Stats::default());
         let shards: Vec<Arc<BatchQueue>> = (0..cfg.shards_per_table.max(1))
             .map(|_| Arc::new(BatchQueue::new(cfg.max_batch)))
             .collect();
@@ -362,21 +589,33 @@ impl TableEntry {
 /// budget, and snapshot/restore.
 pub struct TableRegistry {
     cfg: ServerConfig,
-    tables: RwLock<BTreeMap<String, Arc<TableEntry>>>,
+    tables: RwLock<BTreeMap<String, Slot>>,
     default: Mutex<Option<String>>,
     /// Eviction history: table name -> (times evicted, tick of the last
     /// eviction). A name is removed when a table is (re)inserted under
     /// it; capped at [`EVICTED_HISTORY`] entries (oldest forgotten).
+    /// Only DROPPED tables land here -- a spilled table is still
+    /// registered and tracked by its [`Slot`].
     evicted: Mutex<BTreeMap<String, (u64, u64)>>,
     /// Logical LRU clock; every successful `resolve` stamps the entry.
     clock: AtomicU64,
     evictions: AtomicU64,
+    spills: AtomicU64,
+    promotes: AtomicU64,
+    promote_ring: LatencyRing,
+    /// Serializes spill-manifest rewrites (never held together with the
+    /// tables write lock).
+    spill_mu: Mutex<()>,
     fanout_requests: AtomicU64,
     stop: Arc<AtomicBool>,
 }
 
 impl TableRegistry {
-    /// Empty registry with the given serving knobs.
+    /// Empty registry with the given serving knobs. Does NOT validate
+    /// [`ServerConfig::spill_dir`]; use [`open`](Self::open) at startup
+    /// so a missing spill directory fails loudly before serving begins
+    /// (with `new`, a bogus dir surfaces as a typed `demote_failed` on
+    /// the first spill instead).
     pub fn new(cfg: ServerConfig) -> Self {
         TableRegistry {
             cfg,
@@ -385,9 +624,37 @@ impl TableRegistry {
             evicted: Mutex::new(BTreeMap::new()),
             clock: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            promotes: AtomicU64::new(0),
+            promote_ring: LatencyRing::default(),
+            spill_mu: Mutex::new(()),
             fanout_requests: AtomicU64::new(0),
             stop: Arc::new(AtomicBool::new(false)),
         }
+    }
+
+    /// [`new`](Self::new) plus startup validation: a configured spill
+    /// directory that does not exist is a typed `spill_dir_missing`
+    /// error. Serving with a spill tier that silently cannot accept
+    /// artifacts would turn every eviction into data loss, so the
+    /// operator must create the directory (or fix the path) first.
+    pub fn open(cfg: ServerConfig) -> Result<TableRegistry, WireError> {
+        Self::validate_spill(&cfg)?;
+        Ok(Self::new(cfg))
+    }
+
+    fn validate_spill(cfg: &ServerConfig) -> Result<(), WireError> {
+        if let Some(dir) = &cfg.spill_dir {
+            if !dir.is_dir() {
+                return Err(WireError::Rejected {
+                    code: "spill_dir_missing".into(),
+                    message: format!(
+                        "spill dir {dir:?} does not exist or is not a \
+                         directory; create it before serving"),
+                });
+            }
+        }
+        Ok(())
     }
 
     /// The flag the accept loop and every batcher shard watch.
@@ -397,7 +664,7 @@ impl TableRegistry {
 
     /// The serving knobs this registry was built with.
     pub fn config(&self) -> ServerConfig {
-        self.cfg
+        self.cfg.clone()
     }
 
     /// Register `backend` as table `name` and start its batcher shards.
@@ -444,16 +711,21 @@ impl TableRegistry {
         // conclude "still under budget".
         let (entry, evicted) = {
             let mut map = self.tables.write().unwrap();
+            // a SPILLED name is still a registered table (its next
+            // lookup reloads it), so it collides exactly like a
+            // resident one
             if map.contains_key(name) {
                 return Err(WireError::TableExists(name.to_string()));
             }
-            let entry = TableEntry::spawn(name, backend, &self.cfg, &self.stop);
+            let entry = TableEntry::spawn(
+                name, backend, &self.cfg, &self.stop,
+                Arc::new(Stats::default()));
             // fresh LRU stamp: a just-inserted table is the most recent
             entry.last_used.store(
                 self.clock.fetch_add(1, Ordering::Relaxed) + 1,
                 Ordering::Relaxed,
             );
-            map.insert(name.to_string(), entry.clone());
+            map.insert(name.to_string(), Slot::Resident(entry.clone()));
             {
                 let mut def = self.default.lock().unwrap();
                 if def.is_none() {
@@ -462,44 +734,58 @@ impl TableRegistry {
             }
             // a reloaded table is no longer "evicted"
             self.evicted.lock().unwrap().remove(name);
-            let evicted = self.enforce_budget_locked(&mut map, name);
+            let evicted = self.enforce_budget_locked(&mut map, &[name]);
             (entry, evicted)
         };
-        // join evicted tables' shard threads OUTSIDE the map lock: a
-        // shard mid-batch must not block every other table's lookups
-        for e in evicted {
-            e.stop();
-        }
+        // spill artifacts are written and shard threads joined OUTSIDE
+        // the map lock: a shard mid-batch (or a disk write) must not
+        // block every other table's lookups
+        self.finish_evictions(evicted);
         Ok(entry)
     }
 
     /// Evict least-recently-used tables until the resident total fits
-    /// the budget. Runs under the tables write lock; returns the removed
-    /// entries for the caller to stop outside the lock. The default
+    /// the budget. Runs under the tables write lock; victims are either
+    /// swapped to a `Spilled` placeholder (spill tier configured) or
+    /// removed outright, and returned for the caller to finish --
+    /// artifact write + shard stop -- outside the lock. The default
     /// table and `protect` are never evicted, so the budget is soft when
     /// only those remain.
     fn enforce_budget_locked(
         &self,
-        map: &mut BTreeMap<String, Arc<TableEntry>>,
-        protect: &str,
-    ) -> Vec<Arc<TableEntry>> {
+        map: &mut BTreeMap<String, Slot>,
+        protect: &[&str],
+    ) -> Vec<Eviction> {
         let Some(budget) = self.cfg.mem_budget_bytes else {
             return Vec::new();
         };
+        let spill = self.cfg.spill_on_evict && self.cfg.spill_dir.is_some();
         // The default cannot change while the tables write lock is held
         // (set_default/unload both need the tables lock), so one read
         // is enough.
         let def = self.default.lock().unwrap().clone();
         let pinned = |e: &TableEntry| {
-            def.as_deref() == Some(e.name.as_str()) || e.name == protect
+            def.as_deref() == Some(e.name.as_str())
+                || protect.iter().any(|p| *p == e.name)
         };
+        // One pass over the map (we hold the write lock that blocks
+        // every lookup's resolve -- no per-iteration re-collection):
+        // the resident set, its total bytes, and the pinned bytes.
+        let mut live: Vec<Arc<TableEntry>> = map
+            .values()
+            .filter_map(|s| match s {
+                Slot::Resident(e) => Some(e.clone()),
+                Slot::Spilled(_) => None,
+            })
+            .collect();
+        let mut total: u64 = live.iter().map(|e| e.resident_bytes()).sum();
         // Zero-gain guard: if the pinned tables ALONE exceed the budget
         // (e.g. the fresh insert is bigger than the whole budget), no
         // sequence of evictions can reach it -- destroying every
         // unpinned table would take clients down for nothing. Stay
         // (softly) over budget with everything resident instead.
-        let pinned_bytes: u64 = map
-            .values()
+        let pinned_bytes: u64 = live
+            .iter()
             .filter(|e| pinned(e))
             .map(|e| e.resident_bytes())
             .sum();
@@ -507,23 +793,35 @@ impl TableRegistry {
             return Vec::new();
         }
         let mut out = Vec::new();
-        loop {
-            let total: u64 = map.values().map(|e| e.resident_bytes()).sum();
-            if total <= budget {
-                break;
-            }
-            let victim = map
-                .values()
-                .filter(|e| !pinned(e))
-                .min_by_key(|e| e.last_used.load(Ordering::Relaxed))
-                .map(|e| e.name.clone());
-            let Some(name) = victim else {
+        while total > budget {
+            let victim = live
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| !pinned(e))
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                .map(|(i, _)| i);
+            let Some(i) = victim else {
                 break; // only pinned tables left: stay (softly) over budget
             };
-            let entry = map.remove(&name).expect("victim chosen from this map");
+            let chosen = live.swap_remove(i);
+            total -= chosen.resident_bytes();
+            let name = chosen.name.clone();
+            let Some(Slot::Resident(entry)) = map.remove(&name) else {
+                unreachable!("victim chosen from this map's residents");
+            };
             self.evictions.fetch_add(1, Ordering::Relaxed);
-            let tick = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
-            {
+            if spill {
+                // demote instead of drop: a Spilled placeholder (phase
+                // Spilling) takes the slot NOW, under the lock, so a
+                // racing lookup blocks on the single-flight gate until
+                // the artifact write outside the lock publishes
+                let slot = Arc::new(SpilledTable::from_entry(&entry));
+                map.insert(name, Slot::Spilled(slot.clone()));
+                out.push(Eviction { entry, spill_to: Some(slot) });
+            } else {
+                // PR-3 drop semantics, byte for byte: mark the eviction
+                // history so `no_such_table` can say "evicted"
+                let tick = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
                 let mut ev = self.evicted.lock().unwrap();
                 let slot = ev.entry(name).or_insert((0, 0));
                 slot.0 += 1;
@@ -537,10 +835,36 @@ impl TableRegistry {
                         .expect("non-empty map");
                     ev.remove(&oldest);
                 }
+                drop(ev);
+                out.push(Eviction { entry, spill_to: None });
             }
-            out.push(entry);
         }
         out
+    }
+
+    /// Complete evictions chosen under the lock: write spill artifacts
+    /// (demotions) or just stop shard threads (drops). Must run with NO
+    /// registry lock held. A failed spill write rolls the victim back to
+    /// resident -- staying softly over budget beats losing a table.
+    fn finish_evictions(&self, evicted: Vec<Eviction>) {
+        for ev in evicted {
+            match ev.spill_to {
+                None => ev.entry.stop(),
+                Some(slot) => {
+                    if let Err(e) = self.write_spill(&ev.entry, &slot) {
+                        // the table was rolled back to resident: undo
+                        // the eviction count too, or telemetry would
+                        // report an eviction that never happened
+                        self.evictions.fetch_sub(1, Ordering::Relaxed);
+                        eprintln!(
+                            "spill of evicted table {:?} failed ({e}); \
+                             keeping it resident (over budget)",
+                            ev.entry.name
+                        );
+                    }
+                }
+            }
+        }
     }
 
     /// Hot-load a `.dpq` artifact as a new table (the `load` admin op).
@@ -552,15 +876,17 @@ impl TableRegistry {
         self.insert(name, Arc::new(emb))
     }
 
-    /// Drop a table: later lookups get `no_such_table`; lookups already
-    /// queued on its shards are failed, typed, not stranded. Unloading
-    /// the default table explicitly re-elects the first remaining table
-    /// (by name) as default; the returned [`UnloadOutcome`] reports the
-    /// default in force after the unload.
+    /// Drop a table -- resident or spilled: later lookups get
+    /// `no_such_table`; lookups already queued on its shards are failed,
+    /// typed, not stranded; a spilled table's artifact is
+    /// garbage-collected from the spill tier. Unloading the default
+    /// table explicitly re-elects the first remaining table (by name) as
+    /// default; the returned [`UnloadOutcome`] reports the default in
+    /// force after the unload.
     pub fn unload(&self, name: &str) -> Result<UnloadOutcome, WireError> {
-        let (entry, outcome) = {
+        let (slot, outcome) = {
             let mut map = self.tables.write().unwrap();
-            let entry = map
+            let slot = map
                 .remove(name)
                 .ok_or_else(|| WireError::NoSuchTable(name.to_string()))?;
             let mut def = self.default.lock().unwrap();
@@ -568,37 +894,130 @@ impl TableRegistry {
             if was_default {
                 *def = map.keys().next().cloned();
             }
-            (entry, UnloadOutcome { was_default, new_default: def.clone() })
+            (slot, UnloadOutcome { was_default, new_default: def.clone() })
         };
-        entry.stop();
+        match slot {
+            Slot::Resident(entry) => entry.stop(),
+            Slot::Spilled(s) => {
+                // GC the artifact (a promoter mid-reload fails its map
+                // identity check and answers no_such_table) and wake
+                // anyone blocked on the orphaned slot's gate
+                if let Some(dir) = &self.cfg.spill_dir {
+                    let _ = std::fs::remove_file(dir.join(&s.file));
+                }
+                self.sync_spill_manifest();
+                s.cv.notify_all();
+            }
+        }
         Ok(outcome)
     }
 
-    /// The table registered as `name`, if any.
+    /// The RESIDENT table registered as `name`, if any. A spilled table
+    /// returns `None` here (this accessor must never trigger a reload);
+    /// use [`residency`](Self::residency) / [`spilled`](Self::spilled)
+    /// to observe the spill tier, or [`resolve`](Self::resolve) to
+    /// promote.
     pub fn get(&self, name: &str) -> Option<Arc<TableEntry>> {
+        match self.tables.read().unwrap().get(name) {
+            Some(Slot::Resident(e)) => Some(e.clone()),
+            _ => None,
+        }
+    }
+
+    /// The full residency slot for `name` in one map read -- the
+    /// consistent view `stats` answers from (a `get` + `spilled` pair
+    /// could race a promotion and see neither tier).
+    pub(crate) fn slot_of(&self, name: &str) -> Option<Slot> {
         self.tables.read().unwrap().get(name).cloned()
+    }
+
+    /// One consistent snapshot of every slot, in name order -- so an
+    /// aggregate `stats` poll can never count a table in both tiers
+    /// (separate resident/spilled listings could, around a demotion).
+    pub(crate) fn snapshot_slots(&self) -> Vec<(String, Slot)> {
+        self.tables
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
     }
 
     /// Route a request's optional table name: `None` means the default
     /// table (v1 frames and table-less v2 frames). A successful resolve
     /// stamps the table's LRU clock -- this is the "recently looked up"
-    /// signal eviction ranks by.
+    /// signal eviction ranks by. Resolving a SPILLED table transparently
+    /// promotes it first (single-flight; see the module docs), so the
+    /// spill tier is invisible to lookups except in latency. A bounded
+    /// number of promotion attempts guards against promote/demote
+    /// thrash within one request.
     pub fn resolve(&self, name: Option<&str>) -> Result<Arc<TableEntry>, WireError> {
-        let entry = match name {
-            Some(n) => self
-                .get(n)
-                .ok_or_else(|| WireError::NoSuchTable(n.to_string()))?,
+        self.resolve_protected(name, &[])
+    }
+
+    /// [`resolve`](Self::resolve) with extra eviction protection: any
+    /// promotion this resolve performs will not evict a table named in
+    /// `protect`. The fan-out op protects EVERY table of its frame, so
+    /// promoting section N can never demote section M's table out from
+    /// under the same frame (which would livelock a tight budget: each
+    /// retry re-plays the same promote/evict cycle). The registry may
+    /// go softly over budget for the frame's duration; the caller
+    /// re-enforces via [`enforce_budget`](Self::enforce_budget).
+    pub(crate) fn resolve_protected(
+        &self,
+        name: Option<&str>,
+        protect: &[&str],
+    ) -> Result<Arc<TableEntry>, WireError> {
+        let name = match name {
+            Some(n) => n.to_string(),
             None => {
                 let def = self.default.lock().unwrap().clone();
-                let def = def.ok_or_else(|| {
+                def.ok_or_else(|| {
                     WireError::NoSuchTable("(default: no tables loaded)".into())
-                })?;
-                self.get(&def)
-                    .ok_or_else(|| WireError::NoSuchTable(def))?
+                })?
             }
         };
-        self.touch(&entry);
-        Ok(entry)
+        for _ in 0..PROMOTE_ATTEMPTS {
+            match self.slot_of(&name) {
+                None => return Err(WireError::NoSuchTable(name)),
+                Some(Slot::Resident(e)) => {
+                    self.touch(&e);
+                    return Ok(e);
+                }
+                Some(Slot::Spilled(s)) => match self.promote(&s, protect)? {
+                    Some(e) => {
+                        self.touch(&e);
+                        return Ok(e);
+                    }
+                    // the world changed while we waited on the gate
+                    // (promoted by another caller, re-spilled, unloaded,
+                    // replaced): re-resolve from the map
+                    None => continue,
+                },
+            }
+        }
+        Err(WireError::Rejected {
+            code: "reload_failed".into(),
+            message: format!(
+                "table {name:?} is being promoted and demoted concurrently \
+                 (thrashing); retry"),
+        })
+    }
+
+    /// Re-enforce the memory budget now (default table pinned, nothing
+    /// else protected). Called after an op that deliberately went
+    /// softly over budget -- e.g. a fan-out frame whose promotions
+    /// protected all of its tables -- so quiescent state respects the
+    /// budget again. A no-op without a configured budget.
+    pub fn enforce_budget(&self) {
+        if self.cfg.mem_budget_bytes.is_none() {
+            return;
+        }
+        let evicted = {
+            let mut map = self.tables.write().unwrap();
+            self.enforce_budget_locked(&mut map, &[])
+        };
+        self.finish_evictions(evicted);
     }
 
     /// Stamp `entry` as most-recently-used.
@@ -628,23 +1047,95 @@ impl TableRegistry {
         Ok(())
     }
 
-    /// All tables in name order.
+    /// All RESIDENT tables in name order (spilled tables are listed by
+    /// [`list_spilled`](Self::list_spilled)).
     pub fn list(&self) -> Vec<Arc<TableEntry>> {
-        self.tables.read().unwrap().values().cloned().collect()
+        self.tables
+            .read()
+            .unwrap()
+            .values()
+            .filter_map(|s| match s {
+                Slot::Resident(e) => Some(e.clone()),
+                Slot::Spilled(_) => None,
+            })
+            .collect()
     }
 
-    /// Number of resident tables.
+    /// All SPILLED tables in name order.
+    pub fn list_spilled(&self) -> Vec<Arc<SpilledTable>> {
+        self.tables
+            .read()
+            .unwrap()
+            .values()
+            .filter_map(|s| match s {
+                Slot::Spilled(sp) => Some(sp.clone()),
+                Slot::Resident(_) => None,
+            })
+            .collect()
+    }
+
+    /// The spill-tier record for `name`, if that table is currently
+    /// spilled.
+    pub fn spilled(&self, name: &str) -> Option<Arc<SpilledTable>> {
+        match self.tables.read().unwrap().get(name) {
+            Some(Slot::Spilled(s)) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
+    /// Current residency of `name`, `None` when no such table is
+    /// registered. Reports `Lost` from the slot's sticky phase without
+    /// touching the filesystem; [`probe_spilled`](Self::probe_spilled)
+    /// re-checks the disk.
+    pub fn residency(&self, name: &str) -> Option<Residency> {
+        match self.tables.read().unwrap().get(name) {
+            None => None,
+            Some(Slot::Resident(_)) => Some(Residency::Resident),
+            Some(Slot::Spilled(s)) => {
+                Some(match *s.state.lock().unwrap() {
+                    SpillPhase::Lost => Residency::Lost,
+                    _ => Residency::Spilled,
+                })
+            }
+        }
+    }
+
+    /// Probe a spilled slot against the filesystem: a missing artifact
+    /// (deleted out-of-band) is `Lost`; a reappeared one heals a sticky
+    /// `Lost` back to `Spilled`. Slots mid-transition report `Spilled`
+    /// without touching the disk (their file state is owned by the
+    /// transition holder).
+    pub fn probe_spilled(&self, s: &SpilledTable) -> Residency {
+        let Some(dir) = &self.cfg.spill_dir else {
+            return Residency::Lost; // spilled slot without a tier: defect
+        };
+        let mut ph = s.state.lock().unwrap();
+        match *ph {
+            SpillPhase::Spilling | SpillPhase::Promoting => Residency::Spilled,
+            SpillPhase::Ready | SpillPhase::Lost => {
+                if dir.join(&s.file).is_file() {
+                    *ph = SpillPhase::Ready;
+                    Residency::Spilled
+                } else {
+                    *ph = SpillPhase::Lost;
+                    Residency::Lost
+                }
+            }
+        }
+    }
+
+    /// Number of registered tables, resident AND spilled.
     pub fn len(&self) -> usize {
         self.tables.read().unwrap().len()
     }
 
-    /// True when no tables are resident.
+    /// True when no tables are registered.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Total resident bytes across all tables (the quantity the memory
-    /// budget bounds).
+    /// Total resident bytes across all RESIDENT tables (the quantity the
+    /// memory budget bounds; spilled tables cost disk, not budget).
     pub fn resident_bytes(&self) -> u64 {
         self.list().iter().map(|e| e.resident_bytes()).sum()
     }
@@ -680,6 +1171,357 @@ impl TableRegistry {
         self.fanout_requests.load(Ordering::Relaxed)
     }
 
+    // ---- spill tier: demote / promote ----
+
+    /// Tables demoted to the spill tier since startup (budget evictions
+    /// in spill mode plus explicit `demote` ops).
+    pub fn spill_count(&self) -> u64 {
+        self.spills.load(Ordering::Relaxed)
+    }
+
+    /// Tables promoted back from the spill tier since startup. Exactly
+    /// one promotion happens per cold table however many concurrent
+    /// lookups hit it (the single-flight gate).
+    pub fn promote_count(&self) -> u64 {
+        self.promotes.load(Ordering::Relaxed)
+    }
+
+    /// `(p50, p99)` over recent promote (reload) wall-clock times in
+    /// seconds; `None` before the first promotion.
+    pub fn promote_latency(&self) -> Option<(f64, f64)> {
+        self.promote_ring.percentiles()
+    }
+
+    /// Explicitly demote a RESIDENT table to the spill tier (the
+    /// `demote` admin op): serialize it through its kind's artifact
+    /// format into the spill directory (write-then-rename,
+    /// manifest-tracked) and release its memory. The next lookup
+    /// transparently promotes it back. Typed rejections: no spill dir
+    /// configured (`spill_disabled`), unknown table (`no_such_table`),
+    /// already spilled (`not_resident`), artifact write failure
+    /// (`demote_failed` -- the table stays resident; a failed spill
+    /// must never lose data). Demoting the default table is allowed --
+    /// the next v1 frame just pays one reload.
+    pub fn demote(&self, name: &str) -> Result<Arc<SpilledTable>, WireError> {
+        if self.cfg.spill_dir.is_none() {
+            return Err(WireError::Rejected {
+                code: "spill_disabled".into(),
+                message: "no spill tier configured (start the server with \
+                          --spill-dir)".into(),
+            });
+        }
+        let (entry, slot) = {
+            let mut map = self.tables.write().unwrap();
+            match map.get(name) {
+                None => return Err(WireError::NoSuchTable(name.to_string())),
+                Some(Slot::Spilled(_)) => {
+                    return Err(WireError::Rejected {
+                        code: "not_resident".into(),
+                        message: format!("table {name:?} is already spilled"),
+                    })
+                }
+                Some(Slot::Resident(e)) => {
+                    let entry = e.clone();
+                    // the Spilling placeholder takes the slot under the
+                    // lock; racing lookups block on its gate until the
+                    // artifact write below publishes (or rolls back)
+                    let slot = Arc::new(SpilledTable::from_entry(&entry));
+                    map.insert(name.to_string(), Slot::Spilled(slot.clone()));
+                    (entry, slot)
+                }
+            }
+        };
+        if !self.write_spill(&entry, &slot)? {
+            // lost a race with `unload`: the table is gone and the
+            // artifact was garbage-collected -- reporting "spilled"
+            // would name a file that does not exist
+            return Err(WireError::NoSuchTable(name.to_string()));
+        }
+        Ok(slot)
+    }
+
+    /// Write a demotion's artifact and finish the transition. Runs with
+    /// NO registry lock held; the slot is already in the map in phase
+    /// `Spilling`. On success (`Ok(true)`): artifact published
+    /// write-then-rename, manifest synced, phase -> `Ready`, shard
+    /// threads stopped (queued lookups fail typed; in-flight batches
+    /// finish serving). `Ok(false)`: the table was UNLOADED while the
+    /// artifact was being written -- the orphaned artifact is GC'd and
+    /// the entry stopped; the demotion did not take effect. On write
+    /// failure: the table is rolled back to `Resident` -- nothing is
+    /// lost -- and the error is returned.
+    fn write_spill(
+        &self,
+        entry: &Arc<TableEntry>,
+        slot: &Arc<SpilledTable>,
+    ) -> Result<bool, WireError> {
+        let dir = self
+            .cfg
+            .spill_dir
+            .clone()
+            .expect("write_spill requires a configured spill dir");
+        let publish = dir.join(&slot.file);
+        let tmp = dir.join(snap_tmp_name(&slot.file));
+        let written = entry
+            .backend
+            .save_artifact(&tmp)
+            .map_err(|e| format!("serialize: {e}"))
+            .and_then(|_| {
+                std::fs::rename(&tmp, &publish)
+                    .map_err(|e| format!("publish: {e}"))
+            });
+        if let Err(msg) = written {
+            let _ = std::fs::remove_file(&tmp);
+            // roll back to Resident: the entry was never stopped, so
+            // the table keeps serving (softly over budget beats gone)
+            let mut map = self.tables.write().unwrap();
+            match map.get(&slot.name) {
+                Some(Slot::Spilled(cur)) if Arc::ptr_eq(cur, slot) => {
+                    map.insert(slot.name.clone(), Slot::Resident(entry.clone()));
+                    drop(map);
+                }
+                _ => {
+                    // unloaded/replaced while we wrote: nothing to roll
+                    // back into; just stop the orphaned entry
+                    drop(map);
+                    entry.stop();
+                }
+            }
+            slot.set_phase(SpillPhase::Ready);
+            // a concurrent transition may have snapshotted the manifest
+            // while this slot was still in the map as Spilled; rewrite
+            // it so the rolled-back table is not recorded as spilled
+            // with an artifact that never published
+            self.sync_spill_manifest();
+            return Err(WireError::Rejected {
+                code: "demote_failed".into(),
+                message: format!(
+                    "spill of table {:?} to {publish:?} failed: {msg}",
+                    slot.name),
+            });
+        }
+        // the table may have been unloaded while we wrote: GC the
+        // now-orphaned artifact instead of leaving untracked files
+        {
+            let map = self.tables.read().unwrap();
+            match map.get(&slot.name) {
+                Some(Slot::Spilled(cur)) if Arc::ptr_eq(cur, slot) => {}
+                _ => {
+                    drop(map);
+                    let _ = std::fs::remove_file(&publish);
+                    slot.set_phase(SpillPhase::Ready);
+                    entry.stop();
+                    self.sync_spill_manifest();
+                    return Ok(false);
+                }
+            }
+        }
+        self.spills.fetch_add(1, Ordering::Relaxed);
+        // manifest BEFORE the phase flip: a promoter released by the
+        // gate must find the tier consistent
+        self.sync_spill_manifest();
+        slot.set_phase(SpillPhase::Ready);
+        // stop LAST: in-flight batches finish serving (the backend is
+        // alive until the last Arc drops); still-queued lookups fail
+        // typed and re-resolve into a promotion
+        entry.stop();
+        Ok(true)
+    }
+
+    /// Promote a spilled table back to resident. Single-flight: exactly
+    /// one caller performs the reload; concurrent callers block on the
+    /// slot's gate and re-resolve. Returns `Ok(None)` when the world
+    /// changed under the claim (promoted by another caller, unloaded,
+    /// replaced) -- the caller re-resolves from the map. Typed
+    /// `reload_failed` on a corrupt or missing artifact (the registry
+    /// keeps serving every other table).
+    fn promote(
+        &self,
+        s: &Arc<SpilledTable>,
+        protect: &[&str],
+    ) -> Result<Option<Arc<TableEntry>>, WireError> {
+        if self.stop.load(Ordering::Relaxed) {
+            return Err(WireError::Rejected {
+                code: "shutting_down".into(),
+                message: "registry is shutting down".into(),
+            });
+        }
+        let dir = self.cfg.spill_dir.clone().ok_or_else(|| {
+            WireError::Rejected {
+                code: "reload_failed".into(),
+                message: format!(
+                    "table {:?} is spilled but no spill dir is configured",
+                    s.name),
+            }
+        })?;
+        let path = dir.join(&s.file);
+        // ---- claim the single-flight gate ----
+        {
+            let mut ph = s.state.lock().unwrap();
+            loop {
+                match *ph {
+                    SpillPhase::Spilling | SpillPhase::Promoting => {
+                        ph = s.cv.wait(ph).unwrap();
+                    }
+                    SpillPhase::Lost => {
+                        // advisory: re-probe, the operator may have
+                        // restored the artifact out-of-band
+                        if path.is_file() {
+                            *ph = SpillPhase::Promoting;
+                            break;
+                        }
+                        return Err(WireError::Rejected {
+                            code: "reload_failed".into(),
+                            message: format!(
+                                "table {:?} is lost: spill artifact {:?} is \
+                                 missing (deleted out-of-band?)",
+                                s.name, s.file),
+                        });
+                    }
+                    SpillPhase::Ready => {
+                        *ph = SpillPhase::Promoting;
+                        break;
+                    }
+                }
+            }
+        }
+        // We hold the sole Promoting claim; every exit below MUST
+        // un-claim via set_phase. First re-check the map: while we
+        // waited, another caller may have promoted (slot gone), or the
+        // table may have been unloaded/replaced.
+        {
+            let map = self.tables.read().unwrap();
+            match map.get(&s.name) {
+                Some(Slot::Spilled(cur)) if Arc::ptr_eq(cur, s) => {}
+                _ => {
+                    s.set_phase(SpillPhase::Ready);
+                    return Ok(None);
+                }
+            }
+        }
+        let t0 = Instant::now();
+        let reload_failed = |message: String| WireError::Rejected {
+            code: "reload_failed".into(),
+            message,
+        };
+        let backend = match backend::load_backend(&s.kind, &path) {
+            Ok(b) => b,
+            Err(e) => {
+                // A concurrent unload removes the slot AND GCs the
+                // artifact: that is a deliberate removal, not data loss
+                // -- re-resolve so the caller answers no_such_table
+                // instead of a misleading "lost" error.
+                {
+                    let map = self.tables.read().unwrap();
+                    match map.get(&s.name) {
+                        Some(Slot::Spilled(cur)) if Arc::ptr_eq(cur, s) => {}
+                        _ => {
+                            drop(map);
+                            s.set_phase(SpillPhase::Ready);
+                            return Ok(None);
+                        }
+                    }
+                }
+                let lost = !path.is_file();
+                s.set_phase(if lost { SpillPhase::Lost } else { SpillPhase::Ready });
+                return Err(reload_failed(if lost {
+                    format!(
+                        "table {:?} is lost: spill artifact {:?} is missing \
+                         (deleted out-of-band?)", s.name, s.file)
+                } else {
+                    format!(
+                        "reload of table {:?} from spill artifact {:?} \
+                         failed: {e}", s.name, s.file)
+                }));
+            }
+        };
+        // a swapped artifact must fail loudly, not serve the wrong table
+        if backend.vocab() != s.vocab || backend.d() != s.d {
+            s.set_phase(SpillPhase::Ready);
+            return Err(reload_failed(format!(
+                "spill artifact {:?} has shape [{}, {}] but table {:?} was \
+                 demoted with [{}, {}]",
+                s.file, backend.vocab(), backend.d(), s.name, s.vocab, s.d)));
+        }
+        let (entry, evicted) = {
+            let mut map = self.tables.write().unwrap();
+            match map.get(&s.name) {
+                Some(Slot::Spilled(cur)) if Arc::ptr_eq(cur, s) => {}
+                _ => {
+                    drop(map);
+                    s.set_phase(SpillPhase::Ready);
+                    return Ok(None);
+                }
+            }
+            let entry = TableEntry::spawn(
+                &s.name, backend, &self.cfg, &self.stop, s.stats.clone());
+            entry.last_used.store(
+                self.clock.fetch_add(1, Ordering::Relaxed) + 1,
+                Ordering::Relaxed,
+            );
+            map.insert(s.name.clone(), Slot::Resident(entry.clone()));
+            // The artifact is consumed: a later demote rewrites it, and
+            // leaving it would let the manifest drift from the registry.
+            // The unlink MUST happen while the write lock is still held:
+            // a re-demote of this very table (which needs the write lock
+            // to swap the slot back to Spilled) publishes a FRESH
+            // artifact at the same deterministic path -- deleting after
+            // the lock is released could destroy that fresh artifact and
+            // lose the table permanently.
+            let _ = std::fs::remove_file(&path);
+            // promotion re-enters the LRU and may evict someone else to
+            // make room; the promoted table (plus the caller's protect
+            // set -- e.g. a fan-out frame's other tables) is pinned so
+            // this pass can never evict what the request still needs
+            let mut prot: Vec<&str> = protect.to_vec();
+            prot.push(s.name.as_str());
+            let evicted = self.enforce_budget_locked(&mut map, &prot);
+            (entry, evicted)
+        };
+        self.promotes.fetch_add(1, Ordering::Relaxed);
+        self.promote_ring.record(t0.elapsed().as_secs_f64());
+        self.sync_spill_manifest();
+        s.set_phase(SpillPhase::Ready);
+        self.finish_evictions(evicted);
+        Ok(Some(entry))
+    }
+
+    /// Rewrite the spill-tier manifest from the current table map
+    /// (write-then-rename; serialized by `spill_mu`). Best-effort: a
+    /// manifest write failure never fails the serving path, it only
+    /// degrades offline inspectability.
+    fn sync_spill_manifest(&self) {
+        let Some(dir) = &self.cfg.spill_dir else {
+            return;
+        };
+        let _g = self.spill_mu.lock().unwrap();
+        let tables: Vec<Json> = self
+            .list_spilled()
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name.as_str())),
+                    ("kind", Json::str(s.kind.as_str())),
+                    ("file", Json::str(s.file.as_str())),
+                    ("vocab", Json::num(s.vocab as f64)),
+                    ("d", Json::num(s.d as f64)),
+                    ("storage_bits", Json::num(s.storage_bits as f64)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("format", Json::str(SPILL_FORMAT)),
+            ("v", Json::num(1.0)),
+            ("tables", Json::arr(tables)),
+        ]);
+        let tmp = dir.join(snap_tmp_name(SPILL_MANIFEST));
+        if std::fs::write(&tmp, j.to_string()).is_ok() {
+            let _ = std::fs::rename(&tmp, dir.join(SPILL_MANIFEST));
+        } else {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+
     // ---- snapshot / restore ----
 
     /// Serialize the whole registry into `dir`: one artifact file per
@@ -693,10 +1535,15 @@ impl TableRegistry {
     /// without bound as tables come and go. Backends are immutable once
     /// registered, so a snapshot taken mid-serving is consistent;
     /// tables loaded or unloaded while the snapshot runs may or may not
-    /// be included. Concurrent snapshots into the SAME directory are
-    /// never torn (unique temp names, and GC leaves `.tmp` files alone)
-    /// but may garbage-collect each other's just-published artifacts --
-    /// give each schedule its own directory.
+    /// be included. SPILLED tables are included too -- their published
+    /// spill artifacts are copied into the snapshot (re-serialized from
+    /// memory if a concurrent promotion consumes the artifact
+    /// mid-copy), so restoring a snapshot never silently drops the cold
+    /// tier (restored tables all come back resident). Concurrent
+    /// snapshots into the SAME directory are never torn (unique temp
+    /// names, and GC leaves `.tmp` files alone) but may garbage-collect
+    /// each other's just-published artifacts -- give each schedule its
+    /// own directory.
     pub fn snapshot(&self, dir: &Path) -> Result<PathBuf, WireError> {
         let fail = |what: String| {
             move |e: &dyn std::fmt::Display| WireError::Rejected {
@@ -707,12 +1554,23 @@ impl TableRegistry {
         std::fs::create_dir_all(dir)
             .map_err(|e| fail(format!("create {dir:?}"))(&e))?;
         let default = self.default_name();
-        let entries = self.list();
+        let slots = self.snapshot_slots();
         let mut tables = Vec::new();
-        let mut fresh: Vec<String> = Vec::with_capacity(entries.len());
-        for (i, e) in entries.iter().enumerate() {
-            let file = format!(
-                "t{i:03}_{}.{}", sanitize_file_stem(&e.name), e.backend.kind());
+        let mut fresh: Vec<String> = Vec::with_capacity(slots.len());
+        let mut included: Vec<&str> = Vec::with_capacity(slots.len());
+        for (i, (name, slot)) in slots.iter().enumerate() {
+            let (kind, vocab, d, storage_bits) = match slot {
+                Slot::Resident(e) => (
+                    e.backend.kind().to_string(),
+                    e.backend.vocab(),
+                    e.backend.d(),
+                    e.backend.storage_bits(),
+                ),
+                Slot::Spilled(s) => {
+                    (s.kind.clone(), s.vocab, s.d, s.storage_bits)
+                }
+            };
+            let file = format!("t{i:03}_{}.{kind}", sanitize_file_stem(name));
             // Artifacts get the same write-then-rename discipline as the
             // manifest: re-snapshotting into the SAME directory must
             // never half-overwrite an artifact the surviving (old)
@@ -720,20 +1578,115 @@ impl TableRegistry {
             // would pass every size/shape check on restore and silently
             // serve wrong bytes.
             let tmp = dir.join(snap_tmp_name(&file));
-            if let Err(err) = e.backend.save_artifact(&tmp) {
-                let _ = std::fs::remove_file(&tmp); // no tmp litter on failure
-                return Err(fail(format!("serialize table {:?}", e.name))(&err));
+            // Ok(true) = artifact written; Ok(false) = the table was
+            // deliberately unloaded mid-snapshot (skip it -- same
+            // contract as a resident table unloaded mid-run: "may or
+            // may not be included"); Err = genuine serialization
+            // failure (fails the snapshot).
+            let written: Result<bool, String> = match slot {
+                Slot::Resident(e) => e
+                    .backend
+                    .save_artifact(&tmp)
+                    .map(|_| true)
+                    .map_err(|e| e.to_string()),
+                Slot::Spilled(s) => {
+                    // The spill artifact IS the per-kind snapshot format:
+                    // copy it. First wait out an in-flight demote/promote
+                    // (phase Spilling/Promoting -- the artifact's on-disk
+                    // state is undefined mid-transition), then copy; if a
+                    // promotion consumed the artifact between the wait
+                    // and the copy, re-fetch the (now resident) table
+                    // and serialize from memory. A LOST artifact skips
+                    // the table (its data is already gone; the rest of
+                    // the registry still deserves a backup) -- only a
+                    // real serialization failure fails the snapshot.
+                    s.wait_settled();
+                    let src = self
+                        .cfg
+                        .spill_dir
+                        .as_ref()
+                        .map(|sd| sd.join(&s.file));
+                    let copied = src
+                        .as_ref()
+                        .ok_or_else(|| "no spill dir".to_string())
+                        .and_then(|src| {
+                            std::fs::copy(src, &tmp)
+                                .map(|_| ())
+                                .map_err(|e| e.to_string())
+                        });
+                    copied.map(|_| true).or_else(|copy_err| {
+                        match self.slot_of(name) {
+                            Some(Slot::Resident(e)) => e
+                                .backend
+                                .save_artifact(&tmp)
+                                .map(|_| true)
+                                .map_err(|e| e.to_string()),
+                            Some(Slot::Spilled(cur)) => {
+                                // settled but unreadable: retry once
+                                // against the CURRENT slot (the table
+                                // may have been re-demoted under a
+                                // fresh artifact)
+                                cur.wait_settled();
+                                let retried = self
+                                    .cfg
+                                    .spill_dir
+                                    .as_ref()
+                                    .ok_or_else(|| "no spill dir".to_string())
+                                    .and_then(|sd| {
+                                        std::fs::copy(sd.join(&cur.file), &tmp)
+                                            .map(|_| true)
+                                            .map_err(|e| e.to_string())
+                                    });
+                                match retried {
+                                    Ok(ok) => Ok(ok),
+                                    // LOST (deleted out-of-band): that
+                                    // table's data is already gone --
+                                    // failing the WHOLE backup would
+                                    // compound the damage. Skip it,
+                                    // loudly, and snapshot the rest.
+                                    Err(_) if self.probe_spilled(&cur)
+                                        == Residency::Lost =>
+                                    {
+                                        eprintln!(
+                                            "snapshot: skipping table \
+                                             {name:?}: spill artifact is \
+                                             lost ({copy_err})");
+                                        Ok(false)
+                                    }
+                                    Err(e) => Err(format!(
+                                        "spill artifact unreadable \
+                                         ({copy_err}; retry: {e})")),
+                                }
+                            }
+                            // unloaded mid-snapshot: a deliberate removal
+                            // must not fail the whole backup -- skip it
+                            None => Ok(false),
+                        }
+                    })
+                }
+            };
+            match written {
+                Err(err) => {
+                    let _ = std::fs::remove_file(&tmp); // no tmp litter
+                    return Err(fail(format!("serialize table {name:?}"))(&err));
+                }
+                Ok(false) => {
+                    let _ = std::fs::remove_file(&tmp);
+                    continue; // not in the manifest: it no longer exists
+                }
+                Ok(true) => {}
             }
             std::fs::rename(&tmp, dir.join(&file))
-                .map_err(|err| fail(format!("publish table {:?}", e.name))(&err))?;
+                .map_err(|err| fail(format!("publish table {name:?}"))(&err))?;
             fresh.push(file.clone());
+            included.push(name.as_str());
             tables.push(Json::obj(vec![
-                ("name", Json::str(e.name.as_str())),
-                ("kind", Json::str(e.backend.kind())),
+                ("name", Json::str(name.as_str())),
+                ("kind", Json::str(kind.as_str())),
                 ("file", Json::str(file.as_str())),
-                ("vocab", Json::num(e.backend.vocab() as f64)),
-                ("d", Json::num(e.backend.d() as f64)),
-                ("storage_bits", Json::num(e.backend.storage_bits() as f64)),
+                ("vocab", Json::num(vocab as f64)),
+                ("d", Json::num(d as f64)),
+                ("storage_bits", Json::num(storage_bits as f64)),
             ]));
         }
         let mut pairs = vec![
@@ -745,10 +1698,18 @@ impl TableRegistry {
         if let Some(b) = self.cfg.mem_budget_bytes {
             pairs.push(("mem_budget_bytes", Json::num(b as f64)));
         }
+        if let Some(sd) = &self.cfg.spill_dir {
+            pairs.push(("spill_dir",
+                        Json::str(sd.to_string_lossy().as_ref())));
+            pairs.push(("spill", Json::str(
+                if self.cfg.spill_on_evict { "disk" } else { "drop" })));
+        }
         if let Some(d) = &default {
-            // `default` and `list` are separate reads; only record a
-            // default the snapshot actually contains
-            if entries.iter().any(|e| &e.name == d) {
+            // `default` and the slot list are separate reads; only
+            // record a default the snapshot actually contains (a table
+            // skipped because it was unloaded mid-snapshot must not be
+            // recorded either, or restore would fail on it)
+            if included.iter().any(|n| *n == d.as_str()) {
                 pairs.push(("default", Json::str(d.as_str())));
             }
         }
@@ -860,6 +1821,15 @@ impl TableRegistry {
                 .and_then(|v| v.as_f64())
                 .filter(|b| b.is_finite() && *b >= 1.0)
                 .map(|b| b as u64),
+            spill_dir: j
+                .get("spill_dir")
+                .and_then(|v| v.as_str())
+                .map(PathBuf::from),
+            spill_on_evict: j
+                .get("spill")
+                .and_then(|v| v.as_str())
+                .map(|s| s != "drop")
+                .unwrap_or(def.spill_on_evict),
         }
     }
 
@@ -881,6 +1851,9 @@ impl TableRegistry {
             message: m,
         };
         let cfg = cfg.unwrap_or_else(|| Self::config_from_manifest(&j));
+        // a manifest-recorded (or overridden) spill dir that does not
+        // exist must fail the restore loudly, same as `open` at startup
+        Self::validate_spill(&cfg)?;
         // Budget enforcement is DISABLED while the snapshot's tables are
         // re-inserted: a snapshot can legitimately be (softly) over its
         // own budget, and restore must rebuild exactly the manifest's
@@ -889,7 +1862,7 @@ impl TableRegistry {
         // governs every load made after the restore completes.
         let mut reg = TableRegistry::new(ServerConfig {
             mem_budget_bytes: None,
-            ..cfg
+            ..cfg.clone()
         });
         let base = manifest
             .parent()
@@ -988,8 +1961,23 @@ mod tests {
         ServerConfig {
             max_batch: 8,
             shards_per_table: shards,
-            mem_budget_bytes: None,
+            ..ServerConfig::default()
         }
+    }
+
+    /// A fresh spill-tier test dir (created, emptied) + a config using it.
+    fn spill_cfg(tag: &str, budget: Option<u64>) -> (std::path::PathBuf, ServerConfig) {
+        let dir = std::env::temp_dir().join(format!("dpq_registry_spill_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = ServerConfig {
+            max_batch: 8,
+            shards_per_table: 1,
+            mem_budget_bytes: budget,
+            spill_dir: Some(dir.clone()),
+            spill_on_evict: true,
+        };
+        (dir, cfg)
     }
 
     #[test]
@@ -1112,6 +2100,7 @@ mod tests {
             max_batch: 8,
             shards_per_table: 1,
             mem_budget_bytes: Some(2 * bytes_per),
+            ..ServerConfig::default()
         });
         reg.insert("base", dense(10, 4, 1).0).unwrap(); // default, pinned
         reg.insert("hot", dense(10, 4, 2).0).unwrap();
@@ -1146,6 +2135,7 @@ mod tests {
             max_batch: 8,
             shards_per_table: 1,
             mem_budget_bytes: Some(bytes_per / 2),
+            ..ServerConfig::default()
         });
         reg2.insert("only", dense(10, 4, 5).0).unwrap();
         assert_eq!(reg2.len(), 1);
@@ -1157,6 +2147,7 @@ mod tests {
             max_batch: 8,
             shards_per_table: 1,
             mem_budget_bytes: Some(3 * bytes_per),
+            ..ServerConfig::default()
         });
         reg4.insert("base", dense(10, 4, 6).0).unwrap(); // default, pinned
         reg4.insert("y", dense(10, 4, 7).0).unwrap();
@@ -1180,6 +2171,7 @@ mod tests {
             max_batch: 8,
             shards_per_table: 1,
             mem_budget_bytes: Some(3 * bytes_per),
+            ..ServerConfig::default()
         });
         reg3.insert("base", dense(10, 4, 6).0).unwrap();
         reg3.insert("t1", dense(10, 4, 7).0).unwrap();
@@ -1211,6 +2203,7 @@ mod tests {
             max_batch: 16,
             shards_per_table: 2,
             mem_budget_bytes: Some(1 << 20),
+            ..ServerConfig::default()
         });
         reg.insert("dpq", Arc::new(toy_embedding(30, 8, 4, 2, 7))).unwrap();
         reg.insert("dense", Arc::new(DenseTable::new(table.clone()).unwrap()))
@@ -1273,6 +2266,7 @@ mod tests {
             max_batch: 8,
             shards_per_table: 1,
             mem_budget_bytes: Some(2 * bytes_per), // fits only 2 of the 3
+            ..ServerConfig::default()
         }))
         .unwrap();
         // all three tables restored, zero evictions, default preserved
@@ -1332,6 +2326,184 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+        reg.shutdown();
+    }
+
+    #[test]
+    fn open_rejects_missing_spill_dir() {
+        let cfg = ServerConfig {
+            spill_dir: Some(std::env::temp_dir().join("dpq_no_such_spill_dir")),
+            ..ServerConfig::default()
+        };
+        let _ = std::fs::remove_dir_all(cfg.spill_dir.as_ref().unwrap());
+        match TableRegistry::open(cfg) {
+            Err(WireError::Rejected { code, .. }) => {
+                assert_eq!(code, "spill_dir_missing")
+            }
+            other => panic!("expected spill_dir_missing, got {other:?}"),
+        }
+        // a spill-less config opens fine
+        assert!(TableRegistry::open(ServerConfig::default()).is_ok());
+    }
+
+    #[test]
+    fn demote_without_spill_dir_is_typed() {
+        let reg = TableRegistry::new(cfg(1));
+        reg.insert("t", dense(10, 4, 1).0).unwrap();
+        match reg.demote("t") {
+            Err(WireError::Rejected { code, .. }) => {
+                assert_eq!(code, "spill_disabled")
+            }
+            other => panic!("{other:?}"),
+        }
+        reg.shutdown();
+    }
+
+    /// Demote -> lookup must round-trip bit-exactly through the spill
+    /// tier: the promoted table serves the same bytes, the LRU/stats
+    /// counters survive, the artifact and manifest appear on demote and
+    /// the artifact is GC'd on promote.
+    #[test]
+    fn demote_promote_roundtrip_bit_exact_and_manifest_tracked() {
+        let (dir, cfg) = spill_cfg("roundtrip", None);
+        let reg = TableRegistry::open(cfg).unwrap();
+        let (backend, table) = dense(30, 6, 5);
+        reg.insert("t", backend).unwrap();
+        reg.insert("other", dense(10, 4, 6).0).unwrap();
+        let ids: Vec<usize> = vec![0, 29, 7, 7, 13];
+        let before = reg.resolve(Some("t")).unwrap().lookup(&ids).unwrap();
+        let before: Vec<f32> = before.as_slice().to_vec();
+
+        let slot = reg.demote("t").unwrap();
+        assert_eq!((slot.kind(), slot.vocab(), slot.d()), ("dense", 30, 6));
+        assert_eq!(reg.residency("t"), Some(Residency::Spilled));
+        assert!(reg.get("t").is_none(), "get() must not see spilled tables");
+        assert!(dir.join(slot.file()).is_file(), "artifact not published");
+        let man = std::fs::read_to_string(dir.join(SPILL_MANIFEST)).unwrap();
+        assert!(man.contains("\"t\""), "manifest must track the spill: {man}");
+        assert_eq!(reg.spill_count(), 1);
+        // double demote is a typed not_resident
+        match reg.demote("t") {
+            Err(WireError::Rejected { code, .. }) => {
+                assert_eq!(code, "not_resident")
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // transparent reload on resolve; bytes bit-identical
+        let entry = reg.resolve(Some("t")).unwrap();
+        let after = entry.lookup(&ids).unwrap();
+        assert!(
+            before.iter().zip(after.as_slice())
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "promoted table serves different bytes"
+        );
+        for (r, &id) in ids.iter().enumerate() {
+            assert_eq!(&after.as_slice()[r * 6..(r + 1) * 6], table.row(id));
+        }
+        assert_eq!(reg.residency("t"), Some(Residency::Resident));
+        assert_eq!(reg.promote_count(), 1);
+        assert!(reg.promote_latency().is_some());
+        assert!(!dir.join(slot.file()).is_file(),
+                "promote must GC the consumed artifact");
+        let man = std::fs::read_to_string(dir.join(SPILL_MANIFEST)).unwrap();
+        assert!(!man.contains("\"t\""), "manifest must drop the promoted table");
+        // stats survived the round trip (1 pre-demotion + 1 post lookup)
+        assert_eq!(entry.stats.requests.load(Ordering::Relaxed), 2);
+        reg.shutdown();
+    }
+
+    /// Budget eviction with a spill tier demotes instead of dropping:
+    /// the victim stays registered (residency spilled, NOT the PR-3
+    /// evicted marker) and a later lookup brings it back bit-exactly --
+    /// possibly demoting someone else to make room.
+    #[test]
+    fn budget_eviction_spills_and_promotion_reenters_lru() {
+        let bytes_per = 10 * 4 * 4u64;
+        let (dir, cfg) = spill_cfg("evict", Some(2 * bytes_per));
+        let reg = TableRegistry::open(cfg).unwrap();
+        let (b_base, _) = dense(10, 4, 1);
+        let (b_hot, t_hot) = dense(10, 4, 2);
+        reg.insert("base", b_base).unwrap(); // default, pinned
+        reg.insert("hot", b_hot).unwrap();
+        reg.resolve(Some("hot")).unwrap();
+        reg.resolve(Some("base")).unwrap();
+        // third insert exceeds the budget; "hot" (stalest unpinned) is
+        // DEMOTED, not dropped
+        reg.insert("cold", dense(10, 4, 3).0).unwrap();
+        assert_eq!(reg.eviction_count(), 1);
+        assert_eq!(reg.spill_count(), 1);
+        assert!(!reg.was_evicted("hot"),
+                "spilled tables must not carry the dropped-evicted marker");
+        assert_eq!(reg.residency("hot"), Some(Residency::Spilled));
+        assert_eq!(reg.resident_bytes(), 2 * bytes_per);
+        assert_eq!(reg.len(), 3, "spilled tables stay registered");
+        assert_eq!(reg.list_spilled().len(), 1);
+
+        // promoting "hot" re-enters the LRU and must demote the stalest
+        // unpinned resident ("cold": base is default-pinned, hot is the
+        // promotion's protect) to stay under budget
+        let entry = reg.resolve(Some("hot")).unwrap();
+        let rows = entry.lookup(&[3, 9]).unwrap();
+        assert_eq!(&rows.as_slice()[..4], t_hot.row(3));
+        assert_eq!(reg.residency("hot"), Some(Residency::Resident));
+        assert_eq!(reg.residency("cold"), Some(Residency::Spilled));
+        assert_eq!(reg.resident_bytes(), 2 * bytes_per);
+        assert_eq!(reg.spill_count(), 2);
+        assert_eq!(reg.promote_count(), 1);
+        let _ = dir;
+        reg.shutdown();
+    }
+
+    #[test]
+    fn insert_over_spilled_name_is_table_exists() {
+        let (_dir, cfg) = spill_cfg("collide", None);
+        let reg = TableRegistry::open(cfg).unwrap();
+        reg.insert("t", dense(10, 4, 1).0).unwrap();
+        reg.insert("u", dense(10, 4, 3).0).unwrap();
+        reg.demote("t").unwrap();
+        assert_eq!(
+            reg.insert("t", dense(10, 4, 2).0).unwrap_err(),
+            WireError::TableExists("t".into()),
+            "a spilled table is still registered under its name"
+        );
+        reg.shutdown();
+    }
+
+    /// Unloading a spilled table GCs its artifact and drops it from the
+    /// manifest; a lost artifact is reported by probe, not a panic.
+    #[test]
+    fn unload_spilled_gcs_artifact_and_probe_reports_lost() {
+        let (dir, cfg) = spill_cfg("unload", None);
+        let reg = TableRegistry::open(cfg).unwrap();
+        reg.insert("a", dense(10, 4, 1).0).unwrap();
+        reg.insert("b", dense(10, 4, 2).0).unwrap();
+        let slot_a = reg.demote("a").unwrap();
+        let slot_b = reg.demote("b").unwrap();
+
+        // out-of-band deletion: probe flips to Lost, resolve is typed
+        std::fs::remove_file(dir.join(slot_b.file())).unwrap();
+        assert_eq!(reg.probe_spilled(&slot_b), Residency::Lost);
+        assert_eq!(reg.residency("b"), Some(Residency::Lost));
+        match reg.resolve(Some("b")) {
+            Err(WireError::Rejected { code, message }) => {
+                assert_eq!(code, "reload_failed");
+                assert!(message.contains("lost"), "{message}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // probe heals when an artifact reappears at the slot's path
+        // (out-of-band restore); Lost is advisory, never a tombstone
+        std::fs::copy(dir.join(slot_a.file()), dir.join(slot_b.file())).unwrap();
+        assert_eq!(reg.probe_spilled(&slot_b), Residency::Spilled);
+
+        let out = reg.unload("a").unwrap();
+        assert!(!out.was_default || out.new_default.is_some());
+        assert!(!dir.join(slot_a.file()).is_file(),
+                "unload must GC the spilled artifact");
+        let man = std::fs::read_to_string(dir.join(SPILL_MANIFEST)).unwrap();
+        assert!(!man.contains("\"a\""), "{man}");
+        assert!(man.contains("\"b\""), "{man}");
         reg.shutdown();
     }
 }

@@ -5,23 +5,18 @@
 use std::sync::atomic::AtomicU64;
 use std::sync::Mutex;
 
-/// Ring capacity: percentiles reflect the most recent batches only, so a
+/// Ring capacity: percentiles reflect the most recent samples only, so a
 /// long-lived server reports current latency, not its lifetime average.
 pub const LATENCY_RING: usize = 512;
 
-/// One table's serving statistics. Counters are relaxed atomics (exact
-/// totals, no ordering requirements); the latency ring takes a short
-/// mutex per drained batch -- batches are the unit of batcher work, so
-/// the lock is far off the per-id hot path.
+/// A fixed-size ring of recent latency samples with p50/p99 readout.
+/// One instance records batch reconstruction times per table; the
+/// registry keeps another for spill-tier promote (reload) latencies.
+/// Recording takes a short mutex per sample -- samples are per batch /
+/// per promotion, far off the per-id hot path.
 #[derive(Default)]
-pub struct Stats {
-    /// Lookup requests routed to this table (JSON + binary).
-    pub requests: AtomicU64,
-    /// Ids reconstructed for this table.
-    pub ids_served: AtomicU64,
-    /// Micro-batches drained by this table's batcher shards.
-    pub batches: AtomicU64,
-    ring: Mutex<LatRing>,
+pub struct LatencyRing {
+    inner: Mutex<LatRing>,
 }
 
 #[derive(Default)]
@@ -30,10 +25,10 @@ struct LatRing {
     next: usize,
 }
 
-impl Stats {
-    /// Record one drained batch's wall-clock reconstruction time.
-    pub fn record_batch_secs(&self, seconds: f64) {
-        let mut r = self.ring.lock().unwrap();
+impl LatencyRing {
+    /// Record one wall-clock sample in seconds.
+    pub fn record(&self, seconds: f64) {
+        let mut r = self.inner.lock().unwrap();
         if r.buf.len() < LATENCY_RING {
             r.buf.push(seconds);
         } else {
@@ -43,25 +38,57 @@ impl Stats {
         r.next = (r.next + 1) % LATENCY_RING;
     }
 
-    /// `(p50, p99)` over the latency ring, `None` before the first batch.
-    pub fn batch_latency(&self) -> Option<(f64, f64)> {
-        let v = {
-            let r = self.ring.lock().unwrap();
+    /// `(p50, p99)` over the ring, `None` before the first sample.
+    pub fn percentiles(&self) -> Option<(f64, f64)> {
+        let mut v = {
+            let r = self.inner.lock().unwrap();
             if r.buf.is_empty() {
                 return None;
             }
             r.buf.clone()
         };
-        let mut v = v;
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let pct = |p: f64| v[((p / 100.0) * (v.len() - 1) as f64).round() as usize];
         Some((pct(50.0), pct(99.0)))
     }
 
+    /// Number of samples currently in the ring (capped at
+    /// [`LATENCY_RING`]).
+    pub fn samples(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+}
+
+/// One table's serving statistics. Counters are relaxed atomics (exact
+/// totals, no ordering requirements). The registry carries a table's
+/// `Stats` across demote/promote cycles, so counters survive a trip
+/// through the spill tier.
+#[derive(Default)]
+pub struct Stats {
+    /// Lookup requests routed to this table (JSON + binary).
+    pub requests: AtomicU64,
+    /// Ids reconstructed for this table.
+    pub ids_served: AtomicU64,
+    /// Micro-batches drained by this table's batcher shards.
+    pub batches: AtomicU64,
+    ring: LatencyRing,
+}
+
+impl Stats {
+    /// Record one drained batch's wall-clock reconstruction time.
+    pub fn record_batch_secs(&self, seconds: f64) {
+        self.ring.record(seconds);
+    }
+
+    /// `(p50, p99)` over the latency ring, `None` before the first batch.
+    pub fn batch_latency(&self) -> Option<(f64, f64)> {
+        self.ring.percentiles()
+    }
+
     /// Number of latency samples currently in the ring (capped at
     /// [`LATENCY_RING`]).
     pub fn latency_samples(&self) -> usize {
-        self.ring.lock().unwrap().buf.len()
+        self.ring.samples()
     }
 }
 

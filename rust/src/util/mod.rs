@@ -11,3 +11,16 @@ pub mod prop;
 pub mod rng;
 
 pub use rng::Rng;
+
+/// FNV-1a 64-bit hash of a string: cheap, stable, dependency-free.
+/// One shared implementation for every name-keyed hash in the crate
+/// (deterministic data-stream seeds in the trainer, collision-proofed
+/// spill-artifact file names in the registry).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-64 offset basis
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3); // FNV-64 prime
+    }
+    h
+}

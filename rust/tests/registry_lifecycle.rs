@@ -60,7 +60,7 @@ fn snapshot_restore_serves_bit_identical_bytes_and_fanout_matches() {
     let registry = TableRegistry::new(ServerConfig {
         max_batch: 32,
         shards_per_table: 2,
-        mem_budget_bytes: None,
+        ..ServerConfig::default()
     });
     registry.insert("dpq", Arc::new(dpq)).unwrap();
     registry.insert("lr", Arc::new(lr)).unwrap();
@@ -154,6 +154,7 @@ fn eviction_fires_at_budget_pins_default_and_stays_serving() {
         max_batch: 8,
         shards_per_table: 1,
         mem_budget_bytes: Some(2 * bytes_per_dense + hot_bytes / 2),
+        ..ServerConfig::default()
     });
     registry.insert("base", dense(1)).unwrap(); // default -> pinned
     registry.insert("aux", dense(2)).unwrap();

@@ -1,0 +1,549 @@
+//! Fault-injection and acceptance tests for the tiered-residency
+//! serving stack (no artifacts needed):
+//!
+//! * **demote -> lookup round trip** is BIT-exact for every backend kind
+//!   (dpq, dense, scalar_quant, low_rank) at 1 and 2 worker threads:
+//!   rows served after the transparent reload are byte-identical to the
+//!   pre-demotion `lookup_bin` output.
+//! * **corrupted spill artifact**: promoting it answers a typed
+//!   `reload_failed` rejection and the registry keeps serving its other
+//!   tables; restoring the artifact's bytes heals the table.
+//! * **artifact deleted out-of-band**: `stats` reports
+//!   `residency: "lost"` instead of panicking anything; lookups answer
+//!   `reload_failed`.
+//! * **missing spill dir at startup** fails loudly and typed.
+//! * **demote mid-flight** (regression for the all-or-nothing fan-out
+//!   promise): a table demoted while a `lookup_fanout` section is
+//!   queued answers `no_such_table` (residency `"spilled"`) for the
+//!   WHOLE frame -- never a partial frame, never a wedged batcher.
+//! * **single-flight promotion**: N clients hammering one demoted table
+//!   cause exactly ONE promote; every caller gets bit-correct rows.
+
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Barrier, Condvar, Mutex};
+
+use anyhow::Result as AnyResult;
+use dpq_embed::backend::{DenseTable, EmbeddingBackend};
+use dpq_embed::dpq::toy_embedding;
+use dpq_embed::jsonx::Json;
+use dpq_embed::quant::{LowRank, ScalarQuant};
+use dpq_embed::server::{
+    read_frame, write_frame, Client, EmbeddingServer, Residency, Rows,
+    ServerConfig, TableRegistry, WireError,
+};
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::{pool, Rng};
+
+fn spawn(server: Arc<EmbeddingServer>)
+    -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+fn bits_equal(a: &Rows, b: &Rows) -> bool {
+    a.n() == b.n()
+        && a.d() == b.d()
+        && a.as_slice().iter().zip(b.as_slice())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn fresh_spill_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dpq_residency_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spill_cfg(dir: &Path, budget: Option<u64>, shards: usize) -> ServerConfig {
+    ServerConfig {
+        max_batch: 16,
+        shards_per_table: shards,
+        mem_budget_bytes: budget,
+        spill_dir: Some(dir.to_path_buf()),
+        spill_on_evict: true,
+    }
+}
+
+fn random_table(n: usize, d: usize, seed: u64) -> TensorF {
+    let mut rng = Rng::new(seed);
+    TensorF {
+        shape: vec![n, d],
+        data: (0..n * d).map(|_| rng.normal()).collect(),
+    }
+}
+
+/// Acceptance: demote -> lookup is bit-exact through the spill tier for
+/// EVERY backend kind, with 2 batcher shards, at 1 and 2 worker threads
+/// (`pool::set_threads` is process-wide, like tests/multi_table.rs, so
+/// both settings live in this one #[test]).
+#[test]
+fn demote_lookup_roundtrip_bit_exact_all_kinds_at_1_and_2_threads() {
+    let dir = fresh_spill_dir("roundtrip");
+    let registry =
+        TableRegistry::open(spill_cfg(&dir, None, 2)).unwrap();
+    let table = random_table(60, 8, 11);
+    registry.insert("dpq", Arc::new(toy_embedding(300, 16, 4, 3, 5))).unwrap();
+    registry
+        .insert("dense", Arc::new(DenseTable::new(table.clone()).unwrap()))
+        .unwrap();
+    registry.insert("sq", Arc::new(ScalarQuant::fit(&table, 6))).unwrap();
+    registry.insert("lr", Arc::new(LowRank::fit(&table, 3))).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    let ids_for = |vocab: usize| -> Vec<usize> {
+        (0..32).map(|i| (i * 13) % vocab).collect()
+    };
+    let mut promotes_expected = 0usize;
+    for threads in [1usize, 2] {
+        pool::set_threads(threads);
+        for name in ["dpq", "dense", "sq", "lr"] {
+            let vocab = match name {
+                "dpq" => 300,
+                _ => 60,
+            };
+            let ids = ids_for(vocab);
+            let before = c.lookup_bin(name, &ids).unwrap();
+
+            let file = c.admin_demote(name).unwrap();
+            assert!(dir.join(&file).is_file(),
+                    "{name}: spill artifact {file:?} not published");
+            let st = c.stats(Some(name)).unwrap();
+            assert_eq!(st.get("residency").and_then(|v| v.as_str()),
+                       Some("spilled"), "{name} must report spilled");
+            // double demote of a now-spilled table is typed
+            match c.admin_demote(name) {
+                Err(WireError::Rejected { code, .. }) => {
+                    assert_eq!(code, "not_resident", "{name}")
+                }
+                other => panic!("{name}: {other:?}"),
+            }
+
+            // the NEXT lookup transparently reloads -- bytes identical
+            let after = c.lookup_bin(name, &ids).unwrap();
+            promotes_expected += 1;
+            assert!(bits_equal(&before, &after),
+                    "{name}: promoted rows differ at {threads} thread(s)");
+            let st = c.stats(Some(name)).unwrap();
+            assert_eq!(st.get("residency").and_then(|v| v.as_str()),
+                       Some("resident"), "{name} must be resident again");
+            assert!(!dir.join(&file).is_file(),
+                    "{name}: promote must consume the artifact");
+        }
+        let st = c.stats(None).unwrap();
+        assert_eq!(st.get("promotes").and_then(|v| v.as_usize()),
+                   Some(promotes_expected));
+        assert_eq!(st.get("spills").and_then(|v| v.as_usize()),
+                   Some(promotes_expected));
+        assert!(st.get("promote_p50_s").and_then(|v| v.as_f64()).unwrap()
+                >= 0.0);
+        assert!(st.get("promote_p99_s").and_then(|v| v.as_f64()).unwrap()
+                >= st.get("promote_p50_s").and_then(|v| v.as_f64()).unwrap());
+    }
+    pool::set_threads(0); // restore env/auto resolution
+
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// A corrupted spill artifact must answer a typed `reload_failed` on
+/// promote -- not a panic, not a wedged batcher -- and the registry
+/// keeps serving its other tables. Restoring the original bytes heals
+/// the table with bit-exact rows.
+#[test]
+fn corrupted_spill_artifact_promote_is_typed_reload_failed() {
+    let dir = fresh_spill_dir("corrupt");
+    let registry = TableRegistry::open(spill_cfg(&dir, None, 1)).unwrap();
+    let table = random_table(30, 6, 3);
+    registry
+        .insert("base", Arc::new(DenseTable::new(random_table(10, 4, 1)).unwrap()))
+        .unwrap();
+    registry
+        .insert("cold", Arc::new(DenseTable::new(table.clone()).unwrap()))
+        .unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    let ids = [0usize, 29, 7];
+    let before = c.lookup_bin("cold", &ids).unwrap();
+    let file = c.admin_demote("cold").unwrap();
+    let artifact = dir.join(&file);
+    let good = std::fs::read(&artifact).unwrap();
+
+    // truncate the artifact: the promote must fail typed
+    std::fs::write(&artifact, &good[..good.len() / 2]).unwrap();
+    match c.lookup_bin("cold", &ids) {
+        Err(WireError::Rejected { code, message }) => {
+            assert_eq!(code, "reload_failed");
+            assert!(message.contains("cold"), "{message}");
+        }
+        other => panic!("expected reload_failed, got {other:?}"),
+    }
+    // ... on BOTH protocols, and the connection stays usable
+    match c.lookup("cold", &ids) {
+        Err(WireError::Rejected { code, .. }) => assert_eq!(code, "reload_failed"),
+        other => panic!("{other:?}"),
+    }
+    // the registry keeps serving its other tables
+    assert_eq!(c.lookup_bin("base", &[9]).unwrap().n(), 1);
+    // the table is still registered and still spilled
+    let st = c.stats(Some("cold")).unwrap();
+    assert_eq!(st.get("residency").and_then(|v| v.as_str()), Some("spilled"));
+
+    // healing: restore the artifact bytes; the next lookup serves the
+    // exact pre-demotion rows
+    std::fs::write(&artifact, &good).unwrap();
+    let after = c.lookup_bin("cold", &ids).unwrap();
+    assert!(bits_equal(&before, &after), "healed table serves wrong bytes");
+
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// A spill artifact deleted out-of-band: `stats` reports
+/// `residency: "lost"` (per table AND in the aggregate map), lookups
+/// answer `reload_failed`, nothing panics, other tables keep serving.
+#[test]
+fn out_of_band_deleted_artifact_reports_lost_in_stats() {
+    let dir = fresh_spill_dir("lost");
+    let registry = TableRegistry::open(spill_cfg(&dir, None, 1)).unwrap();
+    registry
+        .insert("base", Arc::new(DenseTable::new(random_table(10, 4, 1)).unwrap()))
+        .unwrap();
+    registry
+        .insert("gone", Arc::new(DenseTable::new(random_table(12, 5, 2)).unwrap()))
+        .unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    let file = c.admin_demote("gone").unwrap();
+    std::fs::remove_file(dir.join(&file)).unwrap();
+
+    let st = c.stats(Some("gone")).unwrap();
+    assert_eq!(st.get("residency").and_then(|v| v.as_str()), Some("lost"));
+    let agg = c.stats(None).unwrap();
+    assert_eq!(
+        agg.get("tables").unwrap().get("gone").unwrap()
+            .get("residency").and_then(|v| v.as_str()),
+        Some("lost")
+    );
+    match c.lookup_bin("gone", &[0]) {
+        Err(WireError::Rejected { code, message }) => {
+            assert_eq!(code, "reload_failed");
+            assert!(message.contains("lost") || message.contains("missing"),
+                    "{message}");
+        }
+        other => panic!("{other:?}"),
+    }
+    // the shard/batcher layer never saw the lost table: base still serves
+    assert_eq!(c.lookup_bin("base", &[3, 4]).unwrap().n(), 2);
+
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// A configured spill dir that does not exist fails loudly and typed at
+/// startup -- for `open` and for `restore` with a spill override.
+#[test]
+fn missing_spill_dir_at_startup_fails_loudly() {
+    let missing = std::env::temp_dir().join("dpq_residency_no_such_dir");
+    let _ = std::fs::remove_dir_all(&missing);
+    let cfg = ServerConfig {
+        spill_dir: Some(missing.clone()),
+        ..ServerConfig::default()
+    };
+    match TableRegistry::open(cfg.clone()) {
+        Err(WireError::Rejected { code, message }) => {
+            assert_eq!(code, "spill_dir_missing");
+            assert!(message.contains("dpq_residency_no_such_dir"), "{message}");
+        }
+        other => panic!("expected spill_dir_missing, got {other:?}"),
+    }
+
+    // restore with a bogus spill override fails the same way
+    let snap = fresh_spill_dir("snap_for_missing");
+    let reg = TableRegistry::new(ServerConfig::default());
+    reg.insert("t", Arc::new(DenseTable::new(random_table(4, 2, 1)).unwrap()))
+        .unwrap();
+    reg.snapshot(&snap).unwrap();
+    reg.shutdown();
+    match TableRegistry::restore(&snap, Some(cfg)) {
+        Err(WireError::Rejected { code, .. }) => {
+            assert_eq!(code, "spill_dir_missing")
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// A dense-backed table whose reconstruct blocks on a gate, so a test
+/// can hold a batcher shard mid-batch deterministically. `kind()` is
+/// "dense" and `save_artifact` delegates, so a demoted SlowDense
+/// promotes back as a plain `DenseTable` serving identical bytes.
+struct SlowDense {
+    inner: DenseTable,
+    /// false until the first reconstruct may proceed.
+    gate: Arc<(Mutex<bool>, Condvar)>,
+    /// set when a reconstruct has started (the shard is now held).
+    entered: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl SlowDense {
+    fn wait_entered(entered: &Arc<(Mutex<bool>, Condvar)>) {
+        let (m, cv) = &**entered;
+        let mut g = m.lock().unwrap();
+        while !*g {
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+        let (m, cv) = &**gate;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+    }
+}
+
+impl EmbeddingBackend for SlowDense {
+    fn kind(&self) -> &'static str {
+        "dense"
+    }
+
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]) {
+        {
+            let (m, cv) = &*self.entered;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        {
+            let (m, cv) = &*self.gate;
+            let mut g = m.lock().unwrap();
+            while !*g {
+                g = cv.wait(g).unwrap();
+            }
+        }
+        self.inner.reconstruct_rows_into(ids, out);
+    }
+
+    fn storage_bits(&self) -> usize {
+        self.inner.storage_bits()
+    }
+
+    fn save_artifact(&self, path: &Path) -> AnyResult<()> {
+        self.inner.save(path)
+    }
+}
+
+/// Regression for the all-or-nothing fan-out promise: a table demoted
+/// while a `lookup_fanout` section is QUEUED on its batcher answers
+/// `no_such_table` (residency `"spilled"`) for the WHOLE frame. The
+/// blocking backend holds the shard mid-batch so the interleaving is
+/// deterministic: lookup in flight -> fan-out queued behind it ->
+/// demote closes the queue -> whole-frame rejection; the in-flight
+/// lookup still completes (it happened-before the demote).
+#[test]
+fn demote_between_fanout_enqueue_and_wait_rejects_whole_frame() {
+    let dir = fresh_spill_dir("midflight");
+    let registry = TableRegistry::open(spill_cfg(&dir, None, 1)).unwrap();
+    let table = random_table(20, 4, 9);
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let entered = Arc::new((Mutex::new(false), Condvar::new()));
+    let slow = SlowDense {
+        inner: DenseTable::new(table.clone()).unwrap(),
+        gate: gate.clone(),
+        entered: entered.clone(),
+    };
+    registry
+        .insert("base", Arc::new(DenseTable::new(random_table(10, 4, 1)).unwrap()))
+        .unwrap(); // default stays out of the way
+    registry.insert("slow", Arc::new(slow)).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let reg = server.registry();
+    let entry = reg.get("slow").unwrap();
+
+    // client 1: a lookup that will hold the shard mid-batch
+    let addr1 = addr;
+    let t1 = std::thread::spawn(move || {
+        let mut c1 = Client::connect(addr1).unwrap();
+        c1.lookup_bin("slow", &[2, 3])
+    });
+    SlowDense::wait_entered(&entered); // the shard is now inside run_batch
+
+    // client 2 (raw framing so the rejection JSON is inspectable):
+    // a fan-out with a healthy section AND a slow-table section; the
+    // slow section queues BEHIND the held batch
+    let mut raw = TcpStream::connect(addr).unwrap();
+    write_frame(
+        &mut raw,
+        r#"{"v":2,"op":"lookup_fanout","queries":[{"table":"base","ids":[0,1]},{"table":"slow","ids":[5]}]}"#,
+    )
+    .unwrap();
+    // wait until the fan-out's slow section is queued (requests counter
+    // ticks in begin_lookup: 1 for client 1's lookup + 1 for the section)
+    while entry.stats.requests.load(std::sync::atomic::Ordering::Relaxed) < 2 {
+        std::thread::yield_now();
+    }
+
+    // demote while the section is queued; stop() joins the held shard,
+    // so run it on its own thread and let close() fail the queued section
+    let reg2 = server.registry();
+    let td = std::thread::spawn(move || reg2.demote("slow"));
+
+    // the WHOLE frame is rejected, typed: sentinel + JSON error frame
+    let mut len4 = [0u8; 4];
+    use std::io::Read as _;
+    raw.read_exact(&mut len4).unwrap();
+    assert_eq!(u32::from_le_bytes(len4), u32::MAX,
+               "fan-out must answer the rejection sentinel, not a frame");
+    let err = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+    assert_eq!(err.get("code").and_then(|v| v.as_str()), Some("no_such_table"));
+    assert_eq!(err.get("table").and_then(|v| v.as_str()), Some("slow"));
+    assert_eq!(err.get("residency").and_then(|v| v.as_str()), Some("spilled"),
+               "mid-flight demote must report the three-state residency");
+    assert!(err.get("evicted").is_none(),
+            "spilled is not the legacy dropped-evicted state");
+
+    // release the held batch: client 1's in-flight lookup completes
+    // (it happened-before the demote) and the demote finishes cleanly
+    SlowDense::open_gate(&gate);
+    let rows = t1.join().unwrap().expect("in-flight lookup must complete");
+    assert_eq!(rows.row(0), &table.data[2 * 4..3 * 4]);
+    td.join().unwrap().expect("demote must succeed");
+
+    // the demoted table transparently reloads (as a plain DenseTable)
+    // with bit-identical bytes
+    let mut c = Client::connect(addr).unwrap();
+    let back = c.lookup_bin("slow", &[5, 19]).unwrap();
+    assert_eq!(back.row(0), &table.data[5 * 4..6 * 4]);
+    assert_eq!(back.row(1), &table.data[19 * 4..20 * 4]);
+
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// A fan-out spanning a SPILLED table and a resident one under a
+/// budget that holds only two tables: frame-wide protection means the
+/// spilled section's promotion cannot demote the frame's other table
+/// (without it, each section's reload would evict the other and the
+/// frame could never succeed), the answer is bit-exact, and by the
+/// time the response arrives the budget has been re-enforced.
+#[test]
+fn fanout_promotion_under_tight_budget_protects_frame_tables() {
+    let dir = fresh_spill_dir("fanout_budget");
+    let bytes_per = (10 * 4 * 4) as u64;
+    let registry =
+        TableRegistry::open(spill_cfg(&dir, Some(2 * bytes_per), 1)).unwrap();
+    let t_a = random_table(10, 4, 31);
+    let t_b = random_table(10, 4, 32);
+    registry
+        .insert("base", Arc::new(DenseTable::new(random_table(10, 4, 30)).unwrap()))
+        .unwrap(); // default -> pinned
+    registry
+        .insert("a", Arc::new(DenseTable::new(t_a.clone()).unwrap()))
+        .unwrap();
+    // inserting "b" exceeds the budget; "a" (stalest unpinned) spills
+    registry
+        .insert("b", Arc::new(DenseTable::new(t_b.clone()).unwrap()))
+        .unwrap();
+    assert_eq!(registry.residency("a"), Some(Residency::Spilled));
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    // one frame over the spilled "a" AND the resident "b"
+    let sections = c
+        .lookup_fanout(&[("a", &[1, 2][..]), ("b", &[3][..])])
+        .unwrap();
+    assert_eq!(sections.len(), 2);
+    assert_eq!(sections[0].row(0), &t_a.data[1 * 4..2 * 4]);
+    assert_eq!(sections[0].row(1), &t_a.data[2 * 4..3 * 4]);
+    assert_eq!(sections[1].row(0), &t_b.data[3 * 4..4 * 4]);
+
+    // the budget was settled BEFORE the response: back within budget,
+    // with the frame's LRU table ("a", touched first) re-spilled
+    let reg = server.registry();
+    assert!(reg.resident_bytes() <= 2 * bytes_per,
+            "budget must be re-enforced before the fan-out answers");
+    assert_eq!(reg.residency("b"), Some(Residency::Resident),
+               "the frame's other table must not be demoted mid-frame");
+    assert_eq!(reg.residency("a"), Some(Residency::Spilled));
+
+    // and the frame is repeatable -- no promote/evict livelock
+    let again = c
+        .lookup_fanout(&[("a", &[1, 2][..]), ("b", &[3][..])])
+        .unwrap();
+    assert!(bits_equal(&again[0], &sections[0]));
+    assert!(bits_equal(&again[1], &sections[1]));
+
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// Single-flight promotion: N clients hammer one demoted table from a
+/// barrier; exactly ONE promote happens (promote counter == 1) and
+/// every caller gets bit-correct rows.
+#[test]
+fn concurrent_lookups_share_one_promotion() {
+    let dir = fresh_spill_dir("singleflight");
+    let registry = TableRegistry::open(spill_cfg(&dir, None, 1)).unwrap();
+    let table = random_table(40, 6, 21);
+    registry
+        .insert("base", Arc::new(DenseTable::new(random_table(10, 4, 1)).unwrap()))
+        .unwrap();
+    registry
+        .insert("cold", Arc::new(DenseTable::new(table.clone()).unwrap()))
+        .unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+    c.admin_demote("cold").unwrap();
+
+    const CLIENTS: usize = 6;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|w| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let ids: Vec<usize> = (0..8).map(|i| (w + i * 5) % 40).collect();
+                barrier.wait();
+                let rows = c.lookup_bin("cold", &ids).unwrap();
+                (ids, rows)
+            })
+        })
+        .collect();
+    for wkr in workers {
+        let (ids, rows) = wkr.join().unwrap();
+        assert_eq!((rows.n(), rows.d()), (ids.len(), 6));
+        for (r, &id) in ids.iter().enumerate() {
+            let want = &table.data[id * 6..(id + 1) * 6];
+            let got = rows.row(r);
+            assert!(
+                got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "client got wrong bytes for id {id}"
+            );
+        }
+    }
+    assert_eq!(server.registry().promote_count(), 1,
+               "exactly one promotion must serve all concurrent callers");
+    let st = c.stats(None).unwrap();
+    assert_eq!(st.get("promotes").and_then(|v| v.as_usize()), Some(1));
+
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}

@@ -1,0 +1,263 @@
+//! Property/soak test for tiered residency: randomized interleavings of
+//! `load` / `demote` / `lookup` / `lookup_fanout` / `unload` against 3
+//! tables under a tiny `--mem-budget` with a spill tier, driven at a
+//! 2-thread worker pool. Every successful lookup must be BIT-identical
+//! to a pinned always-resident reference registry (no budget, no spill)
+//! mirroring the same load/unload history, and resident bytes must
+//! never exceed the budget after each op completes (quiescence: the
+//! driver is synchronous, and demote/promote/evict all finish before
+//! returning).
+//!
+//! Everything lives in ONE #[test] because `pool::set_threads` is
+//! process-wide; tier-1 additionally reruns this file under
+//! `DPQ_THREADS=2`.
+
+use std::sync::{mpsc, Arc};
+
+use dpq_embed::backend::DenseTable;
+use dpq_embed::server::{
+    Client, EmbeddingServer, Rows, ServerConfig, TableRegistry, WireError,
+};
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::prop::prop_check;
+use dpq_embed::util::{pool, Rng};
+
+const NAMES: [&str; 3] = ["t0", "t1", "t2"];
+const VOCAB: usize = 10;
+const D: usize = 4;
+const BYTES_PER: u64 = (VOCAB * D * 4) as u64; // dense f32 table
+const BUDGET: u64 = 2 * BYTES_PER; // fits 2 of the 3 tables
+
+fn spawn(server: Arc<EmbeddingServer>)
+    -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+fn bits_equal(a: &Rows, b: &Rows) -> bool {
+    a.n() == b.n()
+        && a.d() == b.d()
+        && a.as_slice().iter().zip(b.as_slice())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Fresh deterministic table content per (table, load-epoch), so a
+/// reload after unload serves NEW bytes -- a stale spill artifact or a
+/// stale reference entry would be caught by the bit-compare.
+fn fresh_table(slot: usize, epoch: u64) -> TensorF {
+    let mut rng = Rng::new(1000 + slot as u64 * 97 + epoch * 7919);
+    TensorF {
+        shape: vec![VOCAB, D],
+        data: (0..VOCAB * D).map(|_| rng.normal()).collect(),
+    }
+}
+
+#[test]
+fn randomized_ops_match_always_resident_reference_under_budget() {
+    pool::set_threads(2); // the DPQ_THREADS=2 semantics, pinned in-process
+    let mut case_no = 0u64;
+    prop_check(6, |rng| {
+        case_no += 1;
+        let spill = std::env::temp_dir()
+            .join(format!("dpq_residency_soak_{case_no}"));
+        let _ = std::fs::remove_dir_all(&spill);
+        std::fs::create_dir_all(&spill)
+            .map_err(|e| format!("create spill dir: {e}"))?;
+
+        let subject = TableRegistry::open(ServerConfig {
+            max_batch: 8,
+            shards_per_table: 1,
+            mem_budget_bytes: Some(BUDGET),
+            spill_dir: Some(spill.clone()),
+            spill_on_evict: true,
+        })
+        .map_err(|e| format!("open: {e}"))?;
+        let reference = TableRegistry::new(ServerConfig {
+            max_batch: 8,
+            ..ServerConfig::default()
+        });
+
+        let subject = Arc::new(EmbeddingServer::new(subject));
+        let reference = Arc::new(EmbeddingServer::new(reference));
+        let (addr_s, h_s) = spawn(subject.clone());
+        let (addr_r, h_r) = spawn(reference.clone());
+        let mut cs = Client::connect(addr_s).unwrap();
+        let mut cr = Client::connect(addr_r).unwrap();
+
+        let mut epochs = [0u64; 3];
+        // start with every table loaded once (the subject immediately
+        // spills one of the three to fit the budget)
+        for (i, name) in NAMES.iter().enumerate() {
+            epochs[i] += 1;
+            let t = fresh_table(i, epochs[i]);
+            subject
+                .registry()
+                .insert(name, Arc::new(DenseTable::new(t.clone()).unwrap()))
+                .unwrap();
+            reference
+                .registry()
+                .insert(name, Arc::new(DenseTable::new(t).unwrap()))
+                .unwrap();
+        }
+
+        for step in 0..60 {
+            let i = rng.below(3);
+            let name = NAMES[i];
+            let registered = subject.registry().residency(name).is_some();
+            // the registration sets must never diverge
+            if registered != reference.registry().residency(name).is_some() {
+                return Err(format!(
+                    "step {step}: registration diverged for {name}"));
+            }
+            match rng.below(100) {
+                // ---- lookup (45%) ----
+                0..=44 => {
+                    let n_ids = rng.below(7);
+                    let ids: Vec<usize> =
+                        (0..n_ids).map(|_| rng.below(VOCAB)).collect();
+                    let got = cs.lookup_bin(name, &ids);
+                    let want = cr.lookup_bin(name, &ids);
+                    match (got, want) {
+                        (Ok(a), Ok(b)) => {
+                            if !bits_equal(&a, &b) {
+                                return Err(format!(
+                                    "step {step}: {name} served bytes != \
+                                     reference (ids {ids:?})"));
+                            }
+                        }
+                        (Err(WireError::NoSuchTable(_)),
+                         Err(WireError::NoSuchTable(_))) if !registered => {}
+                        (g, w) => {
+                            return Err(format!(
+                                "step {step}: outcome diverged for {name}: \
+                                 subject {g:?} vs reference {w:?}"));
+                        }
+                    }
+                }
+                // ---- fan-out across two tables (15%) ----
+                45..=59 => {
+                    let j = rng.below(3);
+                    let other = NAMES[j];
+                    let a: Vec<usize> =
+                        (0..rng.below(5)).map(|_| rng.below(VOCAB)).collect();
+                    let b: Vec<usize> =
+                        (0..rng.below(5)).map(|_| rng.below(VOCAB)).collect();
+                    let queries = [(name, &a[..]), (other, &b[..])];
+                    let got = cs.lookup_fanout(&queries);
+                    let want = cr.lookup_fanout(&queries);
+                    match (got, want) {
+                        (Ok(xs), Ok(ys)) => {
+                            if xs.len() != 2 || ys.len() != 2
+                                || !bits_equal(&xs[0], &ys[0])
+                                || !bits_equal(&xs[1], &ys[1])
+                            {
+                                return Err(format!(
+                                    "step {step}: fan-out diverged for \
+                                     ({name}, {other})"));
+                            }
+                        }
+                        (Err(_), Err(_)) => {} // both all-or-nothing rejected
+                        (g, w) => {
+                            return Err(format!(
+                                "step {step}: fan-out outcome diverged: \
+                                 subject {g:?} vs reference {w:?}"));
+                        }
+                    }
+                }
+                // ---- demote (15%, subject only) ----
+                60..=74 => {
+                    let res = subject.registry().demote(name);
+                    let resident = matches!(
+                        subject.registry().residency(name),
+                        Some(dpq_embed::server::Residency::Resident));
+                    match res {
+                        Ok(_) => {
+                            if resident {
+                                return Err(format!(
+                                    "step {step}: demote left {name} resident"));
+                            }
+                        }
+                        Err(WireError::NoSuchTable(_)) if !registered => {}
+                        Err(WireError::Rejected { ref code, .. })
+                            if code == "not_resident" => {}
+                        Err(e) => {
+                            return Err(format!(
+                                "step {step}: demote({name}) failed: {e}"));
+                        }
+                    }
+                }
+                // ---- load (12%) ----
+                75..=86 => {
+                    if !registered {
+                        epochs[i] += 1;
+                        let t = fresh_table(i, epochs[i]);
+                        subject
+                            .registry()
+                            .insert(name,
+                                    Arc::new(DenseTable::new(t.clone()).unwrap()))
+                            .map_err(|e| format!("step {step}: load: {e}"))?;
+                        reference
+                            .registry()
+                            .insert(name, Arc::new(DenseTable::new(t).unwrap()))
+                            .map_err(|e| format!("step {step}: ref load: {e}"))?;
+                    } else {
+                        // loading over a registered (even spilled) name
+                        // is TableExists on both registries
+                        let t = fresh_table(i, 999);
+                        match subject.registry().insert(
+                            name, Arc::new(DenseTable::new(t).unwrap())) {
+                            Err(WireError::TableExists(_)) => {}
+                            Err(e) => {
+                                return Err(format!(
+                                    "step {step}: duplicate load of {name} \
+                                     was not TableExists: {e}"));
+                            }
+                            Ok(_) => {
+                                return Err(format!(
+                                    "step {step}: duplicate load of {name} \
+                                     succeeded"));
+                            }
+                        }
+                    }
+                }
+                // ---- unload (13%) ----
+                _ => {
+                    let got = subject.registry().unload(name);
+                    let want = reference.registry().unload(name);
+                    match (got, want) {
+                        (Ok(_), Ok(_)) if registered => {}
+                        (Err(WireError::NoSuchTable(_)),
+                         Err(WireError::NoSuchTable(_))) if !registered => {}
+                        (g, w) => {
+                            return Err(format!(
+                                "step {step}: unload diverged for {name}: \
+                                 {g:?} vs {w:?}"));
+                        }
+                    }
+                }
+            }
+            // quiescence invariant: the driver is synchronous and every
+            // transition completes before returning, so resident bytes
+            // must respect the budget after EVERY op (the two pinnable
+            // tables together equal the budget exactly, so the soft
+            // over-budget escape hatch can never trigger here)
+            let resident = subject.registry().resident_bytes();
+            if resident > BUDGET {
+                return Err(format!(
+                    "step {step}: resident {resident} bytes exceeds the \
+                     {BUDGET}-byte budget after quiescence"));
+            }
+        }
+
+        cs.shutdown().unwrap();
+        cr.shutdown().unwrap();
+        h_s.join().unwrap();
+        h_r.join().unwrap();
+        let _ = std::fs::remove_dir_all(&spill);
+        Ok(())
+    });
+    pool::set_threads(0); // restore env/auto resolution
+}

@@ -6,6 +6,12 @@
 # exercised off the default thread heuristic, a rustdoc build where a
 # broken intra-doc link is an error, and a docs-coverage check that
 # every file under docs/ is reachable from the README.
+#
+# Residency coverage: the spill-tier suites (residency_faults,
+# residency_soak) run in both passes. In-memory-only mode (no
+# --spill-dir) must behave exactly as PR 3 did -- that is pinned by the
+# unmodified registry_lifecycle suite, which runs drop-mode eviction
+# with no spill tier configured.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,7 +19,7 @@ cargo build --release
 cargo test -q
 cargo build --release --examples
 DPQ_THREADS=2 cargo test -q --test multi_table --test server_integration \
-    --test registry_lifecycle
+    --test registry_lifecycle --test residency_faults --test residency_soak
 RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps -q
 for f in docs/*.md; do
     name="$(basename "$f")"

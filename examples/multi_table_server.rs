@@ -43,7 +43,10 @@ fn main() -> Result<()> {
         spill_dir: Some(spill_dir),
         ..ServerConfig::default()
     })?;
-    registry.insert("dpq", Arc::new(dpq))?;
+    // the hot table gets 2 batcher-shard replicas over one shared
+    // backend: lookups route to the least-loaded replica, and the
+    // served bytes stay bit-identical to replicas=1
+    registry.insert_with_replicas("dpq", Arc::new(dpq), 2)?;
     registry.insert("sq8", Arc::new(sq))?;
     registry.insert("lowrank", Arc::new(lr))?;
     registry.insert("dense", Arc::new(dense))?;
@@ -141,13 +144,20 @@ fn main() -> Result<()> {
     let st = c.stats(Some("dpq"))?;
     println!(
         "\ndpq stats: {} requests, {} ids, {} batches, batch p50 {:.1}us \
-         p99 {:.1}us",
+         p99 {:.1}us, {} replica(s)",
         st.get("requests").unwrap().as_usize().unwrap(),
         st.get("ids_served").unwrap().as_usize().unwrap(),
         st.get("batches").unwrap().as_usize().unwrap(),
         st.get("batch_p50_s").and_then(|v| v.as_f64()).unwrap_or(0.0) * 1e6,
         st.get("batch_p99_s").and_then(|v| v.as_f64()).unwrap_or(0.0) * 1e6,
+        st.get("replicas").and_then(|v| v.as_usize()).unwrap_or(1),
     );
+
+    // live resize: scale the hot table to 3 replicas mid-serving (the
+    // swap is invisible to traffic), then back down to 1
+    println!("set_replicas(dpq, 3) -> {}", c.admin_set_replicas("dpq", 3)?);
+    println!("  lookup still serves: d={}", c.lookup_bin("dpq", &[9])?.d());
+    println!("set_replicas(dpq, 1) -> {}", c.admin_set_replicas("dpq", 1)?);
 
     c.shutdown()?;
     handle.join().unwrap();

@@ -285,4 +285,99 @@ fn main() {
     c.shutdown().unwrap();
     h.join().unwrap();
     let _ = std::fs::remove_dir_all(&spill_dir);
+
+    // replica shards for one hot table: the same 8-client closed loop
+    // against replicas=1 vs replicas=3 (one shared backend, 3x the
+    // batcher drain). replica_speedup = mean per-request latency ratio.
+    let mut per_request = [0.0f64; 2];
+    for (slot, replicas) in [(0usize, 1usize), (1, 3)] {
+        section(&format!(
+            "hot table, {replicas} replica(s), 8 clients, bin"));
+        let registry = TableRegistry::new(ServerConfig::default());
+        registry
+            .insert_with_replicas("emb", Arc::new(ce.clone()), replicas)
+            .unwrap();
+        let server = Arc::new(EmbeddingServer::new(registry));
+        let (tx, rx) = mpsc::channel();
+        let s2 = server.clone();
+        let h = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let clients = 8usize;
+        let per_client = 400usize;
+        let t0 = Instant::now();
+        let ws: Vec<_> = (0..clients)
+            .map(|w| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    let mut rng = Rng::new(w as u64 + 1000);
+                    for _ in 0..per_client {
+                        let ids: Vec<usize> =
+                            (0..16).map(|_| rng.below(n)).collect();
+                        c.lookup_bin("emb", &ids).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for w in ws {
+            w.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let reqs = clients * per_client;
+        per_request[slot] = wall / reqs as f64;
+        println!(
+            "{replicas} replica(s): {reqs} requests in {wall:.2}s = \
+             {:.0} req/s", reqs as f64 / wall
+        );
+        bench::record(&format!("lookup_replicas{replicas}_8c"),
+                      per_request[slot], 0.0, reqs);
+        let mut c = Client::connect(addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+    println!(
+        "replica speedup (1 -> 3 replicas, 8 clients): {:.2}x",
+        per_request[0] / per_request[1].max(1e-12)
+    );
+    bench::record("replica_speedup",
+                  per_request[0] / per_request[1].max(1e-12), 0.0, 1);
+
+    // TTL eviction throughput: a deterministic-clock registry with many
+    // idle tables; one sweep demotes them all. Records how many tables
+    // a single expire pass can retire (and that the sweep itself is
+    // cheap enough to ride on the accept loop).
+    section("TTL: one sweep over idle tables (ManualClock)");
+    let ttl_spill = std::env::temp_dir().join("dpq_bench_server_ttl");
+    let _ = std::fs::remove_dir_all(&ttl_spill);
+    std::fs::create_dir_all(&ttl_spill).unwrap();
+    let clock = Arc::new(dpq_embed::server::ManualClock::new());
+    let registry = TableRegistry::open_with_clock(
+        ServerConfig {
+            max_batch: 64,
+            spill_dir: Some(ttl_spill.clone()),
+            ttl_secs: Some(60),
+            ..ServerConfig::default()
+        },
+        clock.clone(),
+    )
+    .unwrap();
+    let idle_tables = 6usize;
+    registry.insert("default", Arc::new(small[0].clone())).unwrap();
+    for (i, emb) in small.iter().enumerate().take(idle_tables).skip(1) {
+        registry.insert(&format!("t{i}"), Arc::new(emb.clone())).unwrap();
+    }
+    clock.advance(std::time::Duration::from_secs(61));
+    let t0 = Instant::now();
+    let expired = registry.expire_idle();
+    let sweep = t0.elapsed().as_secs_f64();
+    println!(
+        "{expired} idle tables demoted in {:.1}ms ({} resident after; \
+         default pinned)",
+        sweep * 1e3, registry.list().len()
+    );
+    bench::record("ttl_demotions", expired as f64, 0.0, 1);
+    bench::record("ttl_sweep_s", sweep, 0.0, expired.max(1));
+    registry.shutdown();
+    let _ = std::fs::remove_dir_all(&ttl_spill);
 }

@@ -199,10 +199,11 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         "serve" => {
-            // `--table name=path` is repeatable, so peel those off before
-            // the map-based flag parser (which keeps only the last value
-            // per key) sees the rest.
-            let mut tables: Vec<(String, std::path::PathBuf)> = Vec::new();
+            // `--table name=path[:replicas=N]` is repeatable, so peel
+            // those off before the map-based flag parser (which keeps
+            // only the last value per key) sees the rest.
+            let mut tables: Vec<(String, std::path::PathBuf, usize)> =
+                Vec::new();
             let mut plain: Vec<String> = Vec::new();
             let mut it = rest.iter();
             while let Some(a) = it.next() {
@@ -210,10 +211,27 @@ fn dispatch(args: &[String]) -> Result<()> {
                     let spec = it
                         .next()
                         .ok_or_else(|| anyhow!("--table missing name=path"))?;
-                    let (name, path) = spec.split_once('=').ok_or_else(|| {
-                        anyhow!("--table expects name=path, got {spec:?}")
+                    let (name, rest) = spec.split_once('=').ok_or_else(|| {
+                        anyhow!("--table expects name=path[:replicas=N], \
+                                 got {spec:?}")
                     })?;
-                    tables.push((name.to_string(), path.into()));
+                    // the replicas suffix splits from the RIGHT so a
+                    // path containing ':' stays intact
+                    let (path, replicas) = match rest.rsplit_once(":replicas=")
+                    {
+                        None => (rest, 1usize),
+                        Some((p, n)) => {
+                            let n: usize = n.parse().map_err(|_| anyhow!(
+                                "--table {spec:?}: replicas expects a \
+                                 positive integer"))?;
+                            if n == 0 {
+                                bail!("--table {spec:?}: replicas must be \
+                                       >= 1");
+                            }
+                            (p, n)
+                        }
+                    };
+                    tables.push((name.to_string(), path.into(), replicas));
                 } else {
                     plain.push(a.clone());
                 }
@@ -273,6 +291,27 @@ fn dispatch(args: &[String]) -> Result<()> {
                 }
                 Some(s) => Some(Some(parse_mem_budget(s)?)),
             };
+            // --ttl SECS: idle tables expire past SECS (demoted with a
+            // spill tier, dropped without). Same outer/inner Option
+            // shape as --mem-budget: "none"/"off"/"0" drops a TTL a
+            // --restore manifest recorded.
+            let ttl_secs: Option<Option<u64>> = match kv.get("ttl") {
+                None => None,
+                Some(s)
+                    if matches!(s.trim().to_ascii_lowercase().as_str(),
+                                "none" | "off" | "0") =>
+                {
+                    Some(None)
+                }
+                Some(s) => {
+                    let t: u64 = s.trim().parse().map_err(|_| anyhow!(
+                        "--ttl expects whole seconds (or none), got {s:?}"))?;
+                    if t == 0 {
+                        bail!("--ttl must be >= 1 second (or none)");
+                    }
+                    Some(Some(t))
+                }
+            };
             let registry = if let Some(manifest) = kv.get("restore") {
                 // rebuild a whole registry from a snapshot manifest; the
                 // snapshot's recorded config applies unless a flag was
@@ -287,6 +326,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                 }
                 if let Some(b) = mem_budget {
                     cfg.mem_budget_bytes = b;
+                }
+                if let Some(t) = ttl_secs {
+                    cfg.ttl_secs = t;
                 }
                 if let Some(sd) = spill_dir.clone() {
                     // Some(None) = --spill-dir none: drop the recorded tier
@@ -314,26 +356,30 @@ fn dispatch(args: &[String]) -> Result<()> {
                 if tables.is_empty() {
                     let path = std::path::PathBuf::from(
                         take_or(&kv, "embedding", "compressed.dpq"));
-                    tables.push(("default".to_string(), path));
+                    tables.push(("default".to_string(), path, 1));
                 }
                 // `open`, not `new`: a configured spill dir that does
                 // not exist must fail loudly at startup, not at the
-                // first eviction
+                // first eviction -- and a spill.json a previous process
+                // left behind is re-adopted (spilled tables reload
+                // transparently on their first lookup)
                 TableRegistry::open(ServerConfig {
                     max_batch,
                     shards_per_table,
                     mem_budget_bytes: mem_budget.flatten(),
                     spill_dir: spill_dir.flatten(),
                     spill_on_evict: spill_on_evict.unwrap_or(true),
+                    ttl_secs: ttl_secs.flatten(),
                 })?
             };
             // `--table` flags load on top of either path (extra tables
             // alongside a restored snapshot are fine)
-            for (name, path) in &tables {
+            for (name, path, replicas) in &tables {
                 let emb = dpq_embed::dpq::CompressedEmbedding::load(path)
                     .map_err(|e| anyhow!(
                         "load {path:?}: {e} (run `repro compress` first)"))?;
-                registry.insert(name, std::sync::Arc::new(emb))?;
+                registry.insert_with_replicas(
+                    name, std::sync::Arc::new(emb), *replicas)?;
             }
             if let Some(def) = kv.get("default") {
                 registry.set_default(def)?;
@@ -341,11 +387,18 @@ fn dispatch(args: &[String]) -> Result<()> {
             for e in registry.list() {
                 println!(
                     "table {}: {} symbols x d={} [{}] ({} KiB resident, \
-                     CR {:.1}x, {} shard(s))",
+                     CR {:.1}x, {} shard(s) x {} replica(s))",
                     e.name, e.backend.vocab(), e.backend.d(),
                     e.backend.kind(), e.resident_bytes() / 1024,
                     dpq_embed::backend::compression_ratio(&*e.backend),
-                    e.shard_count()
+                    e.shard_count(), e.replica_count()
+                );
+            }
+            for s in registry.list_spilled() {
+                println!(
+                    "table {}: {} symbols x d={} [{}] (recovered from the \
+                     spill tier; reloads on first lookup)",
+                    s.name(), s.vocab(), s.d(), s.kind()
                 );
             }
             let cfg = registry.config();
@@ -354,6 +407,12 @@ fn dispatch(args: &[String]) -> Result<()> {
                     "memory budget: {b} bytes (LRU eviction; the default \
                      table is pinned), {} bytes resident",
                     registry.resident_bytes()
+                );
+            }
+            if let Some(t) = cfg.ttl_secs {
+                println!(
+                    "idle TTL: {t}s (tables nobody looks up for that long \
+                     are demoted; the default table is pinned)"
                 );
             }
             if let Some(d) = &cfg.spill_dir {
@@ -413,19 +472,30 @@ fn print_usage() {
          \x20 train      [--artifact P --steps N --lr X ...]\n\
          \x20 experiment <id|all> [--steps N] | --list\n\
          \x20 compress   [--artifact P --out F]\n\
-         \x20 serve      [--table NAME=F ... --default NAME --addr A\n\
-         \x20             --max-batch N --shards N\n\
-         \x20             --mem-budget BYTES|none --restore MANIFEST\n\
+         \x20 serve      [--table NAME=F[:replicas=N] ... --default NAME\n\
+         \x20             --addr A --max-batch N --shards N\n\
+         \x20             --mem-budget BYTES|none --ttl SECS|none\n\
+         \x20             --restore MANIFEST\n\
          \x20             --spill-dir DIR|none --spill disk|drop]\n\
          \x20            (--table is repeatable: one server, many tables,\n\
          \x20             routed by table name over protocol v2; legacy\n\
          \x20             --embedding F serves one table named \"default\";\n\
+         \x20             :replicas=N serves a hot table through N\n\
+         \x20             independent batcher-shard sets over one shared\n\
+         \x20             backend (least-loaded routing, bit-identical\n\
+         \x20             bytes; resize live with the set_replicas op);\n\
          \x20             --mem-budget evicts least-recently-used tables\n\
          \x20             past BYTES (K/M/G suffixes ok, default pinned);\n\
+         \x20             --ttl SECS demotes tables idle past SECS even\n\
+         \x20             under budget (default pinned, \"none\" drops a\n\
+         \x20             restored TTL);\n\
          \x20             --spill-dir DIR turns eviction into demotion:\n\
          \x20             victims spill to DIR (must exist) and reload\n\
          \x20             transparently on the next lookup (\"none\" drops\n\
-         \x20             a tier a --restore manifest recorded); --spill\n\
+         \x20             a tier a --restore manifest recorded); a\n\
+         \x20             spill.json left by a previous process is\n\
+         \x20             re-adopted at startup, so a restarted server\n\
+         \x20             keeps serving its spilled tables; --spill\n\
          \x20             drop keeps discard-on-evict while still allowing\n\
          \x20             the `demote` admin op;\n\
          \x20             --restore rebuilds a registry from a snapshot\n\

@@ -1,0 +1,117 @@
+//! Injectable time source for the registry's TTL-idle tracking.
+//!
+//! TTL eviction ("demote a table nobody has looked up for `--ttl`
+//! seconds") is untestable against the real clock: a test would have to
+//! sleep through the TTL, and "demoted exactly at the deadline" could
+//! never be asserted at all. The registry therefore reads time through
+//! the [`Clock`] trait. Production uses [`MonotonicClock`] (a plain
+//! monotonic `Instant`); tests inject a [`ManualClock`] and advance it
+//! by hand, which makes every TTL decision -- fire at exactly the
+//! deadline, survive one tick before it, compose with the memory
+//! budget -- a deterministic assertion instead of a sleep-and-hope.
+//!
+//! The clock only feeds *idle-time* decisions. LRU ordering keeps using
+//! the registry's logical tick counter (resolution-ordered, no time at
+//! all), and latency rings keep using `Instant` directly -- measured
+//! wall time is a report, not a decision, so it does not need to be
+//! injectable.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A monotonic time source: `now()` returns the time elapsed since an
+/// arbitrary fixed origin (the clock's creation for the production
+/// implementation). Implementations must never go backwards.
+pub trait Clock: Send + Sync {
+    /// Monotonic time since the clock's origin.
+    fn now(&self) -> Duration;
+}
+
+/// The production [`Clock`]: monotonic wall time since the clock was
+/// created, via [`Instant`]. Immune to system-clock steps (NTP, DST).
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    /// A monotonic clock whose origin is "now".
+    pub fn new() -> Self {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now(&self) -> Duration {
+        self.origin.elapsed()
+    }
+}
+
+/// A deterministic [`Clock`] for tests: time starts at zero and moves
+/// only when [`advance`](Self::advance) / [`set`](Self::set) are
+/// called. Injecting one into a registry makes TTL eviction a pure
+/// function of the test's explicit ticks.
+#[derive(Default)]
+pub struct ManualClock {
+    now: Mutex<Duration>,
+}
+
+impl ManualClock {
+    /// A manual clock frozen at `t = 0`.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Move time forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        let mut now = self.now.lock().unwrap();
+        *now = now.saturating_add(d);
+    }
+
+    /// Jump to an absolute time since the origin. Clamped to never go
+    /// backwards (a [`Clock`] is monotonic by contract).
+    pub fn set(&self, t: Duration) {
+        let mut now = self.now.lock().unwrap();
+        if t > *now {
+            *now = t;
+        }
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Duration {
+        *self.now.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_clock_advances() {
+        let c = MonotonicClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_moves_only_on_ticks_and_never_backwards() {
+        let c = ManualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_secs(5));
+        assert_eq!(c.now(), Duration::from_secs(5));
+        c.set(Duration::from_secs(3)); // backwards: clamped
+        assert_eq!(c.now(), Duration::from_secs(5));
+        c.set(Duration::from_secs(9));
+        assert_eq!(c.now(), Duration::from_secs(9));
+        c.advance(Duration::from_millis(500));
+        assert_eq!(c.now(), Duration::from_millis(9500));
+    }
+}

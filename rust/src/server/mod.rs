@@ -32,6 +32,7 @@
 //! | `load`          | 2   | `table`, `path`           | hot-load a `.dpq` file as a new table |
 //! | `unload`        | 2   | `table`                   | hot-drop a table (resident or spilled); reports `was_default` + the default now in force |
 //! | `demote`        | 2   | `table`                   | spill a resident table to the `--spill-dir` tier; next lookup reloads it |
+//! | `set_replicas`  | 2   | `table`, `replicas`       | live-resize the table's batcher-shard replica count |
 //! | `snapshot`      | 2   | `dir`                     | serialize the registry into a server-side dir, `{"ok":true,"manifest":..}` |
 //! | `shutdown`      | 1,2 |                           | `{"ok":true}`, then the server exits |
 //!
@@ -74,6 +75,7 @@
 //! channels.
 
 pub mod batcher;
+pub mod clock;
 pub mod protocol;
 pub mod registry;
 pub mod stats;
@@ -89,15 +91,16 @@ use crate::dpq::CompressedEmbedding;
 use crate::jsonx::Json;
 
 pub use batcher::BatchQueue;
+pub use clock::{Clock, ManualClock, MonotonicClock};
 pub use protocol::{
     read_frame, write_frame, Client, Rows, TableDesc, WireError, VERSION,
 };
 pub use registry::{
     Residency, ServerConfig, SpilledTable, TableEntry, TableRegistry,
-    UnloadOutcome, SNAPSHOT_FORMAT, SNAPSHOT_MANIFEST, SNAPSHOT_VERSION,
-    SPILL_FORMAT, SPILL_MANIFEST,
+    UnloadOutcome, MAX_REPLICAS, SNAPSHOT_FORMAT, SNAPSHOT_MANIFEST,
+    SNAPSHOT_VERSION, SPILL_FORMAT, SPILL_MANIFEST,
 };
-pub use stats::{LatencyRing, Stats};
+pub use stats::{LatencyRing, ReplicaStats, Stats};
 
 use batcher::Answer;
 use protocol::{
@@ -160,6 +163,12 @@ impl EmbeddingServer {
                     });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // idle tick: with --ttl set, tables expire even on a
+                    // server receiving no traffic at all (the sweep also
+                    // rides on resolves; without a TTL this is a no-op).
+                    // Throttled to one scan per clock-second, so the
+                    // tick itself costs one atomic load.
+                    self.registry.maybe_expire_idle(&[]);
                     std::thread::sleep(Duration::from_millis(5));
                 }
                 Err(e) => return Err(e.into()),
@@ -247,6 +256,52 @@ fn batch_failure_err(registry: &TableRegistry, entry: &TableEntry) -> WireError 
     }
 }
 
+/// The CURRENT entry to retry a failed lookup against, when (and only
+/// when) the failure was a live `set_replicas` swap: the table must be
+/// resident under a DIFFERENT entry serving the SAME BACKEND
+/// ALLOCATION -- `set_replicas` clones the backend `Arc` into the new
+/// entry, so backend identity (not mere shape equality) is the exact
+/// discriminator. An unload + reload of a different same-shape
+/// artifact under the same name has a different backend and correctly
+/// returns `None`: replaying against it would silently serve data the
+/// request never targeted. On `None` the caller rejects with
+/// [`batch_failure_err`] computed from the ORIGINAL entry (keeping the
+/// PR-4 contract: gone/replaced tables answer `no_such_table`, never
+/// `internal`). Shared by the lookup and fan-out retry paths so their
+/// swap semantics cannot drift.
+fn resized_entry(
+    registry: &TableRegistry,
+    entry: &Arc<TableEntry>,
+) -> Option<Arc<TableEntry>> {
+    // thin-pointer compare: Arc::ptr_eq on dyn Arcs may also compare
+    // vtable metadata, which can differ across codegen units for the
+    // same object -- strip to the data address
+    let backend_addr =
+        |e: &Arc<TableEntry>| Arc::as_ptr(&e.backend) as *const ();
+    match registry.get(&entry.name) {
+        Some(cur)
+            if !Arc::ptr_eq(&cur, entry)
+                && backend_addr(&cur) == backend_addr(entry) =>
+        {
+            Some(cur)
+        }
+        _ => None,
+    }
+}
+
+/// Typed rejection for a lookup that kept losing its entry to
+/// back-to-back `set_replicas` swaps: the table is alive and healthy,
+/// so the code says "resized, retry" -- answering `no_such_table`
+/// would wrongly tell routing clients to drop a live table.
+fn resize_flap_err(name: &str) -> WireError {
+    WireError::Rejected {
+        code: "resized".into(),
+        message: format!(
+            "table {name:?} was resized (set_replicas) repeatedly while \
+             the lookup was in flight; retry"),
+    }
+}
+
 /// Resolve the request's table, validate ids, route through the batcher
 /// shards, and encode the response for one lookup op.
 fn lookup_op(
@@ -280,12 +335,36 @@ fn lookup_op(
         Err(e) => return reject(stream, &e),
     };
     let d = entry.backend.d();
-    let ans: Answer = match entry.lookup(&ids) {
-        Some(a) => a,
-        // batcher failed the request: an explicit error, never ok:true
-        // with a short vector list. Unloaded/evicted mid-flight answers
-        // no_such_table; a still-registered table is the bug path.
-        None => return reject(stream, &batch_failure_err(registry, &entry)),
+    // A live `set_replicas` resize swaps the table to a fresh entry and
+    // closes the old entry's queues; a lookup caught in that window gets
+    // a failed wait. The table is alive and the backend identical, so
+    // retry against the CURRENT entry (bounded -- an operator flipping
+    // replicas in a tight loop must not pin this request forever; the
+    // exhaustion answer is a typed retryable "resized", NOT
+    // no_such_table for a live table). Every other failure keeps the
+    // PR-4 semantics: an explicit error, never ok:true with a short
+    // vector list -- unloaded/evicted/demoted mid-flight answers
+    // no_such_table; a still-registered same entry is the bug path.
+    let mut entry = entry;
+    let mut tries = 0;
+    let ans: Answer = loop {
+        match entry.lookup(&ids) {
+            Some(a) => break a,
+            None => match resized_entry(registry, &entry) {
+                Some(cur) if tries < 3 => {
+                    tries += 1;
+                    // the replay re-counts in begin_lookup; keep
+                    // `requests` an exact per-client-request total
+                    entry.stats.requests.fetch_sub(1, Ordering::Relaxed);
+                    entry = cur; // resized: same table, new shards
+                }
+                Some(_) => {
+                    return reject(stream, &resize_flap_err(&entry.name))
+                }
+                None => return reject(
+                    stream, &batch_failure_err(registry, &entry)),
+            },
+        }
     };
     let flat = ans.as_slice();
     debug_assert_eq!(flat.len(), ids.len() * d);
@@ -416,20 +495,50 @@ fn fanout_op(
     // queue EVERY table's sub-lookups before waiting on any, so the
     // tables' batchers (and their shards) reconstruct concurrently --
     // this is what makes the fan-out one round trip instead of a loop
-    let tickets: Vec<_> =
-        parts.iter().map(|(e, ids)| e.begin_lookup(ids)).collect();
-    let mut answers: Vec<Answer> = Vec::with_capacity(tickets.len());
-    let mut failed: Option<usize> = None;
-    for (k, t) in tickets.into_iter().enumerate() {
-        match t.wait() {
-            Some(a) => answers.push(a),
-            // remember which section failed, keep draining the rest
-            None => failed = failed.or(Some(k)),
+    let mut tries = 0;
+    let answers: Vec<Answer> = loop {
+        let tickets: Vec<_> =
+            parts.iter().map(|(e, ids)| e.begin_lookup(ids)).collect();
+        let mut answers: Vec<Answer> = Vec::with_capacity(tickets.len());
+        let mut failed: Option<usize> = None;
+        for (k, t) in tickets.into_iter().enumerate() {
+            match t.wait() {
+                Some(a) => answers.push(a),
+                // remember which section failed, keep draining the rest
+                None => failed = failed.or(Some(k)),
+            }
         }
-    }
-    if let Some(k) = failed {
-        return reject(stream, &batch_failure_err(registry, &parts[k].0));
-    }
+        let Some(k) = failed else { break answers };
+        // Was the FAILED section's failure a live set_replicas swap?
+        // Decide from section k's ORIGINAL entry, before any refresh,
+        // so the rejection code keeps the PR-4 contract: a table
+        // unloaded/demoted mid-flight answers no_such_table (annotated)
+        // for the whole frame, never `internal`. Only a swap to an
+        // entry over the SAME backend Arc (a genuine resize) replays
+        // the frame, all-or-nothing, bounded (a flapping operator must
+        // not pin this frame forever).
+        if resized_entry(registry, &parts[k].0).is_none() {
+            return reject(stream, &batch_failure_err(registry, &parts[k].0));
+        }
+        tries += 1;
+        if tries >= 4 {
+            return reject(stream, &resize_flap_err(&parts[k].0.name));
+        }
+        // Undo this round's request counts FIRST, on the entries that
+        // were actually begun (a same-name reload carries FRESH stats,
+        // so decrementing after a refresh would underflow the new
+        // entry's counter and strand a phantom count on the old one),
+        // THEN refresh every swapped section -- section k included. A
+        // section whose table vanished is left as-is: its replay fails
+        // and the next round rejects with THAT section's own
+        // (no_such_table) error.
+        for (e, _) in parts.iter_mut() {
+            e.stats.requests.fetch_sub(1, Ordering::Relaxed);
+            if let Some(cur) = resized_entry(registry, e) {
+                *e = cur;
+            }
+        }
+    };
     registry.note_fanout();
     let sections: Vec<(usize, usize, &[f32])> = parts
         .iter()
@@ -532,6 +641,9 @@ fn stats_op(
                     pairs.push(("table", Json::str(entry.name.as_str())));
                     pairs.push(("residency",
                                 Json::str(Residency::Resident.as_str())));
+                    pairs.push(("replicas",
+                                Json::num(entry.replica_count() as f64)));
+                    pairs.push(("replica", entry.replica_stats_json()));
                     pairs.extend(stats_pairs(&entry.stats));
                 }
                 Some(registry::Slot::Spilled(s)) => {
@@ -571,6 +683,9 @@ fn stats_op(
                         let mut pairs = vec![
                             ("residency",
                              Json::str(Residency::Resident.as_str())),
+                            ("replicas",
+                             Json::num(e.replica_count() as f64)),
+                            ("replica", e.replica_stats_json()),
                         ];
                         pairs.extend(stats_pairs(&e.stats));
                         pairs
@@ -593,6 +708,9 @@ fn stats_op(
         // eviction count, and which tables are currently evicted
         ("resident_bytes", Json::num(registry.resident_bytes() as f64)),
         ("evictions", Json::num(registry.eviction_count() as f64)),
+        // TTL-caused expirations, attributed separately from budget
+        // evictions ("whichever fires first wins" is auditable)
+        ("ttl_demotions", Json::num(registry.ttl_demotion_count() as f64)),
         // spill-tier telemetry: demotions, transparent reloads, and the
         // reload-latency ring operators size cold-start SLOs from
         ("spills", Json::num(registry.spill_count() as f64)),
@@ -604,6 +722,9 @@ fn stats_op(
     }
     if let Some(b) = registry.config().mem_budget_bytes {
         pairs.push(("mem_budget_bytes", Json::num(b as f64)));
+    }
+    if let Some(t) = registry.config().ttl_secs {
+        pairs.push(("ttl_secs", Json::num(t as f64)));
     }
     let evicted = registry.evicted_tables();
     if !evicted.is_empty() {
@@ -666,6 +787,44 @@ fn demote_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Resu
             ("file", Json::str(slot.file())),
             ("spilled_bytes", Json::num(slot.spilled_bytes() as f64)),
         ]).to_string()),
+        Err(e) => write_frame(
+            stream, &annotated_err_frame(registry, &e).to_string()),
+    }
+}
+
+/// `set_replicas` (v2 only): live-resize a table's batcher-shard
+/// replica count. A resident table is swapped in place (mid-traffic
+/// lookups are transparently retried against the new entry); a spilled
+/// table records the count for its next promotion.
+fn set_replicas_op(
+    stream: &mut TcpStream,
+    registry: &TableRegistry,
+    j: &Json,
+) -> Result<(), WireError> {
+    let (name, n) = match (
+        j.get("table").and_then(|v| v.as_str()),
+        j.get("replicas").and_then(|v| v.as_usize()),
+    ) {
+        (Some(name), Some(n)) => (name, n),
+        _ => {
+            return write_frame(stream, &err_obj(
+                "bad_request",
+                "set_replicas needs table and a non-negative integer replicas",
+                vec![]).to_string())
+        }
+    };
+    match registry.set_replicas(name, n) {
+        Ok(n) => {
+            let residency = registry
+                .residency(name)
+                .unwrap_or(Residency::Resident);
+            write_frame(stream, &Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("table", Json::str(name)),
+                ("replicas", Json::num(n as f64)),
+                ("residency", Json::str(residency.as_str())),
+            ]).to_string())
+        }
         Err(e) => write_frame(
             stream, &annotated_err_frame(registry, &e).to_string()),
     }
@@ -760,7 +919,7 @@ fn handle_conn(
             }
             Some("stats") => stats_op(&mut stream, &registry, &j, version)?,
             Some(op @ ("tables" | "load" | "unload" | "demote" | "snapshot"
-                       | "lookup_fanout")) if version < 2 => {
+                       | "set_replicas" | "lookup_fanout")) if version < 2 => {
                 write_frame(&mut stream, &err_obj(
                     "needs_v2",
                     &format!("op {op} requires protocol v2 (send \"v\": 2)"),
@@ -774,6 +933,9 @@ fn handle_conn(
             Some("load") => load_op(&mut stream, &registry, &j)?,
             Some("unload") => unload_op(&mut stream, &registry, &j)?,
             Some("demote") => demote_op(&mut stream, &registry, &j)?,
+            Some("set_replicas") => {
+                set_replicas_op(&mut stream, &registry, &j)?
+            }
             Some("snapshot") => snapshot_op(&mut stream, &registry, &j)?,
             Some("shutdown") => {
                 stop.store(true, Ordering::Relaxed);

@@ -381,8 +381,11 @@ pub struct TableDesc {
     pub resident_bytes: usize,
     /// Compression ratio vs an f32 table of the same shape.
     pub compression_ratio: f64,
-    /// Batcher shards range-partitioning this table's id space.
+    /// Batcher shards range-partitioning each replica's id space.
     pub shards: usize,
+    /// Independent batcher-shard replica sets serving this table
+    /// (lookups route to the least-loaded one).
+    pub replicas: usize,
     /// True for the table v1 (and table-less v2) frames route to.
     pub is_default: bool,
 }
@@ -407,6 +410,7 @@ impl TableDesc {
                 .and_then(|v| v.as_f64())
                 .unwrap_or(0.0),
             shards: get("shards").max(1),
+            replicas: get("replicas").max(1),
             name,
         })
     }
@@ -767,6 +771,32 @@ impl Client {
             .map(str::to_string)
             .ok_or_else(|| {
                 WireError::Malformed("demote response without file".into())
+            })
+    }
+
+    /// Live-resize a table's batcher-shard replica count. A resident
+    /// table is swapped to `n` fresh replica shard sets over the same
+    /// backend (bit-identical bytes; mid-flight lookups are retried
+    /// server-side, so traffic never observes the swap); a spilled
+    /// table records `n` for its next promotion. Returns the replica
+    /// count now in force. Typed rejections: `bad_replicas` (out of
+    /// range), `no_such_table`.
+    pub fn admin_set_replicas(
+        &mut self,
+        table: &str,
+        n: usize,
+    ) -> Result<usize, WireError> {
+        let j = self.request(Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("set_replicas")),
+            ("table", Json::str(table)),
+            ("replicas", Json::num(n as f64)),
+        ]))?;
+        j.get("replicas")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| {
+                WireError::Malformed(
+                    "set_replicas response without replicas".into())
             })
     }
 

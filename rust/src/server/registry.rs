@@ -84,6 +84,60 @@
 //! [`ServerConfig::spill_on_evict`] off), budget eviction drops tables
 //! exactly as before.
 //!
+//! # Replicated hot tables
+//!
+//! Real traffic is heavily skewed: one hot table saturates its batcher
+//! shards while cold tables idle. A table registered with `replicas: N`
+//! (CLI `--table name=path:replicas=N`, or the live `set_replicas`
+//! wire op) materializes N **independent batcher-shard sets over one
+//! shared backend `Arc`** -- N× the batcher/drain parallelism for the
+//! cost of zero extra table memory. Each incoming lookup is routed to
+//! the **least-loaded replica** (live queue-depth counter per replica;
+//! round-robin among ties, so an idle server still spreads load), and
+//! its ids are then range-partitioned across that replica's shards
+//! exactly as before. Row gathers are a pure function of the id, so
+//! replication is invisible in the served bytes: `replicas=N` is
+//! bit-identical to `replicas=1` at every thread count
+//! (`tests/replica_equivalence.rs`). A live `set_replicas` resize swaps
+//! the table's entry in place -- in-flight batches finish serving, and
+//! a lookup whose queue was closed by the swap is transparently retried
+//! against the new entry by the connection handler. The replica count
+//! survives the spill tier (recorded at demote time, in `spill.json`,
+//! and in snapshot manifests, so promote and `--restore` rebuild it).
+//!
+//! # TTL eviction
+//!
+//! With [`ServerConfig::ttl_secs`] set, a non-default table that no
+//! lookup has touched for at least that long is demoted (or dropped,
+//! under `--spill drop` / no spill tier) **even while under the memory
+//! budget** -- idle tables should not hold budget a hot table's
+//! promotion may need. TTL shares the whole eviction path with the
+//! budget: same spill-vs-drop policy, same pinned-default rule, same
+//! victim finishing outside the lock; the two compose (whichever fires
+//! first wins) and `stats` attributes causes separately (`evictions`
+//! vs `ttl_demotions`). The sweep is lazy -- it runs at the top of
+//! every resolve and insert, and the serve accept loop ticks it while
+//! idle -- and reads time through the injectable [`Clock`] so tests
+//! drive it deterministically with a [`ManualClock`]
+//! (idle-time decisions only; LRU *ordering* stays on the logical
+//! resolution counter).
+//!
+//! [`Clock`]: crate::server::clock::Clock
+//! [`ManualClock`]: crate::server::clock::ManualClock
+//!
+//! # Startup spill recovery
+//!
+//! [`TableRegistry::open`] over a spill directory that already holds a
+//! [`SPILL_MANIFEST`] (a previous process crashed or was restarted with
+//! tables demoted) **re-adopts** every recorded table as a `Spilled`
+//! slot: shape metadata is taken from the manifest, a missing artifact
+//! adopts as `Lost` instead of failing startup, and the first lookup
+//! transparently promotes -- a restarted server serves every
+//! previously-spilled table bit-exactly with no operator intervention.
+//! A corrupt or future-versioned `spill.json` fails `open` loudly
+//! (`spill_recover_failed`): silently dropping a recorded table WOULD
+//! be data loss.
+//!
 //! # Snapshot / restore
 //!
 //! [`TableRegistry::snapshot`] serializes every resident table into a
@@ -102,7 +156,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -114,8 +168,9 @@ use crate::backend::{self, EmbeddingBackend};
 use crate::dpq::CompressedEmbedding;
 use crate::jsonx::Json;
 use crate::server::batcher::{run_batch, Answer, BatchQueue, DoneSlot, Pending};
+use crate::server::clock::{Clock, MonotonicClock};
 use crate::server::protocol::WireError;
-use crate::server::stats::{LatencyRing, Stats};
+use crate::server::stats::{LatencyRing, ReplicaStats, Stats};
 
 /// Manifest `format` tag written by [`TableRegistry::snapshot`].
 pub const SNAPSHOT_FORMAT: &str = "dpq_registry_snapshot";
@@ -164,6 +219,12 @@ pub const SPILL_FORMAT: &str = "dpq_spill_tier";
 /// is bounded per request instead of looping forever.
 const PROMOTE_ATTEMPTS: usize = 3;
 
+/// Most batcher-shard replicas one table may be resized to. Each
+/// replica costs `shards_per_table` OS threads; past this the thread
+/// count, not the batcher, is the bottleneck -- an absurd request is a
+/// typo, reject it typed (`bad_replicas`) instead of spawning it.
+pub const MAX_REPLICAS: usize = 64;
+
 /// Serving knobs shared by every table in a registry.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -187,6 +248,13 @@ pub struct ServerConfig {
     /// (false -- the `--spill drop` policy). Meaningless without
     /// [`spill_dir`](Self::spill_dir).
     pub spill_on_evict: bool,
+    /// Optional idle TTL in seconds (`--ttl SECS`): a non-default table
+    /// that no lookup has touched for at least this long is demoted
+    /// (spill tier) or dropped (otherwise) even while under the memory
+    /// budget. `None` never expires. The sweep runs lazily on
+    /// resolves/inserts and on the serve accept loop's idle tick,
+    /// reading the registry's injectable [`Clock`].
+    pub ttl_secs: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -197,6 +265,7 @@ impl Default for ServerConfig {
             mem_budget_bytes: None,
             spill_dir: None,
             spill_on_evict: true,
+            ttl_secs: None,
         }
     }
 }
@@ -256,6 +325,10 @@ pub struct SpilledTable {
     vocab: usize,
     d: usize,
     storage_bits: usize,
+    /// Replica count to rebuild at promotion. Atomic so a live
+    /// `set_replicas` on a spilled table takes effect when it comes
+    /// back, without waking the slot.
+    replicas: AtomicUsize,
     stats: Arc<Stats>,
     state: Mutex<SpillPhase>,
     cv: Condvar,
@@ -271,6 +344,7 @@ impl SpilledTable {
             vocab: entry.backend.vocab(),
             d: entry.backend.d(),
             storage_bits: entry.backend.storage_bits(),
+            replicas: AtomicUsize::new(entry.replica_count()),
             stats: entry.stats.clone(),
             state: Mutex::new(SpillPhase::Spilling),
             cv: Condvar::new(),
@@ -313,6 +387,12 @@ impl SpilledTable {
         &self.stats
     }
 
+    /// Batcher-shard replica count the table will be rebuilt with when
+    /// it is promoted back.
+    pub fn replicas(&self) -> usize {
+        self.replicas.load(Ordering::Relaxed).max(1)
+    }
+
     fn set_phase(&self, phase: SpillPhase) {
         *self.state.lock().unwrap() = phase;
         self.cv.notify_all();
@@ -341,12 +421,24 @@ pub(crate) enum Slot {
     Spilled(Arc<SpilledTable>),
 }
 
-/// A budget-eviction victim chosen under the tables lock, finished
-/// (artifact write / shard stop) after the lock is released.
+/// Why a table was evicted -- `stats` attributes the two causes with
+/// separate counters (`evictions` vs `ttl_demotions`), and a rollback
+/// after a failed spill write must decrement the right one.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum EvictCause {
+    /// The resident total exceeded `--mem-budget`.
+    Budget,
+    /// The table sat idle past `--ttl`.
+    Ttl,
+}
+
+/// An eviction victim chosen under the tables lock, finished (artifact
+/// write / shard stop) after the lock is released.
 struct Eviction {
     entry: Arc<TableEntry>,
     /// `Some`: demote to this spill slot; `None`: drop (PR-3 behavior).
     spill_to: Option<Arc<SpilledTable>>,
+    cause: EvictCause,
 }
 
 /// Deterministic spill artifact name for a table. The FNV-1a hash of
@@ -368,7 +460,36 @@ pub struct UnloadOutcome {
     pub new_default: Option<String>,
 }
 
-/// One served table: backend + stats + its batcher shards.
+/// One batcher-shard replica of a table: its own shard queues (and
+/// therefore its own batcher threads) plus the live stats routing
+/// balances on. All replicas of a table share one backend `Arc`, so a
+/// replica costs threads, not memory.
+struct Replica {
+    shards: Vec<Arc<BatchQueue>>,
+    stats: Arc<ReplicaStats>,
+}
+
+/// Decrements a replica's queue depth when the routed lookup's answer
+/// has been assembled (or the ticket is dropped) -- drop-based so no
+/// exit path can leak depth and starve the replica forever.
+pub(crate) struct DepthGuard(Option<Arc<ReplicaStats>>);
+
+impl DepthGuard {
+    fn track(rs: &Arc<ReplicaStats>) -> DepthGuard {
+        rs.queue_depth.fetch_add(1, Ordering::Relaxed);
+        DepthGuard(Some(rs.clone()))
+    }
+}
+
+impl Drop for DepthGuard {
+    fn drop(&mut self) {
+        if let Some(rs) = &self.0 {
+            rs.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One served table: backend + stats + its batcher-shard replicas.
 pub struct TableEntry {
     /// Registry name this table is served under.
     pub name: String,
@@ -379,7 +500,15 @@ pub struct TableEntry {
     /// Logical LRU clock tick of the last lookup routed here (ticks come
     /// from the owning registry's clock; larger = more recent).
     last_used: AtomicU64,
-    shards: Vec<Arc<BatchQueue>>,
+    /// Injectable-clock milliseconds of the last lookup (TTL idleness;
+    /// see [`crate::server::clock::Clock`]).
+    last_used_at: AtomicU64,
+    /// Independent batcher-shard sets over the shared backend; lookups
+    /// route to the least-loaded one (round-robin among ties).
+    replicas: Vec<Replica>,
+    /// Rotates the replica scan's starting point so equal-depth
+    /// replicas are picked in turn instead of always the first.
+    rr: AtomicUsize,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -394,7 +523,13 @@ pub(crate) enum LookupTicket {
     Empty,
     /// Whole request on one shard (also the 1-shard fast path): the
     /// shard's buffer view IS the answer, zero-copy.
-    Single { n: usize, d: usize, done: Arc<DoneSlot> },
+    Single {
+        n: usize,
+        d: usize,
+        done: Arc<DoneSlot>,
+        /// Holds the routed replica's queue depth until answered.
+        _depth: DepthGuard,
+    },
     /// Ids split across shards: `waits` holds `(shard, n_sub, slot)` per
     /// touched shard, `positions[shard][k]` the original slot of that
     /// shard's k-th id.
@@ -403,6 +538,8 @@ pub(crate) enum LookupTicket {
         d: usize,
         waits: Vec<(usize, usize, Arc<DoneSlot>)>,
         positions: Vec<Vec<usize>>,
+        /// Holds the routed replica's queue depth until answered.
+        _depth: DepthGuard,
     },
 }
 
@@ -413,14 +550,14 @@ impl LookupTicket {
     pub(crate) fn wait(self) -> Option<Answer> {
         match self {
             LookupTicket::Empty => Some(Answer::Owned(Vec::new())),
-            LookupTicket::Single { n, d, done } => {
+            LookupTicket::Single { n, d, done, _depth } => {
                 let rows = crate::server::batcher::wait_rows(&done);
                 if rows.as_slice().len() != n * d {
                     return None;
                 }
                 Some(Answer::View(rows))
             }
-            LookupTicket::Sharded { n, d, waits, positions } => {
+            LookupTicket::Sharded { n, d, waits, positions, _depth } => {
                 let mut flat = vec![0.0f32; n * d];
                 let mut failed = false;
                 for (s, n_sub, done) in waits {
@@ -442,52 +579,123 @@ impl LookupTicket {
 }
 
 impl TableEntry {
-    /// Spawn a table's batcher shards. `stats` is fresh for an insert
-    /// and the carried-over counters for a spill-tier promotion.
+    /// Spawn a table's batcher-shard replicas. `stats` is fresh for an
+    /// insert and the carried-over counters for a spill-tier promotion
+    /// or a live `set_replicas` resize.
     fn spawn(
         name: &str,
         backend: Arc<dyn EmbeddingBackend>,
         cfg: &ServerConfig,
         stop: &Arc<AtomicBool>,
         stats: Arc<Stats>,
+        replicas: usize,
     ) -> Arc<TableEntry> {
-        let shards: Vec<Arc<BatchQueue>> = (0..cfg.shards_per_table.max(1))
-            .map(|_| Arc::new(BatchQueue::new(cfg.max_batch)))
-            .collect();
-        let handles = shards
-            .iter()
-            .map(|shard| {
+        let mut reps = Vec::with_capacity(replicas.max(1));
+        let mut handles = Vec::new();
+        for _ in 0..replicas.max(1) {
+            let shards: Vec<Arc<BatchQueue>> = (0..cfg.shards_per_table.max(1))
+                .map(|_| Arc::new(BatchQueue::new(cfg.max_batch)))
+                .collect();
+            let rstats = Arc::new(ReplicaStats::default());
+            for shard in &shards {
                 let backend = backend.clone();
                 let shard = shard.clone();
                 let stats = stats.clone();
+                let rstats = rstats.clone();
                 let stop = stop.clone();
-                std::thread::spawn(move || {
+                handles.push(std::thread::spawn(move || {
                     while !stop.load(Ordering::Relaxed) && !shard.is_closed() {
                         let batch = shard.pop_batch(Duration::from_millis(20));
                         if batch.is_empty() {
                             continue;
                         }
+                        let t0 = Instant::now();
                         run_batch(&*backend, &batch, &stats);
+                        rstats.record_batch_secs(t0.elapsed().as_secs_f64());
                     }
                     // close() fails anything still queued; calling it from
                     // the exiting thread covers the global-stop path too
                     shard.close();
-                })
-            })
-            .collect();
+                }));
+            }
+            reps.push(Replica { shards, stats: rstats });
+        }
         Arc::new(TableEntry {
             name: name.to_string(),
             backend,
             stats,
             last_used: AtomicU64::new(0),
-            shards,
+            last_used_at: AtomicU64::new(0),
+            replicas: reps,
+            rr: AtomicUsize::new(0),
             handles: Mutex::new(handles),
         })
     }
 
-    /// Number of batcher shards range-partitioning this table's ids.
+    /// Number of batcher shards range-partitioning each replica's ids.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.replicas[0].shards.len()
+    }
+
+    /// Number of independent batcher-shard replicas serving this table.
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Each replica's live queue depth (outstanding routed lookups), in
+    /// replica order -- the signal routing balances on.
+    pub fn replica_depths(&self) -> Vec<u64> {
+        self.replicas
+            .iter()
+            .map(|r| r.stats.queue_depth.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Per-replica stats as a JSON array (`queue_depth`, `batches`, and
+    /// -- once a replica has drained a batch -- `batch_p50_s` /
+    /// `batch_p99_s`), for the `stats` op's merged table view.
+    pub fn replica_stats_json(&self) -> Json {
+        Json::arr(
+            self.replicas
+                .iter()
+                .map(|r| {
+                    let mut pairs = vec![
+                        ("queue_depth",
+                         Json::num(r.stats.queue_depth.load(Ordering::Relaxed)
+                                   as f64)),
+                        ("batches",
+                         Json::num(r.stats.batches.load(Ordering::Relaxed)
+                                   as f64)),
+                    ];
+                    if let Some((p50, p99)) = r.stats.batch_latency() {
+                        pairs.push(("batch_p50_s", Json::num(p50)));
+                        pairs.push(("batch_p99_s", Json::num(p99)));
+                    }
+                    Json::obj(pairs)
+                })
+                .collect(),
+        )
+    }
+
+    /// The least-loaded replica by live queue depth. The scan starts at
+    /// a rotating offset so ties (the common idle case: every depth 0)
+    /// resolve round-robin instead of always replica 0.
+    fn pick_replica(&self) -> &Replica {
+        if self.replicas.len() == 1 {
+            return &self.replicas[0];
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % self.replicas.len();
+        let mut best = start;
+        let mut best_depth = u64::MAX;
+        for k in 0..self.replicas.len() {
+            let i = (start + k) % self.replicas.len();
+            let depth = self.replicas[i].stats.queue_depth.load(Ordering::Relaxed);
+            if depth < best_depth {
+                best = i;
+                best_depth = depth;
+            }
+        }
+        &self.replicas[best]
     }
 
     /// Bytes this table keeps resident at serve time (codes + side
@@ -496,26 +704,31 @@ impl TableEntry {
         (self.backend.storage_bits() as u64).div_ceil(8)
     }
 
-    /// Shard owning `id` under range partitioning.
+    /// Shard owning `id` under range partitioning (identical for every
+    /// replica: all replicas have the same shard count).
     fn shard_of(&self, id: usize, vocab: usize) -> usize {
         debug_assert!(id < vocab);
-        ((id as u128 * self.shards.len() as u128) / vocab as u128) as usize
+        ((id as u128 * self.shard_count() as u128) / vocab as u128) as usize
     }
 
-    /// Queue one validated id list on this table's shards WITHOUT
-    /// waiting; the returned ticket collects the answer. Ids MUST
-    /// already be validated `< vocab`.
+    /// Route one validated id list to the least-loaded replica and
+    /// queue it on that replica's shards WITHOUT waiting; the returned
+    /// ticket collects the answer. Ids MUST already be validated
+    /// `< vocab`. Which replica is picked is invisible in the answer
+    /// bytes -- row gathers are a pure function of the id.
     pub(crate) fn begin_lookup(&self, ids: &[usize]) -> LookupTicket {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         let d = self.backend.d();
         if ids.is_empty() {
             return LookupTicket::Empty;
         }
-        let n_shards = self.shards.len();
+        let rep = self.pick_replica();
+        let depth = DepthGuard::track(&rep.stats);
+        let n_shards = rep.shards.len();
         if n_shards == 1 {
             let (p, done) = Pending::new(ids.to_vec());
-            self.shards[0].push(p);
-            return LookupTicket::Single { n: ids.len(), d, done };
+            rep.shards[0].push(p);
+            return LookupTicket::Single { n: ids.len(), d, done, _depth: depth };
         }
         let vocab = self.backend.vocab();
         // split ids by owning shard, remembering each id's original slot
@@ -530,8 +743,8 @@ impl TableEntry {
         // are in request order, so the shard's view IS the answer)
         if let Some(only) = (0..n_shards).find(|&s| sub_ids[s].len() == ids.len()) {
             let (p, done) = Pending::new(std::mem::take(&mut sub_ids[only]));
-            self.shards[only].push(p);
-            return LookupTicket::Single { n: ids.len(), d, done };
+            rep.shards[only].push(p);
+            return LookupTicket::Single { n: ids.len(), d, done, _depth: depth };
         }
         // enqueue every non-empty sub-lookup BEFORE the caller waits on
         // any, so the shards reconstruct concurrently
@@ -542,10 +755,12 @@ impl TableEntry {
             }
             let (p, done) = Pending::new(std::mem::take(&mut sub_ids[s]));
             let n_sub = p.ids.len();
-            self.shards[s].push(p);
+            rep.shards[s].push(p);
             waits.push((s, n_sub, done));
         }
-        LookupTicket::Sharded { n: ids.len(), d, waits, positions }
+        LookupTicket::Sharded {
+            n: ids.len(), d, waits, positions, _depth: depth,
+        }
     }
 
     /// Route one validated id list through this table's shards and
@@ -556,10 +771,12 @@ impl TableEntry {
         self.begin_lookup(ids).wait()
     }
 
-    /// Close this table's shards and join their threads (idempotent).
+    /// Close every replica's shards and join their threads (idempotent).
     fn stop(&self) {
-        for shard in &self.shards {
-            shard.close();
+        for rep in &self.replicas {
+            for shard in &rep.shards {
+                shard.close();
+            }
         }
         let handles: Vec<JoinHandle<()>> =
             std::mem::take(&mut *self.handles.lock().unwrap());
@@ -579,7 +796,8 @@ impl TableEntry {
             ("resident_bytes", Json::num(self.resident_bytes() as f64)),
             ("compression_ratio",
              Json::num(backend::compression_ratio(&*self.backend))),
-            ("shards", Json::num(self.shards.len() as f64)),
+            ("shards", Json::num(self.shard_count() as f64)),
+            ("replicas", Json::num(self.replica_count() as f64)),
         ])
     }
 }
@@ -591,6 +809,13 @@ pub struct TableRegistry {
     cfg: ServerConfig,
     tables: RwLock<BTreeMap<String, Slot>>,
     default: Mutex<Option<String>>,
+    /// True while the current default was elected PROVISIONALLY by
+    /// spill-tier adoption (no resident table existed yet). The next
+    /// `insert` overrides a provisional default -- a restart must not
+    /// let a previously-spilled side table hijack v1 routing from the
+    /// table the CLI is about to load. Always mutated under the tables
+    /// lock + default mutex, like `default` itself.
+    default_provisional: AtomicBool,
     /// Eviction history: table name -> (times evicted, tick of the last
     /// eviction). A name is removed when a table is (re)inserted under
     /// it; capped at [`EVICTED_HISTORY`] entries (oldest forgotten).
@@ -599,7 +824,14 @@ pub struct TableRegistry {
     evicted: Mutex<BTreeMap<String, (u64, u64)>>,
     /// Logical LRU clock; every successful `resolve` stamps the entry.
     clock: AtomicU64,
+    /// Injectable time source for TTL idleness (production: monotonic;
+    /// tests: a [`crate::server::clock::ManualClock`]).
+    wall: Arc<dyn Clock>,
+    /// Injected-clock ms of the last hot-path TTL sweep (throttle state
+    /// for [`maybe_expire_idle`](Self::maybe_expire_idle)).
+    last_sweep: AtomicU64,
     evictions: AtomicU64,
+    ttl_demotions: AtomicU64,
     spills: AtomicU64,
     promotes: AtomicU64,
     promote_ring: LatencyRing,
@@ -617,13 +849,24 @@ impl TableRegistry {
     /// (with `new`, a bogus dir surfaces as a typed `demote_failed` on
     /// the first spill instead).
     pub fn new(cfg: ServerConfig) -> Self {
+        Self::with_clock(cfg, Arc::new(MonotonicClock::new()))
+    }
+
+    /// [`new`](Self::new) with an injected time source for TTL
+    /// idleness -- the deterministic-test hook ([`crate::server::clock::ManualClock`]).
+    /// Like `new`, performs no spill-dir validation or recovery.
+    pub fn with_clock(cfg: ServerConfig, wall: Arc<dyn Clock>) -> Self {
         TableRegistry {
             cfg,
             tables: RwLock::new(BTreeMap::new()),
             default: Mutex::new(None),
+            default_provisional: AtomicBool::new(false),
             evicted: Mutex::new(BTreeMap::new()),
             clock: AtomicU64::new(0),
+            wall,
+            last_sweep: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            ttl_demotions: AtomicU64::new(0),
             spills: AtomicU64::new(0),
             promotes: AtomicU64::new(0),
             promote_ring: LatencyRing::default(),
@@ -633,14 +876,140 @@ impl TableRegistry {
         }
     }
 
-    /// [`new`](Self::new) plus startup validation: a configured spill
-    /// directory that does not exist is a typed `spill_dir_missing`
-    /// error. Serving with a spill tier that silently cannot accept
-    /// artifacts would turn every eviction into data loss, so the
-    /// operator must create the directory (or fix the path) first.
+    /// [`new`](Self::new) plus startup validation and spill-tier
+    /// recovery: a configured spill directory that does not exist is a
+    /// typed `spill_dir_missing` error (serving with a spill tier that
+    /// silently cannot accept artifacts would turn every eviction into
+    /// data loss), and tables a previous process left recorded in the
+    /// directory's [`SPILL_MANIFEST`] are re-adopted as `Spilled` slots
+    /// that the first lookup transparently promotes (an entry whose
+    /// artifact is missing adopts as `Lost`). A corrupt spill manifest
+    /// is a typed `spill_recover_failed`.
     pub fn open(cfg: ServerConfig) -> Result<TableRegistry, WireError> {
+        Self::open_with_clock(cfg, Arc::new(MonotonicClock::new()))
+    }
+
+    /// [`open`](Self::open) with an injected [`Clock`] -- validation
+    /// and spill recovery included; tests drive TTL with a
+    /// [`crate::server::clock::ManualClock`] through this.
+    pub fn open_with_clock(
+        cfg: ServerConfig,
+        wall: Arc<dyn Clock>,
+    ) -> Result<TableRegistry, WireError> {
         Self::validate_spill(&cfg)?;
-        Ok(Self::new(cfg))
+        let reg = Self::with_clock(cfg, wall);
+        reg.adopt_spill_tier()?;
+        Ok(reg)
+    }
+
+    /// Re-adopt tables a previous process left in the spill tier: every
+    /// entry of [`SPILL_MANIFEST`] becomes a `Spilled` slot (fresh
+    /// counters; shape metadata from the manifest; phase `Lost` when
+    /// the artifact file is missing, so a deleted artifact degrades to
+    /// the usual typed `reload_failed` instead of failing startup).
+    /// Names already registered are skipped loudly -- that happens when
+    /// a `--restore` snapshot already rebuilt the table resident. If no
+    /// default table is set afterwards, the first adopted name becomes
+    /// a PROVISIONAL default (a spilled default transparently promotes
+    /// on the first v1 frame) that the first real `insert` overrides --
+    /// so a restart's `--table` flags end up owning v1 routing exactly
+    /// as they would have without the restart. Returns the number of
+    /// tables adopted.
+    fn adopt_spill_tier(&self) -> Result<usize, WireError> {
+        let Some(dir) = self.cfg.spill_dir.clone() else {
+            return Ok(0);
+        };
+        let manifest = dir.join(SPILL_MANIFEST);
+        if !manifest.is_file() {
+            return Ok(0);
+        }
+        let fail = |m: String| WireError::Rejected {
+            code: "spill_recover_failed".into(),
+            message: format!("spill manifest {manifest:?}: {m}"),
+        };
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| fail(format!("read: {e}")))?;
+        let j = Json::parse(&text).map_err(|e| fail(format!("parse: {e}")))?;
+        if j.get("format").and_then(|v| v.as_str()) != Some(SPILL_FORMAT) {
+            return Err(fail(format!("not a {SPILL_FORMAT} manifest")));
+        }
+        match j.get("v").and_then(|v| v.as_usize()) {
+            Some(1) => {}
+            other => {
+                return Err(fail(format!(
+                    "version {other:?}; this build reads v1")))
+            }
+        }
+        let tables = j
+            .get("tables")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| fail("no tables array".into()))?;
+        let mut slots: Vec<Arc<SpilledTable>> = Vec::new();
+        for t in tables {
+            let get_str = |k: &str| t.get(k).and_then(|v| v.as_str());
+            let get_n = |k: &str| t.get(k).and_then(|v| v.as_usize());
+            let (Some(name), Some(kind), Some(file)) =
+                (get_str("name"), get_str("kind"), get_str("file"))
+            else {
+                return Err(fail("table entry missing name/kind/file".into()));
+            };
+            let (Some(vocab), Some(d), Some(storage_bits)) =
+                (get_n("vocab"), get_n("d"), get_n("storage_bits"))
+            else {
+                return Err(fail(format!(
+                    "table {name:?} missing vocab/d/storage_bits")));
+            };
+            // same shape floor `insert` enforces: a degenerate shape
+            // could never serve, and d == 0 breaks the typed-failure
+            // guarantee -- a manifest recording one is corrupt
+            if vocab == 0 || d == 0 || name.is_empty() || name.contains('=') {
+                return Err(fail(format!(
+                    "table {name:?} has invalid shape [{vocab}, {d}]")));
+            }
+            let replicas = get_n("replicas").unwrap_or(1).clamp(1, MAX_REPLICAS);
+            let phase = if dir.join(file).is_file() {
+                SpillPhase::Ready
+            } else {
+                eprintln!(
+                    "spill recovery: artifact {file:?} for table {name:?} \
+                     is missing; adopting as lost");
+                SpillPhase::Lost
+            };
+            slots.push(Arc::new(SpilledTable {
+                name: name.to_string(),
+                kind: kind.to_string(),
+                file: file.to_string(),
+                vocab,
+                d,
+                storage_bits,
+                replicas: AtomicUsize::new(replicas),
+                stats: Arc::new(Stats::default()),
+                state: Mutex::new(phase),
+                cv: Condvar::new(),
+            }));
+        }
+        // one atomic registration pass (lock order: tables, then
+        // default -- same as insert/unload); adoption is all-or-nothing
+        // from a concurrent observer's point of view
+        let mut adopted = 0usize;
+        let mut map = self.tables.write().unwrap();
+        let mut def = self.default.lock().unwrap();
+        for slot in slots {
+            if map.contains_key(slot.name()) {
+                eprintln!(
+                    "spill recovery: table {:?} is already registered \
+                     (restored resident?); keeping the resident copy",
+                    slot.name());
+                continue;
+            }
+            if def.is_none() {
+                *def = Some(slot.name().to_string());
+                self.default_provisional.store(true, Ordering::Relaxed);
+            }
+            map.insert(slot.name().to_string(), Slot::Spilled(slot));
+            adopted += 1;
+        }
+        Ok(adopted)
     }
 
     fn validate_spill(cfg: &ServerConfig) -> Result<(), WireError> {
@@ -678,6 +1047,21 @@ impl TableRegistry {
         name: &str,
         backend: Arc<dyn EmbeddingBackend>,
     ) -> Result<Arc<TableEntry>, WireError> {
+        self.insert_with_replicas(name, backend, 1)
+    }
+
+    /// [`insert`](Self::insert) with `replicas` independent
+    /// batcher-shard sets over the one shared backend (see the module
+    /// docs): lookups route to the least-loaded replica and the served
+    /// bytes are bit-identical to `replicas = 1`. `replicas` outside
+    /// `1..=`[`MAX_REPLICAS`] is a typed `bad_replicas` rejection.
+    pub fn insert_with_replicas(
+        &self,
+        name: &str,
+        backend: Arc<dyn EmbeddingBackend>,
+        replicas: usize,
+    ) -> Result<Arc<TableEntry>, WireError> {
+        validate_replicas(replicas)?;
         if name.is_empty() || name.contains('=') {
             return Err(WireError::Rejected {
                 code: "bad_table_name".into(),
@@ -702,6 +1086,10 @@ impl TableRegistry {
                 message: "registry is shutting down".into(),
             });
         }
+        // TTL sweep before the insert: tables that sat idle past their
+        // TTL should expire BEFORE the budget pass ranks LRU victims
+        // (whichever fires first wins; the insert itself is protected)
+        self.expire_idle_protected(&[name]);
         // Default election happens INSIDE the tables write lock (same
         // lock order as `unload`: tables, then default) -- electing it
         // after releasing the lock could race an `unload` of this very
@@ -719,17 +1107,26 @@ impl TableRegistry {
             }
             let entry = TableEntry::spawn(
                 name, backend, &self.cfg, &self.stop,
-                Arc::new(Stats::default()));
-            // fresh LRU stamp: a just-inserted table is the most recent
+                Arc::new(Stats::default()), replicas);
+            // fresh LRU + idle stamps: a just-inserted table is the
+            // most recent (and not TTL-idle)
             entry.last_used.store(
                 self.clock.fetch_add(1, Ordering::Relaxed) + 1,
                 Ordering::Relaxed,
             );
+            entry.last_used_at.store(self.now_ms(), Ordering::Relaxed);
             map.insert(name.to_string(), Slot::Resident(entry.clone()));
             {
+                // a default elected provisionally by spill-tier
+                // adoption yields to the first real insert (v1 routing
+                // must end up where the CLI's --table flags put it, as
+                // it would have without a restart)
                 let mut def = self.default.lock().unwrap();
-                if def.is_none() {
+                if def.is_none()
+                    || self.default_provisional.load(Ordering::Relaxed)
+                {
                     *def = Some(name.to_string());
+                    self.default_provisional.store(false, Ordering::Relaxed);
                 }
             }
             // a reloaded table is no longer "evicted"
@@ -759,7 +1156,6 @@ impl TableRegistry {
         let Some(budget) = self.cfg.mem_budget_bytes else {
             return Vec::new();
         };
-        let spill = self.cfg.spill_on_evict && self.cfg.spill_dir.is_some();
         // The default cannot change while the tables write lock is held
         // (set_default/unload both need the tables lock), so one read
         // is enough.
@@ -805,41 +1201,56 @@ impl TableRegistry {
             };
             let chosen = live.swap_remove(i);
             total -= chosen.resident_bytes();
-            let name = chosen.name.clone();
-            let Some(Slot::Resident(entry)) = map.remove(&name) else {
-                unreachable!("victim chosen from this map's residents");
-            };
-            self.evictions.fetch_add(1, Ordering::Relaxed);
-            if spill {
-                // demote instead of drop: a Spilled placeholder (phase
-                // Spilling) takes the slot NOW, under the lock, so a
-                // racing lookup blocks on the single-flight gate until
-                // the artifact write outside the lock publishes
-                let slot = Arc::new(SpilledTable::from_entry(&entry));
-                map.insert(name, Slot::Spilled(slot.clone()));
-                out.push(Eviction { entry, spill_to: Some(slot) });
-            } else {
-                // PR-3 drop semantics, byte for byte: mark the eviction
-                // history so `no_such_table` can say "evicted"
-                let tick = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
-                let mut ev = self.evicted.lock().unwrap();
-                let slot = ev.entry(name).or_insert((0, 0));
-                slot.0 += 1;
-                slot.1 = tick;
-                while ev.len() > EVICTED_HISTORY {
-                    // forget the stalest eviction, keep the history bounded
-                    let oldest = ev
-                        .iter()
-                        .min_by_key(|(_, (_, t))| *t)
-                        .map(|(k, _)| k.clone())
-                        .expect("non-empty map");
-                    ev.remove(&oldest);
-                }
-                drop(ev);
-                out.push(Eviction { entry, spill_to: None });
-            }
+            out.push(self.remove_victim_locked(
+                map, &chosen.name, EvictCause::Budget));
         }
         out
+    }
+
+    /// Remove one chosen eviction victim from the table map -- the ONE
+    /// place both budget and TTL eviction go through, so spill-vs-drop
+    /// policy and bookkeeping can never diverge between the causes.
+    /// With a spill tier, a `Spilled` placeholder (phase `Spilling`)
+    /// takes the slot NOW, under the lock, so a racing lookup blocks on
+    /// the single-flight gate until the artifact write outside the lock
+    /// publishes; otherwise the PR-3 drop semantics apply byte for byte
+    /// (eviction history marked so `no_such_table` can say "evicted").
+    /// The caller finishes the returned [`Eviction`] outside the lock.
+    fn remove_victim_locked(
+        &self,
+        map: &mut BTreeMap<String, Slot>,
+        name: &str,
+        cause: EvictCause,
+    ) -> Eviction {
+        let Some(Slot::Resident(entry)) = map.remove(name) else {
+            unreachable!("victim chosen from this map's residents");
+        };
+        match cause {
+            EvictCause::Budget => self.evictions.fetch_add(1, Ordering::Relaxed),
+            EvictCause::Ttl => self.ttl_demotions.fetch_add(1, Ordering::Relaxed),
+        };
+        if self.cfg.spill_on_evict && self.cfg.spill_dir.is_some() {
+            let slot = Arc::new(SpilledTable::from_entry(&entry));
+            map.insert(name.to_string(), Slot::Spilled(slot.clone()));
+            Eviction { entry, spill_to: Some(slot), cause }
+        } else {
+            let tick = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+            let mut ev = self.evicted.lock().unwrap();
+            let slot = ev.entry(name.to_string()).or_insert((0, 0));
+            slot.0 += 1;
+            slot.1 = tick;
+            while ev.len() > EVICTED_HISTORY {
+                // forget the stalest eviction, keep the history bounded
+                let oldest = ev
+                    .iter()
+                    .min_by_key(|(_, (_, t))| *t)
+                    .map(|(k, _)| k.clone())
+                    .expect("non-empty map");
+                ev.remove(&oldest);
+            }
+            drop(ev);
+            Eviction { entry, spill_to: None, cause }
+        }
     }
 
     /// Complete evictions chosen under the lock: write spill artifacts
@@ -853,18 +1264,158 @@ impl TableRegistry {
                 Some(slot) => {
                     if let Err(e) = self.write_spill(&ev.entry, &slot) {
                         // the table was rolled back to resident: undo
-                        // the eviction count too, or telemetry would
+                        // the cause's counter too, or telemetry would
                         // report an eviction that never happened
-                        self.evictions.fetch_sub(1, Ordering::Relaxed);
+                        match ev.cause {
+                            EvictCause::Budget => self
+                                .evictions
+                                .fetch_sub(1, Ordering::Relaxed),
+                            EvictCause::Ttl => self
+                                .ttl_demotions
+                                .fetch_sub(1, Ordering::Relaxed),
+                        };
                         eprintln!(
                             "spill of evicted table {:?} failed ({e}); \
-                             keeping it resident (over budget)",
+                             keeping it resident",
                             ev.entry.name
                         );
                     }
                 }
             }
         }
+    }
+
+    /// Current injectable-clock time in milliseconds (TTL idleness).
+    fn now_ms(&self) -> u64 {
+        self.wall.now().as_millis() as u64
+    }
+
+    /// TTL sweep: demote (or drop, per the spill policy) every
+    /// non-default resident table whose last lookup is at least
+    /// [`ServerConfig::ttl_secs`] ago. Runs automatically at the top of
+    /// every resolve and insert and on the serve accept loop's idle
+    /// tick; public so tests (and embedders with their own timers) can
+    /// drive it explicitly. A no-op without a configured TTL. Returns
+    /// the number of tables expired.
+    ///
+    /// The sweep completes its demotions SYNCHRONOUSLY -- artifact
+    /// write included -- the same discipline as budget eviction on
+    /// insert, so quiescent state is deterministic (the soak asserts
+    /// resident bytes after every op) and a sweep that returned early
+    /// could never hide a half-spilled table. The cost: the sweeping
+    /// thread (an accept-loop tick or an unrelated resolve) pays the
+    /// victim's artifact write when a TTL actually fires. TTL fires at
+    /// most once per idle table per TTL period, so this is a rare
+    /// stall, not a steady-state tax; move `finish_evictions` to a
+    /// background thread only if spilling multi-GB tables inline ever
+    /// shows up in promote/accept latency.
+    pub fn expire_idle(&self) -> usize {
+        self.expire_idle_protected(&[])
+    }
+
+    /// [`expire_idle`](Self::expire_idle) with extra protection: tables
+    /// named in `protect` are not expired, however idle. Resolves pass
+    /// the table they are about to serve (a lookup arriving AT the
+    /// deadline is still a lookup -- it must win the race against its
+    /// own sweep), and fan-out frames pass every table they name.
+    pub(crate) fn expire_idle_protected(&self, protect: &[&str]) -> usize {
+        let Some(ttl) = self.cfg.ttl_secs else {
+            return 0;
+        };
+        let ttl_ms = ttl.saturating_mul(1000);
+        let now = self.now_ms();
+        // cheap read-only pass first: the common case is nothing expired
+        let idle: Vec<String> = {
+            let map = self.tables.read().unwrap();
+            let def = self.default.lock().unwrap().clone();
+            map.values()
+                .filter_map(|s| match s {
+                    Slot::Resident(e)
+                        if def.as_deref() != Some(e.name.as_str())
+                            && !protect.iter().any(|p| *p == e.name)
+                            && now.saturating_sub(
+                                e.last_used_at.load(Ordering::Relaxed))
+                                >= ttl_ms =>
+                    {
+                        Some(e.name.clone())
+                    }
+                    _ => None,
+                })
+                .collect()
+        };
+        if idle.is_empty() {
+            return 0;
+        }
+        let evicted: Vec<Eviction> = {
+            let mut map = self.tables.write().unwrap();
+            let def = self.default.lock().unwrap().clone();
+            let mut out = Vec::new();
+            for name in idle {
+                // re-check under the write lock: the table may have been
+                // touched, unloaded, demoted, or re-elected default while
+                // the read pass's lock was released
+                let Some(Slot::Resident(e)) = map.get(&name) else {
+                    continue;
+                };
+                if def.as_deref() == Some(name.as_str())
+                    || now.saturating_sub(
+                        e.last_used_at.load(Ordering::Relaxed)) < ttl_ms
+                {
+                    continue;
+                }
+                out.push(self.remove_victim_locked(
+                    &mut map, &name, EvictCause::Ttl));
+            }
+            out
+        };
+        let n = evicted.len();
+        // artifact writes / shard joins outside the lock, same as every
+        // other eviction
+        self.finish_evictions(evicted);
+        n
+    }
+
+    /// Throttled TTL sweep for the hot paths (every resolve, the serve
+    /// accept loop's idle tick): at most one full sweep per second of
+    /// injected-clock time, so `--ttl` costs one atomic load per lookup
+    /// instead of an O(tables) scan plus the default-table mutex. TTL
+    /// deadlines are whole seconds, so a sub-second sweep lag cannot
+    /// change which period a table expires in. Explicit
+    /// [`expire_idle`](Self::expire_idle) calls (tests, embedders'
+    /// timers) and the insert path are never throttled.
+    pub(crate) fn maybe_expire_idle(&self, protect: &[&str]) {
+        if self.sweep_due() {
+            self.expire_idle_protected(protect);
+        }
+    }
+
+    /// Claim the current one-second sweep window. `true` means the
+    /// caller MUST sweep (it won the CAS; skipping would waste the
+    /// window); `false` means no TTL is configured, a sweep ran within
+    /// the last clock-second, or another thread just claimed it. Split
+    /// out so resolve can check the throttle BEFORE building its
+    /// protect list -- the common no-sweep case costs one atomic load,
+    /// zero allocation.
+    fn sweep_due(&self) -> bool {
+        if self.cfg.ttl_secs.is_none() {
+            return false;
+        }
+        let now = self.now_ms();
+        let last = self.last_sweep.load(Ordering::Relaxed);
+        if now >= last && now - last < 1000 {
+            return false;
+        }
+        // one winner per window; a loser's sweep is already covered
+        self.last_sweep
+            .compare_exchange(last, now, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Tables expired by the idle TTL since startup (`--ttl`); budget
+    /// evictions are counted separately by
+    /// [`eviction_count`](Self::eviction_count).
+    pub fn ttl_demotion_count(&self) -> u64 {
+        self.ttl_demotions.load(Ordering::Relaxed)
     }
 
     /// Hot-load a `.dpq` artifact as a new table (the `load` admin op).
@@ -968,6 +1519,19 @@ impl TableRegistry {
         name: Option<&str>,
         protect: &[&str],
     ) -> Result<Arc<TableEntry>, WireError> {
+        // TTL sweep rides on resolves (traffic to ANY table expires the
+        // idle ones), throttled to one sweep per clock-second -- the
+        // throttle is checked FIRST so the common no-sweep case costs
+        // one atomic load and no allocation. The table this request is
+        // about to serve is protected: a lookup arriving at the
+        // deadline is a lookup.
+        if self.sweep_due() {
+            let mut prot: Vec<&str> = protect.to_vec();
+            if let Some(n) = name {
+                prot.push(n);
+            }
+            self.expire_idle_protected(&prot);
+        }
         let name = match name {
             Some(n) => n.to_string(),
             None => {
@@ -1020,12 +1584,15 @@ impl TableRegistry {
         self.finish_evictions(evicted);
     }
 
-    /// Stamp `entry` as most-recently-used.
+    /// Stamp `entry` as most-recently-used: the logical LRU tick (for
+    /// eviction ordering) and the injectable-clock time (for TTL
+    /// idleness).
     pub(crate) fn touch(&self, entry: &TableEntry) {
         entry.last_used.store(
             self.clock.fetch_add(1, Ordering::Relaxed) + 1,
             Ordering::Relaxed,
         );
+        entry.last_used_at.store(self.now_ms(), Ordering::Relaxed);
     }
 
     /// The current default table name (v1 frames route here).
@@ -1044,6 +1611,8 @@ impl TableRegistry {
             return Err(WireError::NoSuchTable(name.to_string()));
         }
         *self.default.lock().unwrap() = Some(name.to_string());
+        // an explicit choice is never provisional
+        self.default_provisional.store(false, Ordering::Relaxed);
         Ok(())
     }
 
@@ -1238,6 +1807,63 @@ impl TableRegistry {
             return Err(WireError::NoSuchTable(name.to_string()));
         }
         Ok(slot)
+    }
+
+    /// Live-resize a table's batcher-shard replica count (the
+    /// `set_replicas` wire op). A RESIDENT table is swapped to a fresh
+    /// entry with `n` replicas sharing the same backend `Arc` and
+    /// table-level [`Stats`] (counters continue; per-replica rings
+    /// reset); the old entry's shards are stopped OUTSIDE the lock --
+    /// in-flight batches finish serving, and a lookup whose queue was
+    /// closed by the swap is transparently retried against the new
+    /// entry by the connection handler, so a resize is invisible
+    /// mid-traffic. A SPILLED table just records `n` for its next
+    /// promotion. Returns the replica count now in force. Typed
+    /// rejections: `bad_replicas` (outside `1..=`[`MAX_REPLICAS`]),
+    /// `no_such_table`.
+    pub fn set_replicas(&self, name: &str, n: usize) -> Result<usize, WireError> {
+        validate_replicas(n)?;
+        if self.stop.load(Ordering::Relaxed) {
+            return Err(WireError::Rejected {
+                code: "shutting_down".into(),
+                message: "registry is shutting down".into(),
+            });
+        }
+        let old = {
+            let mut map = self.tables.write().unwrap();
+            match map.get(name) {
+                None => return Err(WireError::NoSuchTable(name.to_string())),
+                Some(Slot::Spilled(s)) => {
+                    s.replicas.store(n, Ordering::Relaxed);
+                    None // manifest rewritten below, outside the lock
+                }
+                Some(Slot::Resident(e)) if e.replica_count() == n => {
+                    return Ok(n); // already there: no swap, no churn
+                }
+                Some(Slot::Resident(e)) => {
+                    let old = e.clone();
+                    let entry = TableEntry::spawn(
+                        name, old.backend.clone(), &self.cfg, &self.stop,
+                        old.stats.clone(), n);
+                    // carry the LRU/idle stamps: a resize is an admin
+                    // action, not a lookup -- it must not refresh the
+                    // table's eviction rank
+                    entry.last_used.store(
+                        old.last_used.load(Ordering::Relaxed),
+                        Ordering::Relaxed);
+                    entry.last_used_at.store(
+                        old.last_used_at.load(Ordering::Relaxed),
+                        Ordering::Relaxed);
+                    map.insert(name.to_string(), Slot::Resident(entry));
+                    Some(old)
+                }
+            }
+        };
+        match old {
+            Some(old) => old.stop(), // outside the lock: batches finish
+            None => self.sync_spill_manifest(), // spilled: record n
+        }
+        Ok(n)
     }
 
     /// Write a demotion's artifact and finish the transition. Runs with
@@ -1454,11 +2080,13 @@ impl TableRegistry {
                 }
             }
             let entry = TableEntry::spawn(
-                &s.name, backend, &self.cfg, &self.stop, s.stats.clone());
+                &s.name, backend, &self.cfg, &self.stop, s.stats.clone(),
+                s.replicas());
             entry.last_used.store(
                 self.clock.fetch_add(1, Ordering::Relaxed) + 1,
                 Ordering::Relaxed,
             );
+            entry.last_used_at.store(self.now_ms(), Ordering::Relaxed);
             map.insert(s.name.clone(), Slot::Resident(entry.clone()));
             // The artifact is consumed: a later demote rewrites it, and
             // leaving it would let the manifest drift from the registry.
@@ -1506,6 +2134,7 @@ impl TableRegistry {
                     ("vocab", Json::num(s.vocab as f64)),
                     ("d", Json::num(s.d as f64)),
                     ("storage_bits", Json::num(s.storage_bits as f64)),
+                    ("replicas", Json::num(s.replicas() as f64)),
                 ])
             })
             .collect();
@@ -1559,15 +2188,17 @@ impl TableRegistry {
         let mut fresh: Vec<String> = Vec::with_capacity(slots.len());
         let mut included: Vec<&str> = Vec::with_capacity(slots.len());
         for (i, (name, slot)) in slots.iter().enumerate() {
-            let (kind, vocab, d, storage_bits) = match slot {
+            let (kind, vocab, d, storage_bits, replicas) = match slot {
                 Slot::Resident(e) => (
                     e.backend.kind().to_string(),
                     e.backend.vocab(),
                     e.backend.d(),
                     e.backend.storage_bits(),
+                    e.replica_count(),
                 ),
                 Slot::Spilled(s) => {
-                    (s.kind.clone(), s.vocab, s.d, s.storage_bits)
+                    (s.kind.clone(), s.vocab, s.d, s.storage_bits,
+                     s.replicas())
                 }
             };
             let file = format!("t{i:03}_{}.{kind}", sanitize_file_stem(name));
@@ -1687,6 +2318,7 @@ impl TableRegistry {
                 ("vocab", Json::num(vocab as f64)),
                 ("d", Json::num(d as f64)),
                 ("storage_bits", Json::num(storage_bits as f64)),
+                ("replicas", Json::num(replicas as f64)),
             ]));
         }
         let mut pairs = vec![
@@ -1697,6 +2329,9 @@ impl TableRegistry {
         ];
         if let Some(b) = self.cfg.mem_budget_bytes {
             pairs.push(("mem_budget_bytes", Json::num(b as f64)));
+        }
+        if let Some(t) = self.cfg.ttl_secs {
+            pairs.push(("ttl_secs", Json::num(t as f64)));
         }
         if let Some(sd) = &self.cfg.spill_dir {
             pairs.push(("spill_dir",
@@ -1830,6 +2465,13 @@ impl TableRegistry {
                 .and_then(|v| v.as_str())
                 .map(|s| s != "drop")
                 .unwrap_or(def.spill_on_evict),
+            // same floor as --ttl: a hand-edited zero must not arm a
+            // sweep that expires every non-default table instantly
+            ttl_secs: j
+                .get("ttl_secs")
+                .and_then(|v| v.as_f64())
+                .filter(|t| t.is_finite() && *t >= 1.0)
+                .map(|t| t as u64),
         }
     }
 
@@ -1854,14 +2496,16 @@ impl TableRegistry {
         // a manifest-recorded (or overridden) spill dir that does not
         // exist must fail the restore loudly, same as `open` at startup
         Self::validate_spill(&cfg)?;
-        // Budget enforcement is DISABLED while the snapshot's tables are
-        // re-inserted: a snapshot can legitimately be (softly) over its
-        // own budget, and restore must rebuild exactly the manifest's
-        // contents -- evicting one of them mid-rebuild would break the
-        // bit-identical guarantee. The budget is re-armed below, so it
-        // governs every load made after the restore completes.
+        // Budget enforcement AND the idle TTL are DISABLED while the
+        // snapshot's tables are re-inserted: a snapshot can
+        // legitimately be (softly) over its own budget, and restore
+        // must rebuild exactly the manifest's contents -- evicting (or
+        // TTL-expiring, on a slow rebuild) one of them mid-rebuild
+        // would break the bit-identical guarantee. Both are re-armed
+        // below, so they govern traffic after the restore completes.
         let mut reg = TableRegistry::new(ServerConfig {
             mem_budget_bytes: None,
+            ttl_secs: None,
             ..cfg.clone()
         });
         let base = manifest
@@ -1897,14 +2541,28 @@ impl TableRegistry {
                     }
                 }
             }
-            reg.insert(name, backend)?;
+            // replica counts are part of the serving config the
+            // snapshot promised to rebuild (clamped like adoption: a
+            // hand-edited count must not spawn absurd thread counts)
+            let replicas = t
+                .get("replicas")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(1)
+                .clamp(1, MAX_REPLICAS);
+            reg.insert_with_replicas(name, backend, replicas)?;
         }
         if let Some(d) = want_default {
             reg.set_default(d).map_err(|_| fail(format!(
                 "manifest default {d:?} is not among the snapshot's tables")))?;
         }
-        // re-arm the budget for post-restore loads
+        // re-arm the budget and TTL for post-restore traffic
         reg.cfg.mem_budget_bytes = cfg.mem_budget_bytes;
+        reg.cfg.ttl_secs = cfg.ttl_secs;
+        // a spill dir carried over (or overridden) may hold tables a
+        // previous process demoted that are NOT in the snapshot --
+        // adopt them too (names the snapshot restored are kept
+        // resident; adoption skips them loudly)
+        reg.adopt_spill_tier()?;
         Ok(reg)
     }
 
@@ -1917,6 +2575,19 @@ impl TableRegistry {
             e.stop();
         }
     }
+}
+
+/// Typed `bad_replicas` rejection for a replica count outside
+/// `1..=`[`MAX_REPLICAS`].
+fn validate_replicas(n: usize) -> Result<(), WireError> {
+    if n == 0 || n > MAX_REPLICAS {
+        return Err(WireError::Rejected {
+            code: "bad_replicas".into(),
+            message: format!(
+                "replicas must be in 1..={MAX_REPLICAS}, got {n}"),
+        });
+    }
+    Ok(())
 }
 
 /// File-name-safe version of a table name for snapshot artifacts (the
@@ -1976,6 +2647,7 @@ mod tests {
             mem_budget_bytes: budget,
             spill_dir: Some(dir.clone()),
             spill_on_evict: true,
+            ..ServerConfig::default()
         };
         (dir, cfg)
     }
@@ -2505,5 +3177,292 @@ mod tests {
         assert!(!man.contains("\"a\""), "{man}");
         assert!(man.contains("\"b\""), "{man}");
         reg.shutdown();
+    }
+
+    // ---- replicas ----
+
+    /// Replication must be invisible in the bytes: a 3-replica table
+    /// serves exactly what a direct gather does for every pattern, and
+    /// idle-time ties round-robin across replicas so sequential traffic
+    /// still exercises more than one.
+    #[test]
+    fn replicated_lookup_matches_direct_gather_and_spreads() {
+        let (backend, table) = dense(40, 6, 17);
+        let reg = TableRegistry::new(cfg(2)); // 2 shards x 3 replicas
+        let entry = reg.insert_with_replicas("t", backend, 3).unwrap();
+        assert_eq!(entry.replica_count(), 3);
+        assert_eq!(entry.shard_count(), 2);
+        for round in 0..12 {
+            let ids: Vec<usize> =
+                (0..5).map(|i| (round * 7 + i * 3) % 40).collect();
+            let ans = entry.lookup(&ids).unwrap();
+            let got = ans.as_slice();
+            for (r, &id) in ids.iter().enumerate() {
+                assert_eq!(&got[r * 6..(r + 1) * 6], table.row(id),
+                           "round={round} id={id}");
+            }
+        }
+        // every routed lookup was answered: no leaked queue depth
+        assert_eq!(entry.replica_depths(), vec![0, 0, 0]);
+        // sequential (depth-tied) traffic rotates: several replicas
+        // must have drained batches, not just replica 0
+        let st = entry.replica_stats_json().to_string();
+        let busy = entry
+            .replicas
+            .iter()
+            .filter(|r| r.stats.batches.load(Ordering::Relaxed) > 0)
+            .count();
+        assert!(busy >= 2, "round-robin tiebreak must spread load: {st}");
+        // replica batches and table batches agree (merged view)
+        let sum: u64 = entry
+            .replicas
+            .iter()
+            .map(|r| r.stats.batches.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(sum, entry.stats.batches.load(Ordering::Relaxed));
+        reg.shutdown();
+    }
+
+    /// `set_replicas`: live resizes swap the entry (counters carried),
+    /// out-of-range counts are typed `bad_replicas`, resizing a spilled
+    /// table takes effect at promotion, and the count survives the
+    /// demote -> promote round trip.
+    #[test]
+    fn set_replicas_resizes_live_and_survives_spill() {
+        let (dir, cfg) = spill_cfg("set_replicas", None);
+        let reg = TableRegistry::open(cfg).unwrap();
+        let (backend, table) = dense(30, 4, 23);
+        reg.insert("t", backend).unwrap();
+        reg.resolve(Some("t")).unwrap().lookup(&[1, 2]).unwrap();
+        let before = reg.get("t").unwrap().stats.requests.load(Ordering::Relaxed);
+
+        assert_eq!(reg.set_replicas("t", 3).unwrap(), 3);
+        let entry = reg.get("t").unwrap();
+        assert_eq!(entry.replica_count(), 3);
+        // table-level counters carried across the swap
+        assert_eq!(entry.stats.requests.load(Ordering::Relaxed), before);
+        let ans = entry.lookup(&[0, 29]).unwrap();
+        assert_eq!(&ans.as_slice()[..4], table.row(0));
+        // no-op resize does not swap the entry
+        assert_eq!(reg.set_replicas("t", 3).unwrap(), 3);
+        assert!(Arc::ptr_eq(&reg.get("t").unwrap(), &entry));
+
+        // typed rejections
+        match reg.set_replicas("t", 0) {
+            Err(WireError::Rejected { code, .. }) => {
+                assert_eq!(code, "bad_replicas")
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(reg.set_replicas("t", MAX_REPLICAS + 1).is_err());
+        assert_eq!(
+            reg.set_replicas("nope", 2).unwrap_err(),
+            WireError::NoSuchTable("nope".into())
+        );
+
+        // replica count rides the spill tier: demote at 3, promote at 3;
+        // resizing WHILE spilled applies at the next promotion
+        let slot = reg.demote("t").unwrap();
+        assert_eq!(slot.replicas(), 3);
+        let man = std::fs::read_to_string(dir.join(SPILL_MANIFEST)).unwrap();
+        assert!(man.contains("\"replicas\""), "{man}");
+        reg.set_replicas("t", 2).unwrap();
+        assert_eq!(slot.replicas(), 2);
+        let entry = reg.resolve(Some("t")).unwrap();
+        assert_eq!(entry.replica_count(), 2);
+        let ans = entry.lookup(&[7]).unwrap();
+        assert_eq!(ans.as_slice(), table.row(7));
+        reg.shutdown();
+    }
+
+    // ---- TTL (deterministic via the injected ManualClock) ----
+
+    use crate::server::clock::ManualClock;
+
+    fn ttl_reg(
+        tag: &str,
+        budget: Option<u64>,
+        ttl: u64,
+    ) -> (std::path::PathBuf, Arc<ManualClock>, TableRegistry) {
+        let (dir, cfg) = spill_cfg(&format!("ttl_{tag}"), budget);
+        let cfg = ServerConfig { ttl_secs: Some(ttl), ..cfg };
+        let clock = Arc::new(ManualClock::new());
+        let reg = TableRegistry::open_with_clock(cfg, clock.clone()).unwrap();
+        (dir, clock, reg)
+    }
+
+    /// An idle table is demoted EXACTLY at the TTL deadline -- one
+    /// millisecond earlier it survives -- a touched table's deadline
+    /// moves with its last lookup, and the default is never expired.
+    #[test]
+    fn ttl_demotes_exactly_at_deadline_touch_resets_default_pinned() {
+        let (_dir, clock, reg) = ttl_reg("exact", None, 10);
+        reg.insert("base", dense(10, 4, 1).0).unwrap(); // default, pinned
+        reg.insert("a", dense(10, 4, 2).0).unwrap();
+        reg.insert("b", dense(10, 4, 3).0).unwrap();
+
+        // t = 5s: touch b; its deadline moves to t = 15s
+        clock.advance(Duration::from_secs(5));
+        reg.resolve(Some("b")).unwrap();
+
+        // t = 9.999s: nobody has hit a's 10s deadline yet
+        clock.advance(Duration::from_millis(4999));
+        assert_eq!(reg.expire_idle(), 0);
+        assert_eq!(reg.residency("a"), Some(Residency::Resident));
+
+        // t = 10s exactly: a (idle 10s) expires; b (idle 5s) and the
+        // default survive
+        clock.advance(Duration::from_millis(1));
+        assert_eq!(reg.expire_idle(), 1);
+        assert_eq!(reg.residency("a"), Some(Residency::Spilled));
+        assert_eq!(reg.residency("b"), Some(Residency::Resident));
+        assert_eq!(reg.residency("base"), Some(Residency::Resident));
+        assert_eq!(reg.ttl_demotion_count(), 1);
+        assert_eq!(reg.eviction_count(), 0, "TTL is not a budget eviction");
+
+        // far future: b expires too; the default NEVER does
+        clock.advance(Duration::from_secs(3600));
+        assert_eq!(reg.expire_idle(), 1);
+        assert_eq!(reg.residency("b"), Some(Residency::Spilled));
+        assert_eq!(reg.residency("base"), Some(Residency::Resident));
+        assert_eq!(reg.ttl_demotion_count(), 2);
+
+        // the expired table transparently reloads -- and the reload
+        // resets its idle clock (resolve touches)
+        let entry = reg.resolve(Some("a")).unwrap();
+        assert!(entry.lookup(&[3]).is_some());
+        assert_eq!(reg.residency("a"), Some(Residency::Resident));
+        reg.shutdown();
+    }
+
+    /// The sweep rides on resolves: traffic to ANY table expires the
+    /// idle ones, and the table being served is protected even when it
+    /// is itself at the deadline (a lookup at the deadline is a lookup).
+    #[test]
+    fn ttl_sweep_rides_on_resolve_and_protects_the_resolved_table() {
+        let (_dir, clock, reg) = ttl_reg("resolve", None, 10);
+        reg.insert("base", dense(10, 4, 1).0).unwrap();
+        reg.insert("a", dense(10, 4, 2).0).unwrap();
+        reg.insert("b", dense(10, 4, 3).0).unwrap();
+        clock.advance(Duration::from_secs(10));
+        // both a and b are exactly at the deadline; resolving a must
+        // serve a (protected) and expire b as a side effect
+        let entry = reg.resolve(Some("a")).unwrap();
+        assert_eq!(entry.name, "a");
+        assert_eq!(reg.residency("a"), Some(Residency::Resident));
+        assert_eq!(reg.residency("b"), Some(Residency::Spilled));
+        assert_eq!(reg.ttl_demotion_count(), 1);
+        reg.shutdown();
+    }
+
+    /// TTL and the memory budget compose: whichever fires first wins,
+    /// and the counters attribute each eviction to its cause.
+    #[test]
+    fn ttl_and_budget_compose_with_attributed_counters() {
+        let bytes_per = 10 * 4 * 4u64;
+        let (_dir, clock, reg) = ttl_reg("compose", Some(2 * bytes_per), 10);
+        reg.insert("base", dense(10, 4, 1).0).unwrap(); // default
+        reg.insert("hot", dense(10, 4, 2).0).unwrap();
+        // t = 5s: the budget fires FIRST (insert pushes over), long
+        // before any TTL deadline -- a budget eviction, not a TTL one
+        clock.advance(Duration::from_secs(5));
+        reg.resolve(Some("hot")).unwrap();
+        reg.insert("cold", dense(10, 4, 3).0).unwrap();
+        assert_eq!((reg.eviction_count(), reg.ttl_demotion_count()), (1, 0));
+        assert_eq!(reg.residency("base"), Some(Residency::Resident));
+        // (hot was just touched, so the LRU victim was... the touched
+        // ordering decides; whichever spilled, exactly one did)
+        assert_eq!(reg.list_spilled().len(), 1);
+
+        // t = 16s: the survivor that nobody touched since t=5 crosses
+        // its TTL deadline -- now the TTL fires, under budget
+        clock.advance(Duration::from_secs(11));
+        let expired = reg.expire_idle();
+        assert_eq!(expired, 1);
+        assert_eq!((reg.eviction_count(), reg.ttl_demotion_count()), (1, 1));
+        assert_eq!(reg.residency("base"), Some(Residency::Resident));
+        reg.shutdown();
+    }
+
+    /// Without a spill tier, TTL expiry DROPS the victim (PR-3 drop
+    /// semantics: evicted marker, typed no_such_table), still counted
+    /// as a TTL demotion, default still pinned.
+    #[test]
+    fn ttl_without_spill_tier_drops_with_evicted_marker() {
+        let clock = Arc::new(ManualClock::new());
+        let reg = TableRegistry::with_clock(
+            ServerConfig {
+                max_batch: 8,
+                ttl_secs: Some(7),
+                ..ServerConfig::default()
+            },
+            clock.clone(),
+        );
+        reg.insert("base", dense(10, 4, 1).0).unwrap();
+        reg.insert("idle", dense(10, 4, 2).0).unwrap();
+        clock.advance(Duration::from_secs(7));
+        assert_eq!(reg.expire_idle(), 1);
+        assert_eq!(reg.ttl_demotion_count(), 1);
+        assert!(reg.was_evicted("idle"));
+        assert!(reg.residency("idle").is_none(), "dropped, not spilled");
+        assert_eq!(
+            reg.resolve(Some("idle")).unwrap_err(),
+            WireError::NoSuchTable("idle".into())
+        );
+        assert_eq!(reg.residency("base"), Some(Residency::Resident));
+        reg.shutdown();
+    }
+
+    // ---- startup spill recovery ----
+
+    /// `open` over a spill dir with a populated spill.json re-adopts
+    /// every recorded table: registered, residency spilled, promoted on
+    /// first lookup with the recorded replica count; a missing artifact
+    /// adopts as Lost; a corrupt manifest fails open loudly.
+    #[test]
+    fn open_readopts_spill_manifest_tables() {
+        let (dir, cfg) = spill_cfg("recover_unit", None);
+        let (backend, table) = dense(20, 4, 41);
+        {
+            let reg = TableRegistry::open(cfg.clone()).unwrap();
+            reg.insert_with_replicas("keep", backend, 2).unwrap();
+            reg.insert("gone", dense(12, 3, 42).0).unwrap();
+            reg.demote("keep").unwrap();
+            let slot = reg.demote("gone").unwrap();
+            // "gone"'s artifact vanishes out-of-band before the restart
+            std::fs::remove_file(dir.join(slot.file())).unwrap();
+            reg.shutdown();
+        }
+        // restart: both tables re-adopted from spill.json
+        let reg = TableRegistry::open(cfg.clone()).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.residency("keep"), Some(Residency::Spilled));
+        assert_eq!(reg.residency("gone"), Some(Residency::Lost));
+        // the first adopted table (name order: "gone") became default;
+        // adopted defaults are allowed to be spilled
+        assert!(reg.default_name().is_some());
+        // first lookup transparently promotes with the recorded replicas
+        let entry = reg.resolve(Some("keep")).unwrap();
+        assert_eq!(entry.replica_count(), 2);
+        let ans = entry.lookup(&[0, 19, 7]).unwrap();
+        assert_eq!(&ans.as_slice()[..4], table.row(0));
+        assert_eq!(&ans.as_slice()[8..12], table.row(7));
+        // the lost table answers typed reload_failed, not a panic
+        match reg.resolve(Some("gone")) {
+            Err(WireError::Rejected { code, .. }) => {
+                assert_eq!(code, "reload_failed")
+            }
+            other => panic!("{other:?}"),
+        }
+        reg.shutdown();
+
+        // corrupt manifest: open fails loudly and typed
+        std::fs::write(dir.join(SPILL_MANIFEST), "{not json").unwrap();
+        match TableRegistry::open(cfg) {
+            Err(WireError::Rejected { code, .. }) => {
+                assert_eq!(code, "spill_recover_failed")
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

@@ -59,6 +59,38 @@ impl LatencyRing {
     }
 }
 
+/// One replica's serving statistics: its live queue depth (the signal
+/// lookup routing balances on), the batches its shards have drained,
+/// and its own batch-latency ring. A replicated table has one of these
+/// per replica beside the table-level [`Stats`] (the merged view that
+/// also rides across the spill tier); replica stats are reset by a
+/// `set_replicas` resize, table stats are not.
+#[derive(Default)]
+pub struct ReplicaStats {
+    /// Lookups routed to this replica and not yet answered. Incremented
+    /// when a request is queued on the replica's shards, decremented
+    /// when its answer is assembled -- so the router's "least loaded"
+    /// read sees genuinely outstanding work, not lifetime totals.
+    pub queue_depth: AtomicU64,
+    /// Micro-batches drained by this replica's shards.
+    pub batches: AtomicU64,
+    ring: LatencyRing,
+}
+
+impl ReplicaStats {
+    /// Record one drained batch's wall-clock time for this replica.
+    pub fn record_batch_secs(&self, seconds: f64) {
+        self.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.ring.record(seconds);
+    }
+
+    /// `(p50, p99)` over this replica's latency ring, `None` before its
+    /// first batch.
+    pub fn batch_latency(&self) -> Option<(f64, f64)> {
+        self.ring.percentiles()
+    }
+}
+
 /// One table's serving statistics. Counters are relaxed atomics (exact
 /// totals, no ordering requirements). The registry carries a table's
 /// `Stats` across demote/promote cycles, so counters survive a trip

@@ -1,0 +1,212 @@
+//! Acceptance tests for replicated hot-table serving: a table
+//! registered with `replicas = 3` must serve bytes **bit-identical** to
+//! `replicas = 1` -- for `lookup_bin` and `lookup_fanout`, at 1 AND 2
+//! worker threads, with 2 batcher shards per replica -- including a
+//! demote -> promote round trip of the replicated table (the replica
+//! count rides the spill tier) and a live `set_replicas` resize under
+//! concurrent traffic (the handler's retry makes the swap invisible:
+//! no lookup may fail or serve wrong bytes mid-resize).
+//!
+//! Everything lives in ONE #[test] because `pool::set_threads` is
+//! process-wide (like tests/multi_table.rs); tier-1 additionally reruns
+//! this file under `DPQ_THREADS=2`.
+
+use std::sync::{mpsc, Arc};
+
+use dpq_embed::backend::DenseTable;
+use dpq_embed::dpq::toy_embedding;
+use dpq_embed::server::{
+    Client, EmbeddingServer, Rows, ServerConfig, TableRegistry, WireError,
+};
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::{pool, Rng};
+
+const DENSE_N: usize = 50;
+const DENSE_D: usize = 6;
+const EMB_N: usize = 120;
+
+fn spawn(server: Arc<EmbeddingServer>)
+    -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+fn bits_equal(a: &Rows, b: &Rows) -> bool {
+    a.n() == b.n()
+        && a.d() == b.d()
+        && a.as_slice().iter().zip(b.as_slice())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn dense_table() -> TensorF {
+    let mut rng = Rng::new(77);
+    TensorF {
+        shape: vec![DENSE_N, DENSE_D],
+        data: (0..DENSE_N * DENSE_D).map(|_| rng.normal()).collect(),
+    }
+}
+
+/// A 2-shard registry holding the same two tables under `replicas`
+/// replica sets each (the backends are deterministic, so the 1-replica
+/// and 3-replica registries hold identical bytes).
+fn registry_with(replicas: usize, spill: Option<std::path::PathBuf>)
+    -> TableRegistry {
+    let reg = TableRegistry::open(ServerConfig {
+        max_batch: 16,
+        shards_per_table: 2,
+        spill_dir: spill,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    reg.insert_with_replicas(
+        "emb", Arc::new(toy_embedding(EMB_N, 8, 4, 3, 9)), replicas)
+        .unwrap();
+    reg.insert_with_replicas(
+        "dense", Arc::new(DenseTable::new(dense_table()).unwrap()), replicas)
+        .unwrap();
+    reg
+}
+
+#[test]
+fn replicas_bit_identical_to_single_at_1_and_2_threads() {
+    let spill = std::env::temp_dir().join("dpq_replica_equivalence_spill");
+    let _ = std::fs::remove_dir_all(&spill);
+    std::fs::create_dir_all(&spill).unwrap();
+
+    let single = Arc::new(EmbeddingServer::new(registry_with(1, None)));
+    let triple = Arc::new(EmbeddingServer::new(
+        registry_with(3, Some(spill.clone()))));
+    let (addr1, h1) = spawn(single.clone());
+    let (addr3, h3) = spawn(triple.clone());
+    let mut c1 = Client::connect(addr1).unwrap();
+    let mut c3 = Client::connect(addr3).unwrap();
+
+    let entry3 = triple.registry().get("emb").unwrap();
+    assert_eq!((entry3.replica_count(), entry3.shard_count()), (3, 2));
+
+    let mut rng = Rng::new(4242);
+    for threads in [1usize, 2] {
+        pool::set_threads(threads);
+        // ---- lookup_bin: many patterns, both tables ----
+        for round in 0..12 {
+            for (table, vocab) in [("emb", EMB_N), ("dense", DENSE_N)] {
+                let n_ids = rng.below(9);
+                let mut ids: Vec<usize> =
+                    (0..n_ids).map(|_| rng.below(vocab)).collect();
+                if round == 0 {
+                    ids = (0..vocab).rev().collect(); // all ids, reversed
+                }
+                let a = c1.lookup_bin(table, &ids).unwrap();
+                let b = c3.lookup_bin(table, &ids).unwrap();
+                assert!(bits_equal(&a, &b),
+                        "{table} diverged at {threads} thread(s): {ids:?}");
+            }
+        }
+        // ---- lookup_fanout across both tables ----
+        for _ in 0..6 {
+            let a: Vec<usize> =
+                (0..rng.below(6)).map(|_| rng.below(EMB_N)).collect();
+            let b: Vec<usize> =
+                (0..rng.below(6)).map(|_| rng.below(DENSE_N)).collect();
+            let queries = [("emb", &a[..]), ("dense", &b[..])];
+            let xs = c1.lookup_fanout(&queries).unwrap();
+            let ys = c3.lookup_fanout(&queries).unwrap();
+            assert_eq!(xs.len(), ys.len());
+            for (k, (x, y)) in xs.iter().zip(&ys).enumerate() {
+                assert!(bits_equal(x, y),
+                        "fan-out section {k} diverged at {threads} thread(s)");
+            }
+        }
+        // replication is load-bearing, not decorative: with depth ties
+        // round-robined, sequential traffic reaches several replicas
+        let st = c3.stats(Some("emb")).unwrap();
+        assert_eq!(st.get("replicas").and_then(|v| v.as_usize()), Some(3));
+        let reps = st.get("replica").unwrap();
+        let busy = (0..3)
+            .filter(|&i| {
+                reps.as_arr().unwrap()[i]
+                    .get("batches")
+                    .and_then(|v| v.as_usize())
+                    .unwrap()
+                    > 0
+            })
+            .count();
+        assert!(busy >= 2, "traffic must spread across replicas: {reps:?}");
+    }
+    pool::set_threads(0); // restore env/auto resolution
+
+    // ---- demote -> promote round trip of a replicated table ----
+    let ids: Vec<usize> = (0..24).map(|i| (i * 11) % EMB_N).collect();
+    let before = c3.lookup_bin("emb", &ids).unwrap();
+    c3.admin_demote("emb").unwrap();
+    let after = c3.lookup_bin("emb", &ids).unwrap(); // transparent reload
+    assert!(bits_equal(&before, &after),
+            "promoted replicated table serves different bytes");
+    let entry = triple.registry().get("emb").unwrap();
+    assert_eq!(entry.replica_count(), 3,
+               "replica count must survive the spill round trip");
+
+    // ---- live set_replicas resize under concurrent traffic ----
+    // a worker hammers "dense" while the main thread flips the replica
+    // count; the handler's retry-on-swap means every lookup succeeds
+    // with bit-correct rows -- the resize is invisible mid-traffic
+    let table = dense_table();
+    let worker = {
+        let addr = addr3;
+        std::thread::spawn(move || -> Result<usize, String> {
+            let mut c = Client::connect(addr).unwrap();
+            let mut rng = Rng::new(99);
+            for i in 0..400 {
+                let ids: Vec<usize> =
+                    (0..4).map(|_| rng.below(DENSE_N)).collect();
+                let rows = c.lookup_bin("dense", &ids)
+                    .map_err(|e| format!("lookup {i} failed mid-resize: {e}"))?;
+                for (r, &id) in ids.iter().enumerate() {
+                    let want = &table.data[id * DENSE_D..(id + 1) * DENSE_D];
+                    if rows.row(r).iter().zip(want)
+                        .any(|(a, b)| a.to_bits() != b.to_bits())
+                    {
+                        return Err(format!(
+                            "lookup {i} served wrong bytes for id {id} \
+                             mid-resize"));
+                    }
+                }
+            }
+            Ok(400)
+        })
+    };
+    for n in [2usize, 4, 1, 3, 1] {
+        assert_eq!(c3.admin_set_replicas("dense", n).unwrap(), n);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(worker.join().unwrap().unwrap(), 400);
+    // settled state: the final resize is in force and still bit-exact
+    assert_eq!(
+        triple.registry().get("dense").unwrap().replica_count(), 1);
+    let a = c1.lookup_bin("dense", &[0, DENSE_N - 1]).unwrap();
+    let b = c3.lookup_bin("dense", &[0, DENSE_N - 1]).unwrap();
+    assert!(bits_equal(&a, &b));
+
+    // typed rejections over the wire
+    match c3.admin_set_replicas("dense", 0) {
+        Err(WireError::Rejected { code, .. }) => assert_eq!(code, "bad_replicas"),
+        other => panic!("{other:?}"),
+    }
+    match c3.admin_set_replicas("nope", 2) {
+        Err(WireError::NoSuchTable(t)) => assert_eq!(t, "nope"),
+        other => panic!("{other:?}"),
+    }
+    // tables op reports the replica count
+    let descs = c3.tables().unwrap();
+    let emb = descs.iter().find(|t| t.name == "emb").unwrap();
+    assert_eq!((emb.replicas, emb.shards), (3, 2));
+
+    c1.shutdown().unwrap();
+    c3.shutdown().unwrap();
+    h1.join().unwrap();
+    h3.join().unwrap();
+    let _ = std::fs::remove_dir_all(&spill);
+}

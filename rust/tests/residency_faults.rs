@@ -65,6 +65,7 @@ fn spill_cfg(dir: &Path, budget: Option<u64>, shards: usize) -> ServerConfig {
         mem_budget_bytes: budget,
         spill_dir: Some(dir.to_path_buf()),
         spill_on_evict: true,
+        ..ServerConfig::default()
     }
 }
 

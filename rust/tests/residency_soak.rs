@@ -1,22 +1,32 @@
 //! Property/soak test for tiered residency: randomized interleavings of
-//! `load` / `demote` / `lookup` / `lookup_fanout` / `unload` against 3
+//! `load` / `demote` / `lookup` / `lookup_fanout` / `unload` /
+//! `set_replicas` / TTL clock ticks / full restart-recovery against 3
 //! tables under a tiny `--mem-budget` with a spill tier, driven at a
 //! 2-thread worker pool. Every successful lookup must be BIT-identical
-//! to a pinned always-resident reference registry (no budget, no spill)
-//! mirroring the same load/unload history, and resident bytes must
-//! never exceed the budget after each op completes (quiescence: the
-//! driver is synchronous, and demote/promote/evict all finish before
-//! returning).
+//! to a pinned always-resident reference registry (no budget, no spill,
+//! no TTL, 1 replica) mirroring the same load/unload history, and
+//! resident bytes must never exceed the budget after each op completes
+//! (quiescence: the driver is synchronous, and demote/promote/evict all
+//! finish before returning).
+//!
+//! TTL is driven through the registry's injected [`ManualClock`], so
+//! "time passes" is an explicit deterministic op in the mix, not a
+//! sleep. A "restart" op demotes every resident table, tears the
+//! subject server down, and reopens a fresh registry over the same
+//! spill directory -- startup recovery must re-adopt everything and
+//! keep serving the exact reference bytes.
 //!
 //! Everything lives in ONE #[test] because `pool::set_threads` is
 //! process-wide; tier-1 additionally reruns this file under
 //! `DPQ_THREADS=2`.
 
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use dpq_embed::backend::DenseTable;
 use dpq_embed::server::{
-    Client, EmbeddingServer, Rows, ServerConfig, TableRegistry, WireError,
+    Client, EmbeddingServer, ManualClock, Rows, ServerConfig, TableRegistry,
+    WireError,
 };
 use dpq_embed::tensor::TensorF;
 use dpq_embed::util::prop::prop_check;
@@ -27,6 +37,7 @@ const VOCAB: usize = 10;
 const D: usize = 4;
 const BYTES_PER: u64 = (VOCAB * D * 4) as u64; // dense f32 table
 const BUDGET: u64 = 2 * BYTES_PER; // fits 2 of the 3 tables
+const TTL_SECS: u64 = 40;
 
 fn spawn(server: Arc<EmbeddingServer>)
     -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
@@ -67,22 +78,26 @@ fn randomized_ops_match_always_resident_reference_under_budget() {
         std::fs::create_dir_all(&spill)
             .map_err(|e| format!("create spill dir: {e}"))?;
 
-        let subject = TableRegistry::open(ServerConfig {
+        let clock = Arc::new(ManualClock::new());
+        let subject_cfg = ServerConfig {
             max_batch: 8,
             shards_per_table: 1,
             mem_budget_bytes: Some(BUDGET),
             spill_dir: Some(spill.clone()),
             spill_on_evict: true,
-        })
-        .map_err(|e| format!("open: {e}"))?;
+            ttl_secs: Some(TTL_SECS),
+        };
+        let subject_reg =
+            TableRegistry::open_with_clock(subject_cfg.clone(), clock.clone())
+                .map_err(|e| format!("open: {e}"))?;
         let reference = TableRegistry::new(ServerConfig {
             max_batch: 8,
             ..ServerConfig::default()
         });
 
-        let subject = Arc::new(EmbeddingServer::new(subject));
+        let mut subject = Arc::new(EmbeddingServer::new(subject_reg));
         let reference = Arc::new(EmbeddingServer::new(reference));
-        let (addr_s, h_s) = spawn(subject.clone());
+        let (addr_s, mut h_s) = spawn(subject.clone());
         let (addr_r, h_r) = spawn(reference.clone());
         let mut cs = Client::connect(addr_s).unwrap();
         let mut cr = Client::connect(addr_r).unwrap();
@@ -107,14 +122,15 @@ fn randomized_ops_match_always_resident_reference_under_budget() {
             let i = rng.below(3);
             let name = NAMES[i];
             let registered = subject.registry().residency(name).is_some();
-            // the registration sets must never diverge
+            // the registration sets must never diverge (TTL expiry and
+            // restarts spill, they never unregister)
             if registered != reference.registry().residency(name).is_some() {
                 return Err(format!(
                     "step {step}: registration diverged for {name}"));
             }
             match rng.below(100) {
-                // ---- lookup (45%) ----
-                0..=44 => {
+                // ---- lookup (40%) ----
+                0..=39 => {
                     let n_ids = rng.below(7);
                     let ids: Vec<usize> =
                         (0..n_ids).map(|_| rng.below(VOCAB)).collect();
@@ -137,8 +153,8 @@ fn randomized_ops_match_always_resident_reference_under_budget() {
                         }
                     }
                 }
-                // ---- fan-out across two tables (15%) ----
-                45..=59 => {
+                // ---- fan-out across two tables (12%) ----
+                40..=51 => {
                     let j = rng.below(3);
                     let other = NAMES[j];
                     let a: Vec<usize> =
@@ -167,8 +183,8 @@ fn randomized_ops_match_always_resident_reference_under_budget() {
                         }
                     }
                 }
-                // ---- demote (15%, subject only) ----
-                60..=74 => {
+                // ---- demote (13%, subject only) ----
+                52..=64 => {
                     let res = subject.registry().demote(name);
                     let resident = matches!(
                         subject.registry().residency(name),
@@ -189,8 +205,8 @@ fn randomized_ops_match_always_resident_reference_under_budget() {
                         }
                     }
                 }
-                // ---- load (12%) ----
-                75..=86 => {
+                // ---- load (10%) ----
+                65..=74 => {
                     if !registered {
                         epochs[i] += 1;
                         let t = fresh_table(i, epochs[i]);
@@ -223,8 +239,8 @@ fn randomized_ops_match_always_resident_reference_under_budget() {
                         }
                     }
                 }
-                // ---- unload (13%) ----
-                _ => {
+                // ---- unload (8%) ----
+                75..=82 => {
                     let got = subject.registry().unload(name);
                     let want = reference.registry().unload(name);
                     match (got, want) {
@@ -235,6 +251,72 @@ fn randomized_ops_match_always_resident_reference_under_budget() {
                             return Err(format!(
                                 "step {step}: unload diverged for {name}: \
                                  {g:?} vs {w:?}"));
+                        }
+                    }
+                }
+                // ---- set_replicas (8%, subject only): resizes must be
+                // invisible in the served bytes ----
+                83..=90 => {
+                    let n = 1 + rng.below(3);
+                    match subject.registry().set_replicas(name, n) {
+                        Ok(got) if got == n => {}
+                        Ok(got) => {
+                            return Err(format!(
+                                "step {step}: set_replicas({name}, {n}) \
+                                 answered {got}"));
+                        }
+                        Err(WireError::NoSuchTable(_)) if !registered => {}
+                        Err(e) => {
+                            return Err(format!(
+                                "step {step}: set_replicas({name}): {e}"));
+                        }
+                    }
+                }
+                // ---- TTL tick (5%): advance the injected clock and
+                // sweep; expiry spills, it never unregisters. (The
+                // server's accept loop also sweeps concurrently, so no
+                // exact counter assertion here -- the bit-compares and
+                // the registration-parity check below prove expiry is
+                // invisible in the served bytes.) ----
+                91..=95 => {
+                    let secs = 10 + rng.below(50) as u64;
+                    clock.advance(Duration::from_secs(secs));
+                    subject.registry().expire_idle();
+                }
+                // ---- restart (4%): flush to the spill tier, tear the
+                // subject down, reopen over the same directory ----
+                _ => {
+                    for e in subject.registry().list() {
+                        match subject.registry().demote(&e.name) {
+                            Ok(_) => {}
+                            // the accept loop's TTL sweep may have
+                            // demoted it between list() and here
+                            Err(WireError::Rejected { ref code, .. })
+                                if code == "not_resident" => {}
+                            Err(e2) => {
+                                return Err(format!(
+                                    "step {step}: restart demote: {e2}"));
+                            }
+                        }
+                    }
+                    cs.shutdown().unwrap();
+                    h_s.join().unwrap();
+                    let reg = TableRegistry::open_with_clock(
+                        subject_cfg.clone(), clock.clone())
+                        .map_err(|e| format!("step {step}: reopen: {e}"))?;
+                    subject = Arc::new(EmbeddingServer::new(reg));
+                    let (addr2, h2) = spawn(subject.clone());
+                    h_s = h2;
+                    cs = Client::connect(addr2).unwrap();
+                    // recovery must re-adopt the whole registration set
+                    for (k, n) in NAMES.iter().enumerate() {
+                        let want =
+                            reference.registry().residency(n).is_some();
+                        let got = subject.registry().residency(n).is_some();
+                        if got != want {
+                            return Err(format!(
+                                "step {step}: restart lost table {} \
+                                 (slot {k})", n));
                         }
                     }
                 }

@@ -12,6 +12,11 @@
 # --spill-dir) must behave exactly as PR 3 did -- that is pinned by the
 # unmodified registry_lifecycle suite, which runs drop-mode eviction
 # with no spill tier configured.
+#
+# Replica coverage: replica_equivalence (replicas=3 bit-identical to
+# replicas=1, live set_replicas under traffic) and spill_recovery
+# (restart over a populated spill dir) also run in BOTH thread passes --
+# replica routing must be invisible in the bytes at every pool size.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,7 +24,8 @@ cargo build --release
 cargo test -q
 cargo build --release --examples
 DPQ_THREADS=2 cargo test -q --test multi_table --test server_integration \
-    --test registry_lifecycle --test residency_faults --test residency_soak
+    --test registry_lifecycle --test residency_faults --test residency_soak \
+    --test replica_equivalence --test spill_recovery
 RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps -q
 for f in docs/*.md; do
     name="$(basename "$f")"

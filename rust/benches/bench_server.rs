@@ -380,4 +380,48 @@ fn main() {
     bench::record("ttl_sweep_s", sweep, 0.0, expired.max(1));
     registry.shutdown();
     let _ = std::fs::remove_dir_all(&ttl_spill);
+
+    // connection plane: does a crowd of idle connections (each holding
+    // a handler thread polling under the deadline discipline) tax the
+    // hot lookup path? 64 idle peers vs none, same closed-loop client.
+    section("conn plane: hot lookups with 64 idle connections held open");
+    let registry = TableRegistry::new(ServerConfig {
+        max_batch: 64,
+        conn_timeout: Some(std::time::Duration::from_secs(600)),
+        max_conns: Some(1024),
+        ..ServerConfig::default()
+    });
+    registry.insert("emb", Arc::new(ce.clone())).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (tx, rx) = mpsc::channel();
+    let s2 = server.clone();
+    let h = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut c = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(17);
+    let iters = 2000usize;
+    let mut lat = [0.0f64; 2];
+    let mut idle: Vec<std::net::TcpStream> = Vec::new();
+    for (slot, idlers) in [(0usize, 0usize), (1, 64)] {
+        while idle.len() < idlers {
+            idle.push(std::net::TcpStream::connect(addr).unwrap());
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let ids: Vec<usize> = (0..16).map(|_| rng.below(n)).collect();
+            c.lookup_bin("emb", &ids).unwrap();
+        }
+        lat[slot] = t0.elapsed().as_secs_f64() / iters as f64;
+    }
+    println!(
+        "lookup {:.1}us with 0 idle conns vs {:.1}us with 64 ({:.2}x)",
+        lat[0] * 1e6, lat[1] * 1e6, lat[1] / lat[0].max(1e-12)
+    );
+    bench::record("lookup_0_idle_conns", lat[0], 0.0, iters);
+    bench::record("lookup_64_idle_conns", lat[1], 0.0, iters);
+    drop(idle);
+    c.shutdown().unwrap();
+    h.join().unwrap();
 }

@@ -6,6 +6,13 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// Maximum container nesting depth the parser accepts. The parser is
+/// recursive-descent, so without a cap a document of `[[[[...` recurses
+/// once per bracket and overflows the thread stack -- which is an
+/// uncatchable process abort, not a panic. 128 is far deeper than any
+/// manifest or wire frame this codebase produces (they nest < 10).
+const MAX_DEPTH: usize = 128;
+
 /// A parsed JSON value. Objects keep keys in a `BTreeMap`, so
 /// serialization is deterministic (lexicographic key order).
 #[derive(Debug, Clone, PartialEq)]
@@ -29,7 +36,7 @@ impl Json {
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.skip_ws();
         if p.i != p.b.len() {
             return Err(format!("trailing data at byte {}", p.i));
@@ -196,11 +203,15 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!(
+                "nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+        }
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -288,7 +299,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
@@ -297,7 +308,7 @@ impl<'a> Parser<'a> {
             return Ok(Json::Arr(v));
         }
         loop {
-            v.push(self.value()?);
+            v.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.peek() {
                 Some(b',') => {
@@ -312,7 +323,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
@@ -325,7 +336,7 @@ impl<'a> Parser<'a> {
             let k = self.string()?;
             self.skip_ws();
             self.expect(b':')?;
-            let v = self.value()?;
+            let v = self.value(depth + 1)?;
             m.insert(k, v);
             self.skip_ws();
             match self.peek() {
@@ -380,6 +391,26 @@ mod tests {
         assert!(Json::parse("[1, 2").is_err());
         assert!(Json::parse("hello").is_err());
         assert!(Json::parse("{} trailing").is_err());
+    }
+
+    /// A hostile `[[[[...` document must parse-error, not overflow the
+    /// stack (a recursive-descent overflow is a process ABORT, which no
+    /// server-side catch_unwind can contain).
+    #[test]
+    fn deep_nesting_is_an_error_not_an_abort() {
+        let deep = "[".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+        let mut closed = "[".repeat(5000);
+        closed.push_str(&"]".repeat(5000));
+        assert!(Json::parse(&closed).is_err());
+        // mixed object/array nesting counts against the same budget
+        let objs = "{\"k\":".repeat(50_000);
+        assert!(Json::parse(&objs).is_err());
+        // ... while anything a real frame nests remains fine
+        let mut ok = "[".repeat(100);
+        ok.push('1');
+        ok.push_str(&"]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!   repro experiment --list             list experiment ids
 //!   repro compress [--artifact P ...]   train + export compressed embedding
 //!   repro serve   [--table N=F ...]     serve compressed embedding tables
+//!   repro fuzz    [--seed S --iters N]  fuzz the wire protocol in-process
 //!   repro codes   [--artifact P ...]    print code statistics
 //!
 //! All flags are `--key value`; unknown keys are rejected with the list of
@@ -312,6 +313,48 @@ fn dispatch(args: &[String]) -> Result<()> {
                     Some(Some(t))
                 }
             };
+            // --conn-timeout SECS: per-connection idle + whole-frame
+            // deadline (fractional seconds ok). Same outer/inner Option
+            // shape: "none"/"off"/"0" disables deadlines, including one
+            // a --restore manifest recorded. Absent = the 30s default.
+            let conn_timeout: Option<Option<std::time::Duration>> =
+                match kv.get("conn_timeout") {
+                    None => None,
+                    Some(s)
+                        if matches!(s.trim().to_ascii_lowercase().as_str(),
+                                    "none" | "off" | "0") =>
+                    {
+                        Some(None)
+                    }
+                    Some(s) => {
+                        let t: f64 = s.trim().parse().map_err(|_| anyhow!(
+                            "--conn-timeout expects seconds (or none), \
+                             got {s:?}"))?;
+                        if !t.is_finite() || t <= 0.0 || t > 31_557_600.0 {
+                            bail!("--conn-timeout must be in (0, 1 year] \
+                                   seconds (or none), got {s:?}");
+                        }
+                        Some(Some(std::time::Duration::from_secs_f64(t)))
+                    }
+                };
+            // --max-conns N: cap on concurrently open connections
+            // (over-cap peers get a typed `busy` close). Same shape:
+            // "none"/"off"/"0" unbounds it. Absent = the 1024 default.
+            let max_conns: Option<Option<usize>> = match kv.get("max_conns") {
+                None => None,
+                Some(s)
+                    if matches!(s.trim().to_ascii_lowercase().as_str(),
+                                "none" | "off" | "0") =>
+                {
+                    Some(None)
+                }
+                Some(s) => {
+                    let n: usize = s.trim().parse().map_err(|_| anyhow!(
+                        "--max-conns expects a positive integer (or none), \
+                         got {s:?}"))?;
+                    Some(Some(n))
+                }
+            };
             let registry = if let Some(manifest) = kv.get("restore") {
                 // rebuild a whole registry from a snapshot manifest; the
                 // snapshot's recorded config applies unless a flag was
@@ -336,6 +379,12 @@ fn dispatch(args: &[String]) -> Result<()> {
                 }
                 if let Some(on) = spill_on_evict {
                     cfg.spill_on_evict = on;
+                }
+                if let Some(t) = conn_timeout {
+                    cfg.conn_timeout = t;
+                }
+                if let Some(n) = max_conns {
+                    cfg.max_conns = n;
                 }
                 // same loud failure as the non-restore path: an explicit
                 // --spill policy with no spill dir anywhere (flag OR
@@ -370,6 +419,12 @@ fn dispatch(args: &[String]) -> Result<()> {
                     spill_dir: spill_dir.flatten(),
                     spill_on_evict: spill_on_evict.unwrap_or(true),
                     ttl_secs: ttl_secs.flatten(),
+                    // a networked server defends itself by default; the
+                    // permissive None defaults are for in-process tests
+                    conn_timeout: conn_timeout.unwrap_or(Some(
+                        std::time::Duration::from_secs(30))),
+                    max_conns: max_conns.unwrap_or(Some(1024)),
+                    debug_ops: false,
                 })?
             };
             // `--table` flags load on top of either path (extra tables
@@ -431,8 +486,71 @@ fn dispatch(args: &[String]) -> Result<()> {
                 "default table: {} (v1 clients are routed here)",
                 registry.default_name().unwrap_or_default()
             );
+            println!(
+                "connection plane: timeout {}, max conns {}",
+                cfg.conn_timeout
+                    .map(|t| format!("{}s", t.as_secs_f64()))
+                    .unwrap_or_else(|| "off".into()),
+                cfg.max_conns
+                    .map(|n| n.to_string())
+                    .unwrap_or_else(|| "unbounded".into())
+            );
             let server = EmbeddingServer::new(registry);
             server.serve(&addr, |a| println!("listening on {a}"))?;
+            Ok(())
+        }
+        "fuzz" => {
+            let kv = parse_cli_overrides(rest)?;
+            let seed: u64 = take_or(&kv, "seed", "42").parse()
+                .map_err(|_| anyhow!("--seed expects an integer"))?;
+            let iters: usize = take_or(&kv, "iters", "2000").parse()
+                .map_err(|_| anyhow!("--iters expects an integer"))?;
+            // default corpus: the committed regression corpus, found
+            // whether the CLI runs from the repo root or rust/
+            let corpus = match kv.get("corpus").map(|s| s.trim()) {
+                Some("none") | Some("off") => None,
+                Some(s) => Some(std::path::PathBuf::from(s)),
+                None => ["rust/tests/corpus", "tests/corpus"]
+                    .iter()
+                    .map(std::path::PathBuf::from)
+                    .find(|p| p.is_dir()),
+            };
+            match &corpus {
+                Some(d) => eprintln!(
+                    "fuzz: seed {seed}, {iters} iters, corpus {}",
+                    d.display()),
+                None => eprintln!(
+                    "fuzz: seed {seed}, {iters} iters, no corpus"),
+            }
+            let report = dpq_embed::server::fuzz::run(
+                &dpq_embed::server::fuzz::FuzzConfig {
+                    seed,
+                    iters,
+                    corpus_dir: corpus,
+                    ..Default::default()
+                })?;
+            println!(
+                "fuzz: {} cases ({} corpus replays + {} generated), \
+                 {} handler panic(s) isolated, {} failure(s)",
+                report.cases_sent, report.corpus_replayed,
+                report.cases_sent - report.corpus_replayed,
+                report.handler_panics, report.failures.len()
+            );
+            for f in &report.failures {
+                let at = f.iter
+                    .map(|i| format!("iter {i}"))
+                    .unwrap_or_else(|| "corpus".into());
+                let file = f.file.as_ref()
+                    .map(|p| format!(" -> {}", p.display()))
+                    .unwrap_or_default();
+                println!(
+                    "  FAIL [{at}] {}: {} ({} bytes){file}",
+                    f.kind, f.detail, f.bytes
+                );
+            }
+            if !report.ok() {
+                bail!("fuzz run found {} failure(s)", report.failures.len());
+            }
             Ok(())
         }
         "codes" => {
@@ -475,6 +593,7 @@ fn print_usage() {
          \x20 serve      [--table NAME=F[:replicas=N] ... --default NAME\n\
          \x20             --addr A --max-batch N --shards N\n\
          \x20             --mem-budget BYTES|none --ttl SECS|none\n\
+         \x20             --conn-timeout SECS|none --max-conns N|none\n\
          \x20             --restore MANIFEST\n\
          \x20             --spill-dir DIR|none --spill disk|drop]\n\
          \x20            (--table is repeatable: one server, many tables,\n\
@@ -499,7 +618,17 @@ fn print_usage() {
          \x20             drop keeps discard-on-evict while still allowing\n\
          \x20             the `demote` admin op;\n\
          \x20             --restore rebuilds a registry from a snapshot\n\
-         \x20             manifest written by the `snapshot` wire op)\n\
+         \x20             manifest written by the `snapshot` wire op;\n\
+         \x20             --conn-timeout SECS closes connections that idle\n\
+         \x20             or trickle past SECS with a typed `timeout` frame\n\
+         \x20             (default 30, fractional ok, \"none\" disables);\n\
+         \x20             --max-conns N answers connections over the cap\n\
+         \x20             with a typed `busy` frame (default 1024))\n\
+         \x20 fuzz       [--seed N --iters N --corpus DIR|none]\n\
+         \x20            (structure-aware wire fuzzer against a live\n\
+         \x20             in-process server; replays the regression corpus\n\
+         \x20             (default rust/tests/corpus), then N generated\n\
+         \x20             cases; exits nonzero on any panic/wedge)\n\
          \x20 codes      [--artifact P --steps N]\n\
          \n\
          global flags:\n\

@@ -11,11 +11,21 @@
 //! answered, with rows or with failure.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::backend::EmbeddingBackend;
 use crate::server::stats::Stats;
+
+/// Lock a queue/slot mutex, recovering the guard if a previous holder
+/// panicked. Every state these mutexes protect (a `VecDeque` + flag, an
+/// `Option` slot) is valid at every interruptible point, so a poisoned
+/// lock carries no torn data -- but an `unwrap()` here would wedge the
+/// shard (or the waiting connection handler) FOREVER on the first
+/// poison, turning one isolated panic into a dead table.
+fn lock_recover<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// A request's reconstructed rows: a shared view into its micro-batch's
 /// flat buffer (row-major, `len` = ids * d). No per-request copy is made;
@@ -53,7 +63,7 @@ impl Pending {
 
     pub(crate) fn complete(&self, rows: RowsSlice) {
         let (slot, cv) = &*self.done;
-        *slot.lock().unwrap() = Some(rows);
+        *lock_recover(slot) = Some(rows);
         cv.notify_one();
     }
 
@@ -67,9 +77,9 @@ impl Pending {
 /// Block until the slot is filled and take the result.
 pub(crate) fn wait_rows(done: &DoneSlot) -> RowsSlice {
     let (slot, cv) = done;
-    let mut guard = slot.lock().unwrap();
+    let mut guard = lock_recover(slot);
     while guard.is_none() {
-        guard = cv.wait(guard).unwrap();
+        guard = cv.wait(guard).unwrap_or_else(PoisonError::into_inner);
     }
     guard.take().unwrap()
 }
@@ -120,7 +130,7 @@ impl BatchQueue {
     /// queue lock, so a push can never race past [`close`](Self::close)'s
     /// drain and strand a waiter.
     pub(crate) fn push(&self, p: Pending) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if g.closed {
             drop(g);
             p.fail();
@@ -132,10 +142,17 @@ impl BatchQueue {
     }
 
     /// Pop up to max_batch entries, waiting up to `timeout` for the first.
+    /// Recovers from a poisoned lock: a producer that panicked while
+    /// holding the queue mutex must not wedge the shard's batcher thread
+    /// permanently (the queue state itself is never torn -- see
+    /// [`lock_recover`]).
     pub(crate) fn pop_batch(&self, timeout: Duration) -> Vec<Pending> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if g.q.is_empty() && !g.closed {
-            let (gg, _) = self.cv.wait_timeout(g, timeout).unwrap();
+            let (gg, _) = self
+                .cv
+                .wait_timeout(g, timeout)
+                .unwrap_or_else(PoisonError::into_inner);
             g = gg;
         }
         let take = g.q.len().min(self.max_batch);
@@ -147,7 +164,7 @@ impl BatchQueue {
     /// thread observes [`is_closed`](Self::is_closed) and exits.
     pub fn close(&self) {
         let rest: Vec<Pending> = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = lock_recover(&self.inner);
             g.closed = true;
             self.cv.notify_all();
             g.q.drain(..).collect()
@@ -159,7 +176,7 @@ impl BatchQueue {
 
     /// True once [`close`](Self::close) has run.
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        lock_recover(&self.inner).closed
     }
 }
 
@@ -246,6 +263,47 @@ mod tests {
         assert!(q.is_closed());
         q.close(); // idempotent
         assert!(q.pop_batch(Duration::from_millis(1)).is_empty());
+    }
+
+    /// Regression for the poisoned-lock wedge: a thread that panics while
+    /// holding the queue mutex poisons it, and the old `.unwrap()` in
+    /// `pop_batch` then panicked the shard's batcher thread on every
+    /// later drain -- permanently wedging the table. All queue ops must
+    /// recover the guard and keep serving.
+    #[test]
+    fn poisoned_queue_keeps_serving() {
+        let q = Arc::new(BatchQueue::new(4));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            let _g = q2.inner.lock().unwrap();
+            panic!("deliberate: poison the queue mutex");
+        });
+        assert!(t.join().is_err(), "the poisoning thread must panic");
+        assert!(q.push(Pending::new(vec![1]).0));
+        assert_eq!(q.pop_batch(Duration::from_millis(1)).len(), 1);
+        assert!(!q.is_closed());
+        q.close();
+        assert!(q.is_closed());
+        // a post-poison, post-close push still fails fast (no wedge)
+        let (p, done) = Pending::new(vec![2]);
+        assert!(!q.push(p));
+        assert_eq!(wait_rows(&done).as_slice().len(), 0);
+    }
+
+    /// Same recovery on the completion slot: a handler that panicked
+    /// while holding its slot mutex must not make `complete`/`wait_rows`
+    /// panic in the batcher or another waiter.
+    #[test]
+    fn poisoned_done_slot_still_answers() {
+        let (p, done) = Pending::new(vec![0]);
+        let d2 = done.clone();
+        let t = std::thread::spawn(move || {
+            let _g = d2.0.lock().unwrap();
+            panic!("deliberate: poison the slot mutex");
+        });
+        assert!(t.join().is_err());
+        p.fail();
+        assert_eq!(wait_rows(&done).as_slice().len(), 0);
     }
 
     /// The sharded batcher must split the flat reconstruction back into

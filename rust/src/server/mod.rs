@@ -76,13 +76,16 @@
 
 pub mod batcher;
 pub mod clock;
+pub mod fuzz;
 pub mod protocol;
 pub mod registry;
 pub mod stats;
 
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::Result;
@@ -100,13 +103,20 @@ pub use registry::{
     UnloadOutcome, MAX_REPLICAS, SNAPSHOT_FORMAT, SNAPSHOT_MANIFEST,
     SNAPSHOT_VERSION, SPILL_FORMAT, SPILL_MANIFEST,
 };
-pub use stats::{LatencyRing, ReplicaStats, Stats};
+pub use stats::{ConnStats, LatencyRing, ReplicaStats, Stats};
 
 use batcher::Answer;
 use protocol::{
-    err_frame, err_obj, frame_version, parse_ids, sections_payload_bytes,
-    write_bin_reject_frame, write_bin_rows, write_bin_sections,
+    err_frame, err_obj, frame_version, parse_ids, read_frame_deadline,
+    sections_payload_bytes, write_bin_reject_frame, write_bin_rows,
+    write_bin_sections, FrameIn, MAX_FANOUT_SECTIONS,
 };
+
+/// Write timeout applied when `--conn-timeout` is disabled: a response
+/// write to a peer that never drains its receive buffer must still
+/// complete or fail in bounded time, or the graceful-shutdown join
+/// would hang on that one connection thread forever.
+const WRITE_STALL_FALLBACK: Duration = Duration::from_secs(30);
 
 /// The embedding server over a [`TableRegistry`].
 pub struct EmbeddingServer {
@@ -144,23 +154,46 @@ impl EmbeddingServer {
 
     /// Bind + serve until a `shutdown` op arrives. Returns the bound
     /// address via the callback before blocking (port 0 supported).
+    ///
+    /// Connection lifecycle: every accepted connection is tracked; a
+    /// connection over the [`ServerConfig::max_conns`] cap is answered
+    /// with a typed `busy` frame and closed without spawning a handler.
+    /// Shutdown is graceful -- the loop stops accepting, connection
+    /// threads observe the stop flag within one [`protocol`] poll slice
+    /// (idle connections close immediately; an in-flight frame gets a
+    /// short drain grace), and every connection thread is JOINED before
+    /// the registry's batcher shards are torn down, so no thread
+    /// outlives `serve` and no in-flight batch is dropped mid-answer.
     pub fn serve(&self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         on_bound(listener.local_addr()?);
         let stop = self.registry.stop_flag();
-        // accept loop. Connection threads are detached: a thread exits
-        // when its peer disconnects (or after serving `shutdown`).
-        // Joining them here would deadlock shutdown against
-        // idle-but-open clients.
+        let max_conns = self.registry.config().max_conns;
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
         while !stop.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, _)) => {
+                    // reap finished threads so the handle list tracks
+                    // OPEN connections, not lifetime totals
+                    conns.retain(|h| !h.is_finished());
+                    let cs = self.registry.conn_stats();
+                    if let Some(cap) = max_conns {
+                        if cs.conns_open.load(Ordering::Relaxed) >= cap as u64 {
+                            reject_busy(stream, &self.registry, cap);
+                            continue;
+                        }
+                    }
+                    cs.conns_open.fetch_add(1, Ordering::Relaxed);
+                    cs.conns_total.fetch_add(1, Ordering::Relaxed);
                     let registry = self.registry.clone();
                     let stop = stop.clone();
-                    std::thread::spawn(move || {
+                    conns.push(std::thread::spawn(move || {
+                        // decrements conns_open on EVERY exit path,
+                        // including a panic escaping handle_conn
+                        let _open = OpenGuard(registry.clone());
                         let _ = handle_conn(stream, registry, stop);
-                    });
+                    }));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     // idle tick: with --ttl set, tables expire even on a
@@ -169,16 +202,54 @@ impl EmbeddingServer {
                     // Throttled to one scan per clock-second, so the
                     // tick itself costs one atomic load.
                     self.registry.maybe_expire_idle(&[]);
-                    std::thread::sleep(Duration::from_millis(5));
+                    conns.retain(|h| !h.is_finished());
+                    std::thread::sleep(Duration::from_millis(1));
                 }
                 Err(e) => return Err(e.into()),
             }
         }
-        // closes every table's shard queues (failing queued lookups,
-        // typed) and joins the batcher threads
+        // graceful drain: stop accepting (listener drops), join every
+        // connection thread (each observes the stop flag within a poll
+        // slice; an in-flight frame finishes under the drain grace),
+        // THEN close the batcher shards -- in-flight lookups complete
+        // instead of failing typed at the finish line.
+        drop(listener);
+        for h in conns {
+            let _ = h.join();
+        }
         self.registry.shutdown();
         Ok(())
     }
+}
+
+/// Decrements `conns_open` when a connection thread exits, however it
+/// exits -- the cap must never leak slots to panicking handlers.
+struct OpenGuard(Arc<TableRegistry>);
+
+impl Drop for OpenGuard {
+    fn drop(&mut self) {
+        self.0.conn_stats().conns_open.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Answer an over-cap connection with a typed `busy` frame and close
+/// it. Best-effort with a short write timeout: the accept loop must
+/// never block on a victim that won't read.
+fn reject_busy(mut stream: TcpStream, registry: &TableRegistry, cap: usize) {
+    registry
+        .conn_stats()
+        .busy_rejections
+        .fetch_add(1, Ordering::Relaxed);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let _ = write_frame(
+        &mut stream,
+        &err_obj(
+            "busy",
+            &format!("server at --max-conns capacity ({cap}); retry later"),
+            vec![],
+        )
+        .to_string(),
+    );
 }
 
 /// The standard error frame for `e`, annotated with the three-state
@@ -448,6 +519,19 @@ fn fanout_op(
             message: "lookup_fanout needs a queries array of {table, ids}".into(),
         });
     };
+    // Amplification cap, BEFORE any resolve/queue work: a 64 MiB frame
+    // packed with ~12-byte `{"ids":[]}` sections would otherwise fan a
+    // single request out into millions of batcher round trips. The
+    // section count is the cost driver (per-section tickets + condvar
+    // waits), so it gets its own bound beside the byte caps.
+    if queries.len() > MAX_FANOUT_SECTIONS {
+        return reject(stream, &WireError::Rejected {
+            code: "too_large".into(),
+            message: format!(
+                "lookup_fanout with {} sections exceeds the cap \
+                 ({MAX_FANOUT_SECTIONS}); split the request", queries.len()),
+        });
+    }
     // Every table named by the frame is protected from eviction while
     // the frame's promotions run: under a tight budget, section N's
     // transparent reload could otherwise demote section M's table and
@@ -716,6 +800,18 @@ fn stats_op(
         ("spills", Json::num(registry.spill_count() as f64)),
         ("promotes", Json::num(registry.promote_count() as f64)),
     ];
+    // connection-plane counters (accept loop + per-connection threads);
+    // always present so dashboards need no key-existence probing
+    let cs = registry.conn_stats();
+    for (key, counter) in [
+        ("conns_open", &cs.conns_open),
+        ("conns_total", &cs.conns_total),
+        ("busy_rejections", &cs.busy_rejections),
+        ("conn_timeouts", &cs.conn_timeouts),
+        ("handler_panics", &cs.handler_panics),
+    ] {
+        pairs.push((key, Json::num(counter.load(Ordering::Relaxed) as f64)));
+    }
     if let Some((p50, p99)) = registry.promote_latency() {
         pairs.push(("promote_p50_s", Json::num(p50)));
         pairs.push(("promote_p99_s", Json::num(p99)));
@@ -886,10 +982,49 @@ fn handle_conn(
     stop: Arc<AtomicBool>,
 ) -> Result<(), WireError> {
     stream.set_nodelay(true)?;
+    let timeout = registry.config().conn_timeout;
+    // Responses get a write deadline even with --conn-timeout off: a
+    // peer that never drains its receive buffer must not pin this
+    // thread past the graceful-shutdown join.
+    stream.set_write_timeout(Some(timeout.unwrap_or(WRITE_STALL_FALLBACK)))?;
     loop {
-        let req = match read_frame(&mut stream) {
-            Ok(r) => r,
-            Err(_) => return Ok(()), // peer closed
+        let req = match read_frame_deadline(&mut stream, timeout, &stop) {
+            Ok(FrameIn::Frame(r)) => r,
+            // clean close at a frame boundary: peer EOF, or the server
+            // is draining and this connection is idle
+            Ok(FrameIn::Eof) | Ok(FrameIn::Stopped) => return Ok(()),
+            Ok(FrameIn::TimedOut) => {
+                // typed close: the peer (if it is listening at all)
+                // learns WHY it was dropped. Best-effort -- a stalled
+                // peer's receive window may be full too.
+                registry
+                    .conn_stats()
+                    .conn_timeouts
+                    .fetch_add(1, Ordering::Relaxed);
+                let _ = write_frame(&mut stream, &err_obj(
+                    "timeout",
+                    "connection deadline (--conn-timeout) expired",
+                    vec![]).to_string());
+                return Ok(());
+            }
+            Ok(FrameIn::TooLarge(n)) => {
+                // the payload was never read, so the stream cannot be
+                // resynced: answer typed, then close
+                let _ = write_frame(&mut stream, &err_obj(
+                    "too_large",
+                    &format!(
+                        "frame of {n} bytes exceeds the {} byte cap",
+                        protocol::MAX_FRAME),
+                    vec![]).to_string());
+                return Ok(());
+            }
+            Ok(FrameIn::NotUtf8(m)) => {
+                // payload fully consumed -- the connection stays usable
+                write_frame(&mut stream, &err_obj(
+                    "malformed", &m, vec![]).to_string())?;
+                continue;
+            }
+            Err(_) => return Ok(()), // peer vanished mid-frame
         };
         let j = match Json::parse(&req) {
             Ok(j) => j,
@@ -910,47 +1045,93 @@ fn handle_conn(
                 continue;
             }
         };
-        match j.get("op").and_then(|v| v.as_str()) {
-            Some("lookup_bin") => {
-                lookup_op(&mut stream, &registry, &j, version, true)?
-            }
-            Some("lookup") => {
-                lookup_op(&mut stream, &registry, &j, version, false)?
-            }
-            Some("stats") => stats_op(&mut stream, &registry, &j, version)?,
-            Some(op @ ("tables" | "load" | "unload" | "demote" | "snapshot"
-                       | "set_replicas" | "lookup_fanout")) if version < 2 => {
-                write_frame(&mut stream, &err_obj(
-                    "needs_v2",
-                    &format!("op {op} requires protocol v2 (send \"v\": 2)"),
-                    vec![])
-                    .to_string())?
-            }
-            Some("lookup_fanout") => {
-                fanout_op(&mut stream, &registry, &j, version)?
-            }
-            Some("tables") => tables_op(&mut stream, &registry)?,
-            Some("load") => load_op(&mut stream, &registry, &j)?,
-            Some("unload") => unload_op(&mut stream, &registry, &j)?,
-            Some("demote") => demote_op(&mut stream, &registry, &j)?,
-            Some("set_replicas") => {
-                set_replicas_op(&mut stream, &registry, &j)?
-            }
-            Some("snapshot") => snapshot_op(&mut stream, &registry, &j)?,
-            Some("shutdown") => {
-                stop.store(true, Ordering::Relaxed);
-                write_frame(&mut stream, &Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                ]).to_string())?;
+        // Panic isolation: a handler bug must cost ONE connection, not
+        // the process. The registry's own locks recover from poisoning
+        // (batcher, stats rings), so serving state stays coherent for
+        // every other connection; this connection closes with a typed
+        // `internal` frame because mid-op output may be half-written.
+        let dispatched = catch_unwind(AssertUnwindSafe(|| {
+            dispatch_op(&mut stream, &registry, &stop, &j, version)
+        }));
+        match dispatched {
+            Ok(Ok(true)) => {}
+            Ok(Ok(false)) => return Ok(()), // shutdown acked
+            Ok(Err(e)) => return Err(e),
+            Err(payload) => {
+                drop(payload);
+                registry
+                    .conn_stats()
+                    .handler_panics
+                    .fetch_add(1, Ordering::Relaxed);
+                let _ = write_frame(&mut stream, &err_obj(
+                    "internal",
+                    "handler panicked; closing this connection",
+                    vec![]).to_string());
                 return Ok(());
-            }
-            other => {
-                write_frame(&mut stream, &err_obj(
-                    "unknown_op", &format!("unknown op {other:?}"), vec![])
-                    .to_string())?
             }
         }
     }
+}
+
+/// Dispatch one parsed frame to its op handler. Returns `Ok(false)`
+/// exactly when the op was `shutdown` (the connection closes after the
+/// ack); every other handled frame is `Ok(true)`. Runs under the
+/// caller's `catch_unwind` isolation barrier.
+fn dispatch_op(
+    stream: &mut TcpStream,
+    registry: &Arc<TableRegistry>,
+    stop: &AtomicBool,
+    j: &Json,
+    version: u64,
+) -> Result<bool, WireError> {
+    match j.get("op").and_then(|v| v.as_str()) {
+        Some("lookup_bin") => {
+            lookup_op(stream, registry, j, version, true)?
+        }
+        Some("lookup") => {
+            lookup_op(stream, registry, j, version, false)?
+        }
+        Some("stats") => stats_op(stream, registry, j, version)?,
+        Some(op @ ("tables" | "load" | "unload" | "demote" | "snapshot"
+                   | "set_replicas" | "lookup_fanout")) if version < 2 => {
+            write_frame(stream, &err_obj(
+                "needs_v2",
+                &format!("op {op} requires protocol v2 (send \"v\": 2)"),
+                vec![])
+                .to_string())?
+        }
+        Some("lookup_fanout") => {
+            fanout_op(stream, registry, j, version)?
+        }
+        Some("tables") => tables_op(stream, registry)?,
+        Some("load") => load_op(stream, registry, j)?,
+        Some("unload") => unload_op(stream, registry, j)?,
+        Some("demote") => demote_op(stream, registry, j)?,
+        Some("set_replicas") => {
+            set_replicas_op(stream, registry, j)?
+        }
+        Some("snapshot") => snapshot_op(stream, registry, j)?,
+        Some("shutdown") => {
+            stop.store(true, Ordering::Relaxed);
+            write_frame(stream, &Json::obj(vec![
+                ("ok", Json::Bool(true)),
+            ]).to_string())?;
+            return Ok(false);
+        }
+        // test-only panic injection for the isolation barrier; with
+        // `debug_ops` off (the default, and the only thing the CLI or a
+        // snapshot restore can produce) the guard fails and the name
+        // falls through to `unknown_op` like any other stranger
+        Some("debug_panic") if registry.config().debug_ops => {
+            panic!("debug_panic: deliberate handler panic (test injection)")
+        }
+        other => {
+            write_frame(stream, &err_obj(
+                "unknown_op", &format!("unknown op {other:?}"), vec![])
+                .to_string())?
+        }
+    }
+    Ok(true)
 }
 
 #[cfg(test)]

@@ -19,6 +19,8 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
 
 use crate::jsonx::Json;
 
@@ -27,6 +29,14 @@ pub const VERSION: u64 = 2;
 
 /// Hard cap on any single frame (requests and JSON responses).
 pub(crate) const MAX_FRAME: usize = 64 << 20;
+
+/// Hard cap on the number of sections (queries) in one `lookup_fanout`
+/// frame. Section count is otherwise bounded only by how many `{"ids":
+/// []}` objects fit in a 64 MiB frame (~millions), and each section
+/// costs a batcher round trip -- an amplification a hostile client could
+/// use to stall a server with one cheap frame. 1024 tables per request
+/// is far beyond any recommender fan-out.
+pub(crate) const MAX_FANOUT_SECTIONS: usize = 1024;
 
 /// Typed wire/protocol error. Implements `std::error::Error`, so it
 /// converts into `anyhow::Error` at call sites that don't match on it.
@@ -203,6 +213,177 @@ pub fn write_frame(stream: &mut TcpStream, payload: &str) -> Result<(), WireErro
     stream.write_all(&(payload.len() as u32).to_le_bytes())?;
     stream.write_all(payload.as_bytes())?;
     Ok(())
+}
+
+/// How often the server-side frame reader wakes to re-check the stop
+/// flag and its deadline while blocked on a quiet socket.
+const POLL_SLICE: Duration = Duration::from_millis(100);
+
+/// Grace allowed to finish an in-flight frame once the server begins
+/// draining (stop flag set): long enough for any legitimate in-transit
+/// frame, short enough that shutdown join time stays bounded.
+const DRAIN_GRACE: Duration = Duration::from_millis(250);
+
+/// Outcome of a deadline-aware server-side frame read.
+pub(crate) enum FrameIn {
+    /// A complete frame payload (UTF-8 JSON text).
+    Frame(String),
+    /// The peer closed cleanly at a frame boundary.
+    Eof,
+    /// The server is draining (stop flag) and this connection is idle at
+    /// a frame boundary -- close it without an error.
+    Stopped,
+    /// The idle or mid-frame deadline expired (`--conn-timeout`).
+    TimedOut,
+    /// The length prefix claims more than [`MAX_FRAME`] bytes. The
+    /// payload was never read, so the stream CANNOT be resynced -- the
+    /// caller answers typed and closes.
+    TooLarge(u64),
+    /// The payload was fully read but is not UTF-8. The stream is still
+    /// in sync, so the caller can answer typed and keep the connection.
+    NotUtf8(String),
+}
+
+/// Incremental-progress outcome of one `fill` call (see
+/// [`DeadlineReader`]).
+enum Step {
+    Done,
+    Eof,
+    Stopped,
+    TimedOut,
+}
+
+/// Deadline state for reading ONE frame: the deadline is ABSOLUTE from
+/// the frame's first byte (`first_byte + timeout`), so a byte-at-a-time
+/// slow-loris cannot reset it by trickling -- while a slow-but-legit
+/// writer that completes its frame within the budget is served
+/// normally. Before the first byte the same budget acts as the idle
+/// deadline. Reads run in short [`POLL_SLICE`] slices so the stop flag
+/// is observed within ~100ms even on a silent socket.
+struct DeadlineReader<'a> {
+    stream: &'a mut TcpStream,
+    timeout: Option<Duration>,
+    stop: &'a AtomicBool,
+    started: Instant,
+    first_byte: Option<Instant>,
+    stop_seen: Option<Instant>,
+}
+
+impl<'a> DeadlineReader<'a> {
+    fn new(
+        stream: &'a mut TcpStream,
+        timeout: Option<Duration>,
+        stop: &'a AtomicBool,
+    ) -> Self {
+        DeadlineReader {
+            stream,
+            timeout,
+            stop,
+            started: Instant::now(),
+            first_byte: None,
+            stop_seen: None,
+        }
+    }
+
+    /// Fill `buf` completely, or report why it could not be filled.
+    /// `Eof`/`Stopped` are only possible before the frame's first byte;
+    /// a peer vanishing mid-frame is an `Err` (nothing to answer to).
+    fn fill(&mut self, buf: &mut [u8]) -> Result<Step, WireError> {
+        let mut off = 0usize;
+        while off < buf.len() {
+            if self.stop_seen.is_none() && self.stop.load(Ordering::Relaxed) {
+                self.stop_seen = Some(Instant::now());
+                if self.first_byte.is_none() {
+                    return Ok(Step::Stopped);
+                }
+            }
+            let mut deadline = self
+                .timeout
+                .map(|t| self.first_byte.unwrap_or(self.started) + t);
+            if let Some(s) = self.stop_seen {
+                // draining: cap the remaining wait regardless of how
+                // generous (or absent) the configured timeout is
+                let drain = s + DRAIN_GRACE;
+                deadline = Some(deadline.map_or(drain, |d| d.min(drain)));
+            }
+            let now = Instant::now();
+            let wait = match deadline {
+                Some(d) if now >= d => return Ok(Step::TimedOut),
+                Some(d) => POLL_SLICE.min(d - now),
+                None => POLL_SLICE,
+            };
+            self.stream
+                .set_read_timeout(Some(wait.max(Duration::from_millis(1))))?;
+            match self.stream.read(&mut buf[off..]) {
+                Ok(0) => {
+                    return if self.first_byte.is_none() {
+                        Ok(Step::Eof)
+                    } else {
+                        Err(WireError::Io("peer closed mid-frame".into()))
+                    };
+                }
+                Ok(k) => {
+                    if self.first_byte.is_none() {
+                        self.first_byte = Some(Instant::now());
+                    }
+                    off += k;
+                }
+                Err(e) if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(Step::Done)
+    }
+}
+
+/// Server side: read one request frame under the connection deadline
+/// discipline. Unlike [`read_frame`], the payload buffer grows only as
+/// bytes actually arrive (64 KiB windows) -- a length-prefix lie of
+/// "64 MiB follows" costs the server only what the peer really sends,
+/// never an upfront allocation of the claimed size.
+pub(crate) fn read_frame_deadline(
+    stream: &mut TcpStream,
+    timeout: Option<Duration>,
+    stop: &AtomicBool,
+) -> Result<FrameIn, WireError> {
+    let mut r = DeadlineReader::new(stream, timeout, stop);
+    let mut len4 = [0u8; 4];
+    match r.fill(&mut len4)? {
+        Step::Done => {}
+        Step::Eof => return Ok(FrameIn::Eof),
+        Step::Stopped => return Ok(FrameIn::Stopped),
+        Step::TimedOut => return Ok(FrameIn::TimedOut),
+    }
+    let n = u32::from_le_bytes(len4) as usize;
+    if n > MAX_FRAME {
+        return Ok(FrameIn::TooLarge(n as u64));
+    }
+    const WINDOW: usize = 64 << 10;
+    let mut buf: Vec<u8> = Vec::with_capacity(n.min(WINDOW));
+    while buf.len() < n {
+        let off = buf.len();
+        let take = (n - off).min(WINDOW);
+        buf.resize(off + take, 0);
+        match r.fill(&mut buf[off..off + take])? {
+            Step::Done => {}
+            Step::TimedOut => return Ok(FrameIn::TimedOut),
+            // unreachable once the prefix arrived (fill only reports
+            // these before the frame's first byte); treat defensively
+            // as a mid-frame close
+            Step::Eof | Step::Stopped => {
+                return Err(WireError::Io("peer closed mid-frame".into()));
+            }
+        }
+    }
+    match String::from_utf8(buf) {
+        Ok(s) => Ok(FrameIn::Frame(s)),
+        Err(e) => Ok(FrameIn::NotUtf8(format!("frame not utf-8: {e}"))),
+    }
 }
 
 /// Server side: encode a binary lookup response. v2 frames are
@@ -429,6 +610,19 @@ impl Client {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         Ok(Client { stream })
+    }
+
+    /// Bound how long any single read on this client blocks (`None`
+    /// blocks forever, the default). With a timeout set, a wedged or
+    /// stalled server surfaces as a typed [`WireError::Io`] instead of
+    /// hanging the caller -- the fuzzer's wedge detector is built on
+    /// this.
+    pub fn set_read_timeout(
+        &self,
+        timeout: Option<Duration>,
+    ) -> Result<(), WireError> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
     }
 
     /// Send one JSON request frame and parse the JSON response; a

@@ -170,7 +170,7 @@ use crate::jsonx::Json;
 use crate::server::batcher::{run_batch, Answer, BatchQueue, DoneSlot, Pending};
 use crate::server::clock::{Clock, MonotonicClock};
 use crate::server::protocol::WireError;
-use crate::server::stats::{LatencyRing, ReplicaStats, Stats};
+use crate::server::stats::{ConnStats, LatencyRing, ReplicaStats, Stats};
 
 /// Manifest `format` tag written by [`TableRegistry::snapshot`].
 pub const SNAPSHOT_FORMAT: &str = "dpq_registry_snapshot";
@@ -255,6 +255,25 @@ pub struct ServerConfig {
     /// resolves/inserts and on the serve accept loop's idle tick,
     /// reading the registry's injectable [`Clock`].
     pub ttl_secs: Option<u64>,
+    /// Optional per-connection deadline (`--conn-timeout SECS`). Applies
+    /// as the idle deadline before a frame's first byte AND as the
+    /// absolute whole-frame deadline from that first byte (so a
+    /// byte-at-a-time slow-loris cannot reset it), plus the write
+    /// timeout on responses. Expiry closes the connection with a typed
+    /// `timeout` error frame. `None` disables deadlines (the in-process
+    /// test default; the `repro serve` CLI defaults to 30s).
+    pub conn_timeout: Option<Duration>,
+    /// Optional cap on concurrently open connections
+    /// (`--max-conns N`). A connection accepted over the cap is
+    /// answered with a typed `busy` error frame and closed without
+    /// spawning a handler thread. `None` is unbounded (the in-process
+    /// test default; the `repro serve` CLI defaults to 1024).
+    pub max_conns: Option<usize>,
+    /// Enable test-only debug ops (`debug_panic`, the handler-panic
+    /// injection the isolation tests drive). Never enabled by the CLI
+    /// and never recorded in snapshots; with it off (the default) the
+    /// op answers `unknown_op` like any other unrecognized name.
+    pub debug_ops: bool,
 }
 
 impl Default for ServerConfig {
@@ -266,6 +285,9 @@ impl Default for ServerConfig {
             spill_dir: None,
             spill_on_evict: true,
             ttl_secs: None,
+            conn_timeout: None,
+            max_conns: None,
+            debug_ops: false,
         }
     }
 }
@@ -840,6 +862,9 @@ pub struct TableRegistry {
     spill_mu: Mutex<()>,
     fanout_requests: AtomicU64,
     stop: Arc<AtomicBool>,
+    /// Connection-plane counters (open/total/busy/timeout/panic),
+    /// shared by the accept loop and every connection thread.
+    conn: ConnStats,
 }
 
 impl TableRegistry {
@@ -873,6 +898,7 @@ impl TableRegistry {
             spill_mu: Mutex::new(()),
             fanout_requests: AtomicU64::new(0),
             stop: Arc::new(AtomicBool::new(false)),
+            conn: ConnStats::default(),
         }
     }
 
@@ -1034,6 +1060,13 @@ impl TableRegistry {
     /// The serving knobs this registry was built with.
     pub fn config(&self) -> ServerConfig {
         self.cfg.clone()
+    }
+
+    /// Connection-plane counters for the server fronting this registry.
+    /// Live on the registry (not the server) so the aggregate `stats`
+    /// op, which only sees the registry, can report them.
+    pub fn conn_stats(&self) -> &ConnStats {
+        &self.conn
     }
 
     /// Register `backend` as table `name` and start its batcher shards.
@@ -2333,6 +2366,17 @@ impl TableRegistry {
         if let Some(t) = self.cfg.ttl_secs {
             pairs.push(("ttl_secs", Json::num(t as f64)));
         }
+        // Connection-plane knobs: 0 is the explicit "disabled/unbounded"
+        // marker (a restore of an old manifest without these keys gets
+        // the CLI defaults instead -- see `config_from_manifest`).
+        pairs.push((
+            "conn_timeout_secs",
+            Json::num(self.cfg.conn_timeout.map_or(0.0, |t| t.as_secs_f64())),
+        ));
+        pairs.push((
+            "max_conns",
+            Json::num(self.cfg.max_conns.map_or(0.0, |n| n as f64)),
+        ));
         if let Some(sd) = &self.cfg.spill_dir {
             pairs.push(("spill_dir",
                         Json::str(sd.to_string_lossy().as_ref())));
@@ -2472,6 +2516,26 @@ impl TableRegistry {
                 .and_then(|v| v.as_f64())
                 .filter(|t| t.is_finite() && *t >= 1.0)
                 .map(|t| t as u64),
+            // Written as 0 for "explicitly disabled"; a pre-hardening
+            // manifest without the key gets the CLI defaults (30s/1024)
+            // rather than an unprotected server. Bogus hand-edited
+            // values (NaN, negative, absurd) fall back the same way; the
+            // one-year cap keeps `from_secs_f64` well inside range.
+            conn_timeout: match j.get("conn_timeout_secs").and_then(|v| v.as_f64()) {
+                Some(t) if t == 0.0 => None,
+                Some(t) if t.is_finite() && t > 0.0 && t <= 31_557_600.0 => {
+                    Some(Duration::from_secs_f64(t))
+                }
+                _ => Some(Duration::from_secs(30)),
+            },
+            max_conns: match j.get("max_conns").and_then(|v| v.as_f64()) {
+                Some(n) if n == 0.0 => None,
+                Some(n) if n.is_finite() && n >= 1.0 => Some(n as usize),
+                _ => Some(1024),
+            },
+            // never restored: debug ops are a test-construction knob,
+            // deliberately unreachable via snapshot round-trips
+            debug_ops: false,
         }
     }
 

@@ -3,7 +3,7 @@
 //! recorded to `BENCH_server.json` by `benches/bench_server.rs`).
 
 use std::sync::atomic::AtomicU64;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Ring capacity: percentiles reflect the most recent samples only, so a
 /// long-lived server reports current latency, not its lifetime average.
@@ -26,9 +26,17 @@ struct LatRing {
 }
 
 impl LatencyRing {
+    /// Lock the ring, recovering from a poisoned mutex: a panic caught
+    /// by the connection-plane isolation barrier may have interrupted a
+    /// recording thread, and a ring of plain f64 samples is never torn
+    /// -- stats must keep working after an isolated handler panic.
+    fn lock(&self) -> MutexGuard<'_, LatRing> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Record one wall-clock sample in seconds.
     pub fn record(&self, seconds: f64) {
-        let mut r = self.inner.lock().unwrap();
+        let mut r = self.lock();
         if r.buf.len() < LATENCY_RING {
             r.buf.push(seconds);
         } else {
@@ -41,7 +49,7 @@ impl LatencyRing {
     /// `(p50, p99)` over the ring, `None` before the first sample.
     pub fn percentiles(&self) -> Option<(f64, f64)> {
         let mut v = {
-            let r = self.inner.lock().unwrap();
+            let r = self.lock();
             if r.buf.is_empty() {
                 return None;
             }
@@ -55,8 +63,31 @@ impl LatencyRing {
     /// Number of samples currently in the ring (capped at
     /// [`LATENCY_RING`]).
     pub fn samples(&self) -> usize {
-        self.inner.lock().unwrap().buf.len()
+        self.lock().buf.len()
     }
+}
+
+/// Connection-plane counters for one serving process, shared by the
+/// accept loop and every connection thread and surfaced by the
+/// aggregate `stats` op. All relaxed atomics: exact totals, no ordering
+/// requirements.
+#[derive(Default)]
+pub struct ConnStats {
+    /// Connections currently open (accepted and not yet closed).
+    pub conns_open: AtomicU64,
+    /// Connections accepted over the server's lifetime (excludes
+    /// `busy`-rejected ones).
+    pub conns_total: AtomicU64,
+    /// Connections refused with the typed `busy` close because the
+    /// server was at its `--max-conns` cap.
+    pub busy_rejections: AtomicU64,
+    /// Connections closed with the typed `timeout` close because a
+    /// `--conn-timeout` idle or mid-frame deadline expired.
+    pub conn_timeouts: AtomicU64,
+    /// Handler panics caught by the per-connection isolation barrier.
+    /// Each one closed only its own connection; a nonzero value means a
+    /// server bug was survived, not that service degraded.
+    pub handler_panics: AtomicU64,
 }
 
 /// One replica's serving statistics: its live queue depth (the signal

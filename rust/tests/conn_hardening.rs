@@ -1,0 +1,334 @@
+//! Connection-plane hardening acceptance tests (no artifacts needed):
+//! hostile clients -- slow-loris writers, idle stallers, mid-frame
+//! disconnects, over-cap floods, deliberately-panicking ops -- must
+//! never delay, corrupt, or kill service for a concurrent healthy
+//! client, and every defended close must be TYPED (`timeout`, `busy`,
+//! `too_large`, `internal`) so well-behaved peers learn what happened.
+//!
+//! Also pins the graceful-shutdown contract: `serve` returns only
+//! after every connection thread is joined, even with idle raw
+//! connections still open.
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use dpq_embed::dpq::{toy_embedding, CompressedEmbedding};
+use dpq_embed::jsonx::Json;
+use dpq_embed::server::{
+    Client, EmbeddingServer, ServerConfig, TableRegistry, WireError,
+};
+
+fn toy() -> CompressedEmbedding {
+    toy_embedding(48, 8, 4, 3, 1)
+}
+
+/// Boot a server over one DPQ table ("emb") with the given config.
+fn spawn(cfg: ServerConfig) -> (
+    std::net::SocketAddr,
+    std::thread::JoinHandle<()>,
+    Arc<TableRegistry>,
+) {
+    let registry = TableRegistry::new(cfg);
+    registry.insert("emb", Arc::new(toy())).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let registry = server.registry();
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h, registry)
+}
+
+/// Read one length-prefixed frame raw (None on EOF / short read).
+fn read_raw_frame(s: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut len4 = [0u8; 4];
+    s.read_exact(&mut len4).ok()?;
+    let n = u32::from_le_bytes(len4) as usize;
+    let mut buf = vec![0u8; n];
+    s.read_exact(&mut buf).ok()?;
+    Some(buf)
+}
+
+fn frame_code(payload: &[u8]) -> Option<String> {
+    let j = Json::parse(std::str::from_utf8(payload).ok()?).ok()?;
+    Some(j.get("code")?.as_str()?.to_string())
+}
+
+fn assert_bit_exact(c: &mut Client, emb: &CompressedEmbedding, ids: &[usize]) {
+    let rows = c.lookup_bin("emb", ids).unwrap();
+    for (k, &id) in ids.iter().enumerate() {
+        assert_eq!(rows.row(k), &emb.reconstruct_row(id)[..],
+                   "served row for id {id} not bit-exact");
+    }
+}
+
+/// A stalled slow-loris (mid-frame trickle stopped) and an idle staller
+/// must each get a typed `timeout` close -- and neither may delay a
+/// concurrent healthy client's bit-exact lookups by ANY perceptible
+/// amount (connections are independent threads; the deadline only
+/// polices its own connection).
+#[test]
+fn slow_loris_cannot_delay_healthy_client() {
+    let (addr, h, registry) = spawn(ServerConfig {
+        conn_timeout: Some(Duration::from_millis(400)),
+        ..ServerConfig::default()
+    });
+    let emb = toy();
+    // staller 1: writes a length prefix claiming 64 bytes, then stalls
+    let mut loris = TcpStream::connect(addr).unwrap();
+    loris.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    loris.write_all(&64u32.to_le_bytes()).unwrap();
+    // staller 2: connects and never writes a byte
+    let mut idle = TcpStream::connect(addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // healthy client, concurrent with both stallers: every lookup must
+    // come back fast and bit-exact
+    let mut c = Client::connect(addr).unwrap();
+    let t0 = Instant::now();
+    for i in 0..30 {
+        assert_bit_exact(&mut c, &emb, &[i % 48, (i * 7 + 3) % 48]);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "healthy client was delayed: {:?} for 30 lookups", t0.elapsed()
+    );
+
+    // both stallers get the typed timeout close, then EOF
+    for (name, s) in [("loris", &mut loris), ("idle", &mut idle)] {
+        let f = read_raw_frame(s)
+            .unwrap_or_else(|| panic!("{name}: expected a timeout frame"));
+        assert_eq!(frame_code(&f).as_deref(), Some("timeout"), "{name}");
+        let mut rest = [0u8; 1];
+        assert_eq!(s.read(&mut rest).unwrap_or(0), 0, "{name}: expected EOF");
+    }
+    assert!(
+        registry.conn_stats().conn_timeouts.load(Ordering::Relaxed) >= 2,
+        "both stalled connections must be counted"
+    );
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// The deadline is a whole-frame budget, not a per-read idle reset: a
+/// slow-but-legitimate writer that finishes inside the budget is served
+/// normally, byte-at-a-time framing and all.
+#[test]
+fn byte_at_a_time_writer_within_deadline_is_served() {
+    let (addr, h, _registry) = spawn(ServerConfig {
+        conn_timeout: Some(Duration::from_secs(5)),
+        ..ServerConfig::default()
+    });
+    let emb = toy();
+    let payload = br#"{"v":2,"op":"lookup_bin","table":"emb","ids":[7]}"#;
+    let mut bytes = (payload.len() as u32).to_le_bytes().to_vec();
+    bytes.extend_from_slice(payload);
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for b in &bytes {
+        s.write_all(std::slice::from_ref(b)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // v2 binary response: u32 len, then (n, d) header + rows
+    let f = read_raw_frame(&mut s).expect("expected a binary response");
+    assert_eq!(&f[..4], &1u32.to_le_bytes(), "n = 1");
+    assert_eq!(&f[4..8], &12u32.to_le_bytes(), "d = 12");
+    let want = emb.reconstruct_row(7);
+    let got: Vec<f32> = f[8..].chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    assert_eq!(got, want, "trickled frame must serve bit-exactly");
+    let mut c = Client::connect(addr).unwrap();
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// Peers vanishing mid-frame (and oversized length prefixes) must leave
+/// the server fully healthy for everyone else.
+#[test]
+fn mid_frame_disconnects_and_oversize_prefixes_leave_server_healthy() {
+    let (addr, h, _registry) = spawn(ServerConfig::default());
+    let emb = toy();
+    for i in 0..10 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&100u32.to_le_bytes()).unwrap();
+        s.write_all(&[b'x'; 10]).unwrap();
+        drop(s); // vanish mid-frame
+        if i % 2 == 0 {
+            // oversized claim: typed rejection, then close
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(&(((64u32) << 20) + 1).to_le_bytes()).unwrap();
+            let f = read_raw_frame(&mut s).expect("expected too_large frame");
+            assert_eq!(frame_code(&f).as_deref(), Some("too_large"));
+        }
+    }
+    let mut c = Client::connect(addr).unwrap();
+    assert_bit_exact(&mut c, &emb, &[0, 13, 47]);
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// A handler panic is isolated to its own connection: the victim gets a
+/// typed `internal` close, `handler_panics` increments, every OTHER
+/// connection keeps serving bit-exactly, and shutdown still joins
+/// cleanly afterwards.
+#[test]
+fn handler_panic_kills_one_connection_not_the_server() {
+    let (addr, h, registry) = spawn(ServerConfig {
+        debug_ops: true, // test-only panic injection
+        ..ServerConfig::default()
+    });
+    let emb = toy();
+    let mut healthy = Client::connect(addr).unwrap();
+    assert_bit_exact(&mut healthy, &emb, &[1, 2, 3]);
+
+    let mut victim = TcpStream::connect(addr).unwrap();
+    victim.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let payload = br#"{"v":2,"op":"debug_panic"}"#;
+    victim.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+    victim.write_all(payload).unwrap();
+    let f = read_raw_frame(&mut victim).expect("expected internal frame");
+    assert_eq!(frame_code(&f).as_deref(), Some("internal"));
+    let mut rest = [0u8; 1];
+    assert_eq!(victim.read(&mut rest).unwrap_or(0), 0,
+               "panicked connection must be closed");
+
+    // the server survived: counter up, healthy client unaffected
+    assert_eq!(
+        registry.conn_stats().handler_panics.load(Ordering::Relaxed), 1);
+    assert_bit_exact(&mut healthy, &emb, &[4, 5, 6]);
+    let stats = healthy.stats(None).unwrap();
+    assert_eq!(stats.get("handler_panics").unwrap().as_usize(), Some(1));
+
+    healthy.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// With `debug_ops` off (the default, and the only CLI-reachable
+/// state), `debug_panic` is just an unknown op.
+#[test]
+fn debug_panic_is_unreachable_without_debug_ops() {
+    let (addr, h, registry) = spawn(ServerConfig::default());
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let payload = br#"{"v":2,"op":"debug_panic"}"#;
+    s.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(payload).unwrap();
+    let f = read_raw_frame(&mut s).expect("expected a response");
+    assert_eq!(frame_code(&f).as_deref(), Some("unknown_op"));
+    assert_eq!(
+        registry.conn_stats().handler_panics.load(Ordering::Relaxed), 0);
+    let mut c = Client::connect(addr).unwrap();
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// Over the `--max-conns` cap: typed `busy` rejection + close, no
+/// handler thread; a freed slot is reusable immediately after.
+#[test]
+fn max_conns_cap_rejects_typed_and_recovers() {
+    let (addr, h, registry) = spawn(ServerConfig {
+        max_conns: Some(2),
+        ..ServerConfig::default()
+    });
+    let emb = toy();
+    let mut c1 = Client::connect(addr).unwrap();
+    let mut c2 = Client::connect(addr).unwrap();
+    assert_bit_exact(&mut c1, &emb, &[0]);
+    assert_bit_exact(&mut c2, &emb, &[1]);
+
+    // third connection: typed busy frame, then EOF
+    let mut over = TcpStream::connect(addr).unwrap();
+    over.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let f = read_raw_frame(&mut over).expect("expected busy frame");
+    assert_eq!(frame_code(&f).as_deref(), Some("busy"));
+    let mut rest = [0u8; 1];
+    assert_eq!(over.read(&mut rest).unwrap_or(0), 0, "busy must close");
+    assert!(registry.conn_stats().busy_rejections.load(Ordering::Relaxed) >= 1);
+
+    // free a slot; the cap must admit a new connection once the closed
+    // connection's thread winds down (bounded retry, not a sleep)
+    drop(c2);
+    let mut admitted = None;
+    for _ in 0..100 {
+        if let Ok(mut c) = Client::connect(addr) {
+            if c.lookup_bin("emb", &[2]).is_ok() {
+                admitted = Some(c);
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let mut c3 = admitted.expect("freed slot was never re-admitted");
+    assert_bit_exact(&mut c3, &emb, &[3, 4]);
+    c1.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// Graceful shutdown joins every connection thread: `serve` returns
+/// with idle raw connections still open (each sees a clean EOF), so no
+/// thread outlives the server.
+#[test]
+fn shutdown_joins_all_connection_threads() {
+    let (addr, h, registry) = spawn(ServerConfig::default());
+    let emb = toy();
+    let mut raws: Vec<TcpStream> = (0..3)
+        .map(|_| {
+            let s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s
+        })
+        .collect();
+    let mut c = Client::connect(addr).unwrap();
+    assert_bit_exact(&mut c, &emb, &[5]);
+    assert!(registry.conn_stats().conns_total.load(Ordering::Relaxed) >= 4);
+    c.shutdown().unwrap();
+    // serve() must return even though 3 idle connections never spoke --
+    // each handler observes the stop flag and closes
+    h.join().unwrap();
+    for (i, s) in raws.iter_mut().enumerate() {
+        let mut b = [0u8; 1];
+        assert_eq!(s.read(&mut b).unwrap_or(0), 0,
+                   "idle conn {i} must see EOF after shutdown");
+    }
+    assert_eq!(registry.conn_stats().conns_open.load(Ordering::Relaxed), 0,
+               "every connection thread must have exited");
+}
+
+/// `conn_timeout: None` (the in-process default) really means no
+/// deadline: an idle connection outlives a long pause and still works.
+#[test]
+fn no_timeout_config_keeps_idle_connections() {
+    let (addr, h, _registry) = spawn(ServerConfig::default());
+    let emb = toy();
+    let mut c = Client::connect(addr).unwrap();
+    std::thread::sleep(Duration::from_millis(600));
+    assert_bit_exact(&mut c, &emb, &[9, 10]);
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// The fanout section-count cap answers typed, and the connection (and
+/// server) stay healthy -- the amplification defense the fuzzer's
+/// flood case leans on.
+#[test]
+fn fanout_section_flood_is_a_typed_rejection() {
+    let (addr, h, _registry) = spawn(ServerConfig::default());
+    let emb = toy();
+    let mut c = Client::connect(addr).unwrap();
+    let ids: Vec<usize> = vec![0];
+    let queries: Vec<(&str, &[usize])> =
+        (0..2000).map(|_| ("emb", &ids[..])).collect();
+    match c.lookup_fanout(&queries) {
+        Err(WireError::Rejected { code, .. }) => assert_eq!(code, "too_large"),
+        other => panic!("expected too_large, got {other:?}"),
+    }
+    // same connection still serves
+    assert_bit_exact(&mut c, &emb, &[11]);
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}

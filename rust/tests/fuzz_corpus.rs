@@ -1,0 +1,50 @@
+//! Tier-1 corpus replay: every committed crasher/regression input under
+//! `tests/corpus/` is driven through a live in-process server by the
+//! in-tree fuzzer harness (`server::fuzz`), asserting the full wire
+//! invariant set -- typed rejection or clean close, no handler panic,
+//! no wedge, bounded shutdown join. A fresh hostile input that slips
+//! past the defenses fails HERE first, before any long fuzz run.
+
+use std::path::PathBuf;
+
+use dpq_embed::server::fuzz::{run, FuzzConfig};
+
+fn corpus_dir() -> PathBuf {
+    // cargo runs integration tests with CWD = crate root, but resolve
+    // via the manifest dir so `cargo test` works from anywhere
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("corpus")
+}
+
+#[test]
+fn committed_corpus_replays_clean() {
+    let dir = corpus_dir();
+    assert!(dir.is_dir(), "committed corpus missing at {dir:?}");
+    let report = run(&FuzzConfig {
+        seed: 1,
+        iters: 0, // replay only -- generation is the fuzz subcommand's job
+        corpus_dir: Some(dir),
+        ..FuzzConfig::default()
+    })
+    .expect("fuzz harness failed to start");
+    assert!(
+        report.corpus_replayed >= 16,
+        "corpus shrank? only {} inputs replayed", report.corpus_replayed
+    );
+    assert_eq!(report.handler_panics, 0, "corpus input panicked a handler");
+    assert!(report.ok(), "corpus replay failures: {:?}", report.failures);
+}
+
+/// A short generated run doubles as a smoke test that the generator +
+/// oracle machinery itself stays healthy under `cargo test`.
+#[test]
+fn short_generated_run_is_clean() {
+    let report = run(&FuzzConfig {
+        seed: 1302,
+        iters: 60,
+        corpus_dir: None,
+        ..FuzzConfig::default()
+    })
+    .expect("fuzz harness failed to start");
+    assert_eq!(report.cases_sent, 60);
+    assert!(report.ok(), "generated-run failures: {:?}", report.failures);
+}

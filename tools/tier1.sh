@@ -17,15 +17,25 @@
 # replicas=1, live set_replicas under traffic) and spill_recovery
 # (restart over a populated spill dir) also run in BOTH thread passes --
 # replica routing must be invisible in the bytes at every pool size.
+#
+# Adversarial-wire coverage: the committed crasher corpus replays via
+# the fuzz_corpus suite, the hostile-client scenarios (slow-loris,
+# byte-at-a-time, mid-frame disconnect, panic injection, busy cap) run
+# via conn_hardening, and a 2000-iteration seeded fuzz of the live wire
+# runs in BOTH thread passes -- zero panics, wedges, or unclean closes
+# is a tier-1 gate, not a nightly aspiration.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
 cargo build --release --examples
+target/release/repro fuzz --seed 42 --iters 2000
 DPQ_THREADS=2 cargo test -q --test multi_table --test server_integration \
     --test registry_lifecycle --test residency_faults --test residency_soak \
-    --test replica_equivalence --test spill_recovery
+    --test replica_equivalence --test spill_recovery \
+    --test conn_hardening --test fuzz_corpus
+DPQ_THREADS=2 target/release/repro fuzz --seed 42 --iters 2000
 RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps -q
 for f in docs/*.md; do
     name="$(basename "$f")"

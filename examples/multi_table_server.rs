@@ -122,6 +122,23 @@ fn main() -> Result<()> {
         st.get("promotes").and_then(|v| v.as_usize()).unwrap_or(0),
     );
 
+    // compute on codes: top-k similarity served straight off the DPQ
+    // codes via a per-query ADC lookup table -- no rows materialized.
+    // "items like item 7" is the query_id form; an explicit query
+    // vector works the same way (here: item 7's own row, so id 7 must
+    // come back on top with the identical score)
+    let query = c.lookup_bin("dpq", &[7])?.row(0).to_vec();
+    let best = c.topk("dpq", &query, 5, None)?;
+    println!("\ntopk(dpq, k=5) via the ADC lut path:");
+    for (id, score) in &best {
+        println!("  id {id:<5} score {score:+.4}");
+    }
+    let by_id = c.topk_by_id("dpq", 7, 5, None)?;
+    assert_eq!(by_id, best, "query_id:7 must equal querying row 7's vector");
+    // ... and `score` prices an explicit candidate list against the query
+    let scores = c.score_with_id("dpq", 7, &[11, 22, 33])?;
+    println!("  score(query_id=7, ids=[11,22,33]) -> {scores:+.4?}");
+
     // snapshot the whole registry live, then restore it offline
     let snap_dir = std::env::temp_dir().join("multi_table_demo_snapshot");
     let manifest = c.admin_snapshot(snap_dir.to_str().unwrap())?;

@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use dpq_embed::dpq::toy_embedding;
 use dpq_embed::quant::ScalarQuant;
+use dpq_embed::scoring::{self, ExactScorer, ScoreBackend};
 use dpq_embed::server::{
     Client, EmbeddingServer, ServerConfig, TableRegistry,
 };
@@ -422,6 +423,95 @@ fn main() {
     bench::record("lookup_0_idle_conns", lat[0], 0.0, iters);
     bench::record("lookup_64_idle_conns", lat[1], 0.0, iters);
     drop(idle);
+    c.shutdown().unwrap();
+    h.join().unwrap();
+
+    // compute on codes: per-query ADC lookup-table topk vs the exact
+    // reconstruct-then-dot path, over the same d=64 DPQ table. The LUT
+    // scan reads 16 table entries per candidate instead of rebuilding a
+    // 64-float row -- this ratio is the subsystem's reason to exist.
+    section("compute on codes: topk LUT vs exact (dpq, d=64)");
+    let queries: Vec<Vec<f32>> = {
+        let mut rng = Rng::new(29);
+        (0..20)
+            .map(|_| (0..ce.d).map(|_| rng.normal()).collect())
+            .collect()
+    };
+    let k_top = 100usize;
+    let mut lut_best = Vec::new();
+    let t0 = Instant::now();
+    for q in &queries {
+        lut_best = scoring::topk(&*ce.query_scorer(q), 0, n, k_top);
+    }
+    let lut_s = t0.elapsed().as_secs_f64() / queries.len() as f64;
+    let mut exact_best = Vec::new();
+    let t0 = Instant::now();
+    for q in &queries {
+        exact_best = scoring::topk(&ExactScorer::new(&ce, q), 0, n, k_top);
+    }
+    let exact_s = t0.elapsed().as_secs_f64() / queries.len() as f64;
+    // sanity, not the equivalence proof (tests own that): rank-for-rank
+    // scores stay close. The slack covers adjacent-rank swaps where two
+    // candidates sit within the ADC tolerance of each other.
+    let tol = scoring::adc_tolerance(ce.d) * 4.0;
+    assert_eq!(lut_best.len(), exact_best.len());
+    for (l, e) in lut_best.iter().zip(&exact_best) {
+        assert!(
+            (l.score - e.score).abs() <= tol,
+            "lut topk diverged from exact: {} vs {}", l.score, e.score
+        );
+    }
+    println!(
+        "topk(k={k_top}) over {n} rows: lut {:.1}us vs exact {:.1}us per \
+         query ({:.1}x); {:.1}M candidates/s on the lut path",
+        lut_s * 1e6, exact_s * 1e6, exact_s / lut_s.max(1e-12),
+        n as f64 / lut_s.max(1e-12) / 1e6
+    );
+    bench::record("topk_lut_d64", lut_s, 0.0, queries.len());
+    bench::record("topk_exact_d64", exact_s, 0.0, queries.len());
+    bench::record("topk_lut_vs_exact", exact_s / lut_s.max(1e-12), 0.0,
+                  queries.len());
+    bench::record("score_candidates_per_s", n as f64 / lut_s.max(1e-12),
+                  0.0, queries.len());
+
+    // ... and over the wire: sustained score/topk latency plus the
+    // server-side score-latency ring percentiles from the stats op
+    section("compute on codes: score/topk over the wire");
+    let server = Arc::new(EmbeddingServer::single("emb", ce.clone(), 64));
+    let (tx, rx) = mpsc::channel();
+    let s2 = server.clone();
+    let h = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut c = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(31);
+    let q0 = &queries[0];
+    let iters = 300usize;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let ids: Vec<usize> = (0..64).map(|_| rng.below(n)).collect();
+        c.score("emb", q0, &ids).unwrap();
+    }
+    let score_wire = t0.elapsed().as_secs_f64() / iters as f64;
+    let topk_iters = 50usize;
+    let t0 = Instant::now();
+    for _ in 0..topk_iters {
+        c.topk("emb", q0, 10, None).unwrap();
+    }
+    let topk_wire = t0.elapsed().as_secs_f64() / topk_iters as f64;
+    let st = c.stats(Some("emb")).unwrap();
+    let p50 = st.get("score_p50_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let p99 = st.get("score_p99_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    println!(
+        "score(64 ids) {:.1}us, topk(k=10) {:.1}us per request over the \
+         wire; server-side score p50 {:.1}us p99 {:.1}us",
+        score_wire * 1e6, topk_wire * 1e6, p50 * 1e6, p99 * 1e6
+    );
+    bench::record("score_wire_64ids", score_wire, 0.0, iters);
+    bench::record("topk_wire_k10", topk_wire, 0.0, topk_iters);
+    bench::record("score_p50", p50, 0.0, iters + topk_iters);
+    bench::record("score_p99", p99, 0.0, iters + topk_iters);
     c.shutdown().unwrap();
     h.join().unwrap();
 }

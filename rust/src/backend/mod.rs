@@ -66,6 +66,18 @@ pub trait EmbeddingBackend: Send + Sync {
             self.kind()
         )
     }
+
+    /// Scoring capability: a backend that can serve similarity queries
+    /// over its representation returns itself as a
+    /// [`ScoreBackend`](crate::scoring::ScoreBackend). The default is
+    /// `None`, so the server rejects `score`/`topk` against an external
+    /// backend kind with a typed error instead of guessing. All four
+    /// in-crate kinds implement it: `dpq`/`scalar_quant` with the ADC
+    /// lookup-table fast path, `dense`/`low_rank` with the exact
+    /// reconstruct-then-dot path.
+    fn scorer(&self) -> Option<&dyn crate::scoring::ScoreBackend> {
+        None
+    }
 }
 
 /// Deserialize a backend artifact previously written by
@@ -288,6 +300,22 @@ impl EmbeddingBackend for DenseTable {
 
     fn save_artifact(&self, path: &Path) -> Result<()> {
         self.save(path)
+    }
+
+    fn scorer(&self) -> Option<&dyn crate::scoring::ScoreBackend> {
+        Some(self)
+    }
+}
+
+/// Dense scoring is the exact path by definition: reconstruct (a row
+/// copy) then serial dot -- bit-identical to the reference
+/// implementation at every thread count.
+impl crate::scoring::ScoreBackend for DenseTable {
+    fn query_scorer<'a>(
+        &'a self,
+        query: &'a [f32],
+    ) -> Box<dyn crate::scoring::QueryScorer + 'a> {
+        Box::new(crate::scoring::ExactScorer::new(self, query))
     }
 }
 

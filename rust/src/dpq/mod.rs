@@ -355,6 +355,85 @@ impl crate::backend::EmbeddingBackend for CompressedEmbedding {
     fn save_artifact(&self, path: &Path) -> Result<()> {
         CompressedEmbedding::save(self, path)
     }
+
+    fn scorer(&self) -> Option<&dyn crate::scoring::ScoreBackend> {
+        Some(self)
+    }
+}
+
+/// ADC lookup table over the DPQ artifact: `lut[g * K + c]` is the dot
+/// product of the query's subspace `g` slice with centroid `c` of group
+/// `g`, built once per query (`K * d` multiplies). A candidate is then
+/// scored with `D` table reads along the same packed-code bit cursor
+/// `reconstruct_row_into` walks -- no f32 reconstruction at all.
+struct DpqLutScorer<'a> {
+    emb: &'a CompressedEmbedding,
+    /// `[D, K]` row-major subspace dot-product table.
+    lut: Vec<f32>,
+}
+
+impl<'a> DpqLutScorer<'a> {
+    fn new(emb: &'a CompressedEmbedding, query: &[f32]) -> Self {
+        debug_assert_eq!(query.len(), emb.d);
+        let (k, dg, s) = (
+            emb.values.shape[0],
+            emb.values.shape[1],
+            emb.values.shape[2],
+        );
+        let mut lut = vec![0.0f32; dg * k];
+        for g in 0..dg {
+            let q = &query[g * s..(g + 1) * s];
+            for code in 0..k {
+                let base = (code * dg + g) * s;
+                let mut acc = 0.0f32;
+                for (x, y) in q.iter().zip(&emb.values.data[base..base + s]) {
+                    acc += x * y;
+                }
+                lut[g * k + code] = acc;
+            }
+        }
+        DpqLutScorer { emb, lut }
+    }
+}
+
+impl crate::scoring::QueryScorer for DpqLutScorer<'_> {
+    fn score_block(&self, start: usize, out: &mut [f32]) {
+        let cb = &self.emb.codebook;
+        let (k, dg) = (cb.k, cb.d_groups);
+        let bits = cb.bits();
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        let packed = cb.packed_words();
+        for (i, o) in out.iter_mut().enumerate() {
+            // group-order serial sum: a row's score never depends on how
+            // the candidate range was chunked (the pool determinism rule)
+            let mut bit = (start + i) * dg * bits as usize;
+            let mut acc = 0.0f32;
+            for g in 0..dg {
+                let word = bit >> 6;
+                let off = (bit & 63) as u32;
+                let mut v = packed[word] >> off;
+                if off + bits > 64 {
+                    v |= packed[word + 1] << (64 - off);
+                }
+                acc += self.lut[g * k + (v & mask) as usize];
+                bit += bits as usize;
+            }
+            *o = acc;
+        }
+    }
+
+    fn path(&self) -> &'static str {
+        "lut"
+    }
+}
+
+impl crate::scoring::ScoreBackend for CompressedEmbedding {
+    fn query_scorer<'a>(
+        &'a self,
+        query: &'a [f32],
+    ) -> Box<dyn crate::scoring::QueryScorer + 'a> {
+        Box::new(DpqLutScorer::new(self, query))
+    }
 }
 
 /// Deterministic random DPQ fixture (uniform codes, normal values) --
@@ -574,6 +653,24 @@ mod tests {
             std::fs::write(&p, &c).unwrap();
             let err = CompressedEmbedding::load(&p).unwrap_err();
             assert!(err.to_string().contains("bits"), "{err}");
+        }
+    }
+
+    #[test]
+    fn lut_scorer_matches_reference_within_tolerance() {
+        use crate::scoring::{self, ScoreBackend as _};
+        let ce = toy(200, 16, 8, 4, 13); // d = 32
+        let mut rng = Rng::new(14);
+        let query: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let ids: Vec<usize> = (0..64).map(|i| (i * 17) % 200).collect();
+        let want = scoring::reference_scores(&ce, &query, &ids);
+        let qs = ce.query_scorer(&query);
+        assert_eq!(qs.path(), "lut");
+        let mut got = vec![0.0f32; ids.len()];
+        scoring::score_into(qs.as_ref(), &ids, &mut got);
+        let tol = scoring::adc_tolerance(32);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() <= tol, "id {}: {a} vs {b}", ids[i]);
         }
     }
 

@@ -10,7 +10,8 @@
 //!   execution ([`runtime`]), synthetic data pipeline ([`data`]), training
 //!   coordinator and experiment harness ([`coordinator`]), compressed
 //!   embedding store ([`dpq`]), post-hoc compression baselines ([`quant`]),
-//!   the [`backend::EmbeddingBackend`] serving abstraction, metrics
+//!   the [`backend::EmbeddingBackend`] serving abstraction,
+//!   compute-on-codes similarity scoring ([`scoring`]), metrics
 //!   ([`metrics`]) and a multi-table embedding-lookup server ([`server`]).
 //!
 //! See DESIGN.md for the system inventory and the paper-experiment index,
@@ -32,6 +33,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod quant;
 pub mod runtime;
+pub mod scoring;
 pub mod server;
 pub mod tensor;
 pub mod util;

@@ -623,7 +623,11 @@ fn print_usage() {
          \x20             or trickle past SECS with a typed `timeout` frame\n\
          \x20             (default 30, fractional ok, \"none\" disables);\n\
          \x20             --max-conns N answers connections over the cap\n\
-         \x20             with a typed `busy` frame (default 1024))\n\
+         \x20             with a typed `busy` frame (default 1024);\n\
+         \x20             v2 clients also get the `score`/`topk` ops:\n\
+         \x20             similarity served straight off the compressed\n\
+         \x20             codes via per-query ADC lookup tables, no rows\n\
+         \x20             materialized -- see docs/WIRE_PROTOCOL.md)\n\
          \x20 fuzz       [--seed N --iters N --corpus DIR|none]\n\
          \x20            (structure-aware wire fuzzer against a live\n\
          \x20             in-process server; replays the regression corpus\n\

@@ -177,6 +177,75 @@ impl crate::backend::EmbeddingBackend for ScalarQuant {
     fn save_artifact(&self, path: &Path) -> Result<()> {
         self.save(path)
     }
+
+    fn scorer(&self) -> Option<&dyn crate::scoring::ScoreBackend> {
+        Some(self)
+    }
+}
+
+/// ADC table for scalar-quant codes: one `2^bits`-entry column of
+/// pre-multiplied levels per embedding column, `lut[j * L + c] =
+/// query[j] * (lo[j] + c * step[j])`. Each LUT entry is the exact f32
+/// product the reconstruct-then-dot reference computes for that
+/// (column, code) pair, and candidates accumulate in column order, so
+/// this path is bit-identical to the reference -- the documented
+/// tolerance is only needed for the DPQ LUT.
+struct SqLutScorer<'a> {
+    sq: &'a ScalarQuant,
+    /// Levels per code (`2^bits`), the LUT column stride.
+    levels: usize,
+    lut: Vec<f32>,
+}
+
+impl<'a> SqLutScorer<'a> {
+    fn new(sq: &'a ScalarQuant, query: &[f32]) -> Self {
+        debug_assert_eq!(query.len(), sq.d);
+        let levels = 1usize << sq.bits;
+        let mut lut = vec![0.0f32; sq.d * levels];
+        for j in 0..sq.d {
+            for c in 0..levels {
+                lut[j * levels + c] =
+                    query[j] * (sq.lo[j] + c as f32 * sq.step[j]);
+            }
+        }
+        SqLutScorer { sq, levels, lut }
+    }
+}
+
+impl crate::scoring::QueryScorer for SqLutScorer<'_> {
+    fn score_block(&self, start: usize, out: &mut [f32]) {
+        let d = self.sq.d;
+        for (i, o) in out.iter_mut().enumerate() {
+            let row = &self.sq.codes[(start + i) * d..(start + i + 1) * d];
+            let mut acc = 0.0f32;
+            for (j, &c) in row.iter().enumerate() {
+                acc += self.lut[j * self.levels + c as usize];
+            }
+            *o = acc;
+        }
+    }
+
+    fn path(&self) -> &'static str {
+        "lut"
+    }
+}
+
+/// Per-query LUT memory is `d * 2^bits` floats; above this bit width the
+/// table would dwarf the batch it serves, so scoring falls back to the
+/// exact path (codes stay <= 16 bit, so the cap only affects outliers).
+const SQ_LUT_MAX_BITS: u32 = 10;
+
+impl crate::scoring::ScoreBackend for ScalarQuant {
+    fn query_scorer<'a>(
+        &'a self,
+        query: &'a [f32],
+    ) -> Box<dyn crate::scoring::QueryScorer + 'a> {
+        if self.bits <= SQ_LUT_MAX_BITS {
+            Box::new(SqLutScorer::new(self, query))
+        } else {
+            Box::new(crate::scoring::ExactScorer::new(self, query))
+        }
+    }
 }
 
 impl Compressor for ScalarQuant {
@@ -394,6 +463,24 @@ impl crate::backend::EmbeddingBackend for LowRank {
     fn save_artifact(&self, path: &Path) -> Result<()> {
         self.save(path)
     }
+
+    fn scorer(&self) -> Option<&dyn crate::scoring::ScoreBackend> {
+        Some(self)
+    }
+}
+
+/// Low-rank scoring goes through the exact path: the factored form
+/// `left[i] . (right @ q)` would be cheaper but re-associates the sum,
+/// and the serving contract here is bit-equality with the
+/// reconstruct-then-dot reference (the row kernel accumulates serially
+/// in a fixed order; see `reconstruct_rows_into` above).
+impl crate::scoring::ScoreBackend for LowRank {
+    fn query_scorer<'a>(
+        &'a self,
+        query: &'a [f32],
+    ) -> Box<dyn crate::scoring::QueryScorer + 'a> {
+        Box::new(crate::scoring::ExactScorer::new(self, query))
+    }
 }
 
 impl Compressor for LowRank {
@@ -563,6 +650,34 @@ mod tests {
         let bad = dir.join("bad.low_rank");
         std::fs::write(&bad, &bytes[..bytes.len() - 1]).unwrap();
         assert!(LowRank::load(&bad).is_err());
+    }
+
+    /// Scalar-quant's LUT entries are the exact per-column products the
+    /// reference computes, so its fast path must be BIT-equal -- and
+    /// low-rank's exact path shares the reference's accumulation order,
+    /// so it must be too.
+    #[test]
+    fn scorers_match_reference_bits() {
+        use crate::scoring::{self, ScoreBackend as _};
+        let t = table(90, 10, 30);
+        let mut rng = Rng::new(31);
+        let query: Vec<f32> = (0..10).map(|_| rng.normal()).collect();
+        let ids: Vec<usize> = vec![0, 89, 17, 17, 44];
+
+        let sq = ScalarQuant::fit(&t, 8);
+        let want = scoring::reference_scores(&sq, &query, &ids);
+        let qs = sq.query_scorer(&query);
+        assert_eq!(qs.path(), "lut");
+        let mut got = vec![0.0f32; ids.len()];
+        scoring::score_into(qs.as_ref(), &ids, &mut got);
+        assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        let lr = LowRank::fit(&t, 4);
+        let want = scoring::reference_scores(&lr, &query, &ids);
+        let qs = lr.query_scorer(&query);
+        assert_eq!(qs.path(), "exact");
+        scoring::score_into(qs.as_ref(), &ids, &mut got);
+        assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

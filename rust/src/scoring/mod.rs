@@ -1,0 +1,421 @@
+//! Compute-on-codes retrieval: ADC score tables + deterministic top-k.
+//!
+//! The point of serving *compressed* embeddings is that similarity can be
+//! computed on the codes themselves (asymmetric distance computation,
+//! Jegou et al. 2011): a per-query lookup table of subspace dot-products
+//! is built once, and each candidate row is then scored with `D` table
+//! reads instead of `d` float multiplies. This module holds the
+//! backend-independent machinery:
+//!
+//! * [`ScoreBackend`] -- the capability a backend advertises through
+//!   [`EmbeddingBackend::scorer`](crate::backend::EmbeddingBackend::scorer);
+//!   it builds a per-query [`QueryScorer`] (the LUT fast path for
+//!   `dpq`/`scalar_quant`, the exact row-product path for
+//!   `dense`/`low_rank`).
+//! * [`ExactScorer`] -- reconstruct-then-dot over any
+//!   [`EmbeddingBackend`]; the *reference* implementation every fast
+//!   path is tested against (see [`reference_scores`]).
+//! * [`score_into`] / [`topk`] -- pool-sharded drivers over a built
+//!   scorer, bit-stable at every `DPQ_THREADS` setting, with top-k ties
+//!   broken by ascending id so results are reproducible at any
+//!   thread/shard count.
+//!
+//! # Determinism
+//!
+//! Every scorer computes one candidate's score with a self-contained
+//! serial accumulation (group order for the LUT paths, column order for
+//! the exact path), so a score never depends on which pool chunk the
+//! candidate landed in -- the crate-wide rule from [`crate::util::pool`].
+//! The top-k merge sorts the per-shard survivors by `(score desc, id
+//! asc)` under `f32::total_cmp`, which is a total order, so the merged
+//! result is a pure function of the per-candidate scores.
+//!
+//! # LUT tolerance
+//!
+//! The LUT path sums per-group partials instead of walking all `d`
+//! columns in one serial chain, so its result differs from
+//! [`reference_scores`] only by float re-association: a few ULPs per
+//! group. [`adc_tolerance`] documents the bound the equivalence tests
+//! enforce (`1e-4 * (1 + sqrt(d))` absolute -- generous against the
+//! ~`d * eps` worst case for unit-scale embeddings).
+
+use crate::backend::EmbeddingBackend;
+use crate::util::pool;
+
+/// Estimated scalar ops to score one candidate row -- the work-sizing
+/// proxy handed to [`pool::workers_for`] (LUT reads ~D, exact dot ~2d;
+/// one conservative middle ground keeps small requests serial).
+const ROW_COST: usize = 128;
+
+/// Per-query scoring state built once by [`ScoreBackend::query_scorer`]
+/// (e.g. the K x D table of subspace dot-products), then shared read-only
+/// across pool workers.
+pub trait QueryScorer: Sync {
+    /// Score the contiguous candidate block `start..start + out.len()`
+    /// into `out`. Each row's score must be a self-contained serial
+    /// accumulation (the determinism rule): bits may not depend on the
+    /// blocking.
+    fn score_block(&self, start: usize, out: &mut [f32]);
+
+    /// Score an explicit id list (`out.len() == ids.len()`). The default
+    /// routes each id through [`score_block`](Self::score_block);
+    /// scorers that need per-block scratch override it.
+    fn score_ids(&self, ids: &[usize], out: &mut [f32]) {
+        let mut one = [0.0f32];
+        for (o, &id) in out.iter_mut().zip(ids) {
+            self.score_block(id, &mut one);
+            *o = one[0];
+        }
+    }
+
+    /// Which path this scorer runs: `"lut"` (compute on codes) or
+    /// `"exact"` (reconstruct-then-dot). Surfaced in `score`/`topk`
+    /// responses so clients and benches can tell them apart.
+    fn path(&self) -> &'static str;
+}
+
+/// The scoring capability of an embedding backend: build a per-query
+/// [`QueryScorer`] over this table. `query.len()` must equal the
+/// backend's `d()` -- callers validate width first (the server rejects a
+/// mismatch with a typed error before ever reaching this trait).
+pub trait ScoreBackend: Send + Sync {
+    /// Build the per-query scoring state (LUT where the representation
+    /// allows it, exact otherwise).
+    fn query_scorer<'a>(&'a self, query: &'a [f32]) -> Box<dyn QueryScorer + 'a>;
+}
+
+/// Serial dot product in index order -- the one accumulation order every
+/// exact/reference path shares, so "bit-equal to the reference" is well
+/// defined.
+pub fn dot_serial(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Absolute tolerance for LUT-vs-reference score comparison at width `d`
+/// (see the module docs): `1e-4 * (1 + sqrt(d))`.
+pub fn adc_tolerance(d: usize) -> f32 {
+    1e-4 * (1.0 + (d as f32).sqrt())
+}
+
+/// Reconstruct-then-score over any [`EmbeddingBackend`]: materialize the
+/// candidate row (through the backend's own bit-stable gather), then
+/// [`dot_serial`] against the query. This is both the *reference* the
+/// LUT paths are tested against and the serving path for backends whose
+/// representation has no cheaper form (`dense`, `low_rank`).
+pub struct ExactScorer<'a> {
+    backend: &'a dyn EmbeddingBackend,
+    query: &'a [f32],
+}
+
+impl<'a> ExactScorer<'a> {
+    /// Pair a backend with a query of width `backend.d()` (asserted).
+    pub fn new(backend: &'a dyn EmbeddingBackend, query: &'a [f32]) -> Self {
+        assert_eq!(query.len(), backend.d(), "query width != backend d");
+        ExactScorer { backend, query }
+    }
+}
+
+impl QueryScorer for ExactScorer<'_> {
+    fn score_block(&self, start: usize, out: &mut [f32]) {
+        let d = self.query.len();
+        let mut row = vec![0.0f32; d];
+        for (i, o) in out.iter_mut().enumerate() {
+            self.backend.reconstruct_rows_into(&[start + i], &mut row);
+            *o = dot_serial(self.query, &row);
+        }
+    }
+
+    fn score_ids(&self, ids: &[usize], out: &mut [f32]) {
+        let d = self.query.len();
+        let mut row = vec![0.0f32; d];
+        for (o, &id) in out.iter_mut().zip(ids) {
+            self.backend.reconstruct_rows_into(&[id], &mut row);
+            *o = dot_serial(self.query, &row);
+        }
+    }
+
+    fn path(&self) -> &'static str {
+        "exact"
+    }
+}
+
+/// The documented reference: reconstruct each id and [`dot_serial`] it
+/// against `query`, serially, in id-list order. Equivalence tests
+/// compare every fast path against this (bit-equal for exact paths,
+/// within [`adc_tolerance`] for LUT paths).
+pub fn reference_scores(
+    backend: &dyn EmbeddingBackend,
+    query: &[f32],
+    ids: &[usize],
+) -> Vec<f32> {
+    let sc = ExactScorer::new(backend, query);
+    let mut out = vec![0.0f32; ids.len()];
+    pool::with_threads(1, || sc.score_ids(ids, &mut out));
+    out
+}
+
+/// Score an explicit id list into `out` (`out.len() == ids.len()`),
+/// sharded over the worker pool. Callers validate ids against `vocab`
+/// first. Bit-identical at every thread count: each id's score is
+/// self-contained, and chunking only partitions the id list.
+pub fn score_into(scorer: &dyn QueryScorer, ids: &[usize], out: &mut [f32]) {
+    assert_eq!(out.len(), ids.len());
+    if ids.is_empty() {
+        return;
+    }
+    pool::with_threads(pool::workers_for(ids.len() * ROW_COST), || {
+        let per = pool::chunk_len(ids.len());
+        pool::par_chunks_mut(out, per, |ci, chunk| {
+            let i0 = ci * per;
+            scorer.score_ids(&ids[i0..i0 + chunk.len()], chunk);
+        });
+    });
+}
+
+/// One top-k candidate: id + score. Ordered "better first": higher score
+/// wins, ties broken by *ascending* id (under `f32::total_cmp`, a total
+/// order), so sorting or heap-merging candidates is deterministic even
+/// with duplicated scores.
+#[derive(Clone, Copy, Debug)]
+pub struct Cand {
+    /// Candidate row id.
+    pub id: usize,
+    /// Dot-product score against the query.
+    pub score: f32,
+}
+
+impl Cand {
+    /// `true` if `self` outranks `other` (higher score, or equal score
+    /// and smaller id).
+    fn beats(&self, other: &Cand) -> bool {
+        match self.score.total_cmp(&other.score) {
+            std::cmp::Ordering::Greater => true,
+            std::cmp::Ordering::Less => false,
+            std::cmp::Ordering::Equal => self.id < other.id,
+        }
+    }
+}
+
+/// Bounded "keep the best k" buffer: a binary min-heap on the ranking
+/// order, so the worst kept candidate is at the root and is evicted
+/// first. Capacity is fixed at construction; inserting into a full heap
+/// either replaces the root or is a no-op.
+struct BoundedTopK {
+    k: usize,
+    // min-heap by hand: heap[0] is the WORST kept candidate
+    heap: Vec<Cand>,
+}
+
+impl BoundedTopK {
+    fn new(k: usize) -> Self {
+        BoundedTopK { k, heap: Vec::with_capacity(k) }
+    }
+
+    fn offer(&mut self, c: Cand) {
+        if self.heap.len() < self.k {
+            self.heap.push(c);
+            self.sift_up(self.heap.len() - 1);
+        } else if c.beats(&self.heap[0]) {
+            self.heap[0] = c;
+            self.sift_down(0);
+        }
+    }
+
+    // Min-heap invariant: every parent is outranked by (or ranks equal
+    // to) its children -- i.e. a child never ranks below its parent --
+    // so `heap[0]` is the worst kept candidate.
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if self.heap[p].beats(&self.heap[i]) {
+                self.heap.swap(p, i);
+                i = p;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut worst = i;
+            if l < self.heap.len() && self.heap[worst].beats(&self.heap[l]) {
+                worst = l;
+            }
+            if r < self.heap.len() && self.heap[worst].beats(&self.heap[r]) {
+                worst = r;
+            }
+            if worst == i {
+                break;
+            }
+            self.heap.swap(i, worst);
+            i = worst;
+        }
+    }
+
+    fn into_vec(self) -> Vec<Cand> {
+        self.heap
+    }
+}
+
+/// Candidates scored per inner block inside a top-k shard (bounds the
+/// scratch buffer; the value has no effect on results).
+const TOPK_BLOCK: usize = 512;
+
+/// Deterministic parallel top-k over the candidate range `lo..hi`:
+/// per-shard bounded heaps (each shard keeps its own best `k`), merged
+/// by sorting the survivors "better first" (ties ascending id) and
+/// truncating to `k`. Returns at most `min(k, hi - lo)` candidates, best
+/// first. Reproducible at every thread/shard count because each
+/// candidate's score is shard-independent and the merge order is total.
+pub fn topk(scorer: &dyn QueryScorer, lo: usize, hi: usize, k: usize) -> Vec<Cand> {
+    let n = hi.saturating_sub(lo);
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut shards: Vec<Vec<Cand>> = Vec::new();
+    pool::with_threads(pool::workers_for(n * ROW_COST), || {
+        let per = pool::chunk_len(n);
+        shards = vec![Vec::new(); n.div_ceil(per)];
+        pool::par_chunks_mut(&mut shards, 1, |si, slot| {
+            let start = lo + si * per;
+            let end = (start + per).min(hi);
+            let mut best = BoundedTopK::new(k);
+            let mut buf = [0.0f32; TOPK_BLOCK];
+            let mut at = start;
+            while at < end {
+                let take = (end - at).min(TOPK_BLOCK);
+                scorer.score_block(at, &mut buf[..take]);
+                for (o, &score) in buf[..take].iter().enumerate() {
+                    best.offer(Cand { id: at + o, score });
+                }
+                at += take;
+            }
+            slot[0] = best.into_vec();
+        });
+    });
+    let mut all: Vec<Cand> = shards.into_iter().flatten().collect();
+    all.sort_by(|a, b| {
+        b.score
+            .total_cmp(&a.score)
+            .then_with(|| a.id.cmp(&b.id))
+    });
+    all.truncate(k);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::DenseTable;
+    use crate::tensor::TensorF;
+    use crate::util::pool::with_threads;
+    use crate::util::Rng;
+
+    fn toy_dense(n: usize, d: usize, seed: u64) -> DenseTable {
+        let mut rng = Rng::new(seed);
+        DenseTable::new(TensorF {
+            shape: vec![n, d],
+            data: (0..n * d).map(|_| rng.normal()).collect(),
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn exact_scorer_matches_reference_bit_for_bit() {
+        let dt = toy_dense(40, 8, 1);
+        let query: Vec<f32> = (0..8).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        let ids: Vec<usize> = vec![0, 39, 7, 7, 13];
+        let reference = reference_scores(&dt, &query, &ids);
+        let sc = ExactScorer::new(&dt, &query);
+        for threads in [1usize, 2, 7] {
+            let mut got = vec![0.0f32; ids.len()];
+            with_threads(threads, || score_into(&sc, &ids, &mut got));
+            assert!(
+                got.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_orders_best_first_and_breaks_ties_ascending() {
+        // all-identical rows: every score ties, so top-k must be the k
+        // smallest ids in order
+        let dt = DenseTable::new(TensorF {
+            shape: vec![10, 4],
+            data: vec![0.5f32; 40],
+        })
+        .unwrap();
+        let query = [1.0f32, 2.0, 3.0, 4.0];
+        let sc = ExactScorer::new(&dt, &query);
+        for threads in [1usize, 2, 7] {
+            let got = with_threads(threads, || topk(&sc, 0, 10, 3));
+            assert_eq!(
+                got.iter().map(|c| c.id).collect::<Vec<_>>(),
+                vec![0, 1, 2],
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_matches_full_sort_at_every_thread_count() {
+        let dt = toy_dense(300, 12, 3);
+        let mut rng = Rng::new(9);
+        let query: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+        let sc = ExactScorer::new(&dt, &query);
+        // reference: score everything serially, full sort
+        let ids: Vec<usize> = (0..300).collect();
+        let scores = reference_scores(&dt, &query, &ids);
+        let mut order: Vec<usize> = (0..300).collect();
+        order.sort_by(|&a, &b| {
+            scores[b].total_cmp(&scores[a]).then_with(|| a.cmp(&b))
+        });
+        for threads in [1usize, 2, 7] {
+            let got = with_threads(threads, || topk(&sc, 0, 300, 17));
+            assert_eq!(got.len(), 17, "threads={threads}");
+            for (rank, c) in got.iter().enumerate() {
+                assert_eq!(c.id, order[rank], "threads={threads} rank={rank}");
+                assert_eq!(
+                    c.score.to_bits(),
+                    scores[c.id].to_bits(),
+                    "threads={threads} rank={rank}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topk_respects_range_and_k_clamp() {
+        let dt = toy_dense(50, 4, 4);
+        let query = [1.0f32, 0.0, -1.0, 0.5];
+        let sc = ExactScorer::new(&dt, &query);
+        let got = topk(&sc, 10, 20, 99);
+        assert_eq!(got.len(), 10); // clamped to the range
+        assert!(got.iter().all(|c| (10..20).contains(&c.id)));
+        assert!(topk(&sc, 5, 5, 3).is_empty());
+        assert!(topk(&sc, 0, 50, 0).is_empty());
+    }
+
+    #[test]
+    fn bounded_heap_keeps_exactly_the_best_k() {
+        let mut h = BoundedTopK::new(3);
+        for (id, score) in
+            [(0, 1.0f32), (1, 5.0), (2, 3.0), (3, 5.0), (4, -2.0), (5, 4.0)]
+        {
+            h.offer(Cand { id, score });
+        }
+        let mut kept: Vec<usize> = h.into_vec().iter().map(|c| c.id).collect();
+        kept.sort_unstable();
+        // best three: 5.0(id1), 5.0(id3), 4.0(id5)
+        assert_eq!(kept, vec![1, 3, 5]);
+    }
+}

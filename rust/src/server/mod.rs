@@ -27,6 +27,8 @@
 //! | `lookup`        | 1,2 | `ids`, v2: `table`        | `{"ok":true,"n":..,"d":..,"vectors":[[..],..]}` |
 //! | `lookup_bin`    | 1,2 | `ids`, v2: `table`        | binary, see below |
 //! | `lookup_fanout` | 2   | `queries`: `[{table,ids},..]` | one multi-section binary frame, see below |
+//! | `score`         | 2   | `query` or `query_id`, `ids`, `table` | `{"ok":true,"path":..,"scores":[..]}` -- compute-on-codes dot products, see below |
+//! | `topk`          | 2   | `query` or `query_id`, `k`, optional `lo`/`hi`, `table` | `{"ok":true,"path":..,"ids":[..],"scores":[..]}` best-first |
 //! | `stats`         | 1,2 | v2: optional `table`      | counters + `batch_p50_s`/`batch_p99_s` latency (per table) |
 //! | `tables`        | 2   |                           | `{"ok":true,"default":..,"tables":[{name,kind,vocab,d,..},..]}` |
 //! | `load`          | 2   | `table`, `path`           | hot-load a `.dpq` file as a new table |
@@ -48,6 +50,20 @@
 //! empty id list answers with a real, short frame); under v2 the
 //! sentinel is followed by a JSON error frame naming the reason, so
 //! binary errors are as typed as JSON ones.
+//!
+//! **Compute on codes.** The `score` and `topk` ops run similarity
+//! directly over a table's compressed representation (the
+//! [`scoring`](crate::scoring) module): DPQ and scalar-quant tables build a
+//! per-query ADC lookup table and score candidates without ever
+//! reconstructing a row; dense and low-rank tables take a pool-sharded
+//! exact path. The query is either an explicit `"query"` f32 array
+//! (rejected typed, `malformed`, if any value is non-finite or
+//! overflows f32) or `"query_id"` -- a resident row of the same table.
+//! Both ops route through the registry like any lookup: TTL touch, LRU
+//! stamp, transparent spill promotion and the memory budget all apply,
+//! and the scan is counted against the replica queue-depth signal.
+//! Results are bit-identical for every thread/shard/replica count; ties
+//! in `topk` break by ascending id.
 //!
 //! **Errors.** Every `{"ok": false}` response carries a machine `"code"`
 //! (`bad_ids`, `no_such_table`, `unsupported_version`, `table_exists`,
@@ -107,9 +123,9 @@ pub use stats::{ConnStats, LatencyRing, ReplicaStats, Stats};
 
 use batcher::Answer;
 use protocol::{
-    err_frame, err_obj, frame_version, parse_ids, read_frame_deadline,
-    sections_payload_bytes, write_bin_reject_frame, write_bin_rows,
-    write_bin_sections, FrameIn, MAX_FANOUT_SECTIONS,
+    err_frame, err_obj, frame_version, parse_ids, parse_query,
+    read_frame_deadline, sections_payload_bytes, write_bin_reject_frame,
+    write_bin_rows, write_bin_sections, FrameIn, MAX_FANOUT_SECTIONS,
 };
 
 /// Write timeout applied when `--conn-timeout` is disabled: a response
@@ -633,6 +649,216 @@ fn fanout_op(
     write_bin_sections(stream, &sections)
 }
 
+/// Resolve a `score`/`topk` request's query vector: an explicit
+/// `"query"` array (strictly finite, width-checked against the table's
+/// `d`) or `"query_id"` naming a row of the SAME table, reconstructed
+/// server-side -- "nearest neighbours of item X" without the client
+/// ever holding a vector. Exactly one of the two must be present.
+fn query_for(entry: &TableEntry, j: &Json, op: &str) -> Result<Vec<f32>, WireError> {
+    let d = entry.backend.d();
+    if let Some(q) = parse_query(j, op)? {
+        if q.len() != d {
+            return Err(WireError::Rejected {
+                code: "width_mismatch".into(),
+                message: format!(
+                    "{op} query has {} values but table {:?} has d={d}",
+                    q.len(), entry.name),
+            });
+        }
+        return Ok(q);
+    }
+    match j.get("query_id") {
+        Some(v) => {
+            let Some(id) = v.as_usize() else {
+                return Err(WireError::Malformed(format!(
+                    "{op} query_id must be a non-negative integer")));
+            };
+            let vocab = entry.backend.vocab();
+            if id >= vocab {
+                return Err(WireError::Rejected {
+                    code: "bad_ids".into(),
+                    message: format!(
+                        "query_id {id} out of range [0, {vocab}) for \
+                         table {:?}", entry.name),
+                });
+            }
+            let mut row = vec![0.0f32; d];
+            entry.backend.reconstruct_rows_into(&[id], &mut row);
+            Ok(row)
+        }
+        None => Err(WireError::Rejected {
+            code: "bad_request".into(),
+            message: format!("{op} needs a query array or query_id"),
+        }),
+    }
+}
+
+/// The typed rejection for a backend kind without the scoring
+/// capability ([`EmbeddingBackend::scorer`](crate::backend::EmbeddingBackend::scorer)
+/// returned `None`): the client learns it must fall back to
+/// lookup-then-score client-side, instead of getting a misleading
+/// `internal`.
+fn score_unsupported_err(entry: &TableEntry) -> WireError {
+    WireError::Rejected {
+        code: "score_unsupported".into(),
+        message: format!(
+            "table {:?} (kind {:?}) has no compute-on-codes scorer; \
+             use lookup and score client-side",
+            entry.name, entry.backend.kind()),
+    }
+}
+
+/// `score` (v2 only): dot-product scores for an explicit candidate id
+/// list against a query, computed on the table's compressed
+/// representation (ADC lookup tables for `dpq`/`scalar_quant`, the
+/// pool-sharded exact path for `dense`/`low_rank`). Resolution goes
+/// through [`TableRegistry::resolve`] so TTL touch, LRU stamping,
+/// transparent spill promotion and the memory budget apply exactly as
+/// they do to `lookup`; the scan itself runs on this connection thread
+/// over the shared backend, tracked against the least-loaded-replica
+/// signal via [`TableEntry::begin_score`].
+fn score_op(
+    stream: &mut TcpStream,
+    registry: &TableRegistry,
+    j: &Json,
+) -> Result<(), WireError> {
+    let reject = |stream: &mut TcpStream, e: &WireError| -> Result<(), WireError> {
+        write_frame(stream, &annotated_err_frame(registry, e).to_string())
+    };
+    let named = j.get("table").and_then(|v| v.as_str());
+    let entry = match registry.resolve(named) {
+        Ok(e) => e,
+        Err(e) => return reject(stream, &e),
+    };
+    entry.stats.score_requests.fetch_add(1, Ordering::Relaxed);
+    let query = match query_for(&entry, j, "score") {
+        Ok(q) => q,
+        Err(e) => return reject(stream, &e),
+    };
+    let ids = match validate_ids(&entry, j, "score") {
+        Ok(ids) => ids,
+        Err(e) => return reject(stream, &e),
+    };
+    // same JSON frame-cap discipline as lookup: bound the encoded size
+    // BEFORE computing, typed instead of desyncing the connection
+    if ids.len() as u64 * 64 > protocol::MAX_FRAME as u64 {
+        return reject(stream, &WireError::Rejected {
+            code: "too_large".into(),
+            message: format!(
+                "{} candidate scores exceed the JSON frame cap; split \
+                 the id list", ids.len()),
+        });
+    }
+    let Some(sb) = entry.backend.scorer() else {
+        return reject(stream, &score_unsupported_err(&entry));
+    };
+    let _depth = entry.begin_score();
+    let t0 = std::time::Instant::now();
+    let scorer = sb.query_scorer(&query);
+    let mut scores = vec![0.0f32; ids.len()];
+    crate::scoring::score_into(&*scorer, &ids, &mut scores);
+    entry.stats.record_score_secs(t0.elapsed().as_secs_f64());
+    write_frame(stream, &Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("table", Json::str(entry.name.as_str())),
+        ("n", Json::num(ids.len() as f64)),
+        ("path", Json::str(scorer.path())),
+        ("scores", Json::arr(
+            scores.iter().map(|&s| Json::num(s as f64)).collect())),
+    ]).to_string())
+}
+
+/// `topk` (v2 only): the k most-similar rows to a query over the whole
+/// table (or `lo..hi` when given), computed on codes, best first, ties
+/// broken by ascending id -- bit-identical at every thread, shard and
+/// replica count. Shares the resolution/query/accounting path with
+/// [`score_op`].
+fn topk_op(
+    stream: &mut TcpStream,
+    registry: &TableRegistry,
+    j: &Json,
+) -> Result<(), WireError> {
+    let reject = |stream: &mut TcpStream, e: &WireError| -> Result<(), WireError> {
+        write_frame(stream, &annotated_err_frame(registry, e).to_string())
+    };
+    let named = j.get("table").and_then(|v| v.as_str());
+    let entry = match registry.resolve(named) {
+        Ok(e) => e,
+        Err(e) => return reject(stream, &e),
+    };
+    entry.stats.topk_requests.fetch_add(1, Ordering::Relaxed);
+    let query = match query_for(&entry, j, "topk") {
+        Ok(q) => q,
+        Err(e) => return reject(stream, &e),
+    };
+    let vocab = entry.backend.vocab();
+    // k = 0 asks for nothing and k > vocab asks for more than exists:
+    // both are caller bugs worth a typed answer, not a silent clamp
+    let k = match j.get("k").and_then(|v| v.as_usize()) {
+        Some(k) if k >= 1 && k <= vocab => k,
+        Some(k) => {
+            return reject(stream, &WireError::Rejected {
+                code: "bad_k".into(),
+                message: format!(
+                    "k={k} out of range [1, {vocab}] for table {:?}",
+                    entry.name),
+            })
+        }
+        None => {
+            return reject(stream, &WireError::Rejected {
+                code: "bad_request".into(),
+                message: "topk needs a positive integer k".into(),
+            })
+        }
+    };
+    // optional candidate restriction: both bounds or neither, and the
+    // window must lie inside the id space (empty lo==hi is legal)
+    let (lo, hi) = match (j.get("lo"), j.get("hi")) {
+        (None, None) => (0, vocab),
+        (Some(l), Some(h)) => match (l.as_usize(), h.as_usize()) {
+            (Some(lo), Some(hi)) if lo <= hi && hi <= vocab => (lo, hi),
+            _ => {
+                return reject(stream, &WireError::Rejected {
+                    code: "bad_range".into(),
+                    message: format!(
+                        "topk range must satisfy lo <= hi <= {vocab}"),
+                })
+            }
+        },
+        _ => {
+            return reject(stream, &WireError::Rejected {
+                code: "bad_range".into(),
+                message: "topk range needs both lo and hi (or neither)".into(),
+            })
+        }
+    };
+    if k as u64 * 2 * 64 > protocol::MAX_FRAME as u64 {
+        return reject(stream, &WireError::Rejected {
+            code: "too_large".into(),
+            message: format!(
+                "top-{k} response exceeds the JSON frame cap; lower k"),
+        });
+    }
+    let Some(sb) = entry.backend.scorer() else {
+        return reject(stream, &score_unsupported_err(&entry));
+    };
+    let _depth = entry.begin_score();
+    let t0 = std::time::Instant::now();
+    let scorer = sb.query_scorer(&query);
+    let best = crate::scoring::topk(&*scorer, lo, hi, k);
+    entry.stats.record_score_secs(t0.elapsed().as_secs_f64());
+    write_frame(stream, &Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("table", Json::str(entry.name.as_str())),
+        ("k", Json::num(best.len() as f64)),
+        ("path", Json::str(scorer.path())),
+        ("ids", Json::arr(
+            best.iter().map(|c| Json::num(c.id as f64)).collect())),
+        ("scores", Json::arr(
+            best.iter().map(|c| Json::num(c.score as f64)).collect())),
+    ]).to_string())
+}
+
 /// `snapshot` (v2 only): serialize the whole registry into a
 /// server-side directory and answer with the manifest path.
 fn snapshot_op(
@@ -665,10 +891,18 @@ fn stats_pairs(stats: &Stats) -> Vec<(&'static str, Json)> {
          Json::num(stats.ids_served.load(Ordering::Relaxed) as f64)),
         ("batches",
          Json::num(stats.batches.load(Ordering::Relaxed) as f64)),
+        ("score_requests",
+         Json::num(stats.score_requests.load(Ordering::Relaxed) as f64)),
+        ("topk_requests",
+         Json::num(stats.topk_requests.load(Ordering::Relaxed) as f64)),
     ];
     if let Some((p50, p99)) = stats.batch_latency() {
         pairs.push(("batch_p50_s", Json::num(p50)));
         pairs.push(("batch_p99_s", Json::num(p99)));
+    }
+    if let Some((p50, p99)) = stats.score_latency() {
+        pairs.push(("score_p50_s", Json::num(p50)));
+        pairs.push(("score_p99_s", Json::num(p99)));
     }
     pairs
 }
@@ -1093,7 +1327,8 @@ fn dispatch_op(
         }
         Some("stats") => stats_op(stream, registry, j, version)?,
         Some(op @ ("tables" | "load" | "unload" | "demote" | "snapshot"
-                   | "set_replicas" | "lookup_fanout")) if version < 2 => {
+                   | "set_replicas" | "lookup_fanout" | "score" | "topk"))
+            if version < 2 => {
             write_frame(stream, &err_obj(
                 "needs_v2",
                 &format!("op {op} requires protocol v2 (send \"v\": 2)"),
@@ -1103,6 +1338,8 @@ fn dispatch_op(
         Some("lookup_fanout") => {
             fanout_op(stream, registry, j, version)?
         }
+        Some("score") => score_op(stream, registry, j)?,
+        Some("topk") => topk_op(stream, registry, j)?,
         Some("tables") => tables_op(stream, registry)?,
         Some("load") => load_op(stream, registry, j)?,
         Some("unload") => unload_op(stream, registry, j)?,
@@ -1427,6 +1664,152 @@ mod tests {
             Err(WireError::NoSuchTable(t)) => assert_eq!(t, "hot"),
             other => panic!("{other:?}"),
         }
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+
+    /// The compute-on-codes plane end to end: `score` over an explicit
+    /// id list matches a client-side reconstruct-then-dot reference
+    /// within the ADC tolerance, `topk` agrees with a full client-side
+    /// sort (ids exact, best first, ties ascending), and every bad
+    /// request is a typed rejection that leaves the connection healthy.
+    #[test]
+    fn score_and_topk_over_the_wire() {
+        let emb = toy_emb(60, 8, 4, 3); // d = 12
+        let d = emb.d;
+        let rows: Vec<Vec<f32>> =
+            (0..60).map(|i| emb.reconstruct_row(i)).collect();
+        let query: Vec<f32> =
+            (0..d).map(|j| ((j as f32) * 0.37).sin()).collect();
+        let expect: Vec<f32> = rows
+            .iter()
+            .map(|r| crate::scoring::dot_serial(&query, r))
+            .collect();
+        let tol = crate::scoring::adc_tolerance(d);
+        let registry = TableRegistry::new(ServerConfig::default());
+        registry.insert("emb", Arc::new(emb)).unwrap();
+        registry
+            .insert("dense", Arc::new(DenseTable::new(
+                TensorF::zeros(vec![10, 4])).unwrap()))
+            .unwrap();
+        let server = Arc::new(EmbeddingServer::new(registry));
+        let (addr, h) = spawn_server(server.clone());
+        let mut c = Client::connect(addr).unwrap();
+        // score: explicit ids, duplicates allowed, id-list order
+        let ids = [0usize, 7, 59, 7];
+        let got = c.score("emb", &query, &ids).unwrap();
+        for (g, &i) in got.iter().zip(&ids) {
+            assert!((g - expect[i]).abs() <= tol,
+                    "id {i}: lut {g} vs reference {}", expect[i]);
+        }
+        // topk matches a client-side full sort over the reference scores
+        let mut order: Vec<usize> = (0..60).collect();
+        order.sort_by(|&a, &b|
+            expect[b].total_cmp(&expect[a]).then(a.cmp(&b)));
+        let top = c.topk("emb", &query, 5, None).unwrap();
+        assert_eq!(top.len(), 5);
+        for (rank, (id, s)) in top.iter().enumerate() {
+            assert_eq!(*id, order[rank], "rank {rank} id");
+            assert!((s - expect[*id]).abs() <= tol);
+        }
+        // range restriction: ids stay inside the window; a window
+        // smaller than k answers short, self-describing
+        let windowed = c.topk("emb", &query, 60, Some((20, 30))).unwrap();
+        assert_eq!(windowed.len(), 10);
+        assert!(windowed.iter().all(|(id, _)| (20..30).contains(id)));
+        // query_id: the query is row 3 of the same table
+        let by_id = c.score_with_id("emb", 3, &[3, 5]).unwrap();
+        for (g, &i) in by_id.iter().zip(&[3usize, 5]) {
+            let want = crate::scoring::dot_serial(&rows[3], &rows[i]);
+            assert!((g - want).abs() <= tol);
+        }
+        // dense tables take the exact path; an all-zero table scores 0
+        // everywhere and ties break by ascending id
+        let dz = c.topk("dense", &[1.0f32; 4], 3, None).unwrap();
+        assert_eq!(dz, vec![(0, 0.0), (1, 0.0), (2, 0.0)]);
+        // typed rejections -- each leaves the connection usable
+        fn code_of<T: std::fmt::Debug>(r: Result<T, WireError>) -> String {
+            match r {
+                Err(WireError::Rejected { code, .. }) => code,
+                other => panic!("expected typed rejection, got {other:?}"),
+            }
+        }
+        assert_eq!(code_of(c.score("emb", &query[..d - 1], &[0])),
+                   "width_mismatch");
+        assert_eq!(code_of(c.score("emb", &query, &[60])), "bad_ids");
+        assert_eq!(code_of(c.topk("emb", &query, 0, None)), "bad_k");
+        assert_eq!(code_of(c.topk("emb", &query, 61, None)), "bad_k");
+        assert_eq!(code_of(c.topk("emb", &query, 5, Some((40, 20)))),
+                   "bad_range");
+        assert_eq!(code_of(c.topk("emb", &query, 5, Some((0, 61)))),
+                   "bad_range");
+        match c.topk("nope", &query, 1, None) {
+            Err(WireError::NoSuchTable(t)) => assert_eq!(t, "nope"),
+            other => panic!("{other:?}"),
+        }
+        // non-finite query values are typed `malformed` at the protocol
+        // layer (JSON `1e999` parses to +inf), and a v1 frame gets
+        // needs_v2 -- raw frames, since Client can't emit either
+        let mut raw = TcpStream::connect(addr).unwrap();
+        write_frame(&mut raw,
+            r#"{"v":2,"op":"score","table":"emb","ids":[0],"query":[1e999]}"#)
+            .unwrap();
+        let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+        assert_eq!(resp.get("code").and_then(|v| v.as_str()),
+                   Some("malformed"));
+        write_frame(&mut raw, r#"{"op":"topk","k":1,"query":[0]}"#).unwrap();
+        let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+        assert_eq!(resp.get("code").and_then(|v| v.as_str()),
+                   Some("needs_v2"));
+        // missing query AND query_id is bad_request; so is missing k
+        write_frame(&mut raw, r#"{"v":2,"op":"score","table":"emb","ids":[0]}"#)
+            .unwrap();
+        let resp = Json::parse(&read_frame(&mut raw).unwrap()).unwrap();
+        assert_eq!(resp.get("code").and_then(|v| v.as_str()),
+                   Some("bad_request"));
+        // counters + the score-latency ring surface in per-table stats
+        let st = c.stats(Some("emb")).unwrap();
+        assert!(st.get("score_requests").unwrap().as_usize().unwrap() >= 4);
+        assert!(st.get("topk_requests").unwrap().as_usize().unwrap() >= 3);
+        assert!(st.get("score_p50_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(st.get("score_p99_s").unwrap().as_f64().unwrap() >= 0.0);
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+
+    /// A backend kind without the scoring capability (the trait
+    /// default) answers `score`/`topk` with the typed
+    /// `score_unsupported` code, never `internal`.
+    #[test]
+    fn score_without_capability_is_typed() {
+        struct NoScore;
+        impl crate::backend::EmbeddingBackend for NoScore {
+            fn kind(&self) -> &'static str { "external" }
+            fn d(&self) -> usize { 4 }
+            fn vocab(&self) -> usize { 8 }
+            fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]) {
+                out.fill(0.0);
+                let _ = ids;
+            }
+            fn storage_bits(&self) -> usize { 8 * 4 * 32 }
+        }
+        let registry = TableRegistry::new(ServerConfig::default());
+        registry.insert("ext", Arc::new(NoScore)).unwrap();
+        let server = Arc::new(EmbeddingServer::new(registry));
+        let (addr, h) = spawn_server(server.clone());
+        let mut c = Client::connect(addr).unwrap();
+        for r in [c.score("ext", &[0.0; 4], &[0]),
+                  c.topk("ext", &[0.0; 4], 1, None).map(|_| vec![])] {
+            match r {
+                Err(WireError::Rejected { code, .. }) => {
+                    assert_eq!(code, "score_unsupported")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // lookups on the same table still work: the capability gap is
+        // scoped to the scoring plane
+        assert_eq!(c.lookup("ext", &[0, 7]).unwrap().n(), 2);
         c.shutdown().unwrap();
         h.join().unwrap();
     }

@@ -187,6 +187,37 @@ pub(crate) fn parse_ids(j: &Json, op: &str) -> Result<Option<Vec<usize>>, WireEr
         .collect())
 }
 
+/// Strictly parse the request's `query` vector (the `score`/`topk`
+/// ops): every element must be a JSON number that is finite AND stays
+/// finite after the f32 cast. JSON has no NaN/Inf literals, but `1e999`
+/// parses to +inf and `1e39` overflows f32 -- either would silently
+/// poison every downstream score, so both are typed `malformed`
+/// rejections HERE at the protocol layer, before any compute. Returns
+/// `Ok(None)` when the frame has no `query` field (the caller may
+/// accept a `query_id` instead); a present-but-invalid query is an
+/// error.
+pub(crate) fn parse_query(j: &Json, op: &str) -> Result<Option<Vec<f32>>, WireError> {
+    let Some(q) = j.get("query") else {
+        return Ok(None);
+    };
+    let arr = q.as_arr().ok_or_else(|| {
+        WireError::Malformed(format!("{op} query is not an array"))
+    })?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, x) in arr.iter().enumerate() {
+        let n = x.as_f64().ok_or_else(|| {
+            WireError::Malformed(format!("{op} query[{i}] is not a number"))
+        })?;
+        let f = n as f32;
+        if !n.is_finite() || !f.is_finite() {
+            return Err(WireError::Malformed(format!(
+                "{op} query[{i}] is not a finite f32")));
+        }
+        out.push(f);
+    }
+    Ok(Some(out))
+}
+
 // ---- framing helpers (shared by server and client) ----
 
 /// Read one length-prefixed JSON frame (enforces the 64 MiB cap).
@@ -876,6 +907,154 @@ impl Client {
         Ok(out)
     }
 
+    fn query_json(query: &[f32]) -> Json {
+        Json::arr(query.iter().map(|&x| Json::num(x as f64)).collect())
+    }
+
+    /// Decode a `scores` array of finite numbers from a response.
+    fn scores_from(j: &Json, n_expected: Option<usize>) -> Result<Vec<f32>, WireError> {
+        let arr = j
+            .get("scores")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| WireError::Malformed("response without scores".into()))?;
+        if let Some(n) = n_expected {
+            if arr.len() != n {
+                return Err(WireError::Malformed(format!(
+                    "server answered {} scores for {n} candidates", arr.len())));
+            }
+        }
+        arr.iter()
+            .map(|x| {
+                x.as_f64().map(|v| v as f32).ok_or_else(|| {
+                    WireError::Malformed("non-numeric score entry".into())
+                })
+            })
+            .collect()
+    }
+
+    /// Score an explicit candidate id list against a query vector,
+    /// computed on the server directly over the table's compressed
+    /// representation (the ADC lookup-table path for `dpq` /
+    /// `scalar_quant`). Returns one dot-product score per id, in id-list
+    /// order. Typed rejections: `width_mismatch` (query width != table
+    /// `d`), `bad_ids`, `malformed` (non-finite query values),
+    /// `score_unsupported` (backend kind without the capability).
+    pub fn score(
+        &mut self,
+        table: &str,
+        query: &[f32],
+        ids: &[usize],
+    ) -> Result<Vec<f32>, WireError> {
+        let mut req = Self::lookup_req("score", table, ids);
+        if let Json::Obj(m) = &mut req {
+            m.insert("query".into(), Self::query_json(query));
+        }
+        let j = self.request(req)?;
+        Self::scores_from(&j, Some(ids.len()))
+    }
+
+    /// Like [`score`](Self::score), but the query is a resident row of
+    /// the SAME table (`query_id`): "how similar is everything in `ids`
+    /// to item `query_id`" without the client ever holding a vector.
+    pub fn score_with_id(
+        &mut self,
+        table: &str,
+        query_id: usize,
+        ids: &[usize],
+    ) -> Result<Vec<f32>, WireError> {
+        let mut req = Self::lookup_req("score", table, ids);
+        if let Json::Obj(m) = &mut req {
+            m.insert("query_id".into(), Json::num(query_id as f64));
+        }
+        let j = self.request(req)?;
+        Self::scores_from(&j, Some(ids.len()))
+    }
+
+    /// Top-k most-similar rows to a query vector over the whole table
+    /// (or over `lo..hi` when `range` is given), best first, ties broken
+    /// by ascending id. Returns `(id, score)` pairs -- at most
+    /// `min(k, range len)` of them. Typed rejections: `bad_k` (k = 0 or
+    /// k > vocab), `bad_range`, `width_mismatch`, `malformed`
+    /// (non-finite query values).
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use dpq_embed::server::Client;
+    ///
+    /// let mut c = Client::connect("127.0.0.1:7878".parse().unwrap())?;
+    /// let query = vec![0.25f32; 64];
+    /// for (id, score) in c.topk("emb", &query, 5, None)? {
+    ///     println!("id {id}: {score:+.4}");
+    /// }
+    /// # Ok::<(), dpq_embed::server::WireError>(())
+    /// ```
+    pub fn topk(
+        &mut self,
+        table: &str,
+        query: &[f32],
+        k: usize,
+        range: Option<(usize, usize)>,
+    ) -> Result<Vec<(usize, f32)>, WireError> {
+        let mut pairs = vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("topk")),
+            ("table", Json::str(table)),
+            ("query", Self::query_json(query)),
+            ("k", Json::num(k as f64)),
+        ];
+        if let Some((lo, hi)) = range {
+            pairs.push(("lo", Json::num(lo as f64)));
+            pairs.push(("hi", Json::num(hi as f64)));
+        }
+        let j = self.request(Json::obj(pairs))?;
+        Self::topk_from(&j)
+    }
+
+    /// Like [`topk`](Self::topk), but the query is a resident row of the
+    /// SAME table (`query_id`): "the k items most like item `query_id`"
+    /// without the client ever holding a vector. The query row itself is
+    /// in the candidate set, so it comes back ranked (first, unless the
+    /// range excludes it).
+    pub fn topk_by_id(
+        &mut self,
+        table: &str,
+        query_id: usize,
+        k: usize,
+        range: Option<(usize, usize)>,
+    ) -> Result<Vec<(usize, f32)>, WireError> {
+        let mut pairs = vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("topk")),
+            ("table", Json::str(table)),
+            ("query_id", Json::num(query_id as f64)),
+            ("k", Json::num(k as f64)),
+        ];
+        if let Some((lo, hi)) = range {
+            pairs.push(("lo", Json::num(lo as f64)));
+            pairs.push(("hi", Json::num(hi as f64)));
+        }
+        let j = self.request(Json::obj(pairs))?;
+        Self::topk_from(&j)
+    }
+
+    /// Decode a topk response into `(id, score)` pairs, best first.
+    fn topk_from(j: &Json) -> Result<Vec<(usize, f32)>, WireError> {
+        let ids = j
+            .get("ids")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| WireError::Malformed("topk response without ids".into()))?
+            .iter()
+            .map(|x| {
+                x.as_usize().ok_or_else(|| {
+                    WireError::Malformed("non-integer topk id".into())
+                })
+            })
+            .collect::<Result<Vec<usize>, WireError>>()?;
+        let scores = Self::scores_from(j, Some(ids.len()))?;
+        Ok(ids.into_iter().zip(scores).collect())
+    }
+
     /// Ask the server to snapshot its whole registry into the
     /// **server-side** directory `dir` (artifact files + versioned
     /// manifest); returns the manifest path on the server's filesystem.
@@ -1038,6 +1217,32 @@ mod tests {
         }
         let missing = Json::parse(r#"{"op":"lookup"}"#).unwrap();
         assert!(parse_ids(&missing, "lookup").is_err());
+    }
+
+    /// The non-finite fix: JSON has no NaN/Inf literals, but `1e999`
+    /// parses to +inf and `1e39` is finite as f64 yet overflows f32 --
+    /// both must be typed `malformed` rejections, never a NaN/Inf score.
+    #[test]
+    fn parse_query_rejects_non_finite_and_overflow() {
+        let ok = Json::parse(r#"{"query":[0.5,-1,3e4]}"#).unwrap();
+        assert_eq!(
+            parse_query(&ok, "score").unwrap(),
+            Some(vec![0.5f32, -1.0, 3e4])
+        );
+        let missing = Json::parse(r#"{"op":"score"}"#).unwrap();
+        assert_eq!(parse_query(&missing, "score").unwrap(), None);
+        for bad in [
+            r#"{"query":[1e999]}"#,      // f64 +inf
+            r#"{"query":[-1e999]}"#,     // f64 -inf
+            r#"{"query":[1e39]}"#,       // finite f64, overflows f32
+            r#"{"query":[-3.5e38]}"#,    // overflows f32 negative
+            r#"{"query":[1,"x"]}"#,      // non-number entry
+            r#"{"query":7}"#,            // not an array
+        ] {
+            let j = Json::parse(bad).unwrap();
+            let e = parse_query(&j, "score").unwrap_err();
+            assert_eq!(e.code(), "malformed", "{bad} -> {e}");
+        }
     }
 
     #[test]

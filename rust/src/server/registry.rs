@@ -793,6 +793,17 @@ impl TableEntry {
         self.begin_lookup(ids).wait()
     }
 
+    /// Account one `score`/`topk` request against the least-loaded
+    /// replica for the duration of its compute: scoring runs on the
+    /// connection thread directly over the shared backend `Arc` (no
+    /// batcher hop), but it is real table load, so it must be visible
+    /// to the same queue-depth signal lookup routing balances on. The
+    /// caller holds the guard across the scan and drops it when the
+    /// response is assembled.
+    pub(crate) fn begin_score(&self) -> DepthGuard {
+        DepthGuard::track(&self.pick_replica().stats)
+    }
+
     /// Close every replica's shards and join their threads (idempotent).
     fn stop(&self) {
         for rep in &self.replicas {

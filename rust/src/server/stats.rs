@@ -134,7 +134,12 @@ pub struct Stats {
     pub ids_served: AtomicU64,
     /// Micro-batches drained by this table's batcher shards.
     pub batches: AtomicU64,
+    /// `score` requests served over this table (compute-on-codes plane).
+    pub score_requests: AtomicU64,
+    /// `topk` requests served over this table.
+    pub topk_requests: AtomicU64,
     ring: LatencyRing,
+    score_ring: LatencyRing,
 }
 
 impl Stats {
@@ -152,6 +157,18 @@ impl Stats {
     /// [`LATENCY_RING`]).
     pub fn latency_samples(&self) -> usize {
         self.ring.samples()
+    }
+
+    /// Record one `score`/`topk` request's wall-clock compute time
+    /// (LUT/plan build + candidate scan; excludes frame I/O).
+    pub fn record_score_secs(&self, seconds: f64) {
+        self.score_ring.record(seconds);
+    }
+
+    /// `(p50, p99)` over the score-latency ring, `None` before the
+    /// first scoring request.
+    pub fn score_latency(&self) -> Option<(f64, f64)> {
+        self.score_ring.percentiles()
     }
 }
 

@@ -1,0 +1,266 @@
+//! Tier-1 equivalence tests for the compute-on-codes scoring subsystem
+//! (`dpq_embed::scoring` + the `score`/`topk` wire ops):
+//!
+//! - the DPQ ADC lookup-table path matches the reconstruct-then-score
+//!   reference within the documented tolerance, at every thread count,
+//!   and is bit-stable across thread counts;
+//! - the scalar-quant LUT and the dense/low-rank exact paths are
+//!   BIT-equal to the reference;
+//! - `topk` is deterministic (ids and score bits) across thread counts,
+//!   batcher shard counts and replica counts, including the f32 -> JSON
+//!   -> f32 roundtrip;
+//! - scoring a table that lives in the spill tier transparently
+//!   promotes it, answering bit-identically to an always-resident twin.
+//!
+//! `tools/tier1.sh` runs this file under the default AND `DPQ_THREADS=2`
+//! passes, so the cross-process thread invariance is pinned too.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+
+use dpq_embed::backend::DenseTable;
+use dpq_embed::dpq::toy_embedding;
+use dpq_embed::quant::{LowRank, ScalarQuant};
+use dpq_embed::scoring::{self, ScoreBackend};
+use dpq_embed::server::{
+    Client, EmbeddingServer, Residency, ServerConfig, TableRegistry,
+};
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::{pool, Rng};
+
+fn spawn(server: Arc<EmbeddingServer>)
+    -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+fn query(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..d).map(|_| rng.normal()).collect()
+}
+
+fn rand_table(n: usize, d: usize, seed: u64) -> TensorF {
+    let mut rng = Rng::new(seed);
+    TensorF {
+        shape: vec![n, d],
+        data: (0..n * d).map(|_| rng.normal()).collect(),
+    }
+}
+
+/// Score every id in `ids` with the backend's own scorer under a pinned
+/// pool size, asserting the expected path tag.
+fn scores_at(
+    sb: &dyn ScoreBackend,
+    q: &[f32],
+    ids: &[usize],
+    threads: usize,
+    want_path: &str,
+) -> Vec<f32> {
+    pool::with_threads(threads, || {
+        let scorer = sb.query_scorer(q);
+        assert_eq!(scorer.path(), want_path);
+        let mut out = vec![0.0f32; ids.len()];
+        scoring::score_into(&*scorer, ids, &mut out);
+        out
+    })
+}
+
+fn assert_bits_equal(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(), w.to_bits(),
+            "{what}: entry {i} differs ({g} vs {w})"
+        );
+    }
+}
+
+/// The DPQ ADC lookup table re-associates each subspace's partial sums,
+/// so it matches the reconstruct-then-dot reference within the
+/// documented tolerance -- and, being a per-candidate serial
+/// accumulation, it is BIT-stable across pool sizes.
+#[test]
+fn dpq_lut_matches_reference_within_tolerance() {
+    let emb = toy_embedding(300, 16, 8, 4, 11); // d = 32
+    let d = emb.d;
+    let q = query(d, 5);
+    let ids: Vec<usize> = (0..300).collect();
+    let reference = scoring::reference_scores(&emb, &q, &ids);
+    let tol = scoring::adc_tolerance(d);
+    let base = scores_at(&emb, &q, &ids, 1, "lut");
+    for (i, (g, r)) in base.iter().zip(&reference).enumerate() {
+        assert!(
+            (g - r).abs() <= tol,
+            "id {i}: lut {g} vs reference {r} (tol {tol})"
+        );
+    }
+    for threads in [2usize, 7] {
+        let got = scores_at(&emb, &q, &ids, threads, "lut");
+        assert_bits_equal(&got, &base, &format!("dpq lut at {threads} threads"));
+    }
+}
+
+/// The scalar-quant LUT holds the exact f32 products the reference
+/// computes, accumulated in the same column order -- bit-equal, not
+/// merely close. Dense and low-rank take the exact path, which IS the
+/// reference computation.
+#[test]
+fn sq_lut_and_exact_paths_are_bit_equal_to_reference() {
+    let table = rand_table(120, 16, 77);
+    let q = query(16, 9);
+    let ids: Vec<usize> = (0..120).rev().collect();
+
+    let sq = ScalarQuant::fit(&table, 8);
+    let want_sq = scoring::reference_scores(&sq, &q, &ids);
+    for threads in [1usize, 2, 7] {
+        let got = scores_at(&sq, &q, &ids, threads, "lut");
+        assert_bits_equal(&got, &want_sq, &format!("sq lut at {threads} threads"));
+    }
+
+    let dense = DenseTable::new(table.clone()).unwrap();
+    let want_dense = scoring::reference_scores(&dense, &q, &ids);
+    let lr = LowRank::fit(&table, 4);
+    let want_lr = scoring::reference_scores(&lr, &q, &ids);
+    for threads in [1usize, 2, 7] {
+        let got = scores_at(&dense, &q, &ids, threads, "exact");
+        assert_bits_equal(&got, &want_dense, &format!("dense at {threads} threads"));
+        let got = scores_at(&lr, &q, &ids, threads, "exact");
+        assert_bits_equal(&got, &want_lr, &format!("low_rank at {threads} threads"));
+    }
+}
+
+/// `topk` answers the same ids in the same order with the same score
+/// BITS at every pool size, every batcher shard count and every replica
+/// count -- including over the wire, where scores survive the
+/// f32 -> JSON -> f32 roundtrip exactly.
+#[test]
+fn topk_is_deterministic_across_threads_shards_and_replicas() {
+    let emb = toy_embedding(500, 16, 8, 4, 23); // d = 32
+    let q = query(emb.d, 3);
+    let expect = pool::with_threads(1, || {
+        scoring::topk(&*emb.query_scorer(&q), 0, 500, 25)
+    });
+    assert_eq!(expect.len(), 25);
+    // best first, ties ascending: the order the merge contract promises
+    for w in expect.windows(2) {
+        assert!(
+            w[0].score > w[1].score
+                || (w[0].score == w[1].score && w[0].id < w[1].id),
+            "topk order violated: {:?} before {:?}",
+            (w[0].id, w[0].score), (w[1].id, w[1].score)
+        );
+    }
+    for threads in [2usize, 7] {
+        let got = pool::with_threads(threads, || {
+            scoring::topk(&*emb.query_scorer(&q), 0, 500, 25)
+        });
+        assert_eq!(got.len(), expect.len());
+        for (g, e) in got.iter().zip(&expect) {
+            assert_eq!(g.id, e.id, "{threads} threads: id order");
+            assert_eq!(
+                g.score.to_bits(), e.score.to_bits(),
+                "{threads} threads: score bits"
+            );
+        }
+    }
+    // over the wire, across server topologies
+    for (shards, replicas) in [(1usize, 1usize), (2, 1), (2, 2)] {
+        let registry = TableRegistry::new(ServerConfig {
+            max_batch: 16,
+            shards_per_table: shards,
+            ..ServerConfig::default()
+        });
+        registry
+            .insert("emb", Arc::new(toy_embedding(500, 16, 8, 4, 23)))
+            .unwrap();
+        let server = Arc::new(EmbeddingServer::new(registry));
+        let (addr, h) = spawn(server);
+        let mut c = Client::connect(addr).unwrap();
+        if replicas > 1 {
+            c.admin_set_replicas("emb", replicas).unwrap();
+        }
+        let got = c.topk("emb", &q, 25, None).unwrap();
+        assert_eq!(got.len(), expect.len());
+        for (g, e) in got.iter().zip(&expect) {
+            assert_eq!(g.0, e.id, "{shards} shards / {replicas} replicas: ids");
+            assert_eq!(
+                g.1.to_bits(), e.score.to_bits(),
+                "{shards} shards / {replicas} replicas: the JSON roundtrip \
+                 must be exact"
+            );
+        }
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+}
+
+/// Scoring a table that was demoted to the spill tier transparently
+/// promotes it -- same contract as lookup -- and every answer is
+/// bit-identical to an always-resident twin registry serving the same
+/// artifact.
+#[test]
+fn scoring_a_spilled_table_transparently_promotes_it() {
+    let dir: PathBuf =
+        std::env::temp_dir().join("dpq_scoring_equivalence_spill");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let make = || toy_embedding(200, 8, 4, 4, 91); // d = 16
+    let q = query(16, 41);
+    let ids: Vec<usize> = (0..40).map(|i| (i * 13) % 200).collect();
+
+    let resident = TableRegistry::new(ServerConfig::default());
+    resident.insert("t", Arc::new(make())).unwrap();
+    let (addr_r, h_r) = spawn(Arc::new(EmbeddingServer::new(resident)));
+    let mut c_res = Client::connect(addr_r).unwrap();
+
+    let spilling = TableRegistry::new(ServerConfig {
+        spill_dir: Some(dir.clone()),
+        ..ServerConfig::default()
+    });
+    spilling.insert("t", Arc::new(make())).unwrap();
+    let (addr_s, h_s) = spawn(Arc::new(EmbeddingServer::new(spilling)));
+    let mut c_spill = Client::connect(addr_s).unwrap();
+
+    // demote, prove it left residency, then let topk promote it back
+    c_spill.admin_demote("t").unwrap();
+    let st = c_spill.stats(Some("t")).unwrap();
+    assert_eq!(
+        st.get("residency").and_then(|v| v.as_str()),
+        Some(Residency::Spilled.as_str())
+    );
+    let top_s = c_spill.topk("t", &q, 9, None).unwrap();
+    let top_r = c_res.topk("t", &q, 9, None).unwrap();
+    assert_eq!(top_s.len(), top_r.len());
+    for (s, r) in top_s.iter().zip(&top_r) {
+        assert_eq!(s.0, r.0, "spilled-vs-resident topk ids");
+        assert_eq!(s.1.to_bits(), r.1.to_bits(), "spilled-vs-resident bits");
+    }
+    let st = c_spill.stats(Some("t")).unwrap();
+    assert_eq!(
+        st.get("residency").and_then(|v| v.as_str()),
+        Some(Residency::Resident.as_str()),
+        "topk on a spilled table must promote it"
+    );
+
+    // demote again and drive the promotion through `score` this time
+    c_spill.admin_demote("t").unwrap();
+    let s_scores = c_spill.score("t", &q, &ids).unwrap();
+    let r_scores = c_res.score("t", &q, &ids).unwrap();
+    assert_bits_equal(&s_scores, &r_scores, "spilled-vs-resident score");
+
+    // ... and query_id resolution promotes too (the query row itself
+    // comes off the just-promoted table)
+    c_spill.admin_demote("t").unwrap();
+    let s_byid = c_spill.score_with_id("t", 7, &ids).unwrap();
+    let r_byid = c_res.score_with_id("t", 7, &ids).unwrap();
+    assert_bits_equal(&s_byid, &r_byid, "spilled-vs-resident score_with_id");
+
+    for (mut c, h) in [(c_res, h_r), (c_spill, h_s)] {
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

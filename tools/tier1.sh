@@ -24,6 +24,11 @@
 # via conn_hardening, and a 2000-iteration seeded fuzz of the live wire
 # runs in BOTH thread passes -- zero panics, wedges, or unclean closes
 # is a tier-1 gate, not a nightly aspiration.
+#
+# Compute-on-codes coverage: scoring_equivalence (ADC LUT vs
+# reconstruct-then-score reference, topk determinism across threads /
+# shards / replicas, spilled-table scoring) runs in BOTH thread passes --
+# score bits must not depend on the pool size.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -34,7 +39,7 @@ target/release/repro fuzz --seed 42 --iters 2000
 DPQ_THREADS=2 cargo test -q --test multi_table --test server_integration \
     --test registry_lifecycle --test residency_faults --test residency_soak \
     --test replica_equivalence --test spill_recovery \
-    --test conn_hardening --test fuzz_corpus
+    --test conn_hardening --test fuzz_corpus --test scoring_equivalence
 DPQ_THREADS=2 target/release/repro fuzz --seed 42 --iters 2000
 RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps -q
 for f in docs/*.md; do

@@ -8,6 +8,7 @@
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
+use dpq_embed::backend::{DenseTable, MultiGranular};
 use dpq_embed::dpq::toy_embedding;
 use dpq_embed::quant::ScalarQuant;
 use dpq_embed::scoring::{self, ExactScorer, ScoreBackend};
@@ -88,6 +89,36 @@ fn drive(server: Arc<EmbeddingServer>, tables: &[(&str, usize)], clients: usize,
     }
     c.shutdown().unwrap();
     h.join().unwrap();
+}
+
+/// Bind `server` on an ephemeral port and return its address + thread.
+fn boot(server: Arc<EmbeddingServer>)
+    -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+/// Normalized Zipf(s) CDF over ranks `1..=n` (harmonic weights).
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut cdf = Vec::with_capacity(n);
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        acc += 1.0 / ((i + 1) as f64).powf(s);
+        cdf.push(acc);
+    }
+    for v in &mut cdf {
+        *v /= acc;
+    }
+    cdf
+}
+
+/// One Zipf draw: a 53-bit uniform into the CDF by binary search.
+fn zipf_sample(cdf: &[f64], rng: &mut Rng) -> usize {
+    let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+    cdf.partition_point(|&c| c < u).min(cdf.len() - 1)
 }
 
 fn main() {
@@ -514,4 +545,109 @@ fn main() {
     bench::record("score_p99", p99, 0.0, iters + topk_iters);
     c.shutdown().unwrap();
     h.join().unwrap();
+
+    // Skew-aware serving: a seeded Zipfian id stream (the access skew
+    // the hot-row cache banks on) at two exponents, cache off vs 64 MiB
+    // on the same table. tests/cache_equivalence.rs proves the cache is
+    // bit-invisible, so this records pure latency + hit-rate movement.
+    // The untagged records use s=1.2; the gentler s=1.01 runs carry a
+    // _s101 suffix.
+    section("skew-aware serving: Zipf lookups, row cache 0 vs 64M");
+    let zvocab = 100_000usize;
+    let zemb = toy_embedding(zvocab, 32, 16, 4, 37); // d = 64
+    for (s_tag, s) in [("_s101", 1.01f64), ("", 1.2)] {
+        let cdf = zipf_cdf(zvocab, s);
+        for (c_tag, cache) in [("cache0", 0u64), ("cache64M", 64 << 20)] {
+            let registry = TableRegistry::open(ServerConfig {
+                max_batch: 64,
+                row_cache_bytes: cache,
+                ..ServerConfig::default()
+            })
+            .unwrap();
+            registry.insert("emb", Arc::new(zemb.clone())).unwrap();
+            let (addr, h) = boot(Arc::new(EmbeddingServer::new(registry)));
+            let mut c = Client::connect(addr).unwrap();
+            let mut rng = Rng::new(97);
+            let reqs = 600usize;
+            let t0 = Instant::now();
+            for _ in 0..reqs {
+                let ids: Vec<usize> =
+                    (0..16).map(|_| zipf_sample(&cdf, &mut rng)).collect();
+                c.lookup_bin("emb", &ids).unwrap();
+            }
+            let lat = t0.elapsed().as_secs_f64() / reqs as f64;
+            let st = c.stats(Some("emb")).unwrap();
+            let rate = st.get("cache_hit_rate").and_then(|v| v.as_f64())
+                .unwrap_or(0.0);
+            println!(
+                "zipf s={s} {c_tag}: {:.1}us/req, cache hit rate {:.3}",
+                lat * 1e6, rate
+            );
+            bench::record(&format!("lookup_zipf_{c_tag}{s_tag}"), lat,
+                          0.0, reqs);
+            if cache > 0 {
+                bench::record(&format!("cache_hit_rate{s_tag}"), rate,
+                              0.0, reqs);
+            }
+            c.shutdown().unwrap();
+            h.join().unwrap();
+        }
+    }
+
+    // MGQE-style multi-granular table (raw dense head for the hot ids,
+    // DPQ tail for the cold mass) vs a flat DPQ table of the same
+    // shape, under the same skewed stream: the head rows skip the
+    // codebook gather entirely, which is the whole point of routing by
+    // frequency.
+    section("skew-aware serving: multi-granular (dense head) vs flat dpq");
+    let head_n = 2_000usize;
+    let head = {
+        let mut rng = Rng::new(39);
+        TensorF {
+            shape: vec![head_n, 64],
+            data: (0..head_n * 64).map(|_| rng.normal()).collect(),
+        }
+    };
+    let mg = MultiGranular::new(vec![
+        (0, Arc::new(DenseTable::new(head).unwrap()) as _),
+        (head_n, Arc::new(toy_embedding(zvocab - head_n, 32, 16, 4, 38))
+            as _),
+    ])
+    .unwrap();
+    let cdf = zipf_cdf(zvocab, 1.2);
+    let mut lats = [0.0f64; 2];
+    for (i, backend) in [
+        Arc::new(mg) as Arc<dyn dpq_embed::backend::EmbeddingBackend>,
+        Arc::new(zemb.clone()) as _,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let registry = TableRegistry::new(ServerConfig {
+            max_batch: 64,
+            ..ServerConfig::default()
+        });
+        registry.insert("emb", backend).unwrap();
+        let (addr, h) = boot(Arc::new(EmbeddingServer::new(registry)));
+        let mut c = Client::connect(addr).unwrap();
+        let mut rng = Rng::new(97); // same stream for both contenders
+        let reqs = 600usize;
+        let t0 = Instant::now();
+        for _ in 0..reqs {
+            let ids: Vec<usize> =
+                (0..16).map(|_| zipf_sample(&cdf, &mut rng)).collect();
+            c.lookup_bin("emb", &ids).unwrap();
+        }
+        lats[i] = t0.elapsed().as_secs_f64() / reqs as f64;
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+    let [mg_lat, dpq_lat] = lats;
+    println!(
+        "multi-granular {:.1}us/req vs flat dpq {:.1}us/req ({:.2}x)",
+        mg_lat * 1e6, dpq_lat * 1e6, mg_lat / dpq_lat.max(1e-12)
+    );
+    bench::record("lookup_zipf_multigranular", mg_lat, 0.0, 600);
+    bench::record("multigranular_vs_dpq", mg_lat / dpq_lat.max(1e-12),
+                  0.0, 600);
 }

@@ -13,7 +13,11 @@
 //! * [`crate::dpq::CompressedEmbedding`] -- the DPQ artifact (`kind = "dpq"`),
 //! * [`crate::quant::ScalarQuant`] -- b-bit uniform codes (`"scalar_quant"`),
 //! * [`crate::quant::LowRank`] -- truncated-SVD factors (`"low_rank"`),
-//! * [`DenseTable`] -- the uncompressed `[n, d]` baseline (`"dense"`).
+//! * [`DenseTable`] -- the uncompressed `[n, d]` baseline (`"dense"`),
+//! * [`MultiGranular`] -- id ranges routed to per-segment sub-backends,
+//!   the MGQE dense-head/DPQ-tail arrangement (`"multi_granular"`),
+//! * [`HashingTable`] -- the hashing-trick baseline: ids share bucket
+//!   rows through a fixed hash (`"hashing"`).
 //!
 //! Gathers must be *deterministic across thread counts*: every impl
 //! routes through [`gather_rows_pooled`], which shards rows over the
@@ -23,10 +27,14 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::tensor::TensorF;
 use crate::util::pool;
+
+pub mod multigranular;
+
+pub use multigranular::{HashingTable, MultiGranular};
 
 /// A row store the embedding server can host as one named table.
 ///
@@ -90,7 +98,31 @@ pub fn load_backend(kind: &str, path: &Path) -> Result<std::sync::Arc<dyn Embedd
         "dense" => std::sync::Arc::new(DenseTable::load(path)?),
         "scalar_quant" => std::sync::Arc::new(crate::quant::ScalarQuant::load(path)?),
         "low_rank" => std::sync::Arc::new(crate::quant::LowRank::load(path)?),
-        other => bail!("unknown backend kind {other:?} (not one of dpq, dense, scalar_quant, low_rank)"),
+        "multi_granular" => std::sync::Arc::new(MultiGranular::load(path)?),
+        "hashing" => std::sync::Arc::new(HashingTable::load(path)?),
+        other => bail!("unknown backend kind {other:?} (not one of dpq, dense, scalar_quant, low_rank, multi_granular, hashing)"),
+    })
+}
+
+/// Map an artifact file's 4-byte magic to its backend kind, so the
+/// admin `load` op can hot-load any in-crate artifact without being
+/// told the kind (snapshot and spill manifests record kinds explicitly
+/// and never need this). Short files and unknown magics fail typed.
+pub fn sniff_kind(path: &Path) -> Result<&'static str> {
+    use std::io::Read as _;
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)
+        .with_context(|| format!("read artifact magic of {path:?}"))?;
+    Ok(match &magic {
+        b"DPQE" => "dpq",
+        b"DPQD" => "dense",
+        b"DPQS" => "scalar_quant",
+        b"DPQL" => "low_rank",
+        b"DPQM" => "multi_granular",
+        b"DPQH" => "hashing",
+        other => bail!("unknown artifact magic {other:?} in {path:?}"),
     })
 }
 

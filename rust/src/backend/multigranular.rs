@@ -1,0 +1,555 @@
+//! Multi-granular and hashing-trick embedding backends.
+//!
+//! [`MultiGranular`] is the MGQE serving arrangement: one logical id
+//! space routed across differently-compressed sub-backends by id range
+//! -- typically an uncompressed (or lightly compressed) head for the
+//! frequent ids and an aggressively compressed DPQ tail for the long
+//! tail, matching the skew of real lookup traffic. [`HashingTable`] is
+//! the compositional hashing-trick baseline the paper compares against:
+//! ids share bucket rows via a hash, trading collisions for memory.
+//!
+//! Both are full [`EmbeddingBackend`]s: they serve through the registry
+//! (snapshot/spill/restore included) and score through the exact
+//! reconstruct-then-dot path, so every determinism guarantee the server
+//! makes holds for them unchanged.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{artifact_io, gather_rows_pooled, EmbeddingBackend};
+use crate::tensor::TensorF;
+
+/// Longest backend kind tag accepted when parsing an embedded segment
+/// header: kinds are short scheme names, so anything longer is a
+/// corrupt length field, rejected before it can size an allocation.
+const MAX_KIND_LEN: u64 = 64;
+
+/// Per-process sequence for the temp files embedded sub-artifacts pass
+/// through (two concurrent save/load calls must not share a path).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmp_path(stem: &str) -> PathBuf {
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "dpq_mg_{stem}.{}-{seq}.tmp", std::process::id()))
+}
+
+/// One contiguous id range served by one sub-backend: global ids
+/// `start..end` map to sub-backend rows `0..end-start`.
+struct Segment {
+    start: usize,
+    end: usize,
+    backend: Arc<dyn EmbeddingBackend>,
+}
+
+/// Multi-granular table: a partition of `0..vocab` into contiguous
+/// segments, each served by its own sub-backend (MGQE: dense head +
+/// DPQ tail). Rows are bit-identical to querying the owning sub-backend
+/// directly, so the arrangement is invisible to every serving contract.
+pub struct MultiGranular {
+    segments: Vec<Segment>,
+    d: usize,
+    vocab: usize,
+}
+
+impl MultiGranular {
+    /// Assemble segments from `(start, backend)` pairs; each segment
+    /// covers `start .. start + backend.vocab()`. The pairs must tile
+    /// `0..vocab` exactly in order: a first segment not starting at 0,
+    /// a gap, or an overlap is a typed construction error (so a
+    /// mis-specified head/tail split fails loudly instead of serving
+    /// rows from the wrong store). Sub-backends must agree on `d`, and
+    /// nesting a `multi_granular` inside another is rejected -- segments
+    /// are leaf stores, which keeps the artifact format non-recursive.
+    pub fn new(segments: Vec<(usize, Arc<dyn EmbeddingBackend>)>) -> Result<Self> {
+        if segments.is_empty() {
+            bail!("MultiGranular needs at least one segment");
+        }
+        let d = segments[0].1.d();
+        let mut segs = Vec::with_capacity(segments.len());
+        let mut cursor = 0usize;
+        for (i, (start, backend)) in segments.into_iter().enumerate() {
+            if backend.kind() == "multi_granular" {
+                bail!("segment {i} is itself multi_granular: segments \
+                       must be leaf backends");
+            }
+            if backend.d() != d {
+                bail!("segment {i} has d={} but segment 0 has d={d}",
+                      backend.d());
+            }
+            if backend.vocab() == 0 {
+                bail!("segment {i} is empty (sub-backend vocab 0)");
+            }
+            if start > cursor {
+                bail!("gap in id space: segment {i} starts at {start} but \
+                       coverage ends at {cursor}");
+            }
+            if start < cursor {
+                bail!("overlapping segments: segment {i} starts at {start} \
+                       inside the range ending at {cursor}");
+            }
+            let end = start
+                .checked_add(backend.vocab())
+                .with_context(|| format!("segment {i} overflows the id space"))?;
+            segs.push(Segment { start, end, backend });
+            cursor = end;
+        }
+        Ok(MultiGranular { segments: segs, d, vocab: cursor })
+    }
+
+    /// Number of segments.
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// The segment boundaries as `(start, end, kind)` in id order
+    /// (surfaced by tests and tooling; the routing itself is internal).
+    pub fn segment_ranges(&self) -> Vec<(usize, usize, &'static str)> {
+        self.segments
+            .iter()
+            .map(|s| (s.start, s.end, s.backend.kind()))
+            .collect()
+    }
+
+    /// Index of the segment owning `id` (callers validated `id < vocab`).
+    fn segment_of(&self, id: usize) -> usize {
+        self.segments.partition_point(|s| s.end <= id)
+    }
+
+    /// Write the `DPQM` artifact: magic, `vocab`/`d`/`n_segments`/
+    /// `payload_bytes` header, then per segment `end`, kind tag, and the
+    /// sub-backend's own artifact bytes embedded verbatim (serialized
+    /// through a temp file -- one serialization path per kind, reused).
+    /// Bit-exact roundtrip through [`load`](Self::load).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        use std::io::Write as _;
+        let mut blob: Vec<u8> = Vec::new();
+        for (i, seg) in self.segments.iter().enumerate() {
+            let tmp = tmp_path("seg");
+            let written = seg
+                .backend
+                .save_artifact(&tmp)
+                .and_then(|_| {
+                    std::fs::read(&tmp)
+                        .with_context(|| format!("read back {tmp:?}"))
+                });
+            let _ = std::fs::remove_file(&tmp);
+            let bytes = written
+                .with_context(|| format!("serialize segment {i}"))?;
+            let kind = seg.backend.kind().as_bytes();
+            blob.extend_from_slice(&(seg.end as u64).to_le_bytes());
+            blob.extend_from_slice(&(kind.len() as u64).to_le_bytes());
+            blob.extend_from_slice(kind);
+            blob.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            blob.extend_from_slice(&bytes);
+        }
+        let mut w = artifact_io::create(path, b"DPQM", &[
+            self.vocab as u64,
+            self.d as u64,
+            self.segments.len() as u64,
+            blob.len() as u64,
+        ])?;
+        w.write_all(&blob)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a `DPQM` artifact written by [`save`](Self::save). Every
+    /// segment is revalidated through [`new`](Self::new), so a
+    /// hand-edited artifact with overlapping or gapped ranges fails
+    /// with the same typed errors as direct construction.
+    pub fn load(path: &Path) -> Result<Self> {
+        use std::io::Read as _;
+        let (mut r, dims) =
+            artifact_io::open(path, b"DPQM", 4, |d| Some(d[3] as u128))?;
+        let (vocab, d, n_seg) =
+            (dims[0] as usize, dims[1] as usize, dims[2] as usize);
+        let mut blob = vec![0u8; dims[3] as usize];
+        r.read_exact(&mut blob)?;
+        fn take_u64(blob: &[u8], at: &mut usize, path: &Path) -> Result<u64> {
+            let Some(b) = blob.get(*at..*at + 8) else {
+                bail!("corrupt segment blob in {path:?}: truncated header");
+            };
+            *at += 8;
+            Ok(u64::from_le_bytes(b.try_into().unwrap()))
+        }
+        let mut at = 0usize;
+        let mut segments: Vec<(usize, Arc<dyn EmbeddingBackend>)> =
+            Vec::with_capacity(n_seg);
+        let mut start = 0usize;
+        for i in 0..n_seg {
+            let end = take_u64(&blob, &mut at, path)?;
+            let kind_len = take_u64(&blob, &mut at, path)?;
+            if kind_len > MAX_KIND_LEN {
+                bail!("corrupt segment {i} in {path:?}: kind length {kind_len}");
+            }
+            let Some(kind) = blob
+                .get(at..at + kind_len as usize)
+                .and_then(|b| std::str::from_utf8(b).ok())
+                .map(str::to_string)
+            else {
+                bail!("corrupt segment {i} in {path:?}: bad kind tag");
+            };
+            at += kind_len as usize;
+            let byte_len = take_u64(&blob, &mut at, path)?;
+            // checked end: a hostile 64-bit length must fail typed, not
+            // overflow the slice arithmetic
+            let Some(bytes) = at
+                .checked_add(byte_len as usize)
+                .and_then(|e| blob.get(at..e))
+            else {
+                bail!("corrupt segment {i} in {path:?}: truncated payload");
+            };
+            at += byte_len as usize;
+            // the embedded bytes ARE the segment kind's own artifact:
+            // round them through a temp file into the kind's loader so
+            // its magic/size checks apply unchanged
+            let tmp = tmp_path("load");
+            let loaded = std::fs::write(&tmp, bytes)
+                .with_context(|| format!("stage segment {i} to {tmp:?}"))
+                .and_then(|_| crate::backend::load_backend(&kind, &tmp));
+            let _ = std::fs::remove_file(&tmp);
+            let backend =
+                loaded.with_context(|| format!("load segment {i} of {path:?}"))?;
+            segments.push((start, backend));
+            start = end as usize;
+        }
+        if at != blob.len() {
+            bail!("corrupt segment blob in {path:?}: {} trailing bytes",
+                  blob.len() - at);
+        }
+        let mg = MultiGranular::new(segments)?;
+        if mg.vocab != vocab || mg.d != d {
+            bail!(
+                "artifact {path:?} header declares [{vocab}, {d}] but \
+                 segments assemble to [{}, {}]", mg.vocab, mg.d);
+        }
+        Ok(mg)
+    }
+}
+
+impl EmbeddingBackend for MultiGranular {
+    fn kind(&self) -> &'static str {
+        "multi_granular"
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]) {
+        let d = self.d;
+        assert_eq!(out.len(), ids.len() * d);
+        // Group ids by owning segment, gather each group through the
+        // sub-backend's own pooled gather, then scatter to the request
+        // positions. Each sub-gather is thread-count invariant and the
+        // scatter is positional, so the whole gather is too -- and the
+        // pool is entered once per segment, never nested.
+        let mut local: Vec<Vec<usize>> = vec![Vec::new(); self.segments.len()];
+        let mut pos: Vec<Vec<usize>> = vec![Vec::new(); self.segments.len()];
+        for (p, &id) in ids.iter().enumerate() {
+            let si = self.segment_of(id);
+            local[si].push(id - self.segments[si].start);
+            pos[si].push(p);
+        }
+        for (si, seg) in self.segments.iter().enumerate() {
+            if local[si].is_empty() {
+                continue;
+            }
+            let mut flat = vec![0.0f32; local[si].len() * d];
+            seg.backend.reconstruct_rows_into(&local[si], &mut flat);
+            for (k, &p) in pos[si].iter().enumerate() {
+                out[p * d..(p + 1) * d]
+                    .copy_from_slice(&flat[k * d..(k + 1) * d]);
+            }
+        }
+    }
+
+    fn storage_bits(&self) -> usize {
+        // sub-backend storage plus two u64 range bounds per segment
+        self.segments
+            .iter()
+            .map(|s| s.backend.storage_bits() + 128)
+            .sum()
+    }
+
+    fn save_artifact(&self, path: &Path) -> Result<()> {
+        self.save(path)
+    }
+
+    fn scorer(&self) -> Option<&dyn crate::scoring::ScoreBackend> {
+        Some(self)
+    }
+}
+
+/// Multi-granular scoring is the exact path: reconstruct (routed to the
+/// owning segment) then serial dot. Sub-backends may have ADC fast
+/// paths, but stitching per-segment LUT scores would change result bits
+/// at segment boundaries -- exact-everywhere keeps `score`/`topk`
+/// answers bit-identical to a single-backend table of the same rows.
+impl crate::scoring::ScoreBackend for MultiGranular {
+    fn query_scorer<'a>(
+        &'a self,
+        query: &'a [f32],
+    ) -> Box<dyn crate::scoring::QueryScorer + 'a> {
+        Box::new(crate::scoring::ExactScorer::new(self, query))
+    }
+}
+
+/// The hashing-trick baseline: `vocab` logical ids share `buckets`
+/// dense rows through an FNV-1a hash, so memory scales with the bucket
+/// count while collisions blur the embedding. Serves and scores through
+/// the same contracts as every other backend (`kind = "hashing"`).
+pub struct HashingTable {
+    vocab: usize,
+    table: TensorF, // [buckets, d]
+}
+
+impl HashingTable {
+    /// Wrap a `[buckets, d]` bucket table serving `vocab` logical ids.
+    pub fn new(vocab: usize, table: TensorF) -> Result<Self> {
+        if table.shape.len() != 2 {
+            bail!("HashingTable expects [buckets, d], got {:?}", table.shape);
+        }
+        if vocab == 0 || table.shape[0] == 0 || table.shape[1] == 0 {
+            bail!(
+                "HashingTable has degenerate shape: vocab={vocab}, \
+                 buckets={}, d={}", table.shape[0], table.shape[1]);
+        }
+        Ok(HashingTable { vocab, table })
+    }
+
+    /// Compress a full `[vocab, d]` table into `buckets` rows by
+    /// averaging the rows that hash to each bucket (empty buckets stay
+    /// zero) -- the standard post-hoc hashing-trick baseline the
+    /// DPQ/MGQE comparisons run against.
+    pub fn compress(full: &TensorF, buckets: usize) -> Result<Self> {
+        if full.shape.len() != 2 {
+            bail!("HashingTable expects [vocab, d], got {:?}", full.shape);
+        }
+        let (vocab, d) = (full.shape[0], full.shape[1]);
+        let mut table = TensorF::zeros(vec![buckets.max(1), d]);
+        let mut counts = vec![0u32; buckets.max(1)];
+        let probe = HashingTable::new(vocab.max(1), table.clone())?;
+        for id in 0..vocab {
+            let b = probe.bucket_of(id);
+            counts[b] += 1;
+            let row = full.row(id);
+            let dst = &mut table.data[b * d..(b + 1) * d];
+            for (o, v) in dst.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        for (b, &c) in counts.iter().enumerate() {
+            if c > 1 {
+                for v in &mut table.data[b * d..(b + 1) * d] {
+                    *v /= c as f32;
+                }
+            }
+        }
+        HashingTable::new(vocab, table)
+    }
+
+    /// Bucket count (rows actually stored).
+    pub fn buckets(&self) -> usize {
+        self.table.shape[0]
+    }
+
+    /// The bucket `id` reads from: FNV-1a over the id's LE bytes. Fixed
+    /// (not seeded) so an artifact round-trip cannot re-route ids.
+    pub fn bucket_of(&self, id: usize) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in (id as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1_0000_0000_01b3);
+        }
+        (h % self.buckets() as u64) as usize
+    }
+
+    /// Write the `DPQH` artifact: magic, `vocab`/`buckets`/`d` header,
+    /// raw f32 LE bucket rows. Bit-exact roundtrip through
+    /// [`load`](Self::load).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        use std::io::Write as _;
+        let (buckets, d) = (self.table.shape[0], self.table.shape[1]);
+        let mut w = artifact_io::create(path, b"DPQH", &[
+            self.vocab as u64, buckets as u64, d as u64,
+        ])?;
+        artifact_io::write_f32s(&mut w, &self.table.data)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a `DPQH` artifact written by [`save`](Self::save).
+    pub fn load(path: &Path) -> Result<Self> {
+        let (mut r, dims) = artifact_io::open(path, b"DPQH", 3, |d| {
+            (d[1] as u128).checked_mul(d[2] as u128)?.checked_mul(4)
+        })?;
+        let (vocab, buckets, d) =
+            (dims[0] as usize, dims[1] as usize, dims[2] as usize);
+        let data = artifact_io::read_f32s(&mut r, buckets * d)?;
+        HashingTable::new(vocab, TensorF { shape: vec![buckets, d], data })
+    }
+}
+
+impl EmbeddingBackend for HashingTable {
+    fn kind(&self) -> &'static str {
+        "hashing"
+    }
+
+    fn d(&self) -> usize {
+        self.table.shape[1]
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn reconstruct_rows_into(&self, ids: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), ids.len() * self.d());
+        gather_rows_pooled(self.d(), ids.len(), out, |r, orow| {
+            orow.copy_from_slice(self.table.row(self.bucket_of(ids[r])));
+        });
+    }
+
+    fn storage_bits(&self) -> usize {
+        32 * self.table.numel()
+    }
+
+    fn save_artifact(&self, path: &Path) -> Result<()> {
+        self.save(path)
+    }
+
+    fn scorer(&self) -> Option<&dyn crate::scoring::ScoreBackend> {
+        Some(self)
+    }
+}
+
+/// Hashing scoring is the exact path: a bucket-row copy then serial dot.
+impl crate::scoring::ScoreBackend for HashingTable {
+    fn query_scorer<'a>(
+        &'a self,
+        query: &'a [f32],
+    ) -> Box<dyn crate::scoring::QueryScorer + 'a> {
+        Box::new(crate::scoring::ExactScorer::new(self, query))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::DenseTable;
+    use crate::util::pool::with_threads;
+    use crate::util::Rng;
+
+    fn toy_table(n: usize, d: usize, seed: u64) -> TensorF {
+        let mut rng = Rng::new(seed);
+        TensorF {
+            shape: vec![n, d],
+            data: (0..n * d).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    fn dense(n: usize, d: usize, seed: u64) -> Arc<dyn EmbeddingBackend> {
+        Arc::new(DenseTable::new(toy_table(n, d, seed)).unwrap())
+    }
+
+    #[test]
+    fn multigranular_routes_ids_to_owning_segment() {
+        let head = toy_table(10, 4, 1);
+        let tail = toy_table(30, 4, 2);
+        let mg = MultiGranular::new(vec![
+            (0, Arc::new(DenseTable::new(head.clone()).unwrap()) as _),
+            (10, Arc::new(DenseTable::new(tail.clone()).unwrap()) as _),
+        ])
+        .unwrap();
+        assert_eq!((mg.vocab(), mg.d(), mg.segment_count()), (40, 4, 2));
+        // boundary ids: 9 is the head's last row, 10 the tail's first
+        let ids = [9usize, 10, 0, 39, 10];
+        let mut out = vec![0.0f32; ids.len() * 4];
+        mg.reconstruct_rows_into(&ids, &mut out);
+        for (r, &id) in ids.iter().enumerate() {
+            let want = if id < 10 { head.row(id) } else { tail.row(id - 10) };
+            assert_eq!(&out[r * 4..(r + 1) * 4], want, "id {id}");
+        }
+    }
+
+    #[test]
+    fn multigranular_gather_is_thread_count_invariant() {
+        let mg = MultiGranular::new(vec![
+            (0, dense(16, 8, 3)),
+            (16, dense(64, 8, 4)),
+            (80, dense(20, 8, 5)),
+        ])
+        .unwrap();
+        let ids: Vec<usize> = (0..301).map(|i| (i * 37) % 100).collect();
+        let mut base = vec![0.0f32; ids.len() * 8];
+        with_threads(1, || mg.reconstruct_rows_into(&ids, &mut base));
+        for threads in [2usize, 7] {
+            let mut got = vec![0.0f32; ids.len() * 8];
+            with_threads(threads, || mg.reconstruct_rows_into(&ids, &mut got));
+            assert!(
+                got.iter().zip(&base).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn multigranular_rejects_bad_partitions() {
+        // gap: second segment starts past the head's end
+        let err = MultiGranular::new(vec![(0, dense(10, 4, 1)), (12, dense(5, 4, 2))])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("gap"), "{err}");
+        // overlap: second segment starts inside the head
+        let err = MultiGranular::new(vec![(0, dense(10, 4, 1)), (8, dense(5, 4, 2))])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overlap"), "{err}");
+        // first segment must start at 0
+        assert!(MultiGranular::new(vec![(3, dense(10, 4, 1))]).is_err());
+        // d mismatch, empty list, empty tail segment
+        assert!(MultiGranular::new(vec![(0, dense(10, 4, 1)), (10, dense(5, 6, 2))])
+            .is_err());
+        assert!(MultiGranular::new(vec![]).is_err());
+        let empty = Arc::new(DenseTable::new(TensorF::zeros(vec![0, 4])).unwrap());
+        assert!(MultiGranular::new(vec![(0, dense(10, 4, 1)), (10, empty as _)])
+            .is_err());
+        // no nesting
+        let inner = Arc::new(MultiGranular::new(vec![(0, dense(4, 4, 1))]).unwrap());
+        let err = MultiGranular::new(vec![(0, inner as _)]).unwrap_err().to_string();
+        assert!(err.contains("leaf"), "{err}");
+    }
+
+    #[test]
+    fn hashing_table_is_deterministic_and_collides_consistently() {
+        let ht = HashingTable::compress(&toy_table(100, 6, 7), 16).unwrap();
+        assert_eq!((ht.vocab(), ht.d(), ht.buckets()), (100, 6, 16));
+        assert_eq!(ht.storage_bits(), 32 * 16 * 6);
+        let ids: Vec<usize> = (0..100).collect();
+        let mut base = vec![0.0f32; ids.len() * 6];
+        with_threads(1, || ht.reconstruct_rows_into(&ids, &mut base));
+        for threads in [2usize, 7] {
+            let mut got = vec![0.0f32; ids.len() * 6];
+            with_threads(threads, || ht.reconstruct_rows_into(&ids, &mut got));
+            assert!(
+                got.iter().zip(&base).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}"
+            );
+        }
+        // two ids in the same bucket serve identical rows
+        let (a, b) = (0usize, (1..100).find(|&i| ht.bucket_of(i) == ht.bucket_of(0))
+            .expect("100 ids into 16 buckets must collide"));
+        assert_eq!(&base[a * 6..a * 6 + 6], &base[b * 6..b * 6 + 6]);
+        assert!(HashingTable::new(0, toy_table(4, 2, 1)).is_err());
+        assert!(HashingTable::new(5, TensorF::zeros(vec![2, 3, 4])).is_err());
+    }
+}

@@ -68,10 +68,11 @@ fn take_or<'a>(kv: &'a BTreeMap<String, String>, key: &str, default: &'a str) ->
     kv.get(key).map(|s| s.as_str()).unwrap_or(default)
 }
 
-/// Parse a `--mem-budget` byte size: plain bytes or a binary-prefixed
-/// suffix (`64MiB`, `2g`, `512k`; K/M/G all mean KiB/MiB/GiB). The
-/// caller handles `none`/`off`/`0` (explicitly unlimited) before this.
-fn parse_mem_budget(s: &str) -> Result<u64> {
+/// Parse a byte size for `flag`: plain bytes or a binary-prefixed
+/// suffix (`64MiB`, `2g`, `512k`; K/M/G all mean KiB/MiB/GiB). Used by
+/// `--mem-budget`, `--row-cache`, and `:row_cache=` table suffixes; the
+/// caller handles `none`/`off`/`0` (explicitly disabled) before this.
+fn parse_byte_size(flag: &str, s: &str) -> Result<u64> {
     let t = s.trim().to_ascii_lowercase();
     let (digits, mult): (&str, u64) = [
         ("gib", 1u64 << 30), ("gb", 1 << 30), ("g", 1 << 30),
@@ -82,14 +83,14 @@ fn parse_mem_budget(s: &str) -> Result<u64> {
     .find_map(|(suf, m)| t.strip_suffix(suf).map(|d| (d, *m)))
     .unwrap_or((t.as_str(), 1));
     let v: f64 = digits.trim().parse().map_err(|_| {
-        anyhow!("--mem-budget expects bytes or a K/M/G suffix, got {s:?}")
+        anyhow!("{flag} expects bytes or a K/M/G suffix, got {s:?}")
     })?;
     // validate the FINAL byte count, not the pre-multiply value: "0.5"
     // (user forgot the suffix) would otherwise truncate to a 0-byte
     // budget that evicts every unpinned table on every load
     let bytes = (v * mult as f64) as u64;
     if !v.is_finite() || bytes < 1 {
-        bail!("--mem-budget must be at least 1 byte, got {s:?}");
+        bail!("{flag} must be at least 1 byte, got {s:?}");
     }
     Ok(bytes)
 }
@@ -200,11 +201,12 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         "serve" => {
-            // `--table name=path[:replicas=N]` is repeatable, so peel
-            // those off before the map-based flag parser (which keeps
-            // only the last value per key) sees the rest.
-            let mut tables: Vec<(String, std::path::PathBuf, usize)> =
-                Vec::new();
+            // `--table name=path[:replicas=N][:row_cache=BYTES]` is
+            // repeatable, so peel those off before the map-based flag
+            // parser (which keeps only the last value per key) sees the
+            // rest.
+            let mut tables: Vec<(String, std::path::PathBuf, usize,
+                                 Option<u64>)> = Vec::new();
             let mut plain: Vec<String> = Vec::new();
             let mut it = rest.iter();
             while let Some(a) = it.next() {
@@ -213,15 +215,18 @@ fn dispatch(args: &[String]) -> Result<()> {
                         .next()
                         .ok_or_else(|| anyhow!("--table missing name=path"))?;
                     let (name, rest) = spec.split_once('=').ok_or_else(|| {
-                        anyhow!("--table expects name=path[:replicas=N], \
+                        anyhow!("--table expects \
+                                 name=path[:replicas=N][:row_cache=BYTES], \
                                  got {spec:?}")
                     })?;
-                    // the replicas suffix splits from the RIGHT so a
-                    // path containing ':' stays intact
-                    let (path, replicas) = match rest.rsplit_once(":replicas=")
-                    {
-                        None => (rest, 1usize),
-                        Some((p, n)) => {
+                    // trailing `:key=value` options peel from the RIGHT
+                    // (in any order) so a path containing ':' stays
+                    // intact -- an unrecognized `:..` is path, not flag
+                    let mut path = rest;
+                    let mut replicas = 1usize;
+                    let mut row_cache: Option<u64> = None;
+                    while let Some((head, opt)) = path.rsplit_once(':') {
+                        if let Some(n) = opt.strip_prefix("replicas=") {
                             let n: usize = n.parse().map_err(|_| anyhow!(
                                 "--table {spec:?}: replicas expects a \
                                  positive integer"))?;
@@ -229,10 +234,26 @@ fn dispatch(args: &[String]) -> Result<()> {
                                 bail!("--table {spec:?}: replicas must be \
                                        >= 1");
                             }
-                            (p, n)
+                            replicas = n;
+                        } else if let Some(b) = opt.strip_prefix("row_cache=")
+                        {
+                            row_cache = Some(match b
+                                .trim()
+                                .to_ascii_lowercase()
+                                .as_str()
+                            {
+                                "none" | "off" | "0" => 0,
+                                _ => parse_byte_size(
+                                    &format!("--table {spec:?} row_cache"),
+                                    b)?,
+                            });
+                        } else {
+                            break;
                         }
-                    };
-                    tables.push((name.to_string(), path.into(), replicas));
+                        path = head;
+                    }
+                    tables.push(
+                        (name.to_string(), path.into(), replicas, row_cache));
                 } else {
                     plain.push(a.clone());
                 }
@@ -290,7 +311,21 @@ fn dispatch(args: &[String]) -> Result<()> {
                 {
                     Some(None)
                 }
-                Some(s) => Some(Some(parse_mem_budget(s)?)),
+                Some(s) => Some(Some(parse_byte_size("--mem-budget", s)?)),
+            };
+            // --row-cache BYTES: default per-table hot-row cache cap
+            // (raw f32 rows, LRU; capacity counts against --mem-budget).
+            // "none"/"off"/"0" disables, including a cap a --restore
+            // manifest recorded; absent = disabled.
+            let row_cache_bytes: Option<u64> = match kv.get("row_cache") {
+                None => None,
+                Some(s)
+                    if matches!(s.trim().to_ascii_lowercase().as_str(),
+                                "none" | "off" | "0") =>
+                {
+                    Some(0)
+                }
+                Some(s) => Some(parse_byte_size("--row-cache", s)?),
             };
             // --ttl SECS: idle tables expire past SECS (demoted with a
             // spill tier, dropped without). Same outer/inner Option
@@ -386,6 +421,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                 if let Some(n) = max_conns {
                     cfg.max_conns = n;
                 }
+                if let Some(b) = row_cache_bytes {
+                    cfg.row_cache_bytes = b;
+                }
                 // same loud failure as the non-restore path: an explicit
                 // --spill policy with no spill dir anywhere (flag OR
                 // manifest) would otherwise be silently inert
@@ -405,7 +443,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 if tables.is_empty() {
                     let path = std::path::PathBuf::from(
                         take_or(&kv, "embedding", "compressed.dpq"));
-                    tables.push(("default".to_string(), path, 1));
+                    tables.push(("default".to_string(), path, 1, None));
                 }
                 // `open`, not `new`: a configured spill dir that does
                 // not exist must fail loudly at startup, not at the
@@ -425,16 +463,22 @@ fn dispatch(args: &[String]) -> Result<()> {
                         std::time::Duration::from_secs(30))),
                     max_conns: max_conns.unwrap_or(Some(1024)),
                     debug_ops: false,
+                    row_cache_bytes: row_cache_bytes.unwrap_or(0),
                 })?
             };
             // `--table` flags load on top of either path (extra tables
             // alongside a restored snapshot are fine)
-            for (name, path, replicas) in &tables {
+            for (name, path, replicas, row_cache) in &tables {
                 let emb = dpq_embed::dpq::CompressedEmbedding::load(path)
                     .map_err(|e| anyhow!(
                         "load {path:?}: {e} (run `repro compress` first)"))?;
                 registry.insert_with_replicas(
                     name, std::sync::Arc::new(emb), *replicas)?;
+                // per-table suffix overrides the --row-cache default the
+                // insert applied (0 disables just this table's cache)
+                if let Some(b) = row_cache {
+                    registry.set_row_cache(name, *b)?;
+                }
             }
             if let Some(def) = kv.get("default") {
                 registry.set_default(def)?;
@@ -448,6 +492,13 @@ fn dispatch(args: &[String]) -> Result<()> {
                     dpq_embed::backend::compression_ratio(&*e.backend),
                     e.shard_count(), e.replica_count()
                 );
+                if e.row_cache.cap_bytes() > 0 {
+                    println!(
+                        "  hot-row cache: {} bytes (raw f32 rows, LRU; \
+                         counts against --mem-budget)",
+                        e.row_cache.cap_bytes()
+                    );
+                }
             }
             for s in registry.list_spilled() {
                 println!(
@@ -590,8 +641,10 @@ fn print_usage() {
          \x20 train      [--artifact P --steps N --lr X ...]\n\
          \x20 experiment <id|all> [--steps N] | --list\n\
          \x20 compress   [--artifact P --out F]\n\
-         \x20 serve      [--table NAME=F[:replicas=N] ... --default NAME\n\
+         \x20 serve      [--table NAME=F[:replicas=N][:row_cache=B] ...\n\
+         \x20             --default NAME\n\
          \x20             --addr A --max-batch N --shards N\n\
+         \x20             --row-cache BYTES|none\n\
          \x20             --mem-budget BYTES|none --ttl SECS|none\n\
          \x20             --conn-timeout SECS|none --max-conns N|none\n\
          \x20             --restore MANIFEST\n\
@@ -603,6 +656,12 @@ fn print_usage() {
          \x20             independent batcher-shard sets over one shared\n\
          \x20             backend (least-loaded routing, bit-identical\n\
          \x20             bytes; resize live with the set_replicas op);\n\
+         \x20             --row-cache B keeps each table's hottest rows\n\
+         \x20             as raw f32 under an LRU byte cap (bit-identical\n\
+         \x20             serving, skew-aware speedup; :row_cache=B\n\
+         \x20             overrides per table, resize live with the\n\
+         \x20             set_row_cache op; cache capacity counts against\n\
+         \x20             --mem-budget);\n\
          \x20             --mem-budget evicts least-recently-used tables\n\
          \x20             past BYTES (K/M/G suffixes ok, default pinned);\n\
          \x20             --ttl SECS demotes tables idle past SECS even\n\

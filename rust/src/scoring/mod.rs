@@ -102,21 +102,60 @@ pub fn adc_tolerance(d: usize) -> f32 {
     1e-4 * (1.0 + (d as f32).sqrt())
 }
 
+/// A read-only source of already-materialized rows the exact path may
+/// consult before reconstructing -- the server's hot-row cache
+/// implements this. `copy_row` fills `out` (width `d`) and returns
+/// `true` on a hit. The contract that keeps the exact path *exact*: a
+/// provided row must be a verbatim copy of what
+/// [`EmbeddingBackend::reconstruct_rows_into`] would produce, bit for
+/// bit -- reconstruction is deterministic, so any cached copy of a real
+/// reconstruction qualifies.
+pub trait RowBits: Sync {
+    /// Copy row `id` into `out` and return `true`, or return `false`
+    /// to send the caller down the reconstruction path.
+    fn copy_row(&self, id: usize, out: &mut [f32]) -> bool;
+}
+
 /// Reconstruct-then-score over any [`EmbeddingBackend`]: materialize the
 /// candidate row (through the backend's own bit-stable gather), then
 /// [`dot_serial`] against the query. This is both the *reference* the
 /// LUT paths are tested against and the serving path for backends whose
-/// representation has no cheaper form (`dense`, `low_rank`).
+/// representation has no cheaper form (`dense`, `low_rank`). With a
+/// [`RowBits`] source attached ([`ExactScorer::with_rows`]) hot rows
+/// skip reconstruction -- bit-identical by the `RowBits` contract.
 pub struct ExactScorer<'a> {
     backend: &'a dyn EmbeddingBackend,
     query: &'a [f32],
+    rows: Option<&'a dyn RowBits>,
 }
 
 impl<'a> ExactScorer<'a> {
     /// Pair a backend with a query of width `backend.d()` (asserted).
     pub fn new(backend: &'a dyn EmbeddingBackend, query: &'a [f32]) -> Self {
         assert_eq!(query.len(), backend.d(), "query width != backend d");
-        ExactScorer { backend, query }
+        ExactScorer { backend, query, rows: None }
+    }
+
+    /// Like [`new`](Self::new), but consult `rows` before
+    /// reconstructing each candidate.
+    pub fn with_rows(
+        backend: &'a dyn EmbeddingBackend,
+        query: &'a [f32],
+        rows: &'a dyn RowBits,
+    ) -> Self {
+        assert_eq!(query.len(), backend.d(), "query width != backend d");
+        ExactScorer { backend, query, rows: Some(rows) }
+    }
+
+    /// Fill `row` with candidate `id`: from the attached [`RowBits`]
+    /// source on a hit, by backend reconstruction otherwise.
+    fn fetch_row(&self, id: usize, row: &mut [f32]) {
+        if let Some(rows) = self.rows {
+            if rows.copy_row(id, row) {
+                return;
+            }
+        }
+        self.backend.reconstruct_rows_into(&[id], row);
     }
 }
 
@@ -125,7 +164,7 @@ impl QueryScorer for ExactScorer<'_> {
         let d = self.query.len();
         let mut row = vec![0.0f32; d];
         for (i, o) in out.iter_mut().enumerate() {
-            self.backend.reconstruct_rows_into(&[start + i], &mut row);
+            self.fetch_row(start + i, &mut row);
             *o = dot_serial(self.query, &row);
         }
     }
@@ -134,7 +173,7 @@ impl QueryScorer for ExactScorer<'_> {
         let d = self.query.len();
         let mut row = vec![0.0f32; d];
         for (o, &id) in out.iter_mut().zip(ids) {
-            self.backend.reconstruct_rows_into(&[id], &mut row);
+            self.fetch_row(id, &mut row);
             *o = dot_serial(self.query, &row);
         }
     }
@@ -343,6 +382,55 @@ mod tests {
                 "threads={threads}"
             );
         }
+    }
+
+    /// A `RowBits` source holding verbatim reconstructions must be both
+    /// actually consulted (a marker row proves the hit path runs) and
+    /// bit-invisible when honest: partial coverage mixes cached and
+    /// reconstructed candidates and still matches the reference.
+    #[test]
+    fn with_rows_source_is_consulted_and_bit_exact() {
+        struct EvenRows {
+            d: usize,
+            table: DenseTable,
+            hits: std::sync::atomic::AtomicU64,
+        }
+        impl RowBits for EvenRows {
+            fn copy_row(&self, id: usize, out: &mut [f32]) -> bool {
+                if id % 2 != 0 {
+                    return false;
+                }
+                self.table.reconstruct_rows_into(&[id], &mut out[..self.d]);
+                self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                true
+            }
+        }
+        let dt = toy_dense(30, 6, 11);
+        let query: Vec<f32> = (0..6).map(|i| 0.5 - i as f32 * 0.1).collect();
+        let ids: Vec<usize> = (0..30).collect();
+        let reference = reference_scores(&dt, &query, &ids);
+        let src = EvenRows {
+            d: 6,
+            table: toy_dense(30, 6, 11), // same seed: identical bits
+            hits: std::sync::atomic::AtomicU64::new(0),
+        };
+        let sc = ExactScorer::with_rows(&dt, &query, &src);
+        for threads in [1usize, 2, 7] {
+            let mut got = vec![0.0f32; ids.len()];
+            with_threads(threads, || score_into(&sc, &ids, &mut got));
+            assert!(
+                got.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}"
+            );
+            let top = with_threads(threads, || topk(&sc, 0, 30, 5));
+            for c in &top {
+                assert_eq!(c.score.to_bits(), reference[c.id].to_bits());
+            }
+        }
+        assert!(
+            src.hits.load(std::sync::atomic::Ordering::Relaxed) > 0,
+            "the RowBits source was never consulted"
+        );
     }
 
     #[test]

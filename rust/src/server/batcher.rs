@@ -15,6 +15,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::backend::EmbeddingBackend;
+use crate::server::row_cache::RowCache;
 use crate::server::stats::Stats;
 
 /// Lock a queue/slot mutex, recovering the guard if a previous holder
@@ -187,7 +188,19 @@ impl BatchQueue {
 /// order as contiguous slices. Each row's gather is independent of which
 /// chunk it lands in, so the served bits never depend on the thread
 /// count. Batch wall-clock time lands in the table's latency ring.
-pub(crate) fn run_batch(backend: &dyn EmbeddingBackend, batch: &[Pending], stats: &Stats) {
+///
+/// With the table's hot-row `cache` enabled, each id is probed first: a
+/// hit is a memcpy into the flat buffer, and only the misses go through
+/// `reconstruct_rows_into` (then get admitted). Served bits are
+/// IDENTICAL either way -- a cached row is a verbatim copy of a
+/// deterministic reconstruction -- which `tests/cache_equivalence.rs`
+/// pins against a cache-disabled twin.
+pub(crate) fn run_batch(
+    backend: &dyn EmbeddingBackend,
+    batch: &[Pending],
+    stats: &Stats,
+    cache: &RowCache,
+) {
     let t0 = Instant::now();
     let d = backend.d();
     let total: usize = batch.iter().map(|p| p.ids.len()).sum();
@@ -208,7 +221,31 @@ pub(crate) fn run_batch(backend: &dyn EmbeddingBackend, batch: &[Pending], stats
                    rejecting the whole micro-batch");
     }
     let mut flat = vec![0.0f32; if valid { total * d } else { 0 }];
-    if valid {
+    if valid && cache.enabled() && d > 0 {
+        // probe every slot; remember which positions missed
+        let mut miss_pos: Vec<usize> = Vec::new();
+        for (i, &id) in all_ids.iter().enumerate() {
+            if !cache.try_copy(id, &mut flat[i * d..(i + 1) * d], stats) {
+                miss_pos.push(i);
+            }
+        }
+        if !miss_pos.is_empty() {
+            // one pooled gather over the misses only (duplicate ids may
+            // reconstruct twice within a batch -- harmless, identical
+            // bits), then scatter back and admit the fresh rows
+            let miss_ids: Vec<usize> =
+                miss_pos.iter().map(|&i| all_ids[i]).collect();
+            let mut miss_flat = vec![0.0f32; miss_ids.len() * d];
+            backend.reconstruct_rows_into(&miss_ids, &mut miss_flat);
+            for (m, &i) in miss_pos.iter().enumerate() {
+                let row = &miss_flat[m * d..(m + 1) * d];
+                flat[i * d..(i + 1) * d].copy_from_slice(row);
+                cache.admit(all_ids[i], row);
+            }
+        }
+        stats.ids_served.fetch_add(total as u64,
+                                   std::sync::atomic::Ordering::Relaxed);
+    } else if valid {
         backend.reconstruct_rows_into(&all_ids, &mut flat);
         stats.ids_served.fetch_add(total as u64,
                                    std::sync::atomic::Ordering::Relaxed);
@@ -313,13 +350,14 @@ mod tests {
     fn run_batch_splits_per_request_and_matches_serial() {
         let emb = toy_emb(40, 8, 4, 3);
         let stats = Stats::default();
+        let cache = RowCache::new(emb.d, 0); // disabled: the legacy path
         let reqs: Vec<Vec<usize>> =
             vec![vec![0, 5, 39], vec![], vec![7], vec![39, 0, 0, 12]];
         for threads in [1usize, 2, 7] {
             crate::util::pool::with_threads(threads, || {
                 let batch: Vec<Pending> =
                     reqs.iter().map(|ids| Pending::new(ids.clone()).0).collect();
-                run_batch(&emb, &batch, &stats);
+                run_batch(&emb, &batch, &stats, &cache);
                 for (p, ids) in batch.iter().zip(&reqs) {
                     let rows = p.done.0.lock().unwrap().take().unwrap();
                     let flat = rows.as_slice();
@@ -341,5 +379,47 @@ mod tests {
         assert_eq!(stats.batches.load(Ordering::Relaxed), 3);
         let (p50, p99) = stats.batch_latency().unwrap();
         assert!(p50 >= 0.0 && p99 >= p50);
+    }
+
+    /// The cache-enabled gather path must serve bit-identical rows to
+    /// the cache-disabled path -- cold (all misses), warm (all hits),
+    /// and mixed batches, at several thread counts -- while the hit and
+    /// miss counters track exactly.
+    #[test]
+    fn run_batch_with_cache_is_bit_identical_and_counts() {
+        let emb = toy_emb(40, 8, 4, 3);
+        let want: Vec<Vec<f32>> =
+            (0..40).map(|i| emb.reconstruct_row(i)).collect();
+        for threads in [1usize, 2, 7] {
+            let stats = Stats::default();
+            let cache = RowCache::new(emb.d, 1 << 20);
+            crate::util::pool::with_threads(threads, || {
+                for ids in [vec![0usize, 5, 39, 5], // cold + in-batch dup
+                            vec![0, 5, 39],         // fully warm
+                            vec![5, 11, 0]]         // mixed
+                {
+                    let batch = vec![Pending::new(ids.clone()).0];
+                    run_batch(&emb, &batch, &stats, &cache);
+                    let rows = batch[0].done.0.lock().unwrap().take().unwrap();
+                    let flat = rows.as_slice();
+                    for (ri, &id) in ids.iter().enumerate() {
+                        let got = &flat[ri * emb.d..(ri + 1) * emb.d];
+                        assert!(
+                            got.iter().zip(&want[id])
+                                .all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "threads={threads} id={id}"
+                        );
+                    }
+                }
+            });
+            // batch 1: 4 misses (the dup misses twice -- both probes
+            // precede the admit); batch 2: 3 hits; batch 3: 2 hits + 1
+            // miss (id 11 is cold)
+            assert_eq!(stats.cache_misses.load(Ordering::Relaxed), 5,
+                       "threads={threads}");
+            assert_eq!(stats.cache_hits.load(Ordering::Relaxed), 5,
+                       "threads={threads}");
+            assert!(cache.bytes() <= cache.cap_bytes());
+        }
     }
 }

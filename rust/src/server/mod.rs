@@ -35,6 +35,7 @@
 //! | `unload`        | 2   | `table`                   | hot-drop a table (resident or spilled); reports `was_default` + the default now in force |
 //! | `demote`        | 2   | `table`                   | spill a resident table to the `--spill-dir` tier; next lookup reloads it |
 //! | `set_replicas`  | 2   | `table`, `replicas`       | live-resize the table's batcher-shard replica count |
+//! | `set_row_cache` | 2   | `table`, `bytes`          | resize the table's hot-row cache byte cap (0 disables); spilled tables record it for promotion |
 //! | `snapshot`      | 2   | `dir`                     | serialize the registry into a server-side dir, `{"ok":true,"manifest":..}` |
 //! | `shutdown`      | 1,2 |                           | `{"ok":true}`, then the server exits |
 //!
@@ -95,6 +96,7 @@ pub mod clock;
 pub mod fuzz;
 pub mod protocol;
 pub mod registry;
+pub mod row_cache;
 pub mod stats;
 
 use std::net::{TcpListener, TcpStream};
@@ -119,6 +121,7 @@ pub use registry::{
     UnloadOutcome, MAX_REPLICAS, SNAPSHOT_FORMAT, SNAPSHOT_MANIFEST,
     SNAPSHOT_VERSION, SPILL_FORMAT, SPILL_MANIFEST,
 };
+pub use row_cache::RowCache;
 pub use stats::{ConnStats, LatencyRing, ReplicaStats, Stats};
 
 use batcher::Answer;
@@ -754,9 +757,24 @@ fn score_op(
     };
     let _depth = entry.begin_score();
     let t0 = std::time::Instant::now();
-    let scorer = sb.query_scorer(&query);
+    let base = sb.query_scorer(&query);
+    // Where the backend scores by exact reconstruction anyway, hot
+    // candidates are served from the row cache instead of a code-walk.
+    // Bit-identical: cached rows are verbatim copies of deterministic
+    // reconstructions, so the dot products cannot differ. The ADC
+    // ("lut") path is NEVER substituted -- its scores are computed on
+    // codes, not rows, and swapping paths would change bits.
+    let cached;
+    let scorer: &dyn crate::scoring::QueryScorer =
+        if base.path() == "exact" && entry.row_cache.enabled() {
+            cached = crate::scoring::ExactScorer::with_rows(
+                &*entry.backend, &query, &*entry.row_cache);
+            &cached
+        } else {
+            &*base
+        };
     let mut scores = vec![0.0f32; ids.len()];
-    crate::scoring::score_into(&*scorer, &ids, &mut scores);
+    crate::scoring::score_into(scorer, &ids, &mut scores);
     entry.stats.record_score_secs(t0.elapsed().as_secs_f64());
     write_frame(stream, &Json::obj(vec![
         ("ok", Json::Bool(true)),
@@ -844,8 +862,18 @@ fn topk_op(
     };
     let _depth = entry.begin_score();
     let t0 = std::time::Instant::now();
-    let scorer = sb.query_scorer(&query);
-    let best = crate::scoring::topk(&*scorer, lo, hi, k);
+    let base = sb.query_scorer(&query);
+    // same cache substitution rule as `score_op`: exact path only
+    let cached;
+    let scorer: &dyn crate::scoring::QueryScorer =
+        if base.path() == "exact" && entry.row_cache.enabled() {
+            cached = crate::scoring::ExactScorer::with_rows(
+                &*entry.backend, &query, &*entry.row_cache);
+            &cached
+        } else {
+            &*base
+        };
+    let best = crate::scoring::topk(scorer, lo, hi, k);
     entry.stats.record_score_secs(t0.elapsed().as_secs_f64());
     write_frame(stream, &Json::obj(vec![
         ("ok", Json::Bool(true)),
@@ -895,7 +923,14 @@ fn stats_pairs(stats: &Stats) -> Vec<(&'static str, Json)> {
          Json::num(stats.score_requests.load(Ordering::Relaxed) as f64)),
         ("topk_requests",
          Json::num(stats.topk_requests.load(Ordering::Relaxed) as f64)),
+        ("cache_hits",
+         Json::num(stats.cache_hits.load(Ordering::Relaxed) as f64)),
+        ("cache_misses",
+         Json::num(stats.cache_misses.load(Ordering::Relaxed) as f64)),
     ];
+    if let Some(rate) = stats.cache_hit_rate() {
+        pairs.push(("cache_hit_rate", Json::num(rate)));
+    }
     if let Some((p50, p99)) = stats.batch_latency() {
         pairs.push(("batch_p50_s", Json::num(p50)));
         pairs.push(("batch_p99_s", Json::num(p99)));
@@ -962,6 +997,10 @@ fn stats_op(
                     pairs.push(("replicas",
                                 Json::num(entry.replica_count() as f64)));
                     pairs.push(("replica", entry.replica_stats_json()));
+                    pairs.push(("row_cache_cap_bytes",
+                                Json::num(entry.row_cache.cap_bytes() as f64)));
+                    pairs.push(("row_cache_bytes",
+                                Json::num(entry.row_cache.bytes() as f64)));
                     pairs.extend(stats_pairs(&entry.stats));
                 }
                 Some(registry::Slot::Spilled(s)) => {
@@ -1004,6 +1043,10 @@ fn stats_op(
                             ("replicas",
                              Json::num(e.replica_count() as f64)),
                             ("replica", e.replica_stats_json()),
+                            ("row_cache_cap_bytes",
+                             Json::num(e.row_cache.cap_bytes() as f64)),
+                            ("row_cache_bytes",
+                             Json::num(e.row_cache.bytes() as f64)),
                         ];
                         pairs.extend(stats_pairs(&e.stats));
                         pairs
@@ -1152,6 +1195,45 @@ fn set_replicas_op(
                 ("ok", Json::Bool(true)),
                 ("table", Json::str(name)),
                 ("replicas", Json::num(n as f64)),
+                ("residency", Json::str(residency.as_str())),
+            ]).to_string())
+        }
+        Err(e) => write_frame(
+            stream, &annotated_err_frame(registry, &e).to_string()),
+    }
+}
+
+/// `set_row_cache` (v2 only): resize a table's hot-row cache byte cap
+/// in place (0 disables and drops every cached row). A resident table
+/// trims immediately and re-enforces the memory budget (cache capacity
+/// counts against `--mem-budget`); a spilled table records the cap for
+/// its next promotion.
+fn set_row_cache_op(
+    stream: &mut TcpStream,
+    registry: &TableRegistry,
+    j: &Json,
+) -> Result<(), WireError> {
+    let (name, bytes) = match (
+        j.get("table").and_then(|v| v.as_str()),
+        j.get("bytes").and_then(|v| v.as_usize()),
+    ) {
+        (Some(name), Some(bytes)) => (name, bytes as u64),
+        _ => {
+            return write_frame(stream, &err_obj(
+                "bad_request",
+                "set_row_cache needs table and a non-negative integer bytes",
+                vec![]).to_string())
+        }
+    };
+    match registry.set_row_cache(name, bytes) {
+        Ok(cap) => {
+            let residency = registry
+                .residency(name)
+                .unwrap_or(Residency::Resident);
+            write_frame(stream, &Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("table", Json::str(name)),
+                ("row_cache_cap_bytes", Json::num(cap as f64)),
                 ("residency", Json::str(residency.as_str())),
             ]).to_string())
         }
@@ -1327,7 +1409,8 @@ fn dispatch_op(
         }
         Some("stats") => stats_op(stream, registry, j, version)?,
         Some(op @ ("tables" | "load" | "unload" | "demote" | "snapshot"
-                   | "set_replicas" | "lookup_fanout" | "score" | "topk"))
+                   | "set_replicas" | "set_row_cache" | "lookup_fanout"
+                   | "score" | "topk"))
             if version < 2 => {
             write_frame(stream, &err_obj(
                 "needs_v2",
@@ -1346,6 +1429,9 @@ fn dispatch_op(
         Some("demote") => demote_op(stream, registry, j)?,
         Some("set_replicas") => {
             set_replicas_op(stream, registry, j)?
+        }
+        Some("set_row_cache") => {
+            set_row_cache_op(stream, registry, j)?
         }
         Some("snapshot") => snapshot_op(stream, registry, j)?,
         Some("shutdown") => {

@@ -1173,6 +1173,32 @@ impl Client {
             })
     }
 
+    /// Live-resize a table's hot-row cache byte cap (0 disables and
+    /// drops every cached row). A resident table trims immediately and
+    /// re-enforces the memory budget, so the returned capacity-in-force
+    /// may be smaller than requested; a spilled table records the cap
+    /// for its next promotion. Typed rejection: `no_such_table`.
+    pub fn admin_set_row_cache(
+        &mut self,
+        table: &str,
+        bytes: u64,
+    ) -> Result<u64, WireError> {
+        let j = self.request(Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("set_row_cache")),
+            ("table", Json::str(table)),
+            ("bytes", Json::num(bytes as f64)),
+        ]))?;
+        j.get("row_cache_cap_bytes")
+            .and_then(|v| v.as_usize())
+            .map(|n| n as u64)
+            .ok_or_else(|| {
+                WireError::Malformed(
+                    "set_row_cache response without row_cache_cap_bytes"
+                        .into())
+            })
+    }
+
     /// Ask the server to exit (drains the acknowledgement).
     pub fn shutdown(&mut self) -> Result<(), WireError> {
         write_frame(&mut self.stream, &Json::obj(vec![

@@ -165,11 +165,11 @@ use std::sync::Condvar;
 use std::time::Instant;
 
 use crate::backend::{self, EmbeddingBackend};
-use crate::dpq::CompressedEmbedding;
 use crate::jsonx::Json;
 use crate::server::batcher::{run_batch, Answer, BatchQueue, DoneSlot, Pending};
 use crate::server::clock::{Clock, MonotonicClock};
 use crate::server::protocol::WireError;
+use crate::server::row_cache::RowCache;
 use crate::server::stats::{ConnStats, LatencyRing, ReplicaStats, Stats};
 
 /// Manifest `format` tag written by [`TableRegistry::snapshot`].
@@ -274,6 +274,14 @@ pub struct ServerConfig {
     /// and never recorded in snapshots; with it off (the default) the
     /// op answers `unknown_op` like any other unrecognized name.
     pub debug_ops: bool,
+    /// Default hot-row cache byte cap per table (`--row-cache BYTES`).
+    /// 0 (the default) disables the cache. Per-table overrides come
+    /// from `:row_cache=` suffixes on `--table` specs and the v2
+    /// `set_row_cache` op. Cache CAPACITY counts against
+    /// [`mem_budget_bytes`](Self::mem_budget_bytes): capacity bounds
+    /// actual cache bytes at all times, so `resident + cached <=
+    /// budget` holds without racing the fill level.
+    pub row_cache_bytes: u64,
 }
 
 impl Default for ServerConfig {
@@ -288,6 +296,7 @@ impl Default for ServerConfig {
             conn_timeout: None,
             max_conns: None,
             debug_ops: false,
+            row_cache_bytes: 0,
         }
     }
 }
@@ -351,6 +360,11 @@ pub struct SpilledTable {
     /// `set_replicas` on a spilled table takes effect when it comes
     /// back, without waking the slot.
     replicas: AtomicUsize,
+    /// Hot-row cache byte cap to rebuild at promotion (0 = disabled).
+    /// Atomic for the same reason as `replicas`: a `set_row_cache` on a
+    /// spilled table takes effect when it comes back. The CONTENTS are
+    /// never spilled -- a promoted table starts with an empty cache.
+    row_cache: AtomicU64,
     stats: Arc<Stats>,
     state: Mutex<SpillPhase>,
     cv: Condvar,
@@ -367,6 +381,7 @@ impl SpilledTable {
             d: entry.backend.d(),
             storage_bits: entry.backend.storage_bits(),
             replicas: AtomicUsize::new(entry.replica_count()),
+            row_cache: AtomicU64::new(entry.row_cache.cap_bytes()),
             stats: entry.stats.clone(),
             state: Mutex::new(SpillPhase::Spilling),
             cv: Condvar::new(),
@@ -413,6 +428,12 @@ impl SpilledTable {
     /// it is promoted back.
     pub fn replicas(&self) -> usize {
         self.replicas.load(Ordering::Relaxed).max(1)
+    }
+
+    /// Hot-row cache byte cap the table will be rebuilt with when it is
+    /// promoted back (0 = disabled).
+    pub fn row_cache_bytes(&self) -> u64 {
+        self.row_cache.load(Ordering::Relaxed)
     }
 
     fn set_phase(&self, phase: SpillPhase) {
@@ -519,6 +540,13 @@ pub struct TableEntry {
     pub backend: Arc<dyn EmbeddingBackend>,
     /// Serving counters and batch-latency percentiles for this table.
     pub stats: Arc<Stats>,
+    /// This entry's hot-row cache (shared with its batcher-shard
+    /// threads). Created EMPTY at spawn: every residency transition
+    /// that respawns the entry -- demote/promote round trips,
+    /// `set_replicas` resizes -- structurally invalidates the cache, so
+    /// there is no stale-row window. Capacity carries across those
+    /// transitions; contents never do.
+    pub row_cache: Arc<RowCache>,
     /// Logical LRU clock tick of the last lookup routed here (ticks come
     /// from the owning registry's clock; larger = more recent).
     last_used: AtomicU64,
@@ -603,7 +631,12 @@ impl LookupTicket {
 impl TableEntry {
     /// Spawn a table's batcher-shard replicas. `stats` is fresh for an
     /// insert and the carried-over counters for a spill-tier promotion
-    /// or a live `set_replicas` resize.
+    /// or a live `set_replicas` resize. `row_cache_bytes` is the
+    /// hot-row cache cap the fresh (always empty) cache starts with;
+    /// every replica's shards share the ONE cache -- the working set is
+    /// a property of the table's traffic, not of which replica served
+    /// it, and a shared cache keeps hit rates identical at every
+    /// replica count.
     fn spawn(
         name: &str,
         backend: Arc<dyn EmbeddingBackend>,
@@ -611,7 +644,9 @@ impl TableEntry {
         stop: &Arc<AtomicBool>,
         stats: Arc<Stats>,
         replicas: usize,
+        row_cache_bytes: u64,
     ) -> Arc<TableEntry> {
+        let row_cache = Arc::new(RowCache::new(backend.d(), row_cache_bytes));
         let mut reps = Vec::with_capacity(replicas.max(1));
         let mut handles = Vec::new();
         for _ in 0..replicas.max(1) {
@@ -625,6 +660,7 @@ impl TableEntry {
                 let stats = stats.clone();
                 let rstats = rstats.clone();
                 let stop = stop.clone();
+                let cache = row_cache.clone();
                 handles.push(std::thread::spawn(move || {
                     while !stop.load(Ordering::Relaxed) && !shard.is_closed() {
                         let batch = shard.pop_batch(Duration::from_millis(20));
@@ -632,7 +668,7 @@ impl TableEntry {
                             continue;
                         }
                         let t0 = Instant::now();
-                        run_batch(&*backend, &batch, &stats);
+                        run_batch(&*backend, &batch, &stats, &cache);
                         rstats.record_batch_secs(t0.elapsed().as_secs_f64());
                     }
                     // close() fails anything still queued; calling it from
@@ -646,6 +682,7 @@ impl TableEntry {
             name: name.to_string(),
             backend,
             stats,
+            row_cache,
             last_used: AtomicU64::new(0),
             last_used_at: AtomicU64::new(0),
             replicas: reps,
@@ -1004,6 +1041,9 @@ impl TableRegistry {
                     "table {name:?} has invalid shape [{vocab}, {d}]")));
             }
             let replicas = get_n("replicas").unwrap_or(1).clamp(1, MAX_REPLICAS);
+            // hot-row cache cap recorded at demote time; absent in
+            // pre-cache manifests, which adopt as cache-disabled
+            let row_cache = get_n("row_cache").unwrap_or(0) as u64;
             let phase = if dir.join(file).is_file() {
                 SpillPhase::Ready
             } else {
@@ -1020,6 +1060,7 @@ impl TableRegistry {
                 d,
                 storage_bits,
                 replicas: AtomicUsize::new(replicas),
+                row_cache: AtomicU64::new(row_cache),
                 stats: Arc::new(Stats::default()),
                 state: Mutex::new(phase),
                 cv: Condvar::new(),
@@ -1151,7 +1192,8 @@ impl TableRegistry {
             }
             let entry = TableEntry::spawn(
                 name, backend, &self.cfg, &self.stop,
-                Arc::new(Stats::default()), replicas);
+                Arc::new(Stats::default()), replicas,
+                self.cfg.row_cache_bytes);
             // fresh LRU + idle stamps: a just-inserted table is the
             // most recent (and not TTL-idle)
             entry.last_used.store(
@@ -1218,12 +1260,43 @@ impl TableRegistry {
                 Slot::Spilled(_) => None,
             })
             .collect();
-        let mut total: u64 = live.iter().map(|e| e.resident_bytes()).sum();
+        // Hot-row cache CAPACITY counts against the budget (capacity,
+        // not fill: fill only grows toward capacity, so bounding the
+        // capacity bounds actual bytes without racing the fill level).
+        let mut total: u64 = live
+            .iter()
+            .map(|e| e.resident_bytes() + e.row_cache.cap_bytes())
+            .sum();
+        // Phase 1: shrink hot-row caches before destroying any table.
+        // A cache holds purely derived state (every byte re-derivable
+        // from the backend), so reclaiming its capacity is strictly
+        // cheaper than evicting a table -- and pinned tables' caches
+        // shrink too, since shrinking never takes a table down.
+        // LRU-first: the stalest table's working set is the least worth
+        // keeping warm.
+        if total > budget {
+            let mut order: Vec<Arc<TableEntry>> = live.clone();
+            order.sort_by_key(|e| e.last_used.load(Ordering::Relaxed));
+            for e in &order {
+                if total <= budget {
+                    break;
+                }
+                let cap = e.row_cache.cap_bytes();
+                if cap == 0 {
+                    continue;
+                }
+                let new_cap = cap.saturating_sub(total - budget);
+                e.row_cache.set_capacity(new_cap);
+                total -= cap - new_cap;
+            }
+        }
         // Zero-gain guard: if the pinned tables ALONE exceed the budget
         // (e.g. the fresh insert is bigger than the whole budget), no
         // sequence of evictions can reach it -- destroying every
         // unpinned table would take clients down for nothing. Stay
         // (softly) over budget with everything resident instead.
+        // (Cache caps are already zero whenever this loop still has
+        // work, so `resident_bytes` alone is the exact pinned total.)
         let pinned_bytes: u64 = live
             .iter()
             .filter(|e| pinned(e))
@@ -1462,13 +1535,19 @@ impl TableRegistry {
         self.ttl_demotions.load(Ordering::Relaxed)
     }
 
-    /// Hot-load a `.dpq` artifact as a new table (the `load` admin op).
+    /// Hot-load an embedding artifact as a new table (the `load` admin
+    /// op). The backend kind is sniffed from the artifact's 4-byte
+    /// magic, so every in-crate kind -- DPQ, dense, scalar-quant,
+    /// low-rank, multi-granular, hashing -- hot-loads through the one
+    /// op; a short or unknown-magic file is a typed `load_failed`.
     pub fn load_dpq(&self, name: &str, path: &Path) -> Result<Arc<TableEntry>, WireError> {
-        let emb = CompressedEmbedding::load(path).map_err(|e| WireError::Rejected {
-            code: "load_failed".into(),
-            message: format!("load {path:?}: {e}"),
-        })?;
-        self.insert(name, Arc::new(emb))
+        let backend = backend::sniff_kind(path)
+            .and_then(|kind| backend::load_backend(kind, path))
+            .map_err(|e| WireError::Rejected {
+                code: "load_failed".into(),
+                message: format!("load {path:?}: {e}"),
+            })?;
+        self.insert(name, backend)
     }
 
     /// Drop a table -- resident or spilled: later lookups get
@@ -1886,9 +1965,16 @@ impl TableRegistry {
                 }
                 Some(Slot::Resident(e)) => {
                     let old = e.clone();
+                    // the fresh entry's cache starts EMPTY at the old
+                    // capacity: a resize swaps batcher shards, and a
+                    // stale cache surviving the swap would be the one
+                    // state the twin-registry equivalence test cannot
+                    // reach -- structural invalidation keeps the
+                    // contract trivially true
                     let entry = TableEntry::spawn(
                         name, old.backend.clone(), &self.cfg, &self.stop,
-                        old.stats.clone(), n);
+                        old.stats.clone(), n,
+                        old.row_cache.cap_bytes());
                     // carry the LRU/idle stamps: a resize is an admin
                     // action, not a lookup -- it must not refresh the
                     // table's eviction rank
@@ -1908,6 +1994,49 @@ impl TableRegistry {
             None => self.sync_spill_manifest(), // spilled: record n
         }
         Ok(n)
+    }
+
+    /// Live-resize a table's hot-row cache byte capacity (the
+    /// `set_row_cache` wire op). A RESIDENT table's cache is resized in
+    /// place -- shrinking evicts LRU-first immediately, `0` disables
+    /// and frees everything, growing takes effect on the next misses --
+    /// and the budget pass then reconciles the new capacity against
+    /// `--mem-budget` (so the call may come back with a SMALLER cap
+    /// than requested, or evict colder tables to make room). A SPILLED
+    /// table just records the capacity for its next promotion. Returns
+    /// the capacity now in force. Typed rejection: `no_such_table`.
+    pub fn set_row_cache(&self, name: &str, bytes: u64) -> Result<u64, WireError> {
+        if self.stop.load(Ordering::Relaxed) {
+            return Err(WireError::Rejected {
+                code: "shutting_down".into(),
+                message: "registry is shutting down".into(),
+            });
+        }
+        let (cap, spilled, evicted) = {
+            let mut map = self.tables.write().unwrap();
+            match map.get(name) {
+                None => return Err(WireError::NoSuchTable(name.to_string())),
+                Some(Slot::Spilled(s)) => {
+                    s.row_cache.store(bytes, Ordering::Relaxed);
+                    (bytes, true, Vec::new())
+                }
+                Some(Slot::Resident(e)) => {
+                    let entry = e.clone();
+                    entry.row_cache.set_capacity(bytes);
+                    // the resized table is protected: the budget pass
+                    // may shrink its fresh cache, but must not evict
+                    // the very table the operator is tuning
+                    let evicted = self.enforce_budget_locked(&mut map, &[name]);
+                    (entry.row_cache.cap_bytes(), false, evicted)
+                }
+            }
+        };
+        if spilled {
+            self.sync_spill_manifest(); // record the cap for promotion
+        } else {
+            self.finish_evictions(evicted);
+        }
+        Ok(cap)
     }
 
     /// Write a demotion's artifact and finish the transition. Runs with
@@ -2125,7 +2254,7 @@ impl TableRegistry {
             }
             let entry = TableEntry::spawn(
                 &s.name, backend, &self.cfg, &self.stop, s.stats.clone(),
-                s.replicas());
+                s.replicas(), s.row_cache_bytes());
             entry.last_used.store(
                 self.clock.fetch_add(1, Ordering::Relaxed) + 1,
                 Ordering::Relaxed,
@@ -2179,6 +2308,7 @@ impl TableRegistry {
                     ("d", Json::num(s.d as f64)),
                     ("storage_bits", Json::num(s.storage_bits as f64)),
                     ("replicas", Json::num(s.replicas() as f64)),
+                    ("row_cache", Json::num(s.row_cache_bytes() as f64)),
                 ])
             })
             .collect();
@@ -2232,19 +2362,21 @@ impl TableRegistry {
         let mut fresh: Vec<String> = Vec::with_capacity(slots.len());
         let mut included: Vec<&str> = Vec::with_capacity(slots.len());
         for (i, (name, slot)) in slots.iter().enumerate() {
-            let (kind, vocab, d, storage_bits, replicas) = match slot {
-                Slot::Resident(e) => (
-                    e.backend.kind().to_string(),
-                    e.backend.vocab(),
-                    e.backend.d(),
-                    e.backend.storage_bits(),
-                    e.replica_count(),
-                ),
-                Slot::Spilled(s) => {
-                    (s.kind.clone(), s.vocab, s.d, s.storage_bits,
-                     s.replicas())
-                }
-            };
+            let (kind, vocab, d, storage_bits, replicas, row_cache) =
+                match slot {
+                    Slot::Resident(e) => (
+                        e.backend.kind().to_string(),
+                        e.backend.vocab(),
+                        e.backend.d(),
+                        e.backend.storage_bits(),
+                        e.replica_count(),
+                        e.row_cache.cap_bytes(),
+                    ),
+                    Slot::Spilled(s) => {
+                        (s.kind.clone(), s.vocab, s.d, s.storage_bits,
+                         s.replicas(), s.row_cache_bytes())
+                    }
+                };
             let file = format!("t{i:03}_{}.{kind}", sanitize_file_stem(name));
             // Artifacts get the same write-then-rename discipline as the
             // manifest: re-snapshotting into the SAME directory must
@@ -2363,6 +2495,7 @@ impl TableRegistry {
                 ("d", Json::num(d as f64)),
                 ("storage_bits", Json::num(storage_bits as f64)),
                 ("replicas", Json::num(replicas as f64)),
+                ("row_cache", Json::num(row_cache as f64)),
             ]));
         }
         let mut pairs = vec![
@@ -2370,6 +2503,7 @@ impl TableRegistry {
             ("v", Json::num(SNAPSHOT_VERSION as f64)),
             ("max_batch", Json::num(self.cfg.max_batch as f64)),
             ("shards_per_table", Json::num(self.cfg.shards_per_table as f64)),
+            ("row_cache_bytes", Json::num(self.cfg.row_cache_bytes as f64)),
         ];
         if let Some(b) = self.cfg.mem_budget_bytes {
             pairs.push(("mem_budget_bytes", Json::num(b as f64)));
@@ -2544,6 +2678,14 @@ impl TableRegistry {
                 Some(n) if n.is_finite() && n >= 1.0 => Some(n as usize),
                 _ => Some(1024),
             },
+            // 0 means cache-disabled (also what a pre-cache manifest
+            // without the key gets); bogus values fall back to disabled
+            row_cache_bytes: j
+                .get("row_cache_bytes")
+                .and_then(|v| v.as_f64())
+                .filter(|b| b.is_finite() && *b >= 0.0)
+                .map(|b| b as u64)
+                .unwrap_or(0),
             // never restored: debug ops are a test-construction knob,
             // deliberately unreachable via snapshot round-trips
             debug_ops: false,
@@ -2625,6 +2767,13 @@ impl TableRegistry {
                 .unwrap_or(1)
                 .clamp(1, MAX_REPLICAS);
             reg.insert_with_replicas(name, backend, replicas)?;
+            // per-table cache caps are serving config too; a pre-cache
+            // manifest without the key keeps the config-level default
+            // the insert already applied (the budget is disarmed here,
+            // so the cap is recorded verbatim, not shrunk)
+            if let Some(cap) = t.get("row_cache").and_then(|v| v.as_usize()) {
+                reg.set_row_cache(name, cap as u64)?;
+            }
         }
         if let Some(d) = want_default {
             reg.set_default(d).map_err(|_| fail(format!(

@@ -1,0 +1,372 @@
+//! Per-table hot-row cache: a bounded-bytes store of recently-served
+//! rows kept as raw f32, so a hot id is a memcpy instead of a code-walk.
+//!
+//! Correctness rests on the repo's determinism rule: every backend
+//! gathers through `gather_rows_pooled`, so a row's bits never depend
+//! on batch shape or thread count. A cached row is a verbatim copy of
+//! one such reconstruction -- serving it back is bit-identical to
+//! re-reconstructing, which is exactly what `tests/cache_equivalence.rs`
+//! pins against a cache-disabled twin registry.
+//!
+//! Admission is LRU: every hit refreshes a row's recency stamp, every
+//! miss (on the lookup path) admits the freshly-reconstructed row and
+//! evicts least-recently-used rows until the cache fits its byte cap.
+//! Scoring probes are read-only -- `score`/`topk` candidates never
+//! churn the working set the lookup traffic built.
+//!
+//! Invalidation is structural: the cache lives on a `TableEntry` and a
+//! fresh (empty) one is created whenever the registry respawns an entry
+//! -- demote, promote, `set_replicas` -- so there is no stale-row
+//! window to reason about. Hit/miss counters live on the table's shared
+//! [`Stats`] and therefore survive those transitions.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use crate::server::stats::Stats;
+
+/// Fixed per-row bookkeeping overhead charged against the byte cap on
+/// top of the `d * 4` payload (map entries, recency index). Keeping it
+/// a pinned constant makes budget accounting deterministic and
+/// testable; the true allocator cost is the same order of magnitude.
+pub const ROW_OVERHEAD_BYTES: u64 = 64;
+
+#[derive(Default)]
+struct CacheInner {
+    /// id -> (recency stamp, row payload).
+    rows: HashMap<usize, (u64, Vec<f32>)>,
+    /// recency stamp -> id, oldest first (BTreeMap iteration order).
+    /// Stamps are unique (monotonic counter), so this is a total order.
+    lru: BTreeMap<u64, usize>,
+    /// Monotonic recency counter; bumped on every admit and every hit.
+    tick: u64,
+    /// Bytes currently held (payload + [`ROW_OVERHEAD_BYTES`] per row).
+    bytes: u64,
+}
+
+/// A bounded-bytes LRU row cache for one table. Capacity 0 = disabled:
+/// probes miss without counting, admits are dropped, and the fast-path
+/// [`RowCache::enabled`] check is one relaxed atomic load.
+pub struct RowCache {
+    d: usize,
+    /// Byte cap. Outside the mutex so `enabled()` and `cap_bytes()`
+    /// never contend with a batch mid-probe; `set_capacity` stores it
+    /// first, then trims under the lock.
+    cap: AtomicU64,
+    inner: Mutex<CacheInner>,
+}
+
+impl RowCache {
+    /// New cache for rows of width `d`, capped at `cap_bytes` (0 =
+    /// disabled).
+    pub fn new(d: usize, cap_bytes: u64) -> RowCache {
+        RowCache {
+            d,
+            cap: AtomicU64::new(cap_bytes),
+            inner: Mutex::new(CacheInner::default()),
+        }
+    }
+
+    /// Recover from a poisoned lock: cache state is never torn (every
+    /// mutation leaves `rows`/`lru`/`bytes` consistent at panic-visible
+    /// points only between full operations), and a poisoned cache must
+    /// degrade to slow-but-correct serving, not wedge the batcher.
+    fn lock(&self) -> MutexGuard<'_, CacheInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Bytes one cached row costs against the cap.
+    fn row_cost(&self) -> u64 {
+        (self.d as u64) * 4 + ROW_OVERHEAD_BYTES
+    }
+
+    /// True when the cache can hold anything (cap > 0).
+    pub fn enabled(&self) -> bool {
+        self.cap.load(Ordering::Relaxed) > 0
+    }
+
+    /// The configured byte cap (what budget accounting charges).
+    pub fn cap_bytes(&self) -> u64 {
+        self.cap.load(Ordering::Relaxed)
+    }
+
+    /// Bytes currently held (always <= the cap).
+    pub fn bytes(&self) -> u64 {
+        self.lock().bytes
+    }
+
+    /// Rows currently held.
+    pub fn len(&self) -> usize {
+        self.lock().rows.len()
+    }
+
+    /// True when no row is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Probe for `id`; on a hit copy the row into `out` (must be `d`
+    /// wide), refresh its recency, count a hit and return true. On a
+    /// miss count a miss and return false. A disabled cache returns
+    /// false without counting -- disabled serving has zero counter
+    /// traffic, so the twin-registry equivalence suite can compare
+    /// everything else about `stats` too.
+    pub fn try_copy(&self, id: usize, out: &mut [f32], stats: &Stats) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        debug_assert_eq!(out.len(), self.d);
+        let mut g = self.lock();
+        let hit = if let Some((stamp, row)) = g.rows.get(&id) {
+            out.copy_from_slice(row);
+            Some(*stamp)
+        } else {
+            None
+        };
+        match hit {
+            Some(old) => {
+                g.tick += 1;
+                let now = g.tick;
+                g.lru.remove(&old);
+                g.lru.insert(now, id);
+                if let Some((stamp, _)) = g.rows.get_mut(&id) {
+                    *stamp = now;
+                }
+                drop(g);
+                stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => {
+                drop(g);
+                stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Read-only probe for the scoring plane: copy the row on a hit
+    /// WITHOUT counting or refreshing recency. A `topk` scan touches
+    /// every candidate in its range -- letting it churn recency (or
+    /// record a miss per cold row) would let one scan destroy both the
+    /// working set the lookup traffic built and the hit-rate signal.
+    pub fn peek(&self, id: usize, out: &mut [f32]) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        debug_assert_eq!(out.len(), self.d);
+        let g = self.lock();
+        match g.rows.get(&id) {
+            Some((_, row)) => {
+                out.copy_from_slice(row);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Admit a freshly-reconstructed row (must be `d` wide), evicting
+    /// least-recently-used rows until the cache fits its cap. A row
+    /// wider than the whole cap is simply not admitted; re-admitting a
+    /// present id refreshes its payload and recency.
+    pub fn admit(&self, id: usize, row: &[f32]) {
+        let cap = self.cap.load(Ordering::Relaxed);
+        if cap == 0 {
+            return;
+        }
+        debug_assert_eq!(row.len(), self.d);
+        let cost = self.row_cost();
+        if cost > cap {
+            return;
+        }
+        let mut g = self.lock();
+        g.tick += 1;
+        let now = g.tick;
+        if let Some((old, payload)) = g.rows.get_mut(&id) {
+            let old = std::mem::replace(old, now);
+            payload.copy_from_slice(row);
+            g.lru.remove(&old);
+            g.lru.insert(now, id);
+            return;
+        }
+        g.rows.insert(id, (now, row.to_vec()));
+        g.lru.insert(now, id);
+        g.bytes += cost;
+        Self::trim_locked(&mut g, cap, cost);
+    }
+
+    /// Evict oldest-first until `bytes <= cap`.
+    fn trim_locked(g: &mut CacheInner, cap: u64, cost: u64) {
+        while g.bytes > cap {
+            let Some((&stamp, &victim)) = g.lru.iter().next() else { break };
+            g.lru.remove(&stamp);
+            g.rows.remove(&victim);
+            g.bytes -= cost;
+        }
+    }
+
+    /// Change the byte cap in place (0 disables), evicting down to the
+    /// new cap immediately. Returns the cap now in force.
+    pub fn set_capacity(&self, cap_bytes: u64) -> u64 {
+        self.cap.store(cap_bytes, Ordering::Relaxed);
+        let cost = self.row_cost();
+        let mut g = self.lock();
+        if cap_bytes == 0 {
+            g.rows.clear();
+            g.lru.clear();
+            g.bytes = 0;
+        } else {
+            Self::trim_locked(&mut g, cap_bytes, cost);
+        }
+        cap_bytes
+    }
+
+    /// Drop every cached row, keeping the cap.
+    pub fn clear(&self) {
+        let mut g = self.lock();
+        g.rows.clear();
+        g.lru.clear();
+        g.bytes = 0;
+    }
+
+    /// The ids currently cached, most-recently-used last (test hook for
+    /// pinning admission/eviction ordering).
+    pub fn ids_lru_order(&self) -> Vec<usize> {
+        self.lock().lru.values().copied().collect()
+    }
+}
+
+/// The scoring plane's view of the cache: hot candidates skip
+/// reconstruction through the exact scorer
+/// ([`ExactScorer::with_rows`](crate::scoring::ExactScorer::with_rows)).
+/// Cached rows are verbatim reconstructions, so the [`RowBits`]
+/// bit-exactness contract holds by construction.
+impl crate::scoring::RowBits for RowCache {
+    fn copy_row(&self, id: usize, out: &mut [f32]) -> bool {
+        self.peek(id, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(d: usize, v: f32) -> Vec<f32> {
+        vec![v; d]
+    }
+
+    #[test]
+    fn peek_hits_without_counting_or_touching_recency() {
+        let d = 4;
+        let cost = (d as u64) * 4 + ROW_OVERHEAD_BYTES;
+        let c = RowCache::new(d, 2 * cost);
+        let stats = Stats::default();
+        c.admit(0, &row(d, 0.0));
+        c.admit(1, &row(d, 1.0));
+        let mut out = row(d, 9.0);
+        assert!(c.peek(0, &mut out));
+        assert_eq!(out, row(d, 0.0));
+        assert!(!c.peek(5, &mut out));
+        // no counters moved, and id 0's recency was NOT refreshed: the
+        // next admission still evicts id 0 as the LRU victim
+        assert_eq!(stats.cache_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.cache_misses.load(Ordering::Relaxed), 0);
+        c.admit(2, &row(d, 2.0));
+        assert_eq!(c.ids_lru_order(), vec![1, 2]);
+    }
+
+    #[test]
+    fn disabled_cache_never_hits_or_counts() {
+        let c = RowCache::new(4, 0);
+        let stats = Stats::default();
+        assert!(!c.enabled());
+        c.admit(1, &row(4, 1.0));
+        let mut out = row(4, 0.0);
+        assert!(!c.try_copy(1, &mut out, &stats));
+        assert_eq!(stats.cache_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.cache_misses.load(Ordering::Relaxed), 0);
+        assert_eq!(c.bytes(), 0);
+        assert!(stats.cache_hit_rate().is_none());
+    }
+
+    #[test]
+    fn hit_returns_admitted_bits_and_counts() {
+        let d = 6;
+        let c = RowCache::new(d, 1 << 20);
+        let stats = Stats::default();
+        let want: Vec<f32> = (0..d).map(|i| 0.5 + i as f32).collect();
+        c.admit(7, &want);
+        let mut out = row(d, 0.0);
+        assert!(c.try_copy(7, &mut out, &stats));
+        for (a, b) in out.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(!c.try_copy(8, &mut out, &stats));
+        assert_eq!(stats.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.cache_hit_rate(), Some(0.5));
+    }
+
+    /// LRU order: hits refresh recency, eviction removes oldest first.
+    #[test]
+    fn admission_evicts_lru_first() {
+        let d = 4;
+        let cost = (d as u64) * 4 + ROW_OVERHEAD_BYTES;
+        let c = RowCache::new(d, 3 * cost); // exactly three rows fit
+        let stats = Stats::default();
+        c.admit(0, &row(d, 0.0));
+        c.admit(1, &row(d, 1.0));
+        c.admit(2, &row(d, 2.0));
+        assert_eq!(c.ids_lru_order(), vec![0, 1, 2]);
+        // touch 0 so 1 becomes the LRU victim
+        let mut out = row(d, 0.0);
+        assert!(c.try_copy(0, &mut out, &stats));
+        c.admit(3, &row(d, 3.0));
+        assert_eq!(c.ids_lru_order(), vec![2, 0, 3]);
+        assert!(!c.try_copy(1, &mut out, &stats), "id 1 must be evicted");
+        assert_eq!(c.bytes(), 3 * cost);
+    }
+
+    #[test]
+    fn readmit_refreshes_payload_without_double_charging() {
+        let d = 3;
+        let c = RowCache::new(d, 1 << 20);
+        let stats = Stats::default();
+        c.admit(5, &row(d, 1.0));
+        let b0 = c.bytes();
+        c.admit(5, &row(d, 9.0));
+        assert_eq!(c.bytes(), b0, "re-admit must not double-charge");
+        let mut out = row(d, 0.0);
+        assert!(c.try_copy(5, &mut out, &stats));
+        assert_eq!(out, row(d, 9.0));
+    }
+
+    #[test]
+    fn set_capacity_trims_and_zero_disables() {
+        let d = 4;
+        let cost = (d as u64) * 4 + ROW_OVERHEAD_BYTES;
+        let c = RowCache::new(d, 10 * cost);
+        for id in 0..10 {
+            c.admit(id, &row(d, id as f32));
+        }
+        assert_eq!(c.len(), 10);
+        assert_eq!(c.set_capacity(2 * cost), 2 * cost);
+        assert_eq!(c.len(), 2);
+        // the two most recently admitted survive
+        assert_eq!(c.ids_lru_order(), vec![8, 9]);
+        assert!(c.bytes() <= c.cap_bytes());
+        assert_eq!(c.set_capacity(0), 0);
+        assert!(!c.enabled());
+        assert_eq!(c.bytes(), 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn oversized_row_is_not_admitted() {
+        let d = 1024;
+        let c = RowCache::new(d, 8); // cap smaller than one row
+        c.admit(0, &row(d, 1.0));
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+    }
+}

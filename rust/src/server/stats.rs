@@ -138,6 +138,15 @@ pub struct Stats {
     pub score_requests: AtomicU64,
     /// `topk` requests served over this table.
     pub topk_requests: AtomicU64,
+    /// Hot-row cache hits: rows served by memcpy from the per-table
+    /// row cache instead of a code-walk reconstruction. Lives here (not
+    /// on the cache) so the count survives the cache being invalidated
+    /// by demote/promote/`set_replicas` -- the `Arc<Stats>` rides every
+    /// residency transition.
+    pub cache_hits: AtomicU64,
+    /// Hot-row cache misses: rows that went through full reconstruction
+    /// while the cache was enabled. Disabled caches count nothing.
+    pub cache_misses: AtomicU64,
     ring: LatencyRing,
     score_ring: LatencyRing,
 }
@@ -169,6 +178,18 @@ impl Stats {
     /// first scoring request.
     pub fn score_latency(&self) -> Option<(f64, f64)> {
         self.score_ring.percentiles()
+    }
+
+    /// Hot-row cache hit rate over the table's lifetime, `None` before
+    /// the first cache-enabled lookup (hits + misses == 0).
+    pub fn cache_hit_rate(&self) -> Option<f64> {
+        let h = self.cache_hits.load(std::sync::atomic::Ordering::Relaxed);
+        let m = self.cache_misses.load(std::sync::atomic::Ordering::Relaxed);
+        if h + m == 0 {
+            None
+        } else {
+            Some(h as f64 / (h + m) as f64)
+        }
     }
 }
 

@@ -1,0 +1,309 @@
+//! Registry-path tests for the skew-aware backends: [`MultiGranular`]
+//! (MGQE dense-head + compressed-tail routing) and [`HashingTable`]
+//! (the hashing-trick baseline) must be full citizens of every serving
+//! lifecycle -- wire lookups, demote/promote through the spill tier,
+//! snapshot/restore, magic-sniffed hot-loads -- with every served byte
+//! bit-identical to querying the backend directly, and every corrupt
+//! artifact failing typed instead of serving mis-routed rows.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+
+use dpq_embed::backend::{DenseTable, EmbeddingBackend, HashingTable, MultiGranular};
+use dpq_embed::dpq::toy_embedding;
+use dpq_embed::server::{
+    Client, EmbeddingServer, Residency, Rows, ServerConfig, TableRegistry,
+    WireError,
+};
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::Rng;
+
+fn spawn(server: Arc<EmbeddingServer>)
+    -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dpq_backend_granular_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn cfg(dir: &PathBuf) -> ServerConfig {
+    ServerConfig {
+        max_batch: 16,
+        shards_per_table: 2,
+        spill_dir: Some(dir.clone()),
+        ..ServerConfig::default()
+    }
+}
+
+fn toy(n: usize, d: usize, seed: u64) -> TensorF {
+    let mut rng = Rng::new(seed);
+    TensorF {
+        shape: vec![n, d],
+        data: (0..n * d).map(|_| rng.normal()).collect(),
+    }
+}
+
+/// Gather `ids` straight from the backend, bypassing the server.
+fn direct(b: &dyn EmbeddingBackend, ids: &[usize]) -> Vec<f32> {
+    let mut out = vec![0.0f32; ids.len() * b.d()];
+    b.reconstruct_rows_into(ids, &mut out);
+    out
+}
+
+fn assert_bits(rows: &Rows, want: &[f32], what: &str) {
+    assert_eq!(rows.as_slice().len(), want.len(), "{what}: shape");
+    assert!(
+        rows.as_slice().iter().zip(want)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "{what}: served bytes diverge from the backend's own rows"
+    );
+}
+
+/// The MGQE arrangement end to end: a dense head spliced onto a DPQ
+/// tail serves over the wire (boundary ids included), survives
+/// demote + transparent promotion, and restores from a snapshot -- all
+/// bit-identical to querying the assembled backend directly. Scoring
+/// answers match a dense reference table of the same rows bit-for-bit
+/// (exact-everywhere: segment routing must be invisible to `topk`).
+#[test]
+fn multigranular_roundtrips_through_registry_and_spill_tier() {
+    let dir = fresh_dir("mg_lifecycle");
+    let head = toy(12, 8, 11);
+    let mg: Arc<dyn EmbeddingBackend> = Arc::new(MultiGranular::new(vec![
+        (0, Arc::new(DenseTable::new(head.clone()).unwrap()) as _),
+        (12, Arc::new(toy_embedding(52, 8, 4, 2, 3)) as _),
+    ]).unwrap());
+    assert_eq!((mg.vocab(), mg.d(), mg.kind()), (64, 8, "multi_granular"));
+    // boundary ids: 11 is the head's last row, 12 the tail's first
+    let ids = [11usize, 12, 0, 63, 12, 40];
+    let want = direct(&*mg, &ids);
+
+    // a dense reference table holding the SAME rows, for scoring
+    let all: Vec<usize> = (0..64).collect();
+    let full = TensorF { shape: vec![64, 8], data: direct(&*mg, &all) };
+    let reference = Arc::new(DenseTable::new(full).unwrap());
+
+    let reg = TableRegistry::open(cfg(&dir)).unwrap();
+    reg.insert("mg", mg.clone()).unwrap();
+    reg.insert("reference", reference).unwrap();
+    let server = Arc::new(EmbeddingServer::new(reg));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    assert_bits(&c.lookup_bin("mg", &ids).unwrap(), &want, "resident lookup");
+
+    // scoring routes exact-everywhere: ids AND score bits must match
+    // the dense reference
+    let query: Vec<f32> = head.row(3).to_vec();
+    let top_mg = c.topk("mg", &query, 7, None).unwrap();
+    let top_ref = c.topk("reference", &query, 7, None).unwrap();
+    assert_eq!(
+        top_mg.iter().map(|(i, s)| (*i, s.to_bits())).collect::<Vec<_>>(),
+        top_ref.iter().map(|(i, s)| (*i, s.to_bits())).collect::<Vec<_>>(),
+        "multi-granular topk diverges from a dense table of the same rows"
+    );
+    let s_mg = c.score("mg", &query, &ids).unwrap();
+    let s_ref = c.score("reference", &query, &ids).unwrap();
+    assert_eq!(
+        s_mg.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+        s_ref.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+    );
+
+    // demote writes the DPQM artifact; the next lookup transparently
+    // promotes and must serve the same bytes
+    c.admin_demote("mg").unwrap();
+    assert_eq!(server.registry().residency("mg"), Some(Residency::Spilled));
+    assert_bits(&c.lookup_bin("mg", &ids).unwrap(), &want, "promoted lookup");
+    assert_eq!(server.registry().residency("mg"), Some(Residency::Resident));
+
+    // snapshot/restore: a second registry rebuilt from the manifest
+    // serves the same bytes under the same kind
+    let snap = dir.join("snap");
+    let manifest = c.admin_snapshot(snap.to_str().unwrap()).unwrap();
+    c.shutdown().unwrap();
+    h.join().unwrap();
+    let reg2 = TableRegistry::restore(std::path::Path::new(&manifest), None)
+        .unwrap();
+    assert_eq!(reg2.residency("mg"), Some(Residency::Resident));
+    let server2 = Arc::new(EmbeddingServer::new(reg2));
+    let (addr2, h2) = spawn(server2.clone());
+    let mut c2 = Client::connect(addr2).unwrap();
+    assert_bits(&c2.lookup_bin("mg", &ids).unwrap(), &want, "restored lookup");
+    let top2 = c2.topk("mg", &query, 7, None).unwrap();
+    assert_eq!(
+        top2.iter().map(|(i, s)| (*i, s.to_bits())).collect::<Vec<_>>(),
+        top_mg.iter().map(|(i, s)| (*i, s.to_bits())).collect::<Vec<_>>(),
+        "restored multi-granular topk diverges"
+    );
+    c2.shutdown().unwrap();
+    h2.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The hashing-trick baseline through the same lifecycle: collisions
+/// are part of the contract (two ids in one bucket serve identical
+/// rows), and they must survive demote/promote and snapshot/restore
+/// unchanged -- the fixed unseeded hash may never re-route an id across
+/// an artifact roundtrip.
+#[test]
+fn hashing_backend_roundtrips_through_registry() {
+    let dir = fresh_dir("hash_lifecycle");
+    let ht = Arc::new(HashingTable::compress(&toy(100, 6, 7), 16).unwrap());
+    let colliding = (1..100)
+        .find(|&i| ht.bucket_of(i) == ht.bucket_of(0))
+        .expect("100 ids into 16 buckets must collide");
+    let ids = [0usize, colliding, 99, 50, 0];
+    let want = direct(&*ht, &ids);
+
+    let reg = TableRegistry::open(cfg(&dir)).unwrap();
+    reg.insert("hash", ht).unwrap();
+    let server = Arc::new(EmbeddingServer::new(reg));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    let rows = c.lookup_bin("hash", &ids).unwrap();
+    assert_bits(&rows, &want, "resident lookup");
+    assert_eq!(
+        rows.row(0), rows.row(1),
+        "colliding ids must serve the same bucket row"
+    );
+
+    c.admin_demote("hash").unwrap();
+    assert_bits(&c.lookup_bin("hash", &ids).unwrap(), &want, "promoted lookup");
+
+    let snap = dir.join("snap");
+    let manifest = c.admin_snapshot(snap.to_str().unwrap()).unwrap();
+    c.shutdown().unwrap();
+    h.join().unwrap();
+    let reg2 = TableRegistry::restore(std::path::Path::new(&manifest), None)
+        .unwrap();
+    let server2 = Arc::new(EmbeddingServer::new(reg2));
+    let (addr2, h2) = spawn(server2.clone());
+    let mut c2 = Client::connect(addr2).unwrap();
+    assert_bits(&c2.lookup_bin("hash", &ids).unwrap(), &want,
+                "restored lookup");
+    c2.shutdown().unwrap();
+    h2.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Artifact-level defenses: a `DPQM` file whose segment ranges were
+/// tampered into a gap or an overlap fails with the same typed errors
+/// as direct construction, a lying vocab header fails the assembled
+/// shape cross-check, truncation fails the up-front size check, and a
+/// foreign artifact fails the magic check. None of them may load.
+#[test]
+fn multigranular_artifact_corruption_fails_typed() {
+    let dir = fresh_dir("mg_corrupt");
+    let mg = MultiGranular::new(vec![
+        (0, Arc::new(DenseTable::new(toy(12, 4, 1)).unwrap()) as _),
+        (12, Arc::new(DenseTable::new(toy(20, 4, 2)).unwrap()) as _),
+    ]).unwrap();
+    let path = dir.join("mg.dpqm");
+    mg.save(&path).unwrap();
+
+    // the pristine artifact roundtrips bit-exactly
+    let ids: Vec<usize> = (0..32).collect();
+    let loaded = MultiGranular::load(&path).unwrap();
+    let (a, b) = (direct(&mg, &ids), direct(&loaded, &ids));
+    assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+    // layout: 4-byte magic, 4 u64 header dims, then the segment blob
+    // whose first field is segment 0's u64 LE `end` (= 12)
+    let pristine = std::fs::read(&path).unwrap();
+    let end0_at = 4 + 4 * 8;
+    assert_eq!(
+        u64::from_le_bytes(pristine[end0_at..end0_at + 8].try_into().unwrap()),
+        12
+    );
+
+    let tamper = |end0: u64| -> String {
+        let mut bytes = pristine.clone();
+        bytes[end0_at..end0_at + 8].copy_from_slice(&end0.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        MultiGranular::load(&path).unwrap_err().to_string()
+    };
+    // segment 1 now starts past / inside segment 0's actual coverage
+    let err = tamper(13);
+    assert!(err.contains("gap"), "{err}");
+    let err = tamper(11);
+    assert!(err.contains("overlap"), "{err}");
+
+    // header vocab lies about what the segments assemble to
+    let mut bytes = pristine.clone();
+    bytes[4..12].copy_from_slice(&33u64.to_le_bytes());
+    std::fs::write(&path, bytes).unwrap();
+    let err = MultiGranular::load(&path).unwrap_err().to_string();
+    assert!(err.contains("header declares"), "{err}");
+
+    // truncation fails the up-front total-size check
+    std::fs::write(&path, &pristine[..pristine.len() - 7]).unwrap();
+    assert!(MultiGranular::load(&path).is_err());
+
+    // a foreign artifact (hashing) fails the magic check
+    let hpath = dir.join("h.dpqh");
+    HashingTable::compress(&toy(10, 4, 3), 4).unwrap().save(&hpath).unwrap();
+    let err = MultiGranular::load(&hpath).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The admin `load` op sniffs the artifact kind from its magic: the
+/// same wire op hot-loads multi-granular, hashing and dense artifacts
+/// (serving each bit-exactly), and answers a typed `load_failed` for
+/// garbage bytes and unknown magics.
+#[test]
+fn hot_load_sniffs_artifact_kind_over_the_wire() {
+    let dir = fresh_dir("sniff");
+    let mg = MultiGranular::new(vec![
+        (0, Arc::new(DenseTable::new(toy(8, 4, 21)).unwrap()) as _),
+        (8, Arc::new(DenseTable::new(toy(24, 4, 22)).unwrap()) as _),
+    ]).unwrap();
+    let ids = [7usize, 8, 0, 31];
+    let want_mg = direct(&mg, &ids);
+    let mg_path = dir.join("mg.artifact");
+    mg.save(&mg_path).unwrap();
+    let ht = HashingTable::compress(&toy(40, 4, 23), 8).unwrap();
+    let want_ht = direct(&ht, &ids);
+    let ht_path = dir.join("h.artifact");
+    ht.save(&ht_path).unwrap();
+    let dense = DenseTable::new(toy(32, 4, 24)).unwrap();
+    let want_dense = direct(&dense, &ids);
+    let dense_path = dir.join("d.artifact");
+    dense.save(&dense_path).unwrap();
+    std::fs::write(dir.join("garbage"), b"XXXXnot an artifact").unwrap();
+
+    let reg = TableRegistry::open(cfg(&dir)).unwrap();
+    let server = Arc::new(EmbeddingServer::new(reg));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    for (name, path, kind, vocab, want) in [
+        ("mg", &mg_path, "multi_granular", 32, &want_mg),
+        ("hash", &ht_path, "hashing", 40, &want_ht),
+        ("dense", &dense_path, "dense", 32, &want_dense),
+    ] {
+        let desc = c.admin_load(name, path.to_str().unwrap()).unwrap();
+        assert_eq!((desc.kind.as_str(), desc.vocab, desc.d),
+                   (kind, vocab, 4), "{name}");
+        assert_bits(&c.lookup_bin(name, &ids).unwrap(), want, name);
+    }
+    match c.admin_load("bad", dir.join("garbage").to_str().unwrap()) {
+        Err(WireError::Rejected { code, message }) => {
+            assert_eq!(code, "load_failed");
+            assert!(message.contains("magic"), "{message}");
+        }
+        other => panic!("{other:?}"),
+    }
+    c.shutdown().unwrap();
+    h.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

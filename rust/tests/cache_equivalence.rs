@@ -1,0 +1,422 @@
+//! The hot-row cache's one non-negotiable contract: it is INVISIBLE in
+//! every served byte. A cache-enabled server and a cache-disabled twin
+//! driven through the same randomized op mix -- `lookup`,
+//! `lookup_fanout`, `score`, `topk`, `demote` (with transparent
+//! promotion), `set_replicas`, `set_row_cache` resizes -- over three
+//! tables of three backend kinds (DPQ, dense, multi-granular) must
+//! answer bit-identically everywhere, while the subject's cache
+//! demonstrably takes hits. Tier-1 reruns this file under
+//! `DPQ_THREADS=2`, so the equivalence is also pinned across pool
+//! widths.
+//!
+//! Deterministic companions pin the mechanics the randomized driver
+//! can't assert exactly: LRU admission/eviction ordering and hit/miss
+//! accounting through the wire stats, invalidation across
+//! demote/promote (fresh empty cache, capacity carried, counters
+//! surviving), and the memory-budget charge (cache CAPACITY counts
+//! against `--mem-budget`; caches shrink before any table is evicted).
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+
+use dpq_embed::backend::{
+    DenseTable, EmbeddingBackend, HashingTable, MultiGranular,
+};
+use dpq_embed::dpq::toy_embedding;
+use dpq_embed::server::{
+    Client, EmbeddingServer, Residency, Rows, ServerConfig, TableRegistry,
+};
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::prop::prop_check;
+use dpq_embed::util::Rng;
+
+/// (name, vocab, d) of the three tables both registries serve.
+const DIMS: [(&str, usize, usize); 3] =
+    [("alpha", 60, 8), ("beta", 40, 6), ("gamma", 40, 5)];
+
+fn spawn(server: Arc<EmbeddingServer>)
+    -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+fn bits_equal(a: &Rows, b: &Rows) -> bool {
+    a.n() == b.n()
+        && a.d() == b.d()
+        && a.as_slice().iter().zip(b.as_slice())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dpq_cache_equiv_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn toy(n: usize, d: usize, seed: u64) -> TensorF {
+    let mut rng = Rng::new(seed);
+    TensorF {
+        shape: vec![n, d],
+        data: (0..n * d).map(|_| rng.normal()).collect(),
+    }
+}
+
+/// The three tables, built fresh (construction is deterministic, so
+/// the subject's and the twin's backends hold identical bits).
+fn backends() -> Vec<(&'static str, Arc<dyn EmbeddingBackend>)> {
+    vec![
+        ("alpha", Arc::new(toy_embedding(60, 8, 4, 2, 5))),
+        ("beta", Arc::new(DenseTable::new(toy(40, 6, 6)).unwrap())),
+        ("gamma", Arc::new(MultiGranular::new(vec![
+            (0, Arc::new(DenseTable::new(toy(10, 5, 7)).unwrap()) as _),
+            (10, Arc::new(
+                HashingTable::compress(&toy(30, 5, 8), 8).unwrap()) as _),
+        ]).unwrap())),
+    ]
+}
+
+fn u64_stat(j: &dpq_embed::jsonx::Json, key: &str) -> u64 {
+    j.get(key).and_then(|v| v.as_usize()).unwrap_or(0) as u64
+}
+
+#[test]
+fn cached_server_is_bit_identical_to_cache_disabled_twin() {
+    let mut case_no = 0u64;
+    prop_check(4, |rng| {
+        case_no += 1;
+        let dir_s = fresh_dir(&format!("subject_{case_no}"));
+        let dir_t = fresh_dir(&format!("twin_{case_no}"));
+        let mk = |spill: &PathBuf, cache: u64| ServerConfig {
+            max_batch: 8,
+            shards_per_table: 2,
+            spill_dir: Some(spill.clone()),
+            row_cache_bytes: cache,
+            ..ServerConfig::default()
+        };
+        let subject =
+            Arc::new(EmbeddingServer::new(
+                TableRegistry::open(mk(&dir_s, 4096))
+                    .map_err(|e| format!("open subject: {e}"))?));
+        let twin =
+            Arc::new(EmbeddingServer::new(
+                TableRegistry::open(mk(&dir_t, 0))
+                    .map_err(|e| format!("open twin: {e}"))?));
+        for (name, b) in backends() {
+            subject.registry().insert(name, b).unwrap();
+        }
+        for (name, b) in backends() {
+            twin.registry().insert(name, b).unwrap();
+        }
+        let (addr_s, h_s) = spawn(subject.clone());
+        let (addr_t, h_t) = spawn(twin.clone());
+        let mut cs = Client::connect(addr_s).unwrap();
+        let mut ct = Client::connect(addr_t).unwrap();
+
+        for step in 0..140 {
+            let (name, vocab, d) = DIMS[rng.below(3)];
+            match rng.below(10) {
+                // ---- lookup (40%): repeated ids drive admissions and
+                // hits on the subject ----
+                0..=3 => {
+                    let n = 1 + rng.below(6);
+                    let ids: Vec<usize> =
+                        (0..n).map(|_| rng.below(vocab)).collect();
+                    let a = cs.lookup_bin(name, &ids)
+                        .map_err(|e| format!("step {step}: subject: {e}"))?;
+                    let b = ct.lookup_bin(name, &ids)
+                        .map_err(|e| format!("step {step}: twin: {e}"))?;
+                    if !bits_equal(&a, &b) {
+                        return Err(format!(
+                            "step {step}: {name} lookup bytes diverged \
+                             (ids {ids:?})"));
+                    }
+                }
+                // ---- fan-out across all three tables ----
+                4 => {
+                    let idlists: Vec<Vec<usize>> = DIMS
+                        .iter()
+                        .map(|&(_, v, _)| {
+                            (0..rng.below(5)).map(|_| rng.below(v)).collect()
+                        })
+                        .collect();
+                    let queries: Vec<(&str, &[usize])> = DIMS
+                        .iter()
+                        .zip(&idlists)
+                        .map(|(&(n, _, _), ids)| (n, &ids[..]))
+                        .collect();
+                    let a = cs.lookup_fanout(&queries)
+                        .map_err(|e| format!("step {step}: subject: {e}"))?;
+                    let b = ct.lookup_fanout(&queries)
+                        .map_err(|e| format!("step {step}: twin: {e}"))?;
+                    if a.len() != b.len()
+                        || a.iter().zip(&b).any(|(x, y)| !bits_equal(x, y))
+                    {
+                        return Err(format!(
+                            "step {step}: fan-out sections diverged"));
+                    }
+                }
+                // ---- score: the exact path substitutes cached rows on
+                // the subject; scores must still match bitwise ----
+                5 => {
+                    let query: Vec<f32> =
+                        (0..d).map(|_| rng.normal()).collect();
+                    let ids: Vec<usize> = (0..1 + rng.below(5))
+                        .map(|_| rng.below(vocab))
+                        .collect();
+                    let a = cs.score(name, &query, &ids)
+                        .map_err(|e| format!("step {step}: subject: {e}"))?;
+                    let b = ct.score(name, &query, &ids)
+                        .map_err(|e| format!("step {step}: twin: {e}"))?;
+                    if a.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+                        != b.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+                    {
+                        return Err(format!(
+                            "step {step}: {name} scores diverged"));
+                    }
+                }
+                // ---- topk: ranking AND score bits must agree ----
+                6 => {
+                    let query: Vec<f32> =
+                        (0..d).map(|_| rng.normal()).collect();
+                    let k = 1 + rng.below(5);
+                    let a = cs.topk(name, &query, k, None)
+                        .map_err(|e| format!("step {step}: subject: {e}"))?;
+                    let b = ct.topk(name, &query, k, None)
+                        .map_err(|e| format!("step {step}: twin: {e}"))?;
+                    if a.iter().map(|(i, s)| (*i, s.to_bits()))
+                        .collect::<Vec<_>>()
+                        != b.iter().map(|(i, s)| (*i, s.to_bits()))
+                            .collect::<Vec<_>>()
+                    {
+                        return Err(format!(
+                            "step {step}: {name} topk diverged"));
+                    }
+                }
+                // ---- demote both; the next touch transparently
+                // promotes (the subject's cache restarts empty) ----
+                7 => {
+                    let a = cs.admin_demote(name);
+                    let b = ct.admin_demote(name);
+                    if a.is_ok() != b.is_ok() {
+                        return Err(format!(
+                            "step {step}: demote({name}) diverged: \
+                             {a:?} vs {b:?}"));
+                    }
+                }
+                // ---- set_replicas both: resizes are bit-invisible ----
+                8 => {
+                    let n = 1 + rng.below(3);
+                    let a = cs.admin_set_replicas(name, n)
+                        .map_err(|e| format!("step {step}: subject: {e}"))?;
+                    let b = ct.admin_set_replicas(name, n)
+                        .map_err(|e| format!("step {step}: twin: {e}"))?;
+                    if a != n || b != n {
+                        return Err(format!(
+                            "step {step}: set_replicas answered {a}/{b}"));
+                    }
+                }
+                // ---- set_row_cache, SUBJECT only (the twin must stay
+                // cacheless): resizes drop rows, never change bytes ----
+                _ => {
+                    let bytes = [0u64, 512, 4096, 1 << 20][rng.below(4)];
+                    cs.admin_set_row_cache(name, bytes)
+                        .map_err(|e| format!("step {step}: subject: {e}"))?;
+                }
+            }
+        }
+
+        // deterministic closing sweep: cache beta fully, scan it twice
+        // -- the second pass is all hits -- then bit-compare EVERY row
+        // of every table one last time
+        cs.admin_set_row_cache("beta", 64 * 1024)
+            .map_err(|e| format!("closing set_row_cache: {e}"))?;
+        for (name, vocab, _) in DIMS {
+            let all: Vec<usize> = (0..vocab).collect();
+            for pass in 0..2 {
+                let a = cs.lookup_bin(name, &all)
+                    .map_err(|e| format!("sweep {name}/{pass}: {e}"))?;
+                let b = ct.lookup_bin(name, &all)
+                    .map_err(|e| format!("sweep {name}/{pass}: {e}"))?;
+                if !bits_equal(&a, &b) {
+                    return Err(format!(
+                        "closing sweep pass {pass}: {name} diverged"));
+                }
+            }
+        }
+        let st = cs.stats(Some("beta")).unwrap();
+        if u64_stat(&st, "cache_hits") == 0 {
+            return Err("subject cache took no hits -- the equivalence \
+                        run never exercised the cache".into());
+        }
+        for (name, _, _) in DIMS {
+            let tw = ct.stats(Some(name)).unwrap();
+            if u64_stat(&tw, "cache_hits") != 0
+                || u64_stat(&tw, "row_cache_cap_bytes") != 0
+            {
+                return Err(format!("twin {name} grew a cache"));
+            }
+        }
+
+        cs.shutdown().unwrap();
+        ct.shutdown().unwrap();
+        h_s.join().unwrap();
+        h_t.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir_s);
+        let _ = std::fs::remove_dir_all(&dir_t);
+        Ok(())
+    });
+}
+
+/// LRU mechanics through the wire, pinned exactly: a cache sized for
+/// two rows admits on miss, serves repeats from the cache, evicts
+/// least-recently-USED (a hit refreshes recency), and the hit/miss
+/// counters in `stats` account for every step. One shard, one client,
+/// single-id lookups: every admission is sequential and deterministic.
+#[test]
+fn admission_eviction_and_counters_are_deterministic() {
+    let dir = fresh_dir("lru");
+    let table = toy(10, 4, 42);
+    // row cost = 64-byte overhead + 16 data bytes = 80; cap = 2 rows
+    let reg = TableRegistry::open(ServerConfig {
+        max_batch: 8,
+        shards_per_table: 1,
+        spill_dir: Some(dir.clone()),
+        row_cache_bytes: 160,
+        ..ServerConfig::default()
+    }).unwrap();
+    reg.insert("t", Arc::new(DenseTable::new(table.clone()).unwrap()))
+        .unwrap();
+    let server = Arc::new(EmbeddingServer::new(reg));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    // (id, expected hits so far, expected misses so far)
+    let script: [(usize, u64, u64); 7] = [
+        (0, 0, 1), // miss, admit 0           cache: [0]
+        (0, 1, 1), // hit                     cache: [0]
+        (1, 1, 2), // miss, admit 1           cache: [0, 1]
+        (2, 1, 3), // miss, evict LRU 0       cache: [1, 2]
+        (1, 2, 3), // hit, refreshes 1        cache: [2, 1]
+        (0, 2, 4), // miss, evict LRU 2       cache: [1, 0]
+        (2, 2, 5), // miss, evict LRU 1       cache: [0, 2]
+    ];
+    for (step, &(id, hits, misses)) in script.iter().enumerate() {
+        let rows = c.lookup_bin("t", &[id]).unwrap();
+        assert_eq!(rows.row(0), table.row(id), "step {step}: wrong bytes");
+        let st = c.stats(Some("t")).unwrap();
+        assert_eq!(
+            (u64_stat(&st, "cache_hits"), u64_stat(&st, "cache_misses")),
+            (hits, misses),
+            "step {step} (id {id})"
+        );
+    }
+    let st = c.stats(Some("t")).unwrap();
+    assert_eq!(u64_stat(&st, "row_cache_cap_bytes"), 160);
+    assert_eq!(u64_stat(&st, "row_cache_bytes"), 160, "2 rows resident");
+
+    // demote + transparent promote: contents are STRUCTURALLY dropped
+    // (fresh cache), capacity carries over, counters keep accumulating
+    // on the table's Stats across the residency transition
+    c.admin_demote("t").unwrap();
+    let rows = c.lookup_bin("t", &[5]).unwrap();
+    assert_eq!(rows.row(0), table.row(5));
+    let st = c.stats(Some("t")).unwrap();
+    assert_eq!(u64_stat(&st, "row_cache_cap_bytes"), 160, "cap carried");
+    assert_eq!(u64_stat(&st, "row_cache_bytes"), 80,
+               "only the post-promote row may be cached");
+    assert_eq!(
+        (u64_stat(&st, "cache_hits"), u64_stat(&st, "cache_misses")),
+        (2, 6),
+        "counters survive the residency transition"
+    );
+
+    // resizing to 0 disables and drops everything, immediately
+    assert_eq!(c.admin_set_row_cache("t", 0).unwrap(), 0);
+    let st = c.stats(Some("t")).unwrap();
+    assert_eq!(u64_stat(&st, "row_cache_bytes"), 0);
+    c.shutdown().unwrap();
+    h.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The budget charge: cache CAPACITY (not fill) counts against
+/// `--mem-budget`. A resize is clamped to the budget headroom, the
+/// invariant `resident + capacity <= budget` holds after every
+/// mutation, and under pressure caches shrink to zero BEFORE any
+/// resident table is evicted.
+#[test]
+fn cache_capacity_counts_against_mem_budget() {
+    let dir = fresh_dir("budget");
+    const BUDGET: u64 = 1000;
+    let reg = TableRegistry::open(ServerConfig {
+        max_batch: 8,
+        shards_per_table: 1,
+        mem_budget_bytes: Some(BUDGET),
+        spill_dir: Some(dir.clone()),
+        spill_on_evict: true,
+        ..ServerConfig::default()
+    }).unwrap();
+    let charged = |reg: &TableRegistry| -> u64 {
+        reg.resident_bytes()
+            + reg.list().iter()
+                .map(|e| e.row_cache.cap_bytes())
+                .sum::<u64>()
+    };
+
+    // two 320-byte tables leave 360 bytes of headroom
+    reg.insert("a", Arc::new(DenseTable::new(toy(20, 4, 1)).unwrap()))
+        .unwrap();
+    reg.insert("b", Arc::new(DenseTable::new(toy(20, 4, 2)).unwrap()))
+        .unwrap();
+    assert_eq!(reg.resident_bytes(), 640);
+
+    // an oversized resize is clamped to exactly the headroom, and the
+    // tuned table is never evicted to make room for its own cache
+    let cap = reg.set_row_cache("a", 10_000).unwrap();
+    assert_eq!(cap, 360, "cap must clamp to the budget headroom");
+    assert!(charged(&reg) <= BUDGET);
+    assert_eq!(reg.residency("a"), Some(Residency::Resident));
+
+    // a second oversized resize forces shrinks but never an eviction
+    let cap_b = reg.set_row_cache("b", 10_000).unwrap();
+    assert!(cap_b <= 360, "no headroom was conjured: {cap_b}");
+    assert!(charged(&reg) <= BUDGET);
+    assert_eq!(reg.residency("a"), Some(Residency::Resident));
+    assert_eq!(reg.residency("b"), Some(Residency::Resident));
+
+    // pressure from a third table: caches shrink first (to zero here),
+    // and with 960 resident bytes fitting the budget, NO table may be
+    // evicted to protect a cache
+    reg.insert("c", Arc::new(DenseTable::new(toy(20, 4, 3)).unwrap()))
+        .unwrap();
+    assert!(charged(&reg) <= BUDGET);
+    for name in ["a", "b", "c"] {
+        assert_eq!(reg.residency(name), Some(Residency::Resident),
+                   "{name} was evicted while caches could still shrink");
+    }
+    assert_eq!(reg.resident_bytes(), 960);
+    let caps: u64 =
+        reg.list().iter().map(|e| e.row_cache.cap_bytes()).sum();
+    assert!(caps <= BUDGET - 960, "caches must fit the leftover headroom");
+
+    // a fourth table cannot fit even with every cache at zero: now a
+    // table is evicted -- and every surviving cache is already zero
+    reg.insert("d", Arc::new(DenseTable::new(toy(20, 4, 4)).unwrap()))
+        .unwrap();
+    assert!(charged(&reg) <= BUDGET);
+    let spilled = ["a", "b", "c", "d"]
+        .iter()
+        .filter(|n| reg.residency(n) == Some(Residency::Spilled))
+        .count();
+    assert_eq!(spilled, 1, "exactly one table spills under pressure");
+    for e in reg.list() {
+        assert_eq!(e.row_cache.cap_bytes(), 0,
+                   "{}: caches must hit zero before any eviction", e.name);
+    }
+    reg.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -2,12 +2,15 @@
 //! `load` / `demote` / `lookup` / `lookup_fanout` / `unload` /
 //! `set_replicas` / TTL clock ticks / full restart-recovery against 3
 //! tables under a tiny `--mem-budget` with a spill tier, driven at a
-//! 2-thread worker pool. Every successful lookup must be BIT-identical
-//! to a pinned always-resident reference registry (no budget, no spill,
-//! no TTL, 1 replica) mirroring the same load/unload history, and
-//! resident bytes must never exceed the budget after each op completes
-//! (quiescence: the driver is synchronous, and demote/promote/evict all
-//! finish before returning).
+//! 2-thread worker pool. The subject additionally runs per-table
+//! hot-row caches (the reference does not -- the bit-compare proves the
+//! cache is invisible under residency churn). Every successful lookup
+//! must be BIT-identical to a pinned always-resident reference registry
+//! (no budget, no spill, no TTL, 1 replica) mirroring the same
+//! load/unload history, and resident bytes plus cache CAPACITY must
+//! never exceed the budget after each op completes (quiescence: the
+//! driver is synchronous, and demote/promote/evict all finish before
+//! returning).
 //!
 //! TTL is driven through the registry's injected [`ManualClock`], so
 //! "time passes" is an explicit deterministic op in the mix, not a
@@ -36,7 +39,11 @@ const NAMES: [&str; 3] = ["t0", "t1", "t2"];
 const VOCAB: usize = 10;
 const D: usize = 4;
 const BYTES_PER: u64 = (VOCAB * D * 4) as u64; // dense f32 table
-const BUDGET: u64 = 2 * BYTES_PER; // fits 2 of the 3 tables
+// fits 2 of the 3 tables plus some (not all) of their hot-row caches,
+// so the budget pass must shrink caches before it may evict a table
+const BUDGET: u64 = 2 * BYTES_PER + 100;
+// capacity for one raw row (64-byte overhead + 16 data bytes) per table
+const ROW_CACHE: u64 = 96;
 const TTL_SECS: u64 = 40;
 
 fn spawn(server: Arc<EmbeddingServer>)
@@ -86,6 +93,8 @@ fn randomized_ops_match_always_resident_reference_under_budget() {
             spill_dir: Some(spill.clone()),
             spill_on_evict: true,
             ttl_secs: Some(TTL_SECS),
+            row_cache_bytes: ROW_CACHE,
+            ..ServerConfig::default()
         };
         let subject_reg =
             TableRegistry::open_with_clock(subject_cfg.clone(), clock.clone())
@@ -323,14 +332,23 @@ fn randomized_ops_match_always_resident_reference_under_budget() {
             }
             // quiescence invariant: the driver is synchronous and every
             // transition completes before returning, so resident bytes
-            // must respect the budget after EVERY op (the two pinnable
-            // tables together equal the budget exactly, so the soft
-            // over-budget escape hatch can never trigger here)
+            // PLUS hot-row cache capacity must respect the budget after
+            // EVERY op (the two pinnable tables together fit under the
+            // budget, so the soft over-budget escape hatch can never
+            // trigger here -- caches are charged at capacity and shrink
+            // before any table may be evicted)
             let resident = subject.registry().resident_bytes();
-            if resident > BUDGET {
+            let caps: u64 = subject
+                .registry()
+                .list()
+                .iter()
+                .map(|e| e.row_cache.cap_bytes())
+                .sum();
+            if resident + caps > BUDGET {
                 return Err(format!(
-                    "step {step}: resident {resident} bytes exceeds the \
-                     {BUDGET}-byte budget after quiescence"));
+                    "step {step}: resident {resident} + cache capacity \
+                     {caps} bytes exceeds the {BUDGET}-byte budget after \
+                     quiescence"));
             }
         }
 

@@ -29,6 +29,14 @@
 # reconstruct-then-score reference, topk determinism across threads /
 # shards / replicas, spilled-table scoring) runs in BOTH thread passes --
 # score bits must not depend on the pool size.
+#
+# Skew-aware-serving coverage: cache_equivalence (hot-row cache on vs a
+# cache-disabled twin, bit-compared over a randomized op mix, plus
+# deterministic LRU admission/eviction and budget-accounting checks) and
+# backend_granular (MultiGranular + hashing backends through the full
+# registry / spill / snapshot lifecycle) run in BOTH thread passes --
+# the cache and the segment router must be invisible in the bytes at
+# every pool size.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -39,7 +47,8 @@ target/release/repro fuzz --seed 42 --iters 2000
 DPQ_THREADS=2 cargo test -q --test multi_table --test server_integration \
     --test registry_lifecycle --test residency_faults --test residency_soak \
     --test replica_equivalence --test spill_recovery \
-    --test conn_hardening --test fuzz_corpus --test scoring_equivalence
+    --test conn_hardening --test fuzz_corpus --test scoring_equivalence \
+    --test cache_equivalence --test backend_granular
 DPQ_THREADS=2 target/release/repro fuzz --seed 42 --iters 2000
 RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps -q
 for f in docs/*.md; do
@@ -50,4 +59,9 @@ for f in docs/*.md; do
     fi
 done
 cargo bench --no-run
+# perf trail summary (informational: skipped when no bench has run yet,
+# since the BENCH_*.json trail only accumulates on actual bench runs)
+if ls BENCH_*.json >/dev/null 2>&1; then
+    tools/perf_report.sh
+fi
 echo "tier1: OK"

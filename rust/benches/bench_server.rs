@@ -650,4 +650,145 @@ fn main() {
     bench::record("lookup_zipf_multigranular", mg_lat, 0.0, 600);
     bench::record("multigranular_vs_dpq", mg_lat / dpq_lat.max(1e-12),
                   0.0, 600);
+
+    // Event-driven connection plane at scale: 1000 idle connections
+    // held open (costing epoll registrations, not threads) while 64
+    // hot closed-loop clients hammer lookups. The number to watch
+    // across PRs is the hot-path latency staying flat vs the small
+    // grids above.
+    section("conn plane: 1000 idle conns + 64 hot clients (event-driven)");
+    let registry = TableRegistry::new(ServerConfig {
+        max_batch: 64,
+        conn_timeout: Some(std::time::Duration::from_secs(600)),
+        ..ServerConfig::default()
+    });
+    registry.insert("emb", Arc::new(ce.clone())).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = boot(server);
+    let mut idle: Vec<std::net::TcpStream> = Vec::with_capacity(1000);
+    for _ in 0..1000 {
+        idle.push(std::net::TcpStream::connect(addr).unwrap());
+    }
+    let hot = 64usize;
+    let per_client = 50usize;
+    let t0 = Instant::now();
+    let ws: Vec<_> = (0..hot)
+        .map(|w| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let mut rng = Rng::new(w as u64 + 5000);
+                for _ in 0..per_client {
+                    let ids: Vec<usize> =
+                        (0..16).map(|_| rng.below(n)).collect();
+                    c.lookup_bin("emb", &ids).unwrap();
+                }
+            })
+        })
+        .collect();
+    for w in ws {
+        w.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let reqs = hot * per_client;
+    println!(
+        "{reqs} requests from {hot} hot clients with 1000 idle conns \
+         attached: {:.2}s = {:.0} req/s",
+        wall, reqs as f64 / wall
+    );
+    bench::record("lookup_1k_idle_64_hot", wall / reqs as f64, 0.0, reqs);
+    drop(idle);
+    let mut c = Client::connect(addr).unwrap();
+    c.shutdown().unwrap();
+    h.join().unwrap();
+
+    // Request pipelining on one connection: the same lookup_bin frames
+    // written one-at-a-time (write, read, repeat) vs all-at-once with
+    // the responses read back afterwards. The gap is the per-round-trip
+    // decode/dispatch overlap the readiness loop buys.
+    section("conn plane: pipelined vs serial, one connection");
+    let server = Arc::new(EmbeddingServer::single("emb", ce.clone(), 64));
+    let (addr, h) = boot(server);
+    let frame_bytes = |i: usize| -> Vec<u8> {
+        let req = format!(
+            "{{\"v\":2,\"op\":\"lookup_bin\",\"table\":\"emb\",\
+             \"ids\":[{}]}}", i % n);
+        let mut b = (req.len() as u32).to_le_bytes().to_vec();
+        b.extend_from_slice(req.as_bytes());
+        b
+    };
+    let read_frame = |s: &mut std::net::TcpStream| {
+        use std::io::Read as _;
+        let mut len4 = [0u8; 4];
+        s.read_exact(&mut len4).unwrap();
+        let mut buf = vec![0u8; u32::from_le_bytes(len4) as usize];
+        s.read_exact(&mut buf).unwrap();
+        buf
+    };
+    let iters = 2000usize;
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    let t0 = Instant::now();
+    for i in 0..iters {
+        use std::io::Write as _;
+        s.write_all(&frame_bytes(i)).unwrap();
+        read_frame(&mut s);
+    }
+    let serial = t0.elapsed().as_secs_f64() / iters as f64;
+    let batch: Vec<u8> =
+        (0..iters).flat_map(frame_bytes).collect();
+    let t0 = Instant::now();
+    {
+        use std::io::Write as _;
+        s.write_all(&batch).unwrap();
+    }
+    for _ in 0..iters {
+        read_frame(&mut s);
+    }
+    let pipelined = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "serial {:.1}us vs pipelined {:.1}us per request ({:.2}x)",
+        serial * 1e6, pipelined * 1e6, serial / pipelined.max(1e-12)
+    );
+    bench::record("pipelined_vs_serial_1conn",
+                  serial / pipelined.max(1e-12), 0.0, iters);
+    bench::record("lookup_serial_1conn", serial, 0.0, iters);
+    bench::record("lookup_pipelined_1conn", pipelined, 0.0, iters);
+    drop(s);
+    let mut c = Client::connect(addr).unwrap();
+    c.shutdown().unwrap();
+    h.join().unwrap();
+
+    // Chunked streaming: a full-vocab topk whose response is too big
+    // for one frame (the JSON path rejects it too_large) delivered via
+    // the v2 chunk channel.
+    section("conn plane: streamed full-vocab topk past the frame cap");
+    let svocab = 540_000usize;
+    let sd = 4usize;
+    let mut rng = Rng::new(43);
+    let dense = DenseTable::new(TensorF {
+        shape: vec![svocab, sd],
+        data: (0..svocab * sd).map(|_| rng.normal()).collect(),
+    })
+    .unwrap();
+    let registry = TableRegistry::new(ServerConfig::default());
+    registry.insert("big", Arc::new(dense)).unwrap();
+    let (addr, h) = boot(Arc::new(EmbeddingServer::new(registry)));
+    let mut c = Client::connect(addr).unwrap();
+    let q: Vec<f32> = (0..sd).map(|i| i as f32 - 1.5).collect();
+    let stream_iters = 5usize;
+    let t0 = Instant::now();
+    let mut got = 0usize;
+    for _ in 0..stream_iters {
+        got = c.topk_stream("big", &q, svocab, None).unwrap().len();
+    }
+    let stream_s = t0.elapsed().as_secs_f64() / stream_iters as f64;
+    assert_eq!(got, svocab);
+    println!(
+        "streamed topk(k = vocab = {svocab}): {:.1}ms per request \
+         ({:.1} MiB payload)",
+        stream_s * 1e3, (svocab * 12 + 8) as f64 / (1 << 20) as f64
+    );
+    bench::record("streamed_topk_full_vocab", stream_s, 0.0, stream_iters);
+    c.shutdown().unwrap();
+    h.join().unwrap();
 }

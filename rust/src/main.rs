@@ -390,6 +390,23 @@ fn dispatch(args: &[String]) -> Result<()> {
                     Some(Some(n))
                 }
             };
+            // --pollers N: poller threads for the event-driven
+            // connection plane (thread count flat in the connection
+            // count). 0 selects the legacy thread-per-connection plane;
+            // served bytes are bit-identical either way. Absent = 2 (or
+            // whatever a --restore manifest recorded).
+            let pollers: Option<usize> = match kv.get("pollers") {
+                None => None,
+                Some(s) => {
+                    let n: usize = s.trim().parse().map_err(|_| anyhow!(
+                        "--pollers expects a non-negative integer \
+                         (0 = thread-per-connection), got {s:?}"))?;
+                    if n > 1024 {
+                        bail!("--pollers must be <= 1024, got {s:?}");
+                    }
+                    Some(n)
+                }
+            };
             let registry = if let Some(manifest) = kv.get("restore") {
                 // rebuild a whole registry from a snapshot manifest; the
                 // snapshot's recorded config applies unless a flag was
@@ -423,6 +440,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                 }
                 if let Some(b) = row_cache_bytes {
                     cfg.row_cache_bytes = b;
+                }
+                if let Some(p) = pollers {
+                    cfg.pollers = p;
                 }
                 // same loud failure as the non-restore path: an explicit
                 // --spill policy with no spill dir anywhere (flag OR
@@ -464,6 +484,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                     max_conns: max_conns.unwrap_or(Some(1024)),
                     debug_ops: false,
                     row_cache_bytes: row_cache_bytes.unwrap_or(0),
+                    pollers: pollers.unwrap_or(2),
                 })?
             };
             // `--table` flags load on top of either path (extra tables
@@ -538,7 +559,12 @@ fn dispatch(args: &[String]) -> Result<()> {
                 registry.default_name().unwrap_or_default()
             );
             println!(
-                "connection plane: timeout {}, max conns {}",
+                "connection plane: {}, timeout {}, max conns {}",
+                if cfg.pollers > 0 && cfg!(target_os = "linux") {
+                    format!("{} poller(s) (event-driven)", cfg.pollers)
+                } else {
+                    "thread-per-connection".into()
+                },
                 cfg.conn_timeout
                     .map(|t| format!("{}s", t.as_secs_f64()))
                     .unwrap_or_else(|| "off".into()),
@@ -647,6 +673,7 @@ fn print_usage() {
          \x20             --row-cache BYTES|none\n\
          \x20             --mem-budget BYTES|none --ttl SECS|none\n\
          \x20             --conn-timeout SECS|none --max-conns N|none\n\
+         \x20             --pollers N\n\
          \x20             --restore MANIFEST\n\
          \x20             --spill-dir DIR|none --spill disk|drop]\n\
          \x20            (--table is repeatable: one server, many tables,\n\
@@ -683,6 +710,11 @@ fn print_usage() {
          \x20             (default 30, fractional ok, \"none\" disables);\n\
          \x20             --max-conns N answers connections over the cap\n\
          \x20             with a typed `busy` frame (default 1024);\n\
+         \x20             --pollers N multiplexes every connection onto N\n\
+         \x20             event-loop threads (default 2; thread count flat\n\
+         \x20             in the connection count, pipelined requests,\n\
+         \x20             streamed large responses; 0 = one thread per\n\
+         \x20             connection, bit-identical bytes either way);\n\
          \x20             v2 clients also get the `score`/`topk` ops:\n\
          \x20             similarity served straight off the compressed\n\
          \x20             codes via per-query ADC lookup tables, no rows\n\

@@ -26,9 +26,9 @@
 //! |-----------------|-----|---------------------------|----------|
 //! | `lookup`        | 1,2 | `ids`, v2: `table`        | `{"ok":true,"n":..,"d":..,"vectors":[[..],..]}` |
 //! | `lookup_bin`    | 1,2 | `ids`, v2: `table`        | binary, see below |
-//! | `lookup_fanout` | 2   | `queries`: `[{table,ids},..]` | one multi-section binary frame, see below |
+//! | `lookup_fanout` | 2   | `queries`: `[{table,ids},..]`, optional `stream` | one multi-section binary frame (streamed in chunks when `"stream": true`), see below |
 //! | `score`         | 2   | `query` or `query_id`, `ids`, `table` | `{"ok":true,"path":..,"scores":[..]}` -- compute-on-codes dot products, see below |
-//! | `topk`          | 2   | `query` or `query_id`, `k`, optional `lo`/`hi`, `table` | `{"ok":true,"path":..,"ids":[..],"scores":[..]}` best-first |
+//! | `topk`          | 2   | `query` or `query_id`, `k`, optional `lo`/`hi`, `table`, optional `stream` | `{"ok":true,"path":..,"ids":[..],"scores":[..]}` best-first; `"stream": true` answers binary chunked |
 //! | `stats`         | 1,2 | v2: optional `table`      | counters + `batch_p50_s`/`batch_p99_s` latency (per table) |
 //! | `tables`        | 2   |                           | `{"ok":true,"default":..,"tables":[{name,kind,vocab,d,..},..]}` |
 //! | `load`          | 2   | `table`, `path`           | hot-load a `.dpq` file as a new table |
@@ -51,6 +51,16 @@
 //! empty id list answers with a real, short frame); under v2 the
 //! sentinel is followed by a JSON error frame naming the reason, so
 //! binary errors are as typed as JSON ones.
+//!
+//! **Streamed responses.** A v2 `lookup_fanout` or `topk` request may
+//! carry `"stream": true`: the response then starts with the
+//! `u32::MAX - 1` continuation sentinel and arrives as bounded chunks
+//! (each a `u32 LE len` of at most 256 KiB plus bytes) terminated by a
+//! `u32 0` and a typed JSON terminal frame -- so results larger than
+//! the 64 MiB single-frame cap (a full-vocab `topk`, a huge fan-out)
+//! stream instead of rejecting `too_large`. The assembled bytes are
+//! identical to what the unstreamed path would have produced.
+//! Normative encoding: `docs/WIRE_PROTOCOL.md`.
 //!
 //! **Compute on codes.** The `score` and `topk` ops run similarity
 //! directly over a table's compressed representation (the
@@ -77,28 +87,47 @@
 //!
 //! # Architecture
 //!
-//! One thread per connection parses frames, resolves the table in the
-//! [`TableRegistry`], and strictly validates ids against that table's
-//! vocab. Validated lookups are routed to the table's batcher shards
-//! (the id space is range-partitioned across `shards_per_table` shards;
-//! see [`registry`]), each of which drains micro-batches of up to
+//! The default **event-driven connection plane** (Linux,
+//! `--pollers N`, default 2) multiplexes every socket -- the listener
+//! included -- onto a fixed pool of poller threads via a vendored
+//! epoll shim ([`poller`]). Each connection is a small state machine
+//! that carries the blocking plane's deadline discipline (idle +
+//! absolute whole-frame deadlines, stop-flag observation within one
+//! 100 ms tick, 64 KiB incremental payload windows) into nonblocking
+//! reads; decoded frames are dispatched in order on a fixed worker
+//! pool, and because decoding runs ahead of dispatch, a connection can
+//! **pipeline** requests (frame k+1 decodes while frame k computes)
+//! with responses written strictly in request order. Thread count is
+//! flat in the connection count: pollers + dispatch workers, NOT one
+//! thread per socket. `--pollers 0` (or a non-Linux build) falls back
+//! to the legacy thread-per-connection plane, which shares the same
+//! per-frame handler, so served bytes are bit-identical across planes.
+//!
+//! Either plane resolves the table in the [`TableRegistry`] and
+//! strictly validates ids against that table's vocab. Validated
+//! lookups are routed to the table's batcher shards (the id space is
+//! range-partitioned across `shards_per_table` shards; see
+//! [`registry`]), each of which drains micro-batches of up to
 //! `max_batch` lookups and reconstructs them into one flat buffer
 //! sharded across the worker pool (`util::pool`, thread count from
 //! `DPQ_THREADS` / `--threads`; small batches run serial). Single-shard
 //! answers are zero-copy views of the batch buffer. Row gathers are
 //! independent of chunk and shard placement, so served vectors are
 //! bit-identical for every thread count and shard count. std-only (no
-//! tokio in the offline vendor set) -- the event loop is threads +
-//! channels.
+//! tokio in the offline vendor set) -- the event loop is epoll +
+//! threads + channels.
 
 pub mod batcher;
 pub mod clock;
 pub mod fuzz;
+#[cfg(target_os = "linux")]
+pub mod poller;
 pub mod protocol;
 pub mod registry;
 pub mod row_cache;
 pub mod stats;
 
+use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -126,9 +155,10 @@ pub use stats::{ConnStats, LatencyRing, ReplicaStats, Stats};
 
 use batcher::Answer;
 use protocol::{
-    err_frame, err_obj, frame_version, parse_ids, parse_query,
-    read_frame_deadline, sections_payload_bytes, write_bin_reject_frame,
-    write_bin_rows, write_bin_sections, FrameIn, MAX_FANOUT_SECTIONS,
+    bin_sections_payload, err_frame, err_obj, frame_version, parse_ids,
+    parse_query, read_frame_deadline, sections_payload_bytes,
+    write_bin_reject_frame, write_bin_rows, write_bin_sections,
+    write_stream_payload, FrameIn, MAX_FANOUT_SECTIONS,
 };
 
 /// Write timeout applied when `--conn-timeout` is disabled: a response
@@ -174,19 +204,44 @@ impl EmbeddingServer {
     /// Bind + serve until a `shutdown` op arrives. Returns the bound
     /// address via the callback before blocking (port 0 supported).
     ///
+    /// With [`ServerConfig::pollers`] > 0 (the default, Linux) this
+    /// runs the event-driven plane: all sockets -- the listener
+    /// included -- multiplexed onto that many poller threads plus a
+    /// fixed dispatch-worker pool, with per-connection request
+    /// pipelining. `pollers: 0` (or a non-Linux build) runs the legacy
+    /// thread-per-connection plane. Both planes share the same
+    /// per-frame handler ([`process_frame`]), so served bytes are
+    /// bit-identical.
+    ///
     /// Connection lifecycle: every accepted connection is tracked; a
     /// connection over the [`ServerConfig::max_conns`] cap is answered
     /// with a typed `busy` frame and closed without spawning a handler.
-    /// Shutdown is graceful -- the loop stops accepting, connection
-    /// threads observe the stop flag within one [`protocol`] poll slice
-    /// (idle connections close immediately; an in-flight frame gets a
-    /// short drain grace), and every connection thread is JOINED before
-    /// the registry's batcher shards are torn down, so no thread
-    /// outlives `serve` and no in-flight batch is dropped mid-answer.
+    /// Shutdown is graceful -- the server stops accepting, connections
+    /// observe the stop flag within one [`protocol`] poll slice (idle
+    /// connections close immediately; an in-flight frame gets a short
+    /// drain grace), and every plane thread is JOINED before the
+    /// registry's batcher shards are torn down, so no thread outlives
+    /// `serve` and no in-flight batch is dropped mid-answer.
     pub fn serve(&self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         on_bound(listener.local_addr()?);
+        #[cfg(target_os = "linux")]
+        {
+            let pollers = self.registry.config().pollers;
+            if pollers > 0 {
+                return poller::serve_event(&self.registry, listener, pollers);
+            }
+        }
+        self.serve_threaded(listener)
+    }
+
+    /// The legacy thread-per-connection plane (`--pollers 0`, and the
+    /// fallback on non-Linux targets, where the epoll shim is absent).
+    /// Kept bit-exactly equivalent to the event plane -- the
+    /// cross-plane equivalence tests in `tests/conn_plane.rs` compare
+    /// served bytes between the two.
+    fn serve_threaded(&self, listener: TcpListener) -> Result<()> {
         let stop = self.registry.stop_flag();
         let max_conns = self.registry.config().max_conns;
         let mut conns: Vec<JoinHandle<()>> = Vec::new();
@@ -393,16 +448,19 @@ fn resize_flap_err(name: &str) -> WireError {
 }
 
 /// Resolve the request's table, validate ids, route through the batcher
-/// shards, and encode the response for one lookup op.
+/// shards, and encode the response for one lookup op. Like every op
+/// handler, writes to a `dyn Write` sink -- a `TcpStream` on the
+/// threaded plane, a per-connection ordered output buffer on the event
+/// plane -- so both planes serve byte-identical responses.
 fn lookup_op(
-    stream: &mut TcpStream,
+    stream: &mut dyn Write,
     registry: &TableRegistry,
     j: &Json,
     version: u64,
     binary: bool,
 ) -> Result<(), WireError> {
     let op = if binary { "lookup_bin" } else { "lookup" };
-    let reject = |stream: &mut TcpStream, e: &WireError| -> Result<(), WireError> {
+    let reject = |stream: &mut dyn Write, e: &WireError| -> Result<(), WireError> {
         let frame = annotated_err_frame(registry, e);
         if binary {
             write_bin_reject_frame(stream, version, &frame)
@@ -460,14 +518,11 @@ fn lookup_op(
     debug_assert_eq!(flat.len(), ids.len() * d);
     if binary {
         match write_bin_rows(stream, version, ids.len(), d, flat) {
-            Err(WireError::Malformed(m)) if version >= 2 => {
+            Err(e @ WireError::Rejected { .. }) if version >= 2 => {
                 // v2 can still answer typed (nothing written yet on the
-                // TooLarge path); v1 has no in-band way, so propagate
+                // too_large path); v1 has no in-band way, so propagate
                 // and drop the connection loudly
-                reject(stream, &WireError::Rejected {
-                    code: "too_large".into(),
-                    message: m,
-                })
+                reject(stream, &e)
             }
             other => other,
         }
@@ -511,11 +566,12 @@ fn lookup_op(
 /// frame BEFORE anything is queued, so a rejection never leaves half
 /// the sections in flight.
 fn fanout_op(
-    stream: &mut TcpStream,
+    stream: &mut dyn Write,
     registry: &TableRegistry,
     j: &Json,
     version: u64,
 ) -> Result<(), WireError> {
+    let streamed = wants_stream(j);
     // Settle the budget before EVERY response (answer or rejection):
     // if a section promoted under frame-wide protection, the registry
     // may be softly over budget once the frame no longer needs all of
@@ -528,7 +584,7 @@ fn fanout_op(
             registry.enforce_budget();
         }
     };
-    let reject = |stream: &mut TcpStream, e: &WireError| -> Result<(), WireError> {
+    let reject = |stream: &mut dyn Write, e: &WireError| -> Result<(), WireError> {
         settle(registry);
         write_bin_reject_frame(stream, version, &annotated_err_frame(registry, e))
     };
@@ -579,20 +635,23 @@ fn fanout_op(
         parts.push((entry, ids));
     }
     // frame-cap discipline BEFORE queueing, same as every binary path:
-    // nothing has been written or enqueued when this rejects
+    // nothing has been written or enqueued when this rejects. A
+    // streamed response has no single-frame cap -- only the u64
+    // overflow check applies (an absurd request, but it must reject
+    // typed, not wrap).
     let dims: Vec<(usize, usize)> = parts
         .iter()
         .map(|(e, ids)| (ids.len(), e.backend.d()))
         .collect();
     if sections_payload_bytes(&dims)
-        .filter(|&b| b <= protocol::MAX_FRAME as u64)
+        .filter(|&b| streamed || b <= protocol::MAX_FRAME as u64)
         .is_none()
     {
         return reject(stream, &WireError::Rejected {
             code: "too_large".into(),
             message: format!(
                 "fan-out response over {} sections exceeds the frame cap; \
-                 split the request", parts.len()),
+                 split the request or set \"stream\": true", parts.len()),
         });
     }
     // queue EVERY table's sub-lookups before waiting on any, so the
@@ -649,7 +708,25 @@ fn fanout_op(
         .map(|((e, ids), a)| (ids.len(), e.backend.d(), a.as_slice()))
         .collect();
     settle(registry);
+    if streamed {
+        // same section layout as the single frame, chunked: assembled
+        // client-side bytes are identical to the unstreamed response
+        let payload = match bin_sections_payload(&sections) {
+            Ok(p) => p,
+            Err(e) => return reject(stream, &e),
+        };
+        return write_stream_payload(stream, &payload);
+    }
     write_bin_sections(stream, &sections)
+}
+
+/// Whether the request opted into the chunked streaming response
+/// encoding (`"stream": true`). Only meaningful on the v2-only ops
+/// that support it (`lookup_fanout`, `topk`); any other value of the
+/// field -- absent, false, non-boolean -- means the ordinary
+/// single-frame response.
+fn wants_stream(j: &Json) -> bool {
+    j.get("stream").and_then(|v| v.as_bool()) == Some(true)
 }
 
 /// Resolve a `score`/`topk` request's query vector: an explicit
@@ -721,11 +798,11 @@ fn score_unsupported_err(entry: &TableEntry) -> WireError {
 /// over the shared backend, tracked against the least-loaded-replica
 /// signal via [`TableEntry::begin_score`].
 fn score_op(
-    stream: &mut TcpStream,
+    stream: &mut dyn Write,
     registry: &TableRegistry,
     j: &Json,
 ) -> Result<(), WireError> {
-    let reject = |stream: &mut TcpStream, e: &WireError| -> Result<(), WireError> {
+    let reject = |stream: &mut dyn Write, e: &WireError| -> Result<(), WireError> {
         write_frame(stream, &annotated_err_frame(registry, e).to_string())
     };
     let named = j.get("table").and_then(|v| v.as_str());
@@ -792,12 +869,22 @@ fn score_op(
 /// replica count. Shares the resolution/query/accounting path with
 /// [`score_op`].
 fn topk_op(
-    stream: &mut TcpStream,
+    stream: &mut dyn Write,
     registry: &TableRegistry,
     j: &Json,
 ) -> Result<(), WireError> {
-    let reject = |stream: &mut TcpStream, e: &WireError| -> Result<(), WireError> {
-        write_frame(stream, &annotated_err_frame(registry, e).to_string())
+    // A streamed topk's client reads the binary continuation channel,
+    // so its rejections must arrive on that channel too (the u32::MAX
+    // sentinel + JSON error frame, exactly like binary lookups) -- a
+    // bare JSON frame would desync the client's payload decoder.
+    let streamed = wants_stream(j);
+    let reject = |stream: &mut dyn Write, e: &WireError| -> Result<(), WireError> {
+        let frame = annotated_err_frame(registry, e);
+        if streamed {
+            write_bin_reject_frame(stream, VERSION, &frame)
+        } else {
+            write_frame(stream, &frame.to_string())
+        }
     };
     let named = j.get("table").and_then(|v| v.as_str());
     let entry = match registry.resolve(named) {
@@ -850,11 +937,15 @@ fn topk_op(
             })
         }
     };
-    if k as u64 * 2 * 64 > protocol::MAX_FRAME as u64 {
+    // JSON frame-cap discipline, SKIPPED for streamed responses: the
+    // chunked binary encoding has no single-frame cap, which is what
+    // lets a full-vocab topk stream instead of rejecting here.
+    if !streamed && k as u64 * 2 * 64 > protocol::MAX_FRAME as u64 {
         return reject(stream, &WireError::Rejected {
             code: "too_large".into(),
             message: format!(
-                "top-{k} response exceeds the JSON frame cap; lower k"),
+                "top-{k} response exceeds the JSON frame cap; lower k \
+                 or set \"stream\": true"),
         });
     }
     let Some(sb) = entry.backend.scorer() else {
@@ -875,6 +966,21 @@ fn topk_op(
         };
     let best = crate::scoring::topk(scorer, lo, hi, k);
     entry.stats.record_score_secs(t0.elapsed().as_secs_f64());
+    if streamed {
+        // binary columnar payload: u64 n, then n u64 LE ids, then n
+        // f32 LE scores -- same best-first order (ties ascending id)
+        // as the JSON response, decoded by `Client::topk_stream`
+        let n = best.len();
+        let mut payload = Vec::with_capacity(8 + n * 12);
+        payload.extend_from_slice(&(n as u64).to_le_bytes());
+        for c in &best {
+            payload.extend_from_slice(&(c.id as u64).to_le_bytes());
+        }
+        for c in &best {
+            payload.extend_from_slice(&c.score.to_le_bytes());
+        }
+        return write_stream_payload(stream, &payload);
+    }
     write_frame(stream, &Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("table", Json::str(entry.name.as_str())),
@@ -890,7 +996,7 @@ fn topk_op(
 /// `snapshot` (v2 only): serialize the whole registry into a
 /// server-side directory and answer with the manifest path.
 fn snapshot_op(
-    stream: &mut TcpStream,
+    stream: &mut dyn Write,
     registry: &TableRegistry,
     j: &Json,
 ) -> Result<(), WireError> {
@@ -975,7 +1081,7 @@ fn spilled_stats_pairs(
 }
 
 fn stats_op(
-    stream: &mut TcpStream,
+    stream: &mut dyn Write,
     registry: &TableRegistry,
     j: &Json,
     version: u64,
@@ -1112,7 +1218,7 @@ fn stats_op(
     write_frame(stream, &Json::obj(pairs).to_string())
 }
 
-fn tables_op(stream: &mut TcpStream, registry: &TableRegistry) -> Result<(), WireError> {
+fn tables_op(stream: &mut dyn Write, registry: &TableRegistry) -> Result<(), WireError> {
     let mut pairs = vec![("ok", Json::Bool(true)), ("v", Json::num(VERSION as f64))];
     let default = registry.default_name();
     if let Some(d) = &default {
@@ -1147,7 +1253,7 @@ fn tables_op(stream: &mut TcpStream, registry: &TableRegistry) -> Result<(), Wir
 
 /// `demote` (v2 only): explicitly spill a resident table to the
 /// `--spill-dir` tier. The next lookup transparently reloads it.
-fn demote_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Result<(), WireError> {
+fn demote_op(stream: &mut dyn Write, registry: &TableRegistry, j: &Json) -> Result<(), WireError> {
     let Some(name) = j.get("table").and_then(|v| v.as_str()) else {
         return write_frame(stream, &err_obj(
             "bad_request", "demote needs table", vec![]).to_string());
@@ -1170,7 +1276,7 @@ fn demote_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Resu
 /// lookups are transparently retried against the new entry); a spilled
 /// table records the count for its next promotion.
 fn set_replicas_op(
-    stream: &mut TcpStream,
+    stream: &mut dyn Write,
     registry: &TableRegistry,
     j: &Json,
 ) -> Result<(), WireError> {
@@ -1209,7 +1315,7 @@ fn set_replicas_op(
 /// counts against `--mem-budget`); a spilled table records the cap for
 /// its next promotion.
 fn set_row_cache_op(
-    stream: &mut TcpStream,
+    stream: &mut dyn Write,
     registry: &TableRegistry,
     j: &Json,
 ) -> Result<(), WireError> {
@@ -1242,7 +1348,7 @@ fn set_row_cache_op(
     }
 }
 
-fn load_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Result<(), WireError> {
+fn load_op(stream: &mut dyn Write, registry: &TableRegistry, j: &Json) -> Result<(), WireError> {
     let (name, path) = match (
         j.get("table").and_then(|v| v.as_str()),
         j.get("path").and_then(|v| v.as_str()),
@@ -1267,7 +1373,7 @@ fn load_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Result
     }
 }
 
-fn unload_op(stream: &mut TcpStream, registry: &TableRegistry, j: &Json) -> Result<(), WireError> {
+fn unload_op(stream: &mut dyn Write, registry: &TableRegistry, j: &Json) -> Result<(), WireError> {
     let Some(name) = j.get("table").and_then(|v| v.as_str()) else {
         return write_frame(stream, &err_obj(
             "bad_request", "unload needs table", vec![]).to_string());
@@ -1342,49 +1448,98 @@ fn handle_conn(
             }
             Err(_) => return Ok(()), // peer vanished mid-frame
         };
-        let j = match Json::parse(&req) {
-            Ok(j) => j,
-            Err(e) => {
-                // answer typed and keep the connection: a JSON typo must
-                // not silently drop an otherwise-healthy client
-                write_frame(&mut stream, &err_obj(
-                    "malformed", &format!("bad request: {e}"), vec![])
-                    .to_string())?;
-                continue;
-            }
-        };
-        let version = match frame_version(&j) {
-            Ok(v) => v,
-            Err(e) => {
-                // version negotiation: name the highest version we speak
-                write_frame(&mut stream, &err_frame(&e).to_string())?;
-                continue;
-            }
-        };
-        // Panic isolation: a handler bug must cost ONE connection, not
-        // the process. The registry's own locks recover from poisoning
-        // (batcher, stats rings), so serving state stays coherent for
-        // every other connection; this connection closes with a typed
-        // `internal` frame because mid-op output may be half-written.
-        let dispatched = catch_unwind(AssertUnwindSafe(|| {
-            dispatch_op(&mut stream, &registry, &stop, &j, version)
-        }));
-        match dispatched {
-            Ok(Ok(true)) => {}
-            Ok(Ok(false)) => return Ok(()), // shutdown acked
-            Ok(Err(e)) => return Err(e),
-            Err(payload) => {
-                drop(payload);
-                registry
-                    .conn_stats()
-                    .handler_panics
-                    .fetch_add(1, Ordering::Relaxed);
-                let _ = write_frame(&mut stream, &err_obj(
-                    "internal",
-                    "handler panicked; closing this connection",
-                    vec![]).to_string());
-                return Ok(());
-            }
+        match process_frame(&mut stream, &registry, &stop, req.as_bytes())? {
+            FrameOut::Continue => {}
+            // shutdown acked, or the handler panicked (typed `internal`
+            // already written): close this connection either way
+            FrameOut::Shutdown | FrameOut::Closed => return Ok(()),
+        }
+    }
+}
+
+/// What processing one frame means for the connection that carried it.
+pub(crate) enum FrameOut {
+    /// Answered; keep reading frames.
+    Continue,
+    /// The frame was `shutdown`: ack written, stop flag raised. The
+    /// connection closes once its response bytes have flushed.
+    Shutdown,
+    /// The handler panicked: a typed `internal` frame was written
+    /// (best-effort) and the connection must close -- mid-op output
+    /// may be half-written, so the stream cannot be trusted further.
+    Closed,
+}
+
+/// Process ONE raw frame: utf-8 check, JSON parse, version
+/// negotiation, then op dispatch under the panic-isolation barrier.
+/// This is the single per-frame handler BOTH connection planes run --
+/// the threaded plane from [`handle_conn`], the event plane from its
+/// dispatch workers -- so served bytes cannot differ between planes.
+/// Protocol-level problems (bad utf-8, bad JSON, unknown version)
+/// answer typed frames and return `Continue`; a write failure
+/// propagates as `Err` (the connection is broken).
+///
+/// Panic isolation: a handler bug must cost ONE connection, not the
+/// process. The registry's own locks recover from poisoning (batcher,
+/// stats rings), so serving state stays coherent for every other
+/// connection; this connection closes with a typed `internal` frame
+/// because mid-op output may be half-written.
+pub(crate) fn process_frame(
+    w: &mut dyn Write,
+    registry: &Arc<TableRegistry>,
+    stop: &AtomicBool,
+    raw: &[u8],
+) -> Result<FrameOut, WireError> {
+    // the threaded plane hands over an already-validated String; the
+    // event plane hands raw socket bytes -- validate here so the check
+    // cannot be forgotten by a future caller
+    let req = match std::str::from_utf8(raw) {
+        Ok(r) => r,
+        Err(e) => {
+            // payload fully consumed -- the connection stays usable
+            write_frame(w, &err_obj(
+                "malformed", &format!("frame not utf-8: {e}"), vec![])
+                .to_string())?;
+            return Ok(FrameOut::Continue);
+        }
+    };
+    let j = match Json::parse(req) {
+        Ok(j) => j,
+        Err(e) => {
+            // answer typed and keep the connection: a JSON typo must
+            // not silently drop an otherwise-healthy client
+            write_frame(w, &err_obj(
+                "malformed", &format!("bad request: {e}"), vec![])
+                .to_string())?;
+            return Ok(FrameOut::Continue);
+        }
+    };
+    let version = match frame_version(&j) {
+        Ok(v) => v,
+        Err(e) => {
+            // version negotiation: name the highest version we speak
+            write_frame(w, &err_frame(&e).to_string())?;
+            return Ok(FrameOut::Continue);
+        }
+    };
+    let dispatched = catch_unwind(AssertUnwindSafe(|| {
+        dispatch_op(&mut *w, registry, stop, &j, version)
+    }));
+    match dispatched {
+        Ok(Ok(true)) => Ok(FrameOut::Continue),
+        Ok(Ok(false)) => Ok(FrameOut::Shutdown),
+        Ok(Err(e)) => Err(e),
+        Err(payload) => {
+            drop(payload);
+            registry
+                .conn_stats()
+                .handler_panics
+                .fetch_add(1, Ordering::Relaxed);
+            let _ = write_frame(w, &err_obj(
+                "internal",
+                "handler panicked; closing this connection",
+                vec![]).to_string());
+            Ok(FrameOut::Closed)
         }
     }
 }
@@ -1394,7 +1549,7 @@ fn handle_conn(
 /// ack); every other handled frame is `Ok(true)`. Runs under the
 /// caller's `catch_unwind` isolation barrier.
 fn dispatch_op(
-    stream: &mut TcpStream,
+    stream: &mut dyn Write,
     registry: &Arc<TableRegistry>,
     stop: &AtomicBool,
     j: &Json,

@@ -1,0 +1,973 @@
+//! Event-driven connection plane: every socket multiplexed onto a
+//! fixed pool of poller threads (vendored epoll shim), with op dispatch
+//! on a fixed worker pool -- thread count is flat in the connection
+//! count, unlike the legacy thread-per-connection plane.
+//!
+//! # Structure
+//!
+//! `serve_event` spawns `pollers` poller threads and
+//! `(2 * pollers).max(2)` dispatch workers. Poller 0 owns the listener
+//! (folded into its readiness loop -- there is no separate accept
+//! thread and no sleep-poll; the 100 ms `epoll_wait` slice is the one
+//! timer in the plane, serving stop-flag observation, deadline scans
+//! and the registry's idle-TTL tick). Accepted connections are handed
+//! round-robin to the pollers; each poller owns its connections'
+//! sockets exclusively -- it performs every read and every write, so no
+//! socket is ever touched from two threads.
+//!
+//! # Per-connection state machine
+//!
+//! A connection incrementally decodes length-prefixed frames
+//! (nonblocking reads in 64 KiB windows; the payload buffer grows only
+//! as bytes arrive, so a length-prefix lie never costs an upfront
+//! allocation). Complete frames queue in a small per-connection inbox
+//! and are dispatched ONE AT A TIME, in arrival order, on the worker
+//! pool -- the inbox is what gives **pipelining** (frame k+1 decodes
+//! while frame k computes) while the serial dispatch keeps responses
+//! strictly in request order. When the inbox is full, the connection's
+//! read interest is dropped (level-triggered epoll would otherwise spin
+//! on the unread bytes) and re-armed once a dispatch drains it.
+//!
+//! Workers never write to sockets: responses go through [`ConnWriter`]
+//! into a per-connection ordered output buffer that the owning poller
+//! flushes as the socket accepts bytes. The buffer is bounded
+//! ([`HIGH_WATER`]) -- a worker streaming a large response blocks until
+//! the peer drains, with a write-stall deadline so a dead peer cannot
+//! pin a worker forever.
+//!
+//! # Deadline discipline (same contract as the threaded plane)
+//!
+//! `--conn-timeout` bounds BOTH idle time and whole-frame transit: the
+//! deadline is measured from the connection's last completed activity,
+//! and arriving bytes do NOT reset it -- a byte-at-a-time slow-loris
+//! cannot trickle-reset its budget, while any frame completed in budget
+//! refreshes it. Expiry answers a typed `timeout` frame (counted in
+//! `conn_timeouts`) and closes. An oversized length prefix answers a
+//! typed `too_large` frame and closes, after any already-queued frames
+//! have been answered -- exactly the order the serial threaded plane
+//! produces. Peer EOF at a frame boundary finishes in-flight work and
+//! flushes before closing (half-close friendly); mid-frame EOF closes
+//! silently. On stop, idle connections close immediately and in-flight
+//! frames get the drain grace; pollers are joined before the workers,
+//! and the workers before the registry's batcher shards are torn down.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use epoll::{
+    Epoll, Event, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+};
+
+use super::protocol::{self, err_obj, write_frame, DRAIN_GRACE, POLL_SLICE};
+use super::registry::TableRegistry;
+use super::{process_frame, reject_busy, FrameOut, WRITE_STALL_FALLBACK};
+
+/// Token for the listener (registered on poller 0 only).
+const TOKEN_LISTENER: u64 = 0;
+/// Token for each poller's own wakeup eventfd.
+const TOKEN_WAKE: u64 = 1;
+/// Connection tokens are globally unique and start above the fixed ones.
+static NEXT_TOKEN: AtomicU64 = AtomicU64::new(2);
+
+/// Decoded frames a connection may queue ahead of dispatch. Small on
+/// purpose: it bounds per-connection memory and how far a client can
+/// run ahead, while still letting decode overlap compute.
+const INBOX_CAP: usize = 8;
+/// Output-buffer backpressure threshold: a worker writing a response
+/// blocks once this much is buffered ahead of the socket.
+const HIGH_WATER: usize = 1 << 20;
+/// Bytes one connection may read per service round, so a firehose peer
+/// cannot starve its poller's other connections (level-triggered epoll
+/// re-reports the remainder immediately).
+const READ_BUDGET: usize = 256 << 10;
+/// Incremental read window -- same growth discipline as the threaded
+/// plane's `read_frame_deadline`.
+const READ_WINDOW: usize = 64 << 10;
+/// Events fetched per `epoll_wait`.
+const EVENTS_PER_WAIT: usize = 64;
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // a worker panic is already isolated by process_frame's barrier;
+    // plane bookkeeping must keep working regardless
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The cross-thread face of one poller: where sibling threads park new
+/// connections and "look at this connection again" notes, plus the
+/// eventfd that wakes it.
+struct PollerHandle {
+    pending: Mutex<Vec<TcpStream>>,
+    dirty: Mutex<Vec<u64>>,
+    wake: EventFd,
+}
+
+/// The dispatch-worker pool's shared work queue: connections with at
+/// least one decoded frame waiting. A connection appears at most once
+/// (the `queued` flag) and is re-queued by the worker that finishes it
+/// while more frames wait -- round-robin fairness across connections.
+struct WorkPool {
+    queue: Mutex<VecDeque<Arc<ConnShared>>>,
+    cv: Condvar,
+    exit: AtomicBool,
+}
+
+/// Connection state shared between the owning poller and the workers.
+struct ConnShared {
+    state: Mutex<ConnState>,
+    /// Signaled when the output buffer drains below [`HIGH_WATER`] (and
+    /// on close), releasing a backpressured [`ConnWriter`].
+    drained: Condvar,
+    home: Arc<PollerHandle>,
+    token: u64,
+    write_stall: Duration,
+}
+
+#[derive(Default)]
+struct ConnState {
+    /// Decoded request frames awaiting dispatch, in arrival order.
+    inbox: VecDeque<Vec<u8>>,
+    /// Response bytes awaiting the socket; `out[out_pos..]` is unsent.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// A worker is running `process_frame` for this connection.
+    dispatching: bool,
+    /// Present in the work queue (at most one entry per connection).
+    queued: bool,
+    /// The poller closed the socket: writers must error out.
+    closed: bool,
+    /// Close the connection once `out` has fully flushed.
+    close_after_flush: bool,
+    /// A poller-originated typed close frame (timeout / too_large),
+    /// appended only once no dispatch is active and the inbox is empty
+    /// -- appending mid-response would corrupt the peer's framing.
+    pending_close: Option<Vec<u8>>,
+}
+
+impl ConnShared {
+    fn state(&self) -> MutexGuard<'_, ConnState> {
+        lock(&self.state)
+    }
+
+    /// Ask the owning poller to look at this connection (flush fresh
+    /// output, re-arm read interest, finalize a close).
+    fn notify_home(&self) {
+        lock(&self.home.dirty).push(self.token);
+        self.home.wake.raise();
+    }
+}
+
+/// The `io::Write` sink worker dispatches run against: appends into the
+/// connection's ordered output buffer under backpressure and wakes the
+/// owning poller to flush. Never touches the socket.
+struct ConnWriter<'a> {
+    conn: &'a ConnShared,
+}
+
+impl Write for ConnWriter<'_> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let conn = self.conn;
+        let mut st = conn.state();
+        let deadline = Instant::now() + conn.write_stall;
+        while st.out.len() - st.out_pos >= HIGH_WATER {
+            if st.closed {
+                return Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe, "connection closed"));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                // same bound the threaded plane gets from its socket
+                // write timeout: a peer that never drains cannot pin
+                // this worker past the stall deadline
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut, "response write stalled"));
+            }
+            let (g, _) = conn
+                .drained
+                .wait_timeout(st, (deadline - now).min(POLL_SLICE))
+                .unwrap_or_else(PoisonError::into_inner);
+            st = g;
+        }
+        if st.closed {
+            return Err(io::Error::new(
+                io::ErrorKind::BrokenPipe, "connection closed"));
+        }
+        let was_empty = st.out.len() == st.out_pos;
+        st.out.extend_from_slice(buf);
+        drop(st);
+        if was_empty {
+            // first bytes since the last flush: the poller may have
+            // nothing armed for this connection -- wake it
+            conn.notify_home();
+        }
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Run the event plane until shutdown. Joins every plane thread before
+/// tearing down the registry's batcher shards, exactly like the
+/// threaded plane's drain.
+pub(crate) fn serve_event(
+    registry: &Arc<TableRegistry>,
+    listener: TcpListener,
+    pollers: usize,
+) -> Result<()> {
+    let stop = registry.stop_flag();
+    let mut handles = Vec::with_capacity(pollers);
+    for _ in 0..pollers {
+        handles.push(Arc::new(PollerHandle {
+            pending: Mutex::new(Vec::new()),
+            dirty: Mutex::new(Vec::new()),
+            wake: EventFd::new()?,
+        }));
+    }
+    let pool = Arc::new(WorkPool {
+        queue: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+        exit: AtomicBool::new(false),
+    });
+    let n_workers = (2 * pollers).max(2);
+    let mut workers: Vec<JoinHandle<()>> = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let pool = pool.clone();
+        let registry = registry.clone();
+        let stop = stop.clone();
+        workers.push(std::thread::spawn(move || {
+            worker_loop(&pool, &registry, &stop)
+        }));
+    }
+    let mut poller_threads: Vec<JoinHandle<Result<()>>> =
+        Vec::with_capacity(pollers);
+    let mut listener = Some(listener);
+    for idx in 0..pollers {
+        let registry = registry.clone();
+        let stop = stop.clone();
+        let handles = handles.clone();
+        let pool = pool.clone();
+        let lst = if idx == 0 { listener.take() } else { None };
+        poller_threads.push(std::thread::spawn(move || {
+            let res = Poller::run(idx, lst, registry, &stop, &handles, pool);
+            if res.is_err() {
+                // a poller dying (epoll failure) must not strand its
+                // siblings or the accept path: stop the whole plane
+                stop.store(true, Ordering::Relaxed);
+                for h in &handles {
+                    h.wake.raise();
+                }
+            }
+            res
+        }));
+    }
+    let mut first_err = None;
+    for h in poller_threads {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => {
+                first_err = first_err.or_else(|| {
+                    Some(anyhow::anyhow!("poller thread panicked"))
+                })
+            }
+        }
+    }
+    // pollers are gone: every connection is closed, so workers cannot
+    // block on backpressure -- wake them out of the queue wait and join
+    pool.exit.store(true, Ordering::Relaxed);
+    pool.cv.notify_all();
+    for h in workers {
+        let _ = h.join();
+    }
+    registry.shutdown();
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// One dispatch worker: pop a connection with queued frames, run ONE
+/// frame through the shared per-frame handler, re-queue the connection
+/// if more frames wait. Serial-per-connection by construction
+/// (`dispatching` flag), so responses are written in request order.
+fn worker_loop(pool: &WorkPool, registry: &Arc<TableRegistry>, stop: &AtomicBool) {
+    loop {
+        let conn = {
+            let mut q = lock(&pool.queue);
+            loop {
+                if let Some(c) = q.pop_front() {
+                    break Some(c);
+                }
+                if pool.exit.load(Ordering::Relaxed) {
+                    break None;
+                }
+                q = pool.cv.wait(q).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        let Some(conn) = conn else { return };
+        let frame = {
+            let mut st = conn.state();
+            st.queued = false;
+            if st.closed || st.dispatching {
+                continue;
+            }
+            match st.inbox.pop_front() {
+                Some(f) => {
+                    st.dispatching = true;
+                    f
+                }
+                None => continue,
+            }
+        };
+        let mut w = ConnWriter { conn: &conn };
+        let res = process_frame(&mut w, registry, stop, &frame);
+        {
+            let mut st = conn.state();
+            st.dispatching = false;
+            match res {
+                Ok(FrameOut::Continue) => {
+                    if !st.closed && !st.inbox.is_empty() && !st.queued {
+                        st.queued = true;
+                        drop(st);
+                        lock(&pool.queue).push_back(conn.clone());
+                        pool.cv.notify_one();
+                    }
+                }
+                // shutdown acked / handler panicked (typed `internal`
+                // already buffered) / the write side failed: close once
+                // whatever made it into the buffer has flushed
+                Ok(FrameOut::Shutdown) | Ok(FrameOut::Closed) | Err(_) => {
+                    st.close_after_flush = true;
+                }
+            }
+        }
+        // always: the poller re-arms read interest (the inbox just
+        // drained), flushes fresh output, or finalizes a close
+        conn.notify_home();
+    }
+}
+
+/// Incremental frame-decode state for one connection.
+enum ReadState {
+    Prefix { buf: [u8; 4], got: usize },
+    Payload { len: usize, buf: Vec<u8> },
+}
+
+/// What one read service round concluded.
+enum ReadOutcome {
+    /// Socket drained (or budget spent): wait for the next event.
+    NotReady,
+    /// Inbox at capacity: read interest must drop until dispatch drains.
+    InboxFull,
+    /// Clean EOF at a frame boundary: drain in-flight work, flush, close.
+    Eof,
+    /// Mid-frame EOF or socket error: close silently.
+    Gone,
+    /// Length prefix over the frame cap: typed `too_large`, then close.
+    TooLarge(u64),
+}
+
+/// One connection as its owning poller sees it. The socket lives here
+/// and is only ever touched by that poller.
+struct Conn {
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+    rd: ReadState,
+    /// Events currently registered with epoll.
+    interest: u32,
+    /// Last completed activity: accept, frame completion, dispatch
+    /// completion, or output fully flushed. Deliberately NOT updated by
+    /// arriving bytes -- the absolute whole-frame deadline that defeats
+    /// slow-loris trickling.
+    last_activity: Instant,
+    /// Last time flushing made progress (write-stall detection).
+    out_progress: Instant,
+    peer_eof: bool,
+    /// No further reads (typed close pending or already decided).
+    read_dead: bool,
+}
+
+/// Decode as many frames as the socket, the read budget and the inbox
+/// allow. Queues the connection for dispatch as frames complete.
+fn read_ready(c: &mut Conn, pool: &WorkPool) -> ReadOutcome {
+    let mut budget = READ_BUDGET;
+    loop {
+        match &mut c.rd {
+            ReadState::Prefix { buf, got } => {
+                match c.stream.read(&mut buf[*got..4]) {
+                    Ok(0) => {
+                        return if *got == 0 {
+                            ReadOutcome::Eof
+                        } else {
+                            ReadOutcome::Gone // mid-prefix EOF
+                        };
+                    }
+                    Ok(n) => {
+                        *got += n;
+                        budget = budget.saturating_sub(n);
+                        if *got == 4 {
+                            let len = u32::from_le_bytes(*buf) as usize;
+                            if len > protocol::MAX_FRAME {
+                                return ReadOutcome::TooLarge(len as u64);
+                            }
+                            if len == 0 {
+                                // an empty frame is complete already;
+                                // process_frame answers it `malformed`
+                                c.rd = ReadState::Prefix { buf: [0; 4], got: 0 };
+                                if frame_complete(c, Vec::new(), pool) {
+                                    return ReadOutcome::InboxFull;
+                                }
+                            } else {
+                                c.rd = ReadState::Payload {
+                                    len,
+                                    buf: Vec::with_capacity(len.min(READ_WINDOW)),
+                                };
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        return ReadOutcome::NotReady;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => return ReadOutcome::Gone,
+                }
+            }
+            ReadState::Payload { len, buf } => {
+                let len = *len;
+                let got = buf.len();
+                // grow only as bytes arrive, in bounded windows -- a
+                // prefix lie costs what the peer actually sends
+                let want = (len - got).min(READ_WINDOW);
+                buf.resize(got + want, 0);
+                match c.stream.read(&mut buf[got..got + want]) {
+                    Ok(0) => {
+                        buf.truncate(got);
+                        return ReadOutcome::Gone; // mid-frame EOF
+                    }
+                    Ok(n) => {
+                        buf.truncate(got + n);
+                        budget = budget.saturating_sub(n);
+                        if buf.len() == len {
+                            let frame = std::mem::take(buf);
+                            c.rd = ReadState::Prefix { buf: [0; 4], got: 0 };
+                            if frame_complete(c, frame, pool) {
+                                return ReadOutcome::InboxFull;
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        buf.truncate(got);
+                        return ReadOutcome::NotReady;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                        buf.truncate(got);
+                    }
+                    Err(_) => {
+                        buf.truncate(got);
+                        return ReadOutcome::Gone;
+                    }
+                }
+            }
+        }
+        if budget == 0 {
+            return ReadOutcome::NotReady;
+        }
+    }
+}
+
+/// Queue a completed frame for dispatch. Returns true when the inbox
+/// hit capacity (caller drops read interest).
+fn frame_complete(c: &mut Conn, frame: Vec<u8>, pool: &WorkPool) -> bool {
+    c.last_activity = Instant::now();
+    let mut st = c.shared.state();
+    st.inbox.push_back(frame);
+    let full = st.inbox.len() >= INBOX_CAP;
+    if !st.dispatching && !st.queued {
+        st.queued = true;
+        drop(st);
+        lock(&pool.queue).push_back(c.shared.clone());
+        pool.cv.notify_one();
+    }
+    full
+}
+
+/// Encode a typed server-originated close frame (the same bytes the
+/// threaded plane writes before closing).
+fn close_frame(code: &str, message: &str) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    let _ = write_frame(&mut bytes, &err_obj(code, message, vec![]).to_string());
+    bytes
+}
+
+struct Poller {
+    idx: usize,
+    ep: Epoll,
+    home: Arc<PollerHandle>,
+    handles: Vec<Arc<PollerHandle>>,
+    pool: Arc<WorkPool>,
+    registry: Arc<TableRegistry>,
+    listener: Option<TcpListener>,
+    conns: HashMap<u64, Conn>,
+    /// Round-robin cursor for handing accepted connections to pollers
+    /// (only poller 0 accepts, so only poller 0 advances it).
+    rr: usize,
+    timeout: Option<Duration>,
+    write_stall: Duration,
+    max_conns: Option<usize>,
+}
+
+impl Poller {
+    fn run(
+        idx: usize,
+        listener: Option<TcpListener>,
+        registry: Arc<TableRegistry>,
+        stop: &AtomicBool,
+        handles: &[Arc<PollerHandle>],
+        pool: Arc<WorkPool>,
+    ) -> Result<()> {
+        let ep = Epoll::new()?;
+        let home = handles[idx].clone();
+        ep.add(home.wake.as_raw_fd(), EPOLLIN, TOKEN_WAKE)?;
+        if let Some(l) = &listener {
+            ep.add(l.as_raw_fd(), EPOLLIN, TOKEN_LISTENER)?;
+        }
+        let timeout = registry.config().conn_timeout;
+        let mut p = Poller {
+            idx,
+            ep,
+            home,
+            handles: handles.to_vec(),
+            pool,
+            timeout,
+            write_stall: timeout.unwrap_or(WRITE_STALL_FALLBACK),
+            max_conns: registry.config().max_conns,
+            registry,
+            listener,
+            conns: HashMap::new(),
+            rr: 0,
+        };
+        let mut events = vec![Event::empty(); EVENTS_PER_WAIT];
+        let mut draining_since: Option<Instant> = None;
+        let mut last_scan = Instant::now();
+        loop {
+            let n = p.ep.wait(&mut events, POLL_SLICE.as_millis() as i32)?;
+            let mut accept = false;
+            for ev in events.iter().take(n) {
+                // copy out of the (packed) event before matching
+                let (bits, token) = (ev.events, ev.data);
+                match token {
+                    TOKEN_WAKE => p.home.wake.drain(),
+                    TOKEN_LISTENER => accept = true,
+                    t => p.conn_event(t, bits),
+                }
+            }
+            if accept && draining_since.is_none() {
+                p.accept_ready();
+            }
+            p.adopt_pending(draining_since.is_some());
+            for token in {
+                let mut d = lock(&p.home.dirty);
+                std::mem::take(&mut *d)
+            } {
+                p.service(token);
+            }
+            if last_scan.elapsed() >= POLL_SLICE {
+                last_scan = Instant::now();
+                p.scan();
+                if p.idx == 0 {
+                    // the idle tick the threaded accept loop ran: with
+                    // --ttl set, tables expire even with zero traffic
+                    p.registry.maybe_expire_idle(&[]);
+                }
+            }
+            if stop.load(Ordering::Relaxed) {
+                let now = Instant::now();
+                if draining_since.is_none() {
+                    draining_since = Some(now);
+                    // stop accepting: deregister and drop the listener
+                    if let Some(l) = p.listener.take() {
+                        let _ = p.ep.del(l.as_raw_fd());
+                    }
+                    p.adopt_pending(true);
+                }
+                let grace_over = now.duration_since(
+                    draining_since.unwrap_or(now)) >= DRAIN_GRACE;
+                let tokens: Vec<u64> = p.conns.keys().copied().collect();
+                for token in tokens {
+                    let idle = match p.conns.get(&token) {
+                        Some(c) => {
+                            let st = c.shared.state();
+                            !st.dispatching
+                                && st.inbox.is_empty()
+                                && st.out_pos == st.out.len()
+                        }
+                        None => continue,
+                    };
+                    if idle || grace_over {
+                        p.close_conn(token);
+                    } else {
+                        // keep flushing in-flight responses under grace
+                        p.service(token);
+                    }
+                }
+                if p.conns.is_empty() {
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Accept every pending connection (poller 0 only): busy-reject at
+    /// the cap, otherwise count it and hand it round-robin to a poller.
+    fn accept_ready(&mut self) {
+        loop {
+            let Some(listener) = &self.listener else { return };
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let cs = self.registry.conn_stats();
+                    if let Some(cap) = self.max_conns {
+                        if cs.conns_open.load(Ordering::Relaxed) >= cap as u64 {
+                            reject_busy(stream, &self.registry, cap);
+                            continue;
+                        }
+                    }
+                    cs.conns_open.fetch_add(1, Ordering::Relaxed);
+                    cs.conns_total.fetch_add(1, Ordering::Relaxed);
+                    let target = self.rr % self.handles.len();
+                    self.rr = self.rr.wrapping_add(1);
+                    if target == self.idx {
+                        self.register(stream);
+                    } else {
+                        let h = &self.handles[target];
+                        lock(&h.pending).push(stream);
+                        h.wake.raise();
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                // transient per-connection accept failures
+                // (ECONNABORTED and friends): try again next event
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Take ownership of connections parked by poller 0. While draining
+    /// they are closed instead (the accept happened before stop; the
+    /// count must still balance).
+    fn adopt_pending(&mut self, draining: bool) {
+        let pending: Vec<TcpStream> = {
+            let mut g = lock(&self.home.pending);
+            std::mem::take(&mut *g)
+        };
+        for stream in pending {
+            if draining {
+                self.registry
+                    .conn_stats()
+                    .conns_open
+                    .fetch_sub(1, Ordering::Relaxed);
+                drop(stream);
+            } else {
+                self.register(stream);
+            }
+        }
+    }
+
+    /// Register one accepted connection with this poller.
+    fn register(&mut self, stream: TcpStream) {
+        let cs = self.registry.conn_stats();
+        if stream.set_nonblocking(true).is_err()
+            || stream.set_nodelay(true).is_err()
+        {
+            cs.conns_open.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+        if self
+            .ep
+            .add(stream.as_raw_fd(), EPOLLIN | EPOLLRDHUP, token)
+            .is_err()
+        {
+            cs.conns_open.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        let shared = Arc::new(ConnShared {
+            state: Mutex::new(ConnState::default()),
+            drained: Condvar::new(),
+            home: self.home.clone(),
+            token,
+            write_stall: self.write_stall,
+        });
+        let now = Instant::now();
+        self.conns.insert(token, Conn {
+            stream,
+            shared,
+            rd: ReadState::Prefix { buf: [0; 4], got: 0 },
+            interest: EPOLLIN | EPOLLRDHUP,
+            last_activity: now,
+            out_progress: now,
+            peer_eof: false,
+            read_dead: false,
+        });
+    }
+
+    /// Handle a readiness event for one connection.
+    fn conn_event(&mut self, token: u64, bits: u32) {
+        let mut gone = false;
+        {
+            let Some(c) = self.conns.get_mut(&token) else { return };
+            if bits & (EPOLLERR | EPOLLHUP) != 0 {
+                gone = true;
+            } else if bits & (EPOLLIN | EPOLLRDHUP) != 0
+                && !c.read_dead
+                && !c.peer_eof
+            {
+                match read_ready(c, &self.pool) {
+                    ReadOutcome::NotReady | ReadOutcome::InboxFull => {}
+                    ReadOutcome::Eof => c.peer_eof = true,
+                    ReadOutcome::Gone => gone = true,
+                    ReadOutcome::TooLarge(nbytes) => {
+                        // stop reading (the oversized payload was never
+                        // consumed; the stream cannot be resynced), but
+                        // answer typed ONLY after already-queued frames
+                        // finish -- the order the serial plane produces
+                        c.read_dead = true;
+                        c.shared.state().pending_close =
+                            Some(close_frame("too_large", &format!(
+                                "frame of {nbytes} bytes exceeds the {} \
+                                 byte cap", protocol::MAX_FRAME)));
+                    }
+                }
+            }
+        }
+        if gone {
+            self.close_conn(token);
+            return;
+        }
+        self.service(token);
+    }
+
+    /// Bring one connection's poller-side state up to date: finalize a
+    /// deferred typed close, flush buffered output, close when done,
+    /// re-arm epoll interest.
+    fn service(&mut self, token: u64) {
+        let Some(c) = self.conns.get_mut(&token) else { return };
+        {
+            let mut st = c.shared.state();
+            let quiescent = !st.dispatching && st.inbox.is_empty();
+            if quiescent {
+                if let Some(frame) = st.pending_close.take() {
+                    st.out.extend_from_slice(&frame);
+                    st.close_after_flush = true;
+                } else if c.peer_eof {
+                    // half-close: every queued frame was answered and
+                    // the answers flush before the FIN below
+                    st.close_after_flush = true;
+                }
+            }
+        }
+        if flush_out(c).is_err() {
+            self.close_conn(token);
+            return;
+        }
+        let done = {
+            let st = c.shared.state();
+            st.close_after_flush && st.out_pos == st.out.len()
+        };
+        if done {
+            self.close_conn(token);
+            return;
+        }
+        let (want_in, want_out) = {
+            let st = c.shared.state();
+            (
+                !c.read_dead
+                    && !c.peer_eof
+                    && st.inbox.len() < INBOX_CAP
+                    && !st.close_after_flush
+                    && st.pending_close.is_none(),
+                st.out_pos < st.out.len(),
+            )
+        };
+        let mut interest = 0;
+        if want_in {
+            interest |= EPOLLIN | EPOLLRDHUP;
+        }
+        if want_out {
+            interest |= EPOLLOUT;
+        }
+        if interest != c.interest
+            && self
+                .ep
+                .modify(c.stream.as_raw_fd(), interest, token)
+                .is_ok()
+        {
+            c.interest = interest;
+        }
+    }
+
+    /// The per-slice deadline scan: idle/whole-frame timeouts (typed
+    /// `timeout` close, counted), and write-stall force closes.
+    fn scan(&mut self) {
+        let now = Instant::now();
+        let mut typed_timeout: Vec<u64> = Vec::new();
+        let mut stalled: Vec<u64> = Vec::new();
+        let mut revisit: Vec<u64> = Vec::new();
+        for (&token, c) in self.conns.iter_mut() {
+            let (busy, out_pending, closing) = {
+                let st = c.shared.state();
+                (
+                    st.dispatching || !st.inbox.is_empty(),
+                    st.out_pos < st.out.len(),
+                    st.close_after_flush || st.pending_close.is_some(),
+                )
+            };
+            if out_pending {
+                if now.duration_since(c.out_progress) >= self.write_stall {
+                    // a peer that stopped draining its responses: no
+                    // typed frame (it would only grow the stuck buffer)
+                    stalled.push(token);
+                    continue;
+                }
+            } else {
+                c.out_progress = now;
+            }
+            if busy || out_pending {
+                // work in flight refreshes the activity clock; arriving
+                // BYTES never do (slow-loris cannot trickle-reset)
+                c.last_activity = now;
+                continue;
+            }
+            if closing || c.peer_eof {
+                // quiescent now: let service finalize the close
+                revisit.push(token);
+                continue;
+            }
+            if let Some(t) = self.timeout {
+                if now.duration_since(c.last_activity) >= t {
+                    typed_timeout.push(token);
+                }
+            }
+        }
+        for token in stalled {
+            self.close_conn(token);
+        }
+        for token in typed_timeout {
+            self.registry
+                .conn_stats()
+                .conn_timeouts
+                .fetch_add(1, Ordering::Relaxed);
+            if let Some(c) = self.conns.get_mut(&token) {
+                c.read_dead = true;
+                let mut st = c.shared.state();
+                // quiescent (checked above): direct append cannot
+                // interleave with a response
+                let frame = close_frame(
+                    "timeout", "connection deadline (--conn-timeout) expired");
+                st.out.extend_from_slice(&frame);
+                st.close_after_flush = true;
+            }
+            self.service(token);
+        }
+        for token in revisit {
+            self.service(token);
+        }
+    }
+
+    /// Close one connection: deregister, drop the socket, release any
+    /// backpressured worker, balance the open-connection count.
+    fn close_conn(&mut self, token: u64) {
+        let Some(c) = self.conns.remove(&token) else { return };
+        let _ = self.ep.del(c.stream.as_raw_fd());
+        {
+            let mut st = c.shared.state();
+            st.closed = true;
+            st.inbox.clear();
+            st.pending_close = None;
+        }
+        c.shared.drained.notify_all();
+        self.registry
+            .conn_stats()
+            .conns_open
+            .fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Flush the connection's buffered output as far as the socket accepts.
+/// `Err` means the socket failed (caller closes).
+fn flush_out(c: &mut Conn) -> Result<(), ()> {
+    let mut st = c.shared.state();
+    let before = st.out_pos;
+    while st.out_pos < st.out.len() {
+        let pos = st.out_pos;
+        match c.stream.write(&st.out[pos..]) {
+            Ok(0) => return Err(()),
+            Ok(n) => st.out_pos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return Err(()),
+        }
+    }
+    if st.out_pos > before {
+        c.out_progress = Instant::now();
+    }
+    if st.out_pos == st.out.len() {
+        st.out.clear();
+        st.out_pos = 0;
+    } else if st.out_pos > HIGH_WATER {
+        // keep a long-lived slow connection's buffer bounded by what is
+        // actually unsent
+        st.out.drain(..st.out_pos);
+        st.out_pos = 0;
+    }
+    if st.out.len() - st.out_pos < HIGH_WATER {
+        c.shared.drained.notify_all();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::server::{Client, EmbeddingServer, ServerConfig, TableRegistry};
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    /// Smoke test pinned to ONE poller: accept, lookup, a second
+    /// request on the same connection, shutdown -- the full lifecycle
+    /// on the smallest possible pool. (The default config already runs
+    /// every other server test on the event plane at pollers = 2.)
+    #[test]
+    fn single_poller_serves_and_shuts_down() {
+        let emb = crate::dpq::toy_embedding(20, 8, 4, 2, 1);
+        let expect = emb.reconstruct_row(7);
+        let registry = TableRegistry::new(ServerConfig {
+            pollers: 1,
+            ..ServerConfig::default()
+        });
+        registry.insert("emb", Arc::new(emb)).unwrap();
+        let server = Arc::new(EmbeddingServer::new(registry));
+        let (tx, rx) = mpsc::channel();
+        let s2 = server.clone();
+        let h = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let mut c = Client::connect(addr).unwrap();
+        let rows = c.lookup_bin("emb", &[7]).unwrap();
+        assert_eq!(rows.row(0), &expect[..]);
+        // a second request on the same connection exercises the
+        // dispatch-done -> re-arm -> read path
+        let again = c.lookup_bin("emb", &[7, 7]).unwrap();
+        assert_eq!(again.row(1), &expect[..]);
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+}

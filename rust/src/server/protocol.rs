@@ -38,6 +38,21 @@ pub(crate) const MAX_FRAME: usize = 64 << 20;
 /// is far beyond any recommender fan-out.
 pub(crate) const MAX_FANOUT_SECTIONS: usize = 1024;
 
+/// Length-prefix sentinel announcing a v2 **streamed** response: data
+/// chunks follow (each `u32 LE len` in `1..=STREAM_CHUNK` plus bytes)
+/// until a zero length, then one length-prefixed JSON terminal frame
+/// (`{"ok":true,"bytes":..,"chunks":..}` on success, a typed error
+/// frame on a mid-stream abort). Distinct from the `u32::MAX` rejection
+/// sentinel; like it, this value can never be a real frame length
+/// (both exceed [`MAX_FRAME`]). Streaming is strictly opt-in via
+/// `"stream": true` on the request, so v1/older clients never see it.
+pub(crate) const STREAM_SENTINEL: u32 = u32::MAX - 1;
+
+/// Hard cap on one streamed chunk. The assembled payload may exceed
+/// [`MAX_FRAME`] (that is the point of streaming); each chunk stays
+/// small so neither side ever needs an oversized contiguous read.
+pub(crate) const STREAM_CHUNK: usize = 256 << 10;
+
 /// Typed wire/protocol error. Implements `std::error::Error`, so it
 /// converts into `anyhow::Error` at call sites that don't match on it.
 #[derive(Debug, Clone, PartialEq)]
@@ -125,6 +140,20 @@ impl WireError {
             Some(code) => WireError::Rejected { code: code.into(), message: msg },
             None => WireError::Rejected { code: "error".into(), message: msg },
         }
+    }
+}
+
+/// The typed `too_large` rejection every response writer raises BEFORE
+/// any bytes hit the socket. A payload over `u32::MAX` would silently
+/// truncate the length prefix and desync the stream; one over
+/// [`MAX_FRAME`] would be refused by the peer's read side, leaving
+/// megabytes unread on the socket. Either way: fail typed, write
+/// nothing.
+pub(crate) fn too_large(what: &str, bytes: u64) -> WireError {
+    WireError::Rejected {
+        code: "too_large".into(),
+        message: format!(
+            "{what} of {bytes} bytes exceeds the frame cap ({MAX_FRAME})"),
     }
 }
 
@@ -234,26 +263,32 @@ pub fn read_frame(stream: &mut TcpStream) -> Result<String, WireError> {
         .map_err(|e| WireError::Malformed(format!("frame not utf-8: {e}")))
 }
 
-/// Write one length-prefixed JSON frame (refuses oversized payloads).
-pub fn write_frame(stream: &mut TcpStream, payload: &str) -> Result<(), WireError> {
-    if payload.len() as u64 >= u32::MAX as u64 {
-        // fail loudly instead of wrapping the u32 length prefix
-        return Err(WireError::Malformed(format!(
-            "frame too large: {} bytes", payload.len())));
+/// Write one length-prefixed JSON frame. Refuses payloads over
+/// [`MAX_FRAME`] with a typed `too_large` error BEFORE any bytes hit
+/// the sink -- the old `>= u32::MAX` guard still let a 65 MiB payload
+/// through, which the peer's read side would refuse mid-stream.
+/// Generic over the sink so the threaded plane (`TcpStream`), the
+/// event plane (per-connection output buffers), and unit tests
+/// (`Vec<u8>`) all share one implementation.
+pub fn write_frame<W: Write + ?Sized>(w: &mut W, payload: &str) -> Result<(), WireError> {
+    if payload.len() > MAX_FRAME {
+        return Err(too_large("frame", payload.len() as u64));
     }
-    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
-    stream.write_all(payload.as_bytes())?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload.as_bytes())?;
     Ok(())
 }
 
 /// How often the server-side frame reader wakes to re-check the stop
-/// flag and its deadline while blocked on a quiet socket.
-const POLL_SLICE: Duration = Duration::from_millis(100);
+/// flag and its deadline while blocked on a quiet socket. On the event
+/// plane this same slice is the `epoll_wait` timeout -- the one timer
+/// in the whole connection plane.
+pub(crate) const POLL_SLICE: Duration = Duration::from_millis(100);
 
 /// Grace allowed to finish an in-flight frame once the server begins
 /// draining (stop flag set): long enough for any legitimate in-transit
 /// frame, short enough that shutdown join time stays bounded.
-const DRAIN_GRACE: Duration = Duration::from_millis(250);
+pub(crate) const DRAIN_GRACE: Duration = Duration::from_millis(250);
 
 /// Outcome of a deadline-aware server-side frame read.
 pub(crate) enum FrameIn {
@@ -420,8 +455,8 @@ pub(crate) fn read_frame_deadline(
 /// Server side: encode a binary lookup response. v2 frames are
 /// self-describing (`u32 n | u32 d` header before the f32 rows); v1
 /// frames keep the legacy headerless payload.
-pub(crate) fn write_bin_rows(
-    stream: &mut TcpStream,
+pub(crate) fn write_bin_rows<W: Write + ?Sized>(
+    w: &mut W,
     version: u64,
     n: usize,
     d: usize,
@@ -433,11 +468,9 @@ pub(crate) fn write_bin_rows(
     // Enforce the SAME bound the client's read side enforces (MAX_FRAME,
     // not just the u32 prefix limit): a response the peer refuses to
     // read would leave megabytes unread on the socket and desync every
-    // later frame on the connection.
+    // later frame on the connection. Typed, and BEFORE any bytes go out.
     if bytes > MAX_FRAME as u64 || n as u64 > u32::MAX as u64 || d as u64 > u32::MAX as u64 {
-        return Err(WireError::Malformed(format!(
-            "lookup_bin response of {bytes} bytes exceeds the frame cap \
-             ({MAX_FRAME})")));
+        return Err(too_large("lookup_bin response", bytes));
     }
     let mut payload = Vec::with_capacity(bytes as usize);
     if version >= 2 {
@@ -447,8 +480,8 @@ pub(crate) fn write_bin_rows(
     for v in flat {
         payload.extend_from_slice(&v.to_le_bytes());
     }
-    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
-    stream.write_all(&payload)?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
     Ok(())
 }
 
@@ -459,14 +492,14 @@ pub(crate) fn write_bin_rows(
 /// [`err_frame`], possibly annotated -- e.g. `"evicted": true` on a
 /// `no_such_table` rejection) so the rejection is self-describing; v1
 /// keeps the bare sentinel.
-pub(crate) fn write_bin_reject_frame(
-    stream: &mut TcpStream,
+pub(crate) fn write_bin_reject_frame<W: Write + ?Sized>(
+    w: &mut W,
     version: u64,
     frame: &Json,
 ) -> Result<(), WireError> {
-    stream.write_all(&u32::MAX.to_le_bytes())?;
+    w.write_all(&u32::MAX.to_le_bytes())?;
     if version >= 2 {
-        write_frame(stream, &frame.to_string())?;
+        write_frame(w, &frame.to_string())?;
     }
     Ok(())
 }
@@ -491,17 +524,37 @@ pub(crate) fn sections_payload_bytes(
 /// self-describing, sections in request order. The whole frame obeys the
 /// same `MAX_FRAME` cap as every other response; callers pre-check via
 /// [`sections_payload_bytes`] so nothing is written on the reject path.
-pub(crate) fn write_bin_sections(
-    stream: &mut TcpStream,
+pub(crate) fn write_bin_sections<W: Write + ?Sized>(
+    w: &mut W,
     sections: &[(usize, usize, &[f32])],
 ) -> Result<(), WireError> {
     let dims: Vec<(usize, usize)> =
         sections.iter().map(|&(n, d, _)| (n, d)).collect();
     let bytes = sections_payload_bytes(&dims)
         .filter(|&b| b <= MAX_FRAME as u64)
-        .ok_or_else(|| WireError::Malformed(format!(
-            "fan-out response over {} sections exceeds the frame cap \
-             ({MAX_FRAME})", sections.len())))?;
+        .ok_or_else(|| too_large(
+            &format!("fan-out response over {} sections", sections.len()),
+            sections_payload_bytes(&dims).unwrap_or(u64::MAX)))?;
+    let payload = bin_sections_payload(sections)?;
+    debug_assert_eq!(payload.len() as u64, bytes);
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    Ok(())
+}
+
+/// Build the multi-section binary payload WITHOUT the single-frame cap:
+/// the streamed fan-out path uses this directly (the cap is the whole
+/// reason streaming exists), while [`write_bin_sections`] caps it at
+/// [`MAX_FRAME`] first. Overflow and u32-dim checks are kept either
+/// way, so the layout itself can never lie.
+pub(crate) fn bin_sections_payload(
+    sections: &[(usize, usize, &[f32])],
+) -> Result<Vec<u8>, WireError> {
+    let dims: Vec<(usize, usize)> =
+        sections.iter().map(|&(n, d, _)| (n, d)).collect();
+    let bytes = sections_payload_bytes(&dims).ok_or_else(|| {
+        WireError::Malformed("fan-out response size overflows u64".into())
+    })?;
     if sections.len() as u64 > u32::MAX as u64
         || dims.iter().any(|&(n, d)| n as u64 > u32::MAX as u64
                                      || d as u64 > u32::MAX as u64)
@@ -519,9 +572,33 @@ pub(crate) fn write_bin_sections(
             payload.extend_from_slice(&v.to_le_bytes());
         }
     }
-    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
-    stream.write_all(&payload)?;
-    Ok(())
+    Ok(payload)
+}
+
+/// Server side: emit one complete streamed response -- the
+/// [`STREAM_SENTINEL`] prefix, the payload in chunks of at most
+/// [`STREAM_CHUNK`] bytes (each `u32 LE len` + bytes), a `u32 0`
+/// end-of-data marker, then the typed JSON terminal frame
+/// `{"ok":true,"bytes":<total>,"chunks":<count>}` the client verifies
+/// against what it received. The payload itself may exceed
+/// [`MAX_FRAME`]; no individual write ever does.
+pub(crate) fn write_stream_payload<W: Write + ?Sized>(
+    w: &mut W,
+    payload: &[u8],
+) -> Result<(), WireError> {
+    w.write_all(&STREAM_SENTINEL.to_le_bytes())?;
+    let mut chunks = 0u64;
+    for chunk in payload.chunks(STREAM_CHUNK) {
+        w.write_all(&(chunk.len() as u32).to_le_bytes())?;
+        w.write_all(chunk)?;
+        chunks += 1;
+    }
+    w.write_all(&0u32.to_le_bytes())?;
+    write_frame(w, &Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("bytes", Json::num(payload.len() as f64)),
+        ("chunks", Json::num(chunks as f64)),
+    ]).to_string())
 }
 
 /// A lookup result: `n` rows of width `d`, flat row-major storage.
@@ -781,8 +858,9 @@ impl Client {
 
     /// Read one binary response's payload, shared by every binary op:
     /// handles the `u32::MAX` rejection sentinel (decodes the JSON error
-    /// frame that follows it into a typed error), enforces the frame
-    /// cap, and requires at least `min_len` bytes of header.
+    /// frame that follows it into a typed error), reassembles a
+    /// [`STREAM_SENTINEL`] chunked response, enforces the frame cap on
+    /// single frames, and requires at least `min_len` bytes of header.
     fn read_bin_payload(
         &mut self,
         min_len: usize,
@@ -797,17 +875,66 @@ impl Client {
                 .map_err(WireError::Malformed)?;
             return Err(WireError::from_response(&j));
         }
-        let len = len32 as usize;
-        if len > MAX_FRAME {
-            return Err(WireError::Malformed(format!("frame too large: {len}")));
-        }
-        if len < min_len {
+        let buf = if len32 == STREAM_SENTINEL {
+            self.read_stream_payload()?
+        } else {
+            let len = len32 as usize;
+            if len > MAX_FRAME {
+                return Err(WireError::Malformed(format!(
+                    "frame too large: {len}")));
+            }
+            let mut buf = vec![0u8; len];
+            self.stream.read_exact(&mut buf)?;
+            buf
+        };
+        if buf.len() < min_len {
             return Err(WireError::Malformed(format!(
-                "{what} frame of {len} bytes is shorter than its \
-                 {min_len}-byte header")));
+                "{what} frame of {} bytes is shorter than its \
+                 {min_len}-byte header", buf.len())));
         }
-        let mut buf = vec![0u8; len];
-        self.stream.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Reassemble a streamed response after its [`STREAM_SENTINEL`]:
+    /// data chunks (each at most [`STREAM_CHUNK`] bytes) until a zero
+    /// length, then the typed JSON terminal frame, which must be
+    /// `{"ok": true}` and agree with the received byte/chunk counts --
+    /// a truncated or lying stream is a typed error, never a silently
+    /// short payload. The assembled total may legitimately exceed
+    /// [`MAX_FRAME`]; that is the point of streaming.
+    fn read_stream_payload(&mut self) -> Result<Vec<u8>, WireError> {
+        let mut buf = Vec::new();
+        let mut chunks = 0u64;
+        loop {
+            let mut len4 = [0u8; 4];
+            self.stream.read_exact(&mut len4)?;
+            let len = u32::from_le_bytes(len4) as usize;
+            if len == 0 {
+                break;
+            }
+            if len > STREAM_CHUNK {
+                return Err(WireError::Malformed(format!(
+                    "streamed chunk of {len} bytes exceeds the chunk cap \
+                     ({STREAM_CHUNK})")));
+            }
+            let off = buf.len();
+            buf.resize(off + len, 0);
+            self.stream.read_exact(&mut buf[off..])?;
+            chunks += 1;
+        }
+        let j = Json::parse(&read_frame(&mut self.stream)?)
+            .map_err(WireError::Malformed)?;
+        if j.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            return Err(WireError::from_response(&j));
+        }
+        if j.get("bytes").and_then(|v| v.as_usize()) != Some(buf.len())
+            || j.get("chunks").and_then(|v| v.as_usize())
+                != Some(chunks as usize)
+        {
+            return Err(WireError::Malformed(format!(
+                "stream terminal frame does not match the received data \
+                 ({} bytes in {chunks} chunks)", buf.len())));
+        }
         Ok(buf)
     }
 
@@ -855,6 +982,25 @@ impl Client {
         &mut self,
         queries: &[(&str, &[usize])],
     ) -> Result<Vec<Rows>, WireError> {
+        self.fanout_req(queries, false)
+    }
+
+    /// Like [`lookup_fanout`](Self::lookup_fanout), but asks the server
+    /// to stream the multi-section response in bounded chunks
+    /// (`"stream": true`), so the combined result may exceed the single
+    /// frame cap. Section bytes are identical to the unstreamed path.
+    pub fn lookup_fanout_stream(
+        &mut self,
+        queries: &[(&str, &[usize])],
+    ) -> Result<Vec<Rows>, WireError> {
+        self.fanout_req(queries, true)
+    }
+
+    fn fanout_req(
+        &mut self,
+        queries: &[(&str, &[usize])],
+        stream: bool,
+    ) -> Result<Vec<Rows>, WireError> {
         let qs = Json::arr(
             queries
                 .iter()
@@ -865,11 +1011,15 @@ impl Client {
                 ]))
                 .collect(),
         );
-        write_frame(&mut self.stream, &Json::obj(vec![
+        let mut pairs = vec![
             ("v", Json::num(VERSION as f64)),
             ("op", Json::str("lookup_fanout")),
             ("queries", qs),
-        ]).to_string())?;
+        ];
+        if stream {
+            pairs.push(("stream", Json::Bool(true)));
+        }
+        write_frame(&mut self.stream, &Json::obj(pairs).to_string())?;
         let buf = self.read_bin_payload(4, "fan-out")?;
         let len = buf.len();
         let s = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
@@ -1009,6 +1159,56 @@ impl Client {
         }
         let j = self.request(Json::obj(pairs))?;
         Self::topk_from(&j)
+    }
+
+    /// Like [`topk`](Self::topk), but asks the server to answer with a
+    /// streamed **binary** payload (`"stream": true`): a `u64 LE n`
+    /// header, then `n` u64 LE ids, then `n` f32 LE scores, delivered
+    /// in bounded chunks. This lifts the single-frame cap -- a
+    /// full-vocab scan (`k = vocab`) that the JSON path rejects as
+    /// `too_large` streams fine -- while ranking semantics (best first,
+    /// ties by ascending id) stay identical to the unstreamed op.
+    pub fn topk_stream(
+        &mut self,
+        table: &str,
+        query: &[f32],
+        k: usize,
+        range: Option<(usize, usize)>,
+    ) -> Result<Vec<(usize, f32)>, WireError> {
+        let mut pairs = vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("topk")),
+            ("table", Json::str(table)),
+            ("query", Self::query_json(query)),
+            ("k", Json::num(k as f64)),
+            ("stream", Json::Bool(true)),
+        ];
+        if let Some((lo, hi)) = range {
+            pairs.push(("lo", Json::num(lo as f64)));
+            pairs.push(("hi", Json::num(hi as f64)));
+        }
+        write_frame(&mut self.stream, &Json::obj(pairs).to_string())?;
+        let buf = self.read_bin_payload(8, "streamed topk")?;
+        let n = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let need = n
+            .checked_mul(12)
+            .and_then(|b| b.checked_add(8))
+            .filter(|&b| b == buf.len() as u64)
+            .ok_or_else(|| WireError::Malformed(format!(
+                "streamed topk payload of {} bytes does not match its \
+                 n={n} header", buf.len())))?;
+        let _ = need;
+        let n = n as usize;
+        let ids_end = 8 + n * 8;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let id = u64::from_le_bytes(
+                buf[8 + i * 8..16 + i * 8].try_into().unwrap());
+            let score = f32::from_le_bytes(
+                buf[ids_end + i * 4..ids_end + 4 + i * 4].try_into().unwrap());
+            out.push((id as usize, score));
+        }
+        Ok(out)
     }
 
     /// Like [`topk`](Self::topk), but the query is a resident row of the
@@ -1289,6 +1489,115 @@ mod tests {
                 _ => assert_eq!(e, back),
             }
         }
+    }
+
+    /// Build a loopback (server-side stream, client) pair for decode
+    /// tests without a real server.
+    fn pipe() -> (TcpStream, Client) {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let t = std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (srv, _) = l.accept().unwrap();
+        (srv, Client { stream: t.join().unwrap() })
+    }
+
+    /// The satellite bugfix: every writer must refuse an over-cap
+    /// payload with a typed `too_large` error BEFORE any bytes hit the
+    /// sink -- the old guard only caught `>= u32::MAX`, so a 65 MiB
+    /// payload went out and desynced the peer mid-read.
+    #[test]
+    fn write_frame_rejects_oversize_typed_before_any_bytes() {
+        let mut sink: Vec<u8> = Vec::new();
+        let big = "x".repeat(MAX_FRAME + 1);
+        let e = write_frame(&mut sink, &big).unwrap_err();
+        assert_eq!(e.code(), "too_large");
+        assert!(sink.is_empty(), "bytes escaped before the guard");
+
+        write_frame(&mut sink, "{\"ok\":true}").unwrap();
+        assert_eq!(&sink[..4], &(11u32).to_le_bytes());
+        assert_eq!(&sink[4..], b"{\"ok\":true}");
+    }
+
+    #[test]
+    fn bin_writers_reject_oversize_typed_before_any_bytes() {
+        // 8-byte v2 header + (16 Mi + 1) * 4 bytes of rows > 64 MiB cap
+        let n = (16 << 20) + 1;
+        let flat = vec![0f32; n];
+        let mut sink: Vec<u8> = Vec::new();
+        let e = write_bin_rows(&mut sink, 2, n, 1, &flat).unwrap_err();
+        assert_eq!(e.code(), "too_large");
+        assert!(sink.is_empty());
+
+        let e = write_bin_sections(&mut sink, &[(n, 1, &flat[..])])
+            .unwrap_err();
+        assert_eq!(e.code(), "too_large");
+        assert!(sink.is_empty());
+
+        // the same sections stream fine: no single-frame cap applies
+        let payload = bin_sections_payload(&[(n, 1, &flat[..])]).unwrap();
+        assert_eq!(payload.len(), 4 + 8 + n * 4);
+    }
+
+    #[test]
+    fn streamed_payload_roundtrips_through_client_decode() {
+        let (mut srv, mut client) = pipe();
+        let payload: Vec<u8> =
+            (0..STREAM_CHUNK * 2 + 123).map(|i| (i % 251) as u8).collect();
+        let expect = payload.clone();
+        let t = std::thread::spawn(move || {
+            write_stream_payload(&mut srv, &payload).unwrap();
+        });
+        let got = client.read_bin_payload(1, "test").unwrap();
+        t.join().unwrap();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn streamed_empty_payload_is_zero_chunks() {
+        let (mut srv, mut client) = pipe();
+        write_stream_payload(&mut srv, &[]).unwrap();
+        let got = client.read_bin_payload(0, "test").unwrap();
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn streamed_error_terminal_is_typed() {
+        let (mut srv, mut client) = pipe();
+        srv.write_all(&STREAM_SENTINEL.to_le_bytes()).unwrap();
+        srv.write_all(&(3u32).to_le_bytes()).unwrap();
+        srv.write_all(b"abc").unwrap();
+        srv.write_all(&0u32.to_le_bytes()).unwrap();
+        write_frame(&mut srv, &err_obj(
+            "artifact_failed", "disk vanished mid-stream", vec![],
+        ).to_string()).unwrap();
+        let e = client.read_bin_payload(0, "test").unwrap_err();
+        assert_eq!(e.code(), "artifact_failed");
+    }
+
+    #[test]
+    fn streamed_chunk_over_cap_is_malformed() {
+        let (mut srv, mut client) = pipe();
+        srv.write_all(&STREAM_SENTINEL.to_le_bytes()).unwrap();
+        srv.write_all(&((STREAM_CHUNK as u32) + 1).to_le_bytes()).unwrap();
+        let e = client.read_bin_payload(0, "test").unwrap_err();
+        assert_eq!(e.code(), "malformed", "{e}");
+    }
+
+    #[test]
+    fn streamed_terminal_mismatch_is_malformed() {
+        let (mut srv, mut client) = pipe();
+        srv.write_all(&STREAM_SENTINEL.to_le_bytes()).unwrap();
+        srv.write_all(&(3u32).to_le_bytes()).unwrap();
+        srv.write_all(b"abc").unwrap();
+        srv.write_all(&0u32.to_le_bytes()).unwrap();
+        // terminal lies about the byte count
+        write_frame(&mut srv, &Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("bytes", Json::num(99.0)),
+            ("chunks", Json::num(1.0)),
+        ]).to_string()).unwrap();
+        let e = client.read_bin_payload(0, "test").unwrap_err();
+        assert_eq!(e.code(), "malformed", "{e}");
     }
 
     #[test]

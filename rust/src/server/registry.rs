@@ -282,6 +282,13 @@ pub struct ServerConfig {
     /// actual cache bytes at all times, so `resident + cached <=
     /// budget` holds without racing the fill level.
     pub row_cache_bytes: u64,
+    /// Poller threads for the event-driven connection plane
+    /// (`--pollers N`). Every socket is multiplexed onto this fixed
+    /// pool, so the OS-thread count stays flat in the connection count;
+    /// `0` selects the legacy thread-per-connection plane (and on
+    /// non-Linux targets, where the epoll shim is empty, any value
+    /// falls back to it). Served bytes are bit-identical across planes.
+    pub pollers: usize,
 }
 
 impl Default for ServerConfig {
@@ -297,6 +304,7 @@ impl Default for ServerConfig {
             max_conns: None,
             debug_ops: false,
             row_cache_bytes: 0,
+            pollers: 2,
         }
     }
 }
@@ -2522,6 +2530,10 @@ impl TableRegistry {
             "max_conns",
             Json::num(self.cfg.max_conns.map_or(0.0, |n| n as f64)),
         ));
+        // 0 here genuinely means "legacy threaded plane", unlike the
+        // knobs above where 0 is a disabled marker; a manifest without
+        // the key restores to the event-plane default.
+        pairs.push(("pollers", Json::num(self.cfg.pollers as f64)));
         if let Some(sd) = &self.cfg.spill_dir {
             pairs.push(("spill_dir",
                         Json::str(sd.to_string_lossy().as_ref())));
@@ -2689,6 +2701,15 @@ impl TableRegistry {
             // never restored: debug ops are a test-construction knob,
             // deliberately unreachable via snapshot round-trips
             debug_ops: false,
+            // 0 IS meaningful here (legacy threaded plane); only a
+            // missing or bogus value falls back to the event-plane
+            // default
+            pollers: j
+                .get("pollers")
+                .and_then(|v| v.as_f64())
+                .filter(|p| p.is_finite() && *p >= 0.0)
+                .map(|p| p as usize)
+                .unwrap_or(def.pollers),
         }
     }
 

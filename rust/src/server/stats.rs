@@ -181,14 +181,18 @@ impl Stats {
     }
 
     /// Hot-row cache hit rate over the table's lifetime, `None` before
-    /// the first cache-enabled lookup (hits + misses == 0).
+    /// the first cache-enabled lookup (hits + misses == 0). The two
+    /// counters are snapshotted once each and summed saturating: they
+    /// are independently updated u64s, so an unchecked `h + m` could
+    /// overflow (a debug-build panic) on a very long-lived server.
     pub fn cache_hit_rate(&self) -> Option<f64> {
         let h = self.cache_hits.load(std::sync::atomic::Ordering::Relaxed);
         let m = self.cache_misses.load(std::sync::atomic::Ordering::Relaxed);
-        if h + m == 0 {
+        let total = h.saturating_add(m);
+        if total == 0 {
             None
         } else {
-            Some(h as f64 / (h + m) as f64)
+            Some(h as f64 / total as f64)
         }
     }
 }
@@ -213,6 +217,21 @@ mod tests {
         assert!(p99 >= 0.098, "p99={p99}");
         assert!(p50 <= p99);
         assert_eq!(s.latency_samples(), 100);
+    }
+
+    #[test]
+    fn cache_hit_rate_survives_saturated_counters() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let s = Stats::default();
+        assert!(s.cache_hit_rate().is_none());
+        s.cache_hits.store(3, Relaxed);
+        s.cache_misses.store(1, Relaxed);
+        assert_eq!(s.cache_hit_rate(), Some(0.75));
+        // the old unchecked `h + m` panicked (debug) or wrapped here
+        s.cache_hits.store(u64::MAX, Relaxed);
+        s.cache_misses.store(u64::MAX, Relaxed);
+        let r = s.cache_hit_rate().unwrap();
+        assert!(r.is_finite() && r > 0.0 && r <= 1.0, "rate={r}");
     }
 
     #[test]

@@ -1,0 +1,403 @@
+//! Event-driven connection-plane acceptance tests: the epoll readiness
+//! loop must hold the OS-thread count FLAT in the connection count
+//! (1000 idle + 64 hot connections, zero extra threads), answer
+//! pipelined same-connection requests strictly in request order, stream
+//! responses past the single-frame cap, keep the hardened-close
+//! semantics (slow-loris timeout, mid-frame disconnect) of the threaded
+//! plane, and serve bytes **bit-identical** to it (`--pollers 0`).
+//!
+//! Everything here runs without artifacts, like `conn_hardening.rs`
+//! (which exercises the same defenses on the DEFAULT config -- also the
+//! event plane -- while this file pins poller counts explicitly).
+
+#![cfg(target_os = "linux")]
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use dpq_embed::backend::DenseTable;
+use dpq_embed::dpq::{toy_embedding, CompressedEmbedding};
+use dpq_embed::jsonx::Json;
+use dpq_embed::scoring;
+use dpq_embed::server::{
+    Client, EmbeddingServer, ServerConfig, TableRegistry, WireError,
+};
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::Rng;
+
+fn toy() -> CompressedEmbedding {
+    toy_embedding(48, 8, 4, 3, 1)
+}
+
+/// Boot a server over one DPQ table ("emb") with the given config.
+fn spawn(cfg: ServerConfig) -> (
+    std::net::SocketAddr,
+    std::thread::JoinHandle<()>,
+    Arc<TableRegistry>,
+) {
+    let registry = TableRegistry::new(cfg);
+    registry.insert("emb", Arc::new(toy())).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let registry = server.registry();
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h, registry)
+}
+
+/// Read one length-prefixed frame raw (None on EOF / short read).
+fn read_raw_frame(s: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut len4 = [0u8; 4];
+    s.read_exact(&mut len4).ok()?;
+    let n = u32::from_le_bytes(len4) as usize;
+    let mut buf = vec![0u8; n];
+    s.read_exact(&mut buf).ok()?;
+    Some(buf)
+}
+
+fn frame_code(payload: &[u8]) -> Option<String> {
+    let j = Json::parse(std::str::from_utf8(payload).ok()?).ok()?;
+    Some(j.get("code")?.as_str()?.to_string())
+}
+
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut b = (payload.len() as u32).to_le_bytes().to_vec();
+    b.extend_from_slice(payload);
+    b
+}
+
+fn assert_bit_exact(c: &mut Client, emb: &CompressedEmbedding, ids: &[usize]) {
+    let rows = c.lookup_bin("emb", ids).unwrap();
+    for (k, &id) in ids.iter().enumerate() {
+        assert_eq!(rows.row(k), &emb.reconstruct_row(id)[..],
+                   "served row for id {id} not bit-exact");
+    }
+}
+
+/// This process's live OS-thread count (`Threads:` in
+/// `/proc/self/status`) -- server and test share the process, so a
+/// plane that spawned per-connection threads would show up here.
+fn os_thread_count() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .unwrap()
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .expect("/proc/self/status without a Threads: line")
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+/// THE tentpole claim: 1000 idle connections plus 64 actively-served
+/// ones add ZERO threads beyond the fixed poller/worker pool, while
+/// every hot connection keeps getting bit-exact rows. (The threaded
+/// plane would sit at +1064 here.)
+#[test]
+fn thousand_idle_and_64_hot_conns_flat_thread_count() {
+    let (addr, h, registry) = spawn(ServerConfig {
+        pollers: 2,
+        ..ServerConfig::default()
+    });
+    let emb = toy();
+    // warm up: first connection, first batch, lazy pools
+    let mut warm = Client::connect(addr).unwrap();
+    assert_bit_exact(&mut warm, &emb, &[0, 1]);
+    let baseline = os_thread_count();
+
+    let mut idle: Vec<TcpStream> = Vec::with_capacity(1000);
+    for i in 0..1000 {
+        // bounded retry: a briefly-full accept queue must not flake
+        let mut conn = None;
+        for _ in 0..50 {
+            match TcpStream::connect(addr) {
+                Ok(s) => { conn = Some(s); break; }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+        idle.push(conn.unwrap_or_else(|| panic!("idle conn {i} refused")));
+    }
+    let mut hot: Vec<Client> = (0..64)
+        .map(|_| Client::connect(addr).unwrap())
+        .collect();
+    for round in 0..4 {
+        for (ci, c) in hot.iter_mut().enumerate() {
+            assert_bit_exact(c, &emb, &[(ci + round) % 48, (ci * 7) % 48]);
+        }
+    }
+    // Sibling tests in this binary run on parallel harness threads and
+    // boot their own (fixed-size) server pools, so give the count a
+    // moment to settle and allow a small unrelated-noise slack: the
+    // claim under test is the ABSENCE of the +1064 a thread-per-
+    // connection plane would add, and 64 is 16x below that.
+    let mut loaded = os_thread_count();
+    for _ in 0..40 {
+        if loaded <= baseline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        loaded = os_thread_count();
+    }
+    assert!(
+        loaded <= baseline + 64,
+        "1064 extra connections grew the thread count \
+         ({baseline} -> {loaded}): the plane is not event-driven"
+    );
+    assert!(
+        registry.conn_stats().conns_open.load(Ordering::Relaxed) >= 1065,
+        "all idle + hot connections must be accepted and open"
+    );
+
+    // hot connections still bit-exact with the idle herd attached
+    for (ci, c) in hot.iter_mut().enumerate() {
+        assert_bit_exact(c, &emb, &[(ci * 13 + 5) % 48]);
+    }
+    warm.shutdown().unwrap();
+    h.join().unwrap();
+    // graceful drain closed the idle herd too
+    assert_eq!(registry.conn_stats().conns_open.load(Ordering::Relaxed), 0);
+    for (i, s) in idle.iter_mut().enumerate() {
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut b = [0u8; 1];
+        assert_eq!(s.read(&mut b).unwrap_or(0), 0,
+                   "idle conn {i} must see EOF after shutdown");
+    }
+}
+
+/// Pipelining: a client that writes many frames back-to-back (more than
+/// the per-connection inbox holds) gets every response, strictly in
+/// request order, each bit-exact -- including a typed `malformed` error
+/// frame in the middle that must NOT desync the stream.
+#[test]
+fn pipelined_requests_answered_in_request_order() {
+    let (addr, h, _registry) = spawn(ServerConfig {
+        pollers: 1,
+        ..ServerConfig::default()
+    });
+    let emb = toy();
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let bad_at = 7usize;
+    let mut burst = Vec::new();
+    for i in 0..20usize {
+        if i == bad_at {
+            burst.extend_from_slice(&frame(b"{\"op\":")); // bad JSON
+        } else {
+            burst.extend_from_slice(&frame(format!(
+                "{{\"v\":2,\"op\":\"lookup_bin\",\"table\":\"emb\",\
+                 \"ids\":[{}]}}", i % 48).as_bytes()));
+        }
+    }
+    // one write: decode of frame k+1 overlaps dispatch of frame k
+    s.write_all(&burst).unwrap();
+    for i in 0..20usize {
+        let f = read_raw_frame(&mut s)
+            .unwrap_or_else(|| panic!("response {i} missing"));
+        if i == bad_at {
+            assert_eq!(frame_code(&f).as_deref(), Some("malformed"),
+                       "response {i} must be the typed malformed answer");
+            continue;
+        }
+        assert_eq!(&f[..4], &1u32.to_le_bytes(), "response {i}: n");
+        assert_eq!(&f[4..8], &12u32.to_le_bytes(), "response {i}: d");
+        let got: Vec<f32> = f[8..].chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        assert_eq!(got, emb.reconstruct_row(i % 48),
+                   "response {i} out of order or not bit-exact");
+    }
+    let mut c = Client::connect(addr).unwrap();
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// Streamed responses return exactly the unstreamed results where both
+/// paths exist (small topk, small fanout) -- the chunked channel is an
+/// encoding change, not a semantics change.
+#[test]
+fn streamed_results_match_unstreamed() {
+    let (addr, h, _registry) = spawn(ServerConfig {
+        pollers: 2,
+        ..ServerConfig::default()
+    });
+    let mut c = Client::connect(addr).unwrap();
+    let query = vec![0.25f32; 12];
+    let plain = c.topk("emb", &query, 9, None).unwrap();
+    let streamed = c.topk_stream("emb", &query, 9, None).unwrap();
+    assert_eq!(plain, streamed, "streamed topk diverged from unstreamed");
+    let ids: Vec<usize> = (0..17).collect();
+    let queries: Vec<(&str, &[usize])> =
+        vec![("emb", &ids[..]), ("emb", &ids[..3])];
+    let plain = c.lookup_fanout(&queries).unwrap();
+    let streamed = c.lookup_fanout_stream(&queries).unwrap();
+    assert_eq!(plain, streamed, "streamed fanout diverged from unstreamed");
+    // streamed rejections arrive typed on the binary channel
+    match c.topk_stream("missing", &query, 3, None) {
+        Err(WireError::NoSuchTable(t)) => assert_eq!(t, "missing"),
+        other => panic!("expected NoSuchTable, got {other:?}"),
+    }
+    // ... and the connection is still usable afterwards
+    assert_eq!(c.topk("emb", &query, 1, None).unwrap().len(), 1);
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// A full-vocab `topk` whose response exceeds the 64 MiB single-frame
+/// cap: the unstreamed op answers the typed `too_large` rejection it
+/// always has, while `"stream": true` delivers all `vocab` results in
+/// bounded chunks, identical to a local reference scan.
+#[test]
+fn full_vocab_topk_streams_past_the_frame_cap() {
+    // k * 2 * 64 > MAX_FRAME (64 MiB) at k > 524288: this vocab is past
+    // the cap for the JSON path, modest in memory (d stays tiny)
+    let vocab = 540_000usize;
+    let d = 4usize;
+    let mut rng = Rng::new(11);
+    let table = TensorF {
+        shape: vec![vocab, d],
+        data: (0..vocab * d).map(|_| rng.normal()).collect(),
+    };
+    let dense = DenseTable::new(table).unwrap();
+    let query: Vec<f32> = (0..d).map(|i| 0.5 + i as f32).collect();
+    let want = {
+        let sb = dense.scorer().expect("dense tables score");
+        let qs = sb.query_scorer(&query);
+        scoring::topk(&*qs, 0, vocab, vocab)
+    };
+    let registry = TableRegistry::new(ServerConfig {
+        pollers: 2,
+        ..ServerConfig::default()
+    });
+    registry.insert("big", Arc::new(dense)).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut c = Client::connect(addr).unwrap();
+    match c.topk("big", &query, vocab, None) {
+        Err(WireError::Rejected { code, .. }) => assert_eq!(
+            code, "too_large",
+            "unstreamed full-vocab topk must reject over the frame cap"),
+        other => panic!("expected too_large, got {other:?}"),
+    }
+    let got = c.topk_stream("big", &query, vocab, None).unwrap();
+    assert_eq!(got.len(), vocab, "streamed topk must return ALL results");
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(*g, (w.id, w.score),
+                   "streamed rank {i} diverged from the local reference");
+    }
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// The hardened-close semantics carry over to the event plane: a
+/// mid-frame trickle staller and an idle connection both get the typed
+/// `timeout` close (counted), mid-frame disconnects close silently, and
+/// a concurrent healthy client never notices any of it.
+#[test]
+fn slow_loris_and_mid_frame_disconnects_on_event_plane() {
+    let (addr, h, registry) = spawn(ServerConfig {
+        pollers: 1,
+        conn_timeout: Some(Duration::from_millis(400)),
+        ..ServerConfig::default()
+    });
+    let emb = toy();
+    // staller 1: length prefix claiming 64 bytes, then silence
+    let mut loris = TcpStream::connect(addr).unwrap();
+    loris.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    loris.write_all(&64u32.to_le_bytes()).unwrap();
+    // staller 2: never writes a byte
+    let mut idle = TcpStream::connect(addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // vanishing peers: mid-frame, mid-prefix, and right after connect
+    for i in 0..6 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        match i % 3 {
+            0 => {
+                s.write_all(&100u32.to_le_bytes()).unwrap();
+                s.write_all(&[b'x'; 10]).unwrap();
+            }
+            1 => s.write_all(&[0x01]).unwrap(),
+            _ => {}
+        }
+        drop(s);
+    }
+    // oversized claim: typed rejection (bit-identical message), close
+    let mut over = TcpStream::connect(addr).unwrap();
+    over.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    over.write_all(&(((64u32) << 20) + 1).to_le_bytes()).unwrap();
+    let f = read_raw_frame(&mut over).expect("expected too_large frame");
+    assert_eq!(frame_code(&f).as_deref(), Some("too_large"));
+    // healthy client throughout
+    let mut c = Client::connect(addr).unwrap();
+    for i in 0..20 {
+        assert_bit_exact(&mut c, &emb, &[i % 48, (i * 5 + 2) % 48]);
+    }
+    for (name, s) in [("loris", &mut loris), ("idle", &mut idle)] {
+        let f = read_raw_frame(s)
+            .unwrap_or_else(|| panic!("{name}: expected a timeout frame"));
+        assert_eq!(frame_code(&f).as_deref(), Some("timeout"), "{name}");
+        let mut rest = [0u8; 1];
+        assert_eq!(s.read(&mut rest).unwrap_or(0), 0, "{name}: expected EOF");
+    }
+    assert!(
+        registry.conn_stats().conn_timeouts.load(Ordering::Relaxed) >= 2,
+        "both stalled connections must be counted"
+    );
+    c.shutdown().unwrap();
+    h.join().unwrap();
+}
+
+/// Run one scripted mixed workload against a server, returning every
+/// raw response frame (requests sent one at a time, one frame back
+/// each, so the comparison is framing-inclusive).
+fn scripted_responses(addr: std::net::SocketAddr) -> Vec<Vec<u8>> {
+    let reqs: Vec<Vec<u8>> = vec![
+        br#"{"op":"lookup","ids":[0,5,11]}"#.to_vec(),
+        br#"{"v":2,"op":"lookup_bin","table":"emb","ids":[7,7,46]}"#.to_vec(),
+        br#"{"v":2,"op":"lookup_fanout","queries":[{"table":"emb","ids":[1,2]},{"table":"emb","ids":[]}]}"#.to_vec(),
+        br#"{"v":2,"op":"topk","table":"emb","query_id":3,"k":5}"#.to_vec(),
+        br#"{"v":2,"op":"score","table":"emb","query_id":1,"ids":[0,1,2]}"#.to_vec(),
+        br#"{"v":2,"op":"nonsense"}"#.to_vec(),
+        br#"{"v":99,"op":"lookup"}"#.to_vec(),
+        br#"not json"#.to_vec(),
+        br#"{"v":2,"op":"lookup","table":"ghost","ids":[0]}"#.to_vec(),
+        br#"{"v":2,"op":"topk","table":"emb","query":[0.5,-1.0,0.25,0.0,1.5,-0.5,2.0,0.125,-2.0,1.0,0.75,-0.25],"k":600000}"#.to_vec(),
+    ];
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut out = Vec::with_capacity(reqs.len());
+    for r in &reqs {
+        s.write_all(&frame(r)).unwrap();
+        out.push(read_raw_frame(&mut s).expect("response frame"));
+    }
+    out
+}
+
+/// The acceptance bar for the whole refactor: the event plane serves
+/// byte-for-byte what the thread-per-connection plane serves, success
+/// and rejection paths alike.
+#[test]
+fn event_plane_bytes_match_threaded_plane() {
+    let mut per_plane: Vec<Vec<Vec<u8>>> = Vec::new();
+    for pollers in [0usize, 2] {
+        let (addr, h, _registry) = spawn(ServerConfig {
+            pollers,
+            ..ServerConfig::default()
+        });
+        per_plane.push(scripted_responses(addr));
+        let mut c = Client::connect(addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+    let (threaded, event) = (&per_plane[0], &per_plane[1]);
+    assert_eq!(threaded.len(), event.len());
+    for (i, (a, b)) in threaded.iter().zip(event).enumerate() {
+        assert_eq!(a, b, "response {i} differs between planes");
+    }
+}

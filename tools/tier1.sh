@@ -23,7 +23,12 @@
 # byte-at-a-time, mid-frame disconnect, panic injection, busy cap) run
 # via conn_hardening, and a 2000-iteration seeded fuzz of the live wire
 # runs in BOTH thread passes -- zero panics, wedges, or unclean closes
-# is a tier-1 gate, not a nightly aspiration.
+# is a tier-1 gate, not a nightly aspiration. Both the fuzz and the
+# hostile suites exercise the DEFAULT connection plane (event-driven,
+# --pollers 2); conn_plane additionally pins the event-plane-specific
+# claims (flat thread count under 1k idle + 64 hot conns, pipelined
+# in-order responses, streamed == unstreamed results, event bytes ==
+# threaded bytes) in BOTH thread passes.
 #
 # Compute-on-codes coverage: scoring_equivalence (ADC LUT vs
 # reconstruct-then-score reference, topk determinism across threads /
@@ -48,7 +53,7 @@ DPQ_THREADS=2 cargo test -q --test multi_table --test server_integration \
     --test registry_lifecycle --test residency_faults --test residency_soak \
     --test replica_equivalence --test spill_recovery \
     --test conn_hardening --test fuzz_corpus --test scoring_equivalence \
-    --test cache_equivalence --test backend_granular
+    --test cache_equivalence --test backend_granular --test conn_plane
 DPQ_THREADS=2 target/release/repro fuzz --seed 42 --iters 2000
 RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps -q
 for f in docs/*.md; do

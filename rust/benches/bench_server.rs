@@ -791,4 +791,40 @@ fn main() {
     bench::record("streamed_topk_full_vocab", stream_s, 0.0, stream_iters);
     c.shutdown().unwrap();
     h.join().unwrap();
+
+    // Content-addressed artifact fetch: pull a spilled artifact back by
+    // its SHA-256 digest over the v2 chunked channel -- the peer-
+    // hydration transfer path (server-side read + re-hash + stream,
+    // client-side reassembly + the caller's own verify).
+    section("artifact store: fetch_artifact by content digest");
+    let dir = std::env::temp_dir().join(format!(
+        "dpq_bench_fetch_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let registry = TableRegistry::open(ServerConfig {
+        spill_dir: Some(dir.clone()),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    registry.insert("emb", Arc::new(ce.clone())).unwrap();
+    let slot = registry.demote("emb").unwrap();
+    let (sha, art_bytes) = slot.digest().expect("fresh spill has a digest");
+    let (addr, h) = boot(Arc::new(EmbeddingServer::new(registry)));
+    let mut c = Client::connect(addr).unwrap();
+    let fetch_iters = 50usize;
+    let t0 = Instant::now();
+    for _ in 0..fetch_iters {
+        let got = c.fetch_artifact(&sha).unwrap();
+        assert_eq!(got.len() as u64, art_bytes);
+    }
+    let fetch_s = t0.elapsed().as_secs_f64() / fetch_iters as f64;
+    println!(
+        "fetch_artifact({} KiB): {:.1}us per pull, {:.1} MiB/s",
+        art_bytes / 1024, fetch_s * 1e6,
+        art_bytes as f64 / fetch_s / (1 << 20) as f64
+    );
+    bench::record("fetch_artifact_pull", fetch_s, 0.0, fetch_iters);
+    c.shutdown().unwrap();
+    h.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
 }

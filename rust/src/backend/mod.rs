@@ -226,6 +226,31 @@ pub(crate) mod artifact_io {
         }
         Ok(out)
     }
+
+    /// SHA-256 of the file at `path` as `(64-hex digest, byte length)`,
+    /// streamed in 64 KiB windows so hashing a spilled artifact never
+    /// costs its size in memory. The content-addressing primitive every
+    /// artifact write path records and every reload path verifies
+    /// BEFORE parsing -- a digest mismatch is detected without trusting
+    /// a single header byte of the corrupt file.
+    pub fn file_sha256(path: &Path) -> Result<(String, u64)> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {path:?} for hashing"))?;
+        let mut r = BufReader::new(f);
+        let mut h = crate::util::sha256::Sha256::new();
+        let mut total = 0u64;
+        let mut buf = [0u8; 64 * 1024];
+        loop {
+            let n = r.read(&mut buf)
+                .with_context(|| format!("read {path:?} for hashing"))?;
+            if n == 0 {
+                break;
+            }
+            h.update(&buf[..n]);
+            total += n as u64;
+        }
+        Ok((h.finalize_hex(), total))
+    }
 }
 
 /// Compression ratio vs an f32 table of the same `[vocab, d]` shape.

@@ -8,6 +8,8 @@
 //!   repro compress [--artifact P ...]   train + export compressed embedding
 //!   repro serve   [--table N=F ...]     serve compressed embedding tables
 //!   repro fuzz    [--seed S --iters N]  fuzz the wire protocol in-process
+//!   repro hydrate --from HOST:PORT --spill-dir DIR   pull a peer's spill
+//!                                       artifacts by content digest
 //!   repro codes   [--artifact P ...]    print code statistics
 //!
 //! All flags are `--key value`; unknown keys are rejected with the list of
@@ -29,7 +31,9 @@ use dpq_embed::coordinator::Trainer;
 use dpq_embed::dpq::stats as dstats;
 use dpq_embed::metrics;
 use dpq_embed::runtime::Runtime;
-use dpq_embed::server::{EmbeddingServer, ServerConfig, TableRegistry};
+use dpq_embed::server::{
+    hydrate_from_peer, Client, EmbeddingServer, ServerConfig, TableRegistry,
+};
 use dpq_embed::util::pool;
 
 fn main() {
@@ -630,6 +634,46 @@ fn dispatch(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
+        "hydrate" => {
+            let kv = parse_cli_overrides(rest)?;
+            let from = kv.get("from").ok_or_else(|| anyhow!(
+                "hydrate needs --from HOST:PORT (a running repro serve)"))?;
+            let dir = std::path::PathBuf::from(kv.get("spill_dir")
+                .ok_or_else(|| anyhow!(
+                    "hydrate needs --spill-dir DIR (where pulled \
+                     artifacts land; must exist)"))?);
+            let timeout: f64 = take_or(&kv, "timeout", "30").parse()
+                .map_err(|_| anyhow!("--timeout expects seconds"))?;
+            if !timeout.is_finite() || timeout <= 0.0 {
+                bail!("--timeout must be positive seconds");
+            }
+            let addr = std::net::ToSocketAddrs::to_socket_addrs(from.as_str())
+                .map_err(|e| anyhow!("--from {from:?}: {e}"))?
+                .next()
+                .ok_or_else(|| anyhow!(
+                    "--from {from:?} resolved to no address"))?;
+            // `open`, not `new`: the dir must exist, and a spill.json a
+            // previous process (or previous hydrate) left there is
+            // re-adopted first, so only genuinely missing artifacts are
+            // pulled over the wire
+            let registry = TableRegistry::open(ServerConfig {
+                spill_dir: Some(dir.clone()),
+                ..ServerConfig::default()
+            })?;
+            let already = registry.list_spilled().len();
+            let mut client = Client::with_timeout(
+                addr, std::time::Duration::from_secs_f64(timeout))
+                .map_err(|e| anyhow!("connecting to {from}: {e}"))?;
+            let pulled = hydrate_from_peer(&registry, &mut client)
+                .map_err(|e| anyhow!("hydrating from {from}: {e}"))?;
+            println!(
+                "hydrated {pulled} table(s) from {from} into {} \
+                 ({already} already present, {} spilled total); serve \
+                 them with `repro serve --spill-dir {} ...`",
+                dir.display(), registry.list_spilled().len(), dir.display()
+            );
+            Ok(())
+        }
         "codes" => {
             let kv = parse_cli_overrides(rest)?;
             let mut cfg = RunConfig::default();
@@ -724,6 +768,14 @@ fn print_usage() {
          \x20             in-process server; replays the regression corpus\n\
          \x20             (default rust/tests/corpus), then N generated\n\
          \x20             cases; exits nonzero on any panic/wedge)\n\
+         \x20 hydrate    --from HOST:PORT --spill-dir DIR [--timeout SECS]\n\
+         \x20            (walk a running peer's spilled tables, pull each\n\
+         \x20             missing spill artifact by SHA-256 content digest\n\
+         \x20             over the v2 `fetch_artifact` op, verify it as it\n\
+         \x20             lands, and adopt it into DIR's spill.json; a\n\
+         \x20             follow-up `repro serve --spill-dir DIR` then\n\
+         \x20             serves the hydrated tables bit-identically --\n\
+         \x20             cold-replica provisioning with zero shared disk)\n\
          \x20 codes      [--artifact P --steps N]\n\
          \n\
          global flags:\n\

@@ -37,6 +37,7 @@
 //! | `set_replicas`  | 2   | `table`, `replicas`       | live-resize the table's batcher-shard replica count |
 //! | `set_row_cache` | 2   | `table`, `bytes`          | resize the table's hot-row cache byte cap (0 disables); spilled tables record it for promotion |
 //! | `snapshot`      | 2   | `dir`                     | serialize the registry into a server-side dir, `{"ok":true,"manifest":..}` |
+//! | `fetch_artifact`| 2   | `sha256`                  | the spilled artifact with that content digest, streamed in chunks (re-verified server-side before serving); typed `not_found` for unknown digests |
 //! | `shutdown`      | 1,2 |                           | `{"ok":true}`, then the server exits |
 //!
 //! **Binary lookup framing.** A v2 `lookup_bin` response is
@@ -146,9 +147,9 @@ pub use protocol::{
     read_frame, write_frame, Client, Rows, TableDesc, WireError, VERSION,
 };
 pub use registry::{
-    Residency, ServerConfig, SpilledTable, TableEntry, TableRegistry,
-    UnloadOutcome, MAX_REPLICAS, SNAPSHOT_FORMAT, SNAPSHOT_MANIFEST,
-    SNAPSHOT_VERSION, SPILL_FORMAT, SPILL_MANIFEST,
+    Residency, ServerConfig, SpillSeed, SpilledTable, TableEntry,
+    TableRegistry, UnloadOutcome, MAX_REPLICAS, SNAPSHOT_FORMAT,
+    SNAPSHOT_MANIFEST, SNAPSHOT_VERSION, SPILL_FORMAT, SPILL_MANIFEST,
 };
 pub use row_cache::RowCache;
 pub use stats::{ConnStats, LatencyRing, ReplicaStats, Stats};
@@ -1073,9 +1074,19 @@ fn spilled_stats_pairs(
         ("kind", Json::str(s.kind())),
         ("vocab", Json::num(s.vocab() as f64)),
         ("d", Json::num(s.d() as f64)),
+        ("storage_bits", Json::num(s.storage_bits() as f64)),
         ("spilled_bytes", Json::num(s.spilled_bytes() as f64)),
         ("spill_file", Json::str(s.file())),
+        // serving config a hydrating peer rebuilds the slot with
+        ("replicas", Json::num(s.replicas() as f64)),
+        ("row_cache", Json::num(s.row_cache_bytes() as f64)),
     ];
+    // content digest: what `fetch_artifact` serves this artifact under;
+    // absent for legacy slots that have not been re-hashed yet
+    if let Some((hex, bytes)) = s.digest() {
+        pairs.push(("sha256", Json::str(hex.as_str())));
+        pairs.push(("bytes", Json::num(bytes as f64)));
+    }
     pairs.extend(stats_pairs(s.stats()));
     pairs
 }
@@ -1182,6 +1193,11 @@ fn stats_op(
         // reload-latency ring operators size cold-start SLOs from
         ("spills", Json::num(registry.spill_count() as f64)),
         ("promotes", Json::num(registry.promote_count() as f64)),
+        // failed spill.json write-then-renames: nonzero means the
+        // published manifest drifted from the registry until a later
+        // transition rewrote it (a climbing count = sick spill dir)
+        ("spill_manifest_write_failures",
+         Json::num(registry.spill_manifest_write_failures() as f64)),
     ];
     // connection-plane counters (accept loop + per-connection threads);
     // always present so dashboards need no key-existence probing
@@ -1398,6 +1414,143 @@ fn unload_op(stream: &mut dyn Write, registry: &TableRegistry, j: &Json) -> Resu
     }
 }
 
+/// `fetch_artifact` (v2 only): serve a spilled artifact's raw bytes by
+/// content digest, as a chunked stream (the artifact may exceed the
+/// single-frame cap). The file is read and RE-HASHED before the first
+/// chunk hits the socket -- the wire never carries bytes that do not
+/// hash to the requested digest, even if the disk rotted after the
+/// digest was recorded. The response is binary, so rejections use the
+/// binary rejection channel (`u32::MAX` sentinel + typed JSON frame):
+/// `not_found` for an unknown digest or one whose on-disk bytes no
+/// longer match; `bad_digest` for a malformed digest string.
+fn fetch_artifact_op(
+    stream: &mut dyn Write,
+    registry: &TableRegistry,
+    j: &Json,
+) -> Result<(), WireError> {
+    let Some(sha) = j.get("sha256").and_then(|v| v.as_str()) else {
+        return write_frame(stream, &err_obj(
+            "bad_request", "fetch_artifact needs sha256", vec![]).to_string());
+    };
+    if !crate::util::sha256::is_hex_digest(sha) {
+        return write_frame(stream, &err_obj(
+            "bad_digest",
+            &format!("{sha:?} is not a 64-char lowercase hex sha256"),
+            vec![]).to_string());
+    }
+    let reject = |m: String| {
+        err_obj("not_found", &m, vec![("sha256", Json::str(sha))])
+    };
+    let Some((_slot, path)) = registry.spilled_by_digest(sha) else {
+        return write_bin_reject_frame(stream, 2, &reject(format!(
+            "no spilled artifact with sha256 {sha}")));
+    };
+    // A concurrent promote may consume the file between the lookup and
+    // this read; the re-hash also catches that (read error / mismatch),
+    // so both degrade to the same typed not_found.
+    let payload = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) => {
+            return write_bin_reject_frame(stream, 2, &reject(format!(
+                "artifact for sha256 {sha} is unreadable: {e}")));
+        }
+    };
+    if crate::util::sha256::hex_digest(&payload) != sha {
+        return write_bin_reject_frame(stream, 2, &reject(format!(
+            "artifact on disk no longer hashes to {sha}; refusing to serve")));
+    }
+    write_stream_payload(stream, &payload)
+}
+
+/// Pull every spill artifact a peer advertises that this registry does
+/// not already hold, verify each against its advertised digest **as it
+/// lands**, and adopt the tables as `Spilled` slots -- a restarted or
+/// newly added replica self-provisions over the wire with zero shared
+/// disk (`repro hydrate`). The walk is `tables` (spilled names) then
+/// per-table `stats` (kind, shape, file, digest, serving config);
+/// names already registered locally are skipped, as are peer slots
+/// with no advertised digest (legacy -- there is nothing to verify a
+/// transfer against). Returns the number of tables adopted. Lives at
+/// the server layer, not in [`TableRegistry`]: the registry stays
+/// socket-free.
+pub fn hydrate_from_peer(
+    registry: &TableRegistry,
+    client: &mut Client,
+) -> Result<usize, WireError> {
+    let Some(spill_dir) = registry.config().spill_dir.clone() else {
+        return Err(WireError::Rejected {
+            code: "spill_disabled".into(),
+            message: "hydration needs a configured spill dir".into(),
+        });
+    };
+    let hydrate_failed = |m: String| WireError::Rejected {
+        code: "hydrate_failed".into(),
+        message: m,
+    };
+    let mut adopted = 0usize;
+    for name in client.spilled_tables()? {
+        if registry.residency(&name).is_some() {
+            continue; // already registered locally, either tier
+        }
+        let st = client.stats(Some(&name))?;
+        let get_n = |k: &str| st.get(k).and_then(|v| v.as_usize());
+        let get_s = |k: &str| st.get(k).and_then(|v| v.as_str());
+        let (Some(kind), Some(file), Some(vocab), Some(d),
+             Some(storage_bits)) =
+            (get_s("kind"), get_s("spill_file"), get_n("vocab"),
+             get_n("d"), get_n("storage_bits"))
+        else {
+            eprintln!(
+                "hydrate: peer stats for table {name:?} are missing \
+                 kind/file/shape; skipping");
+            continue;
+        };
+        let (Some(sha), Some(bytes)) = (get_s("sha256"), get_n("bytes"))
+        else {
+            eprintln!(
+                "hydrate: table {name:?} has no advertised digest (legacy \
+                 peer slot); skipping");
+            continue;
+        };
+        let payload = client.fetch_artifact(sha)?;
+        // verify BEFORE anything touches disk: the advertised digest is
+        // the contract, whatever the peer actually streamed
+        if payload.len() != bytes
+            || crate::util::sha256::hex_digest(&payload) != sha
+        {
+            return Err(hydrate_failed(format!(
+                "artifact for table {name:?} does not hash to its \
+                 advertised digest (expected {bytes} bytes sha256 {sha}, \
+                 received {} bytes)", payload.len())));
+        }
+        // land write-then-rename (a `.tmp` suffix, so a crash orphan is
+        // GC'd by the next startup's spill adoption)
+        let tmp = spill_dir.join(format!(
+            "{file}.hydrate-{}.tmp", std::process::id()));
+        let landed = std::fs::write(&tmp, &payload)
+            .and_then(|_| std::fs::rename(&tmp, spill_dir.join(file)));
+        if let Err(e) = landed {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(hydrate_failed(format!(
+                "landing artifact {file:?} for table {name:?}: {e}")));
+        }
+        registry.adopt_spilled(SpillSeed {
+            name: name.clone(),
+            kind: kind.to_string(),
+            file: file.to_string(),
+            vocab,
+            d,
+            storage_bits,
+            replicas: get_n("replicas").unwrap_or(1),
+            row_cache: get_n("row_cache").unwrap_or(0) as u64,
+            sha256: sha.to_string(),
+            bytes: bytes as u64,
+        })?;
+        adopted += 1;
+    }
+    Ok(adopted)
+}
+
 fn handle_conn(
     mut stream: TcpStream,
     registry: Arc<TableRegistry>,
@@ -1565,7 +1718,7 @@ fn dispatch_op(
         Some("stats") => stats_op(stream, registry, j, version)?,
         Some(op @ ("tables" | "load" | "unload" | "demote" | "snapshot"
                    | "set_replicas" | "set_row_cache" | "lookup_fanout"
-                   | "score" | "topk"))
+                   | "score" | "topk" | "fetch_artifact"))
             if version < 2 => {
             write_frame(stream, &err_obj(
                 "needs_v2",
@@ -1589,6 +1742,7 @@ fn dispatch_op(
             set_row_cache_op(stream, registry, j)?
         }
         Some("snapshot") => snapshot_op(stream, registry, j)?,
+        Some("fetch_artifact") => fetch_artifact_op(stream, registry, j)?,
         Some("shutdown") => {
             stop.store(true, Ordering::Relaxed);
             write_frame(stream, &Json::obj(vec![

@@ -59,6 +59,11 @@ pub(crate) const STREAM_CHUNK: usize = 256 << 10;
 pub enum WireError {
     /// Socket-level failure (connect, read, write, peer hangup).
     Io(String),
+    /// A read or write deadline set via [`Client::with_timeout`]
+    /// expired before the peer answered. Distinct from [`Io`](Self::Io)
+    /// so callers (e.g. `repro hydrate`) can tell a wedged-but-alive
+    /// peer from a dead socket.
+    Timeout(String),
     /// A frame that violates the protocol (bad JSON, ragged rows, short
     /// binary header, oversized frame).
     Malformed(String),
@@ -81,6 +86,7 @@ impl std::fmt::Display for WireError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             WireError::Io(m) => write!(f, "io error: {m}"),
+            WireError::Timeout(m) => write!(f, "deadline expired: {m}"),
             WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
             WireError::UnsupportedVersion { max } => {
                 write!(f, "unsupported protocol version (server max v{max})")
@@ -103,7 +109,14 @@ impl std::error::Error for WireError {}
 
 impl From<std::io::Error> for WireError {
     fn from(e: std::io::Error) -> Self {
-        WireError::Io(e.to_string())
+        match e.kind() {
+            // Both kinds mean "the socket deadline fired": Unix reports
+            // WouldBlock on an SO_RCVTIMEO expiry, Windows TimedOut.
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                WireError::Timeout(e.to_string())
+            }
+            _ => WireError::Io(e.to_string()),
+        }
     }
 }
 
@@ -112,6 +125,7 @@ impl WireError {
     pub(crate) fn code(&self) -> &str {
         match self {
             WireError::Io(_) => "io",
+            WireError::Timeout(_) => "timeout",
             WireError::Malformed(_) => "malformed",
             WireError::UnsupportedVersion { .. } => "unsupported_version",
             WireError::NoSuchTable(_) => "no_such_table",
@@ -720,6 +734,24 @@ impl Client {
         Ok(Client { stream })
     }
 
+    /// Connect with a read AND write deadline on every blocking socket
+    /// operation: a wedged peer surfaces as a typed
+    /// [`WireError::Timeout`] after `timeout` instead of hanging the
+    /// caller forever. `repro hydrate` uses this -- pulling artifacts
+    /// from a stalled replica must fail fast, not freeze provisioning.
+    /// The deadline is per-syscall, not per-request: a large streamed
+    /// response that keeps making progress never trips it.
+    pub fn with_timeout(
+        addr: std::net::SocketAddr,
+        timeout: Duration,
+    ) -> Result<Self, WireError> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        Ok(Client { stream })
+    }
+
     /// Bound how long any single read on this client blocks (`None`
     /// blocks forever, the default). With a timeout set, a wedged or
     /// stalled server surfaces as a typed [`WireError::Io`] instead of
@@ -1273,6 +1305,23 @@ impl Client {
             })
     }
 
+    /// Fetch a spill artifact's raw bytes by content digest (64-hex
+    /// SHA-256), answered as a chunked stream. The server re-hashes the
+    /// file before serving, so the returned bytes always match the
+    /// requested digest -- but the caller should verify again after the
+    /// transfer (the wire is not the only thing that can lie). Typed
+    /// rejections: `not_found` (no spilled artifact with that digest,
+    /// or its on-disk bytes no longer hash to it), `bad_digest`
+    /// (malformed digest string).
+    pub fn fetch_artifact(&mut self, sha256: &str) -> Result<Vec<u8>, WireError> {
+        write_frame(&mut self.stream, &Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("fetch_artifact")),
+            ("sha256", Json::str(sha256)),
+        ]).to_string())?;
+        self.read_bin_payload(0, "artifact")
+    }
+
     /// List the served tables (name, kind, shape, storage, default flag).
     pub fn tables(&mut self) -> Result<Vec<TableDesc>, WireError> {
         let j = self.request(Json::obj(vec![
@@ -1286,6 +1335,25 @@ impl Client {
             .iter()
             .map(|t| TableDesc::from_json(t, default.as_deref()))
             .collect()
+    }
+
+    /// Names of the peer's SPILLED tables (the `tables` op's `spilled`
+    /// listing -- resident tables come back from [`Client::tables`]).
+    /// Full per-table detail, including the spill artifact's content
+    /// digest, comes from [`Client::stats`].
+    pub fn spilled_tables(&mut self) -> Result<Vec<String>, WireError> {
+        let j = self.request(Json::obj(vec![
+            ("v", Json::num(VERSION as f64)),
+            ("op", Json::str("tables")),
+        ]))?;
+        Ok(j.get("spilled")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default())
     }
 
     /// Per-table serving stats; `table` narrows to one table's flat

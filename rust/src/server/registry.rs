@@ -376,6 +376,13 @@ pub struct SpilledTable {
     stats: Arc<Stats>,
     state: Mutex<SpillPhase>,
     cv: Condvar,
+    /// Content digest of the published artifact as `(sha256 hex, byte
+    /// length)`. `None` while the artifact is still being written
+    /// (phase `Spilling`) and for slots adopted from a legacy
+    /// (pre-digest) manifest -- those backfill on the first manifest
+    /// rewrite. A slot with a digest is verify-before-parse on every
+    /// reload and addressable by the `fetch_artifact` wire op.
+    digest: Mutex<Option<(String, u64)>>,
 }
 
 impl SpilledTable {
@@ -393,6 +400,7 @@ impl SpilledTable {
             stats: entry.stats.clone(),
             state: Mutex::new(SpillPhase::Spilling),
             cv: Condvar::new(),
+            digest: Mutex::new(None),
         }
     }
 
@@ -421,6 +429,11 @@ impl SpilledTable {
         self.d
     }
 
+    /// Inference-time storage in bits, recorded at demote time.
+    pub fn storage_bits(&self) -> usize {
+        self.storage_bits
+    }
+
     /// Bytes the table will occupy once promoted back (the amount the
     /// demotion freed from the budget).
     pub fn spilled_bytes(&self) -> u64 {
@@ -442,6 +455,17 @@ impl SpilledTable {
     /// promoted back (0 = disabled).
     pub fn row_cache_bytes(&self) -> u64 {
         self.row_cache.load(Ordering::Relaxed)
+    }
+
+    /// Content digest of the published artifact (`sha256` hex, byte
+    /// length), when known. `None` means the slot predates digests
+    /// (legacy manifest) or the artifact is still being written.
+    pub fn digest(&self) -> Option<(String, u64)> {
+        self.digest.lock().unwrap().clone()
+    }
+
+    fn set_digest(&self, sha256: String, bytes: u64) {
+        *self.digest.lock().unwrap() = Some((sha256, bytes));
     }
 
     fn set_phase(&self, phase: SpillPhase) {
@@ -880,6 +904,33 @@ impl TableEntry {
     }
 }
 
+/// Everything [`TableRegistry::adopt_spilled`] needs to register one
+/// hydrated table: the serving metadata a peer advertises through its
+/// `tables` listing and per-table `stats`, plus the content digest the
+/// fetched artifact must hash to.
+pub struct SpillSeed {
+    /// Registry name to serve the table under.
+    pub name: String,
+    /// Backend scheme tag ("dpq", "dense", ...).
+    pub kind: String,
+    /// Artifact file name inside the local spill directory.
+    pub file: String,
+    /// Number of rows.
+    pub vocab: usize,
+    /// Embedding width.
+    pub d: usize,
+    /// Inference-time storage in bits.
+    pub storage_bits: usize,
+    /// Batcher-shard replica count to rebuild at promotion.
+    pub replicas: usize,
+    /// Hot-row cache byte cap to rebuild at promotion (0 = disabled).
+    pub row_cache: u64,
+    /// Expected SHA-256 of the artifact file, 64 lowercase hex chars.
+    pub sha256: String,
+    /// Expected artifact length in bytes.
+    pub bytes: u64,
+}
+
 /// Named tables behind one server: lookup routing, default-table
 /// resolution for v1 frames, hot admin ops, LRU eviction under a memory
 /// budget, and snapshot/restore.
@@ -916,6 +967,16 @@ pub struct TableRegistry {
     /// Serializes spill-manifest rewrites (never held together with the
     /// tables write lock).
     spill_mu: Mutex<()>,
+    /// Spill-manifest rewrites whose write-then-rename FAILED, leaving
+    /// the published `spill.json` drifted from the registry until the
+    /// next transition rewrites it (every rewrite serializes the whole
+    /// live map, so one success heals all prior failures). Surfaced in
+    /// aggregate `stats` -- a climbing count means the spill dir itself
+    /// is sick.
+    spill_manifest_write_failures: AtomicU64,
+    /// One-shot latch for the legacy (digest-less) manifest warning, so
+    /// adopting a pre-digest spill tier logs once, not per table.
+    legacy_digest_warned: AtomicBool,
     fanout_requests: AtomicU64,
     stop: Arc<AtomicBool>,
     /// Connection-plane counters (open/total/busy/timeout/panic),
@@ -952,6 +1013,8 @@ impl TableRegistry {
             promotes: AtomicU64::new(0),
             promote_ring: LatencyRing::default(),
             spill_mu: Mutex::new(()),
+            spill_manifest_write_failures: AtomicU64::new(0),
+            legacy_digest_warned: AtomicBool::new(false),
             fanout_requests: AtomicU64::new(0),
             stop: Arc::new(AtomicBool::new(false)),
             conn: ConnStats::default(),
@@ -1001,6 +1064,19 @@ impl TableRegistry {
         let Some(dir) = self.cfg.spill_dir.clone() else {
             return Ok(0);
         };
+        // GC stray temp files first: artifacts and manifest rewrites
+        // both publish write-then-rename under process-unique `.tmp`
+        // names, so any `.tmp` here was left by a process that died (or
+        // hit a failed rename) mid-write -- never by this one, which
+        // has not written yet. Without this sweep, crash orphans
+        // accumulate forever.
+        if let Ok(rd) = std::fs::read_dir(&dir) {
+            for entry in rd.flatten() {
+                if entry.file_name().to_string_lossy().ends_with(".tmp") {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
         let manifest = dir.join(SPILL_MANIFEST);
         if !manifest.is_file() {
             return Ok(0);
@@ -1052,13 +1128,72 @@ impl TableRegistry {
             // hot-row cache cap recorded at demote time; absent in
             // pre-cache manifests, which adopt as cache-disabled
             let row_cache = get_n("row_cache").unwrap_or(0) as u64;
-            let phase = if dir.join(file).is_file() {
-                SpillPhase::Ready
-            } else {
+            // Content digest recorded at publish time. ABSENT = legacy
+            // manifest (pre-digest build): adopt unverified, warn once;
+            // the digest is backfilled on the first manifest rewrite.
+            // PRESENT but malformed = corrupt manifest, typed like any
+            // other bad field.
+            let digest = match t.get("sha256") {
+                None => None,
+                Some(v) => {
+                    let (Some(hex), Some(bytes)) = (v.as_str(), get_n("bytes"))
+                    else {
+                        return Err(fail(format!(
+                            "table {name:?} has a malformed sha256/bytes \
+                             pair")));
+                    };
+                    if !crate::util::sha256::is_hex_digest(hex) {
+                        return Err(fail(format!(
+                            "table {name:?} sha256 {hex:?} is not a 64-char \
+                             lowercase hex digest")));
+                    }
+                    Some((hex.to_string(), bytes as u64))
+                }
+            };
+            if digest.is_none()
+                && !self.legacy_digest_warned.swap(true, Ordering::Relaxed)
+            {
+                eprintln!(
+                    "spill recovery: manifest {manifest:?} predates content \
+                     digests; adopting unverified (digests are recorded on \
+                     the first rewrite)");
+            }
+            let path = dir.join(file);
+            // Verify the digest BEFORE the slot can serve: a mismatch
+            // degrades to Lost (like a missing artifact -- the rest of
+            // the registry keeps serving, and a later lookup answers
+            // the usual typed reload_failed) instead of failing the
+            // whole startup for one rotted file.
+            let phase = if !path.is_file() {
                 eprintln!(
                     "spill recovery: artifact {file:?} for table {name:?} \
                      is missing; adopting as lost");
                 SpillPhase::Lost
+            } else if let Some((want_hex, want_bytes)) = &digest {
+                match backend::artifact_io::file_sha256(&path) {
+                    Ok((got_hex, got_bytes))
+                        if got_hex == *want_hex && got_bytes == *want_bytes =>
+                    {
+                        SpillPhase::Ready
+                    }
+                    Ok((got_hex, got_bytes)) => {
+                        eprintln!(
+                            "spill recovery: artifact {file:?} for table \
+                             {name:?} does not match its recorded digest \
+                             (manifest: {want_bytes} bytes sha256 \
+                             {want_hex}; disk: {got_bytes} bytes \
+                             {got_hex}); adopting as lost");
+                        SpillPhase::Lost
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "spill recovery: artifact {file:?} for table \
+                             {name:?} is unreadable ({e}); adopting as lost");
+                        SpillPhase::Lost
+                    }
+                }
+            } else {
+                SpillPhase::Ready
             };
             slots.push(Arc::new(SpilledTable {
                 name: name.to_string(),
@@ -1072,6 +1207,7 @@ impl TableRegistry {
                 stats: Arc::new(Stats::default()),
                 state: Mutex::new(phase),
                 cv: Condvar::new(),
+                digest: Mutex::new(digest),
             }));
         }
         // one atomic registration pass (lock order: tables, then
@@ -1783,6 +1919,115 @@ impl TableRegistry {
         }
     }
 
+    /// Resolve a content digest to the spilled slot carrying it, as
+    /// `(slot, artifact path)`. Only the spill tier is addressable by
+    /// digest -- a resident table has no published artifact to serve.
+    /// This is the registry half of the `fetch_artifact` wire op.
+    pub fn spilled_by_digest(
+        &self,
+        sha256: &str,
+    ) -> Option<(Arc<SpilledTable>, PathBuf)> {
+        let dir = self.cfg.spill_dir.clone()?;
+        self.list_spilled().into_iter().find_map(|s| match s.digest() {
+            Some((hex, _)) if hex == sha256 => {
+                let path = dir.join(&s.file);
+                Some((s, path))
+            }
+            _ => None,
+        })
+    }
+
+    /// Register a table as a `Spilled` slot over an artifact that
+    /// already sits in the spill directory -- the adoption half of peer
+    /// hydration: `repro hydrate` writes the fetched bytes into the
+    /// tier (write-then-rename) and then calls this. The on-disk file
+    /// is re-hashed against the seed's digest before anything is
+    /// registered, so a torn or tampered landing never becomes a
+    /// serveable slot. Same shape floor and provisional-default
+    /// election as startup spill adoption; the spill manifest is synced
+    /// afterwards, so a restart re-adopts the table without the peer.
+    /// Typed rejections: `table_exists`, `spill_disabled`,
+    /// `hydrate_failed` (bad seed or digest mismatch).
+    pub fn adopt_spilled(&self, seed: SpillSeed) -> Result<(), WireError> {
+        let fail = |m: String| WireError::Rejected {
+            code: "hydrate_failed".into(),
+            message: m,
+        };
+        let Some(dir) = self.cfg.spill_dir.clone() else {
+            return Err(WireError::Rejected {
+                code: "spill_disabled".into(),
+                message: format!(
+                    "cannot adopt table {:?}: no spill dir is configured",
+                    seed.name),
+            });
+        };
+        // same shape floor `insert` and spill adoption enforce
+        if seed.vocab == 0 || seed.d == 0 || seed.name.is_empty()
+            || seed.name.contains('=')
+        {
+            return Err(fail(format!(
+                "table {:?} has invalid shape [{}, {}]",
+                seed.name, seed.vocab, seed.d)));
+        }
+        if !crate::util::sha256::is_hex_digest(&seed.sha256) {
+            return Err(fail(format!(
+                "table {:?} sha256 {:?} is not a 64-char lowercase hex \
+                 digest", seed.name, seed.sha256)));
+        }
+        let path = dir.join(&seed.file);
+        match backend::artifact_io::file_sha256(&path) {
+            Ok((hex, bytes)) if hex == seed.sha256 && bytes == seed.bytes => {}
+            Ok((hex, bytes)) => {
+                return Err(fail(format!(
+                    "artifact {:?} for table {:?} does not match its \
+                     advertised digest (expected {} bytes sha256 {}; found \
+                     {bytes} bytes {hex})",
+                    seed.file, seed.name, seed.bytes, seed.sha256)));
+            }
+            Err(e) => {
+                return Err(fail(format!(
+                    "artifact {:?} for table {:?} is unreadable: {e}",
+                    seed.file, seed.name)));
+            }
+        }
+        let slot = Arc::new(SpilledTable {
+            name: seed.name.clone(),
+            kind: seed.kind,
+            file: seed.file,
+            vocab: seed.vocab,
+            d: seed.d,
+            storage_bits: seed.storage_bits,
+            replicas: AtomicUsize::new(seed.replicas.clamp(1, MAX_REPLICAS)),
+            row_cache: AtomicU64::new(seed.row_cache),
+            stats: Arc::new(Stats::default()),
+            state: Mutex::new(SpillPhase::Ready),
+            cv: Condvar::new(),
+            digest: Mutex::new(Some((seed.sha256, seed.bytes))),
+        });
+        {
+            // lock order: tables, then default -- same as insert/unload
+            let mut map = self.tables.write().unwrap();
+            let mut def = self.default.lock().unwrap();
+            if map.contains_key(&seed.name) {
+                return Err(WireError::TableExists(seed.name));
+            }
+            if def.is_none() {
+                *def = Some(seed.name.clone());
+                self.default_provisional.store(true, Ordering::Relaxed);
+            }
+            map.insert(seed.name, Slot::Spilled(slot));
+        }
+        self.sync_spill_manifest();
+        Ok(())
+    }
+
+    /// Spill-manifest rewrites whose write-then-rename failed (the
+    /// published `spill.json` was left drifted until the next
+    /// transition rewrote it). Surfaced as a registry-level stat.
+    pub fn spill_manifest_write_failures(&self) -> u64 {
+        self.spill_manifest_write_failures.load(Ordering::Relaxed)
+    }
+
     /// Current residency of `name`, `None` when no such table is
     /// registered. Reports `Lost` from the slot's sticky phase without
     /// touching the filesystem; [`probe_spilled`](Self::probe_spilled)
@@ -2074,8 +2319,18 @@ impl TableRegistry {
             .save_artifact(&tmp)
             .map_err(|e| format!("serialize: {e}"))
             .and_then(|_| {
+                // hash BEFORE publish: the digest lands on the slot the
+                // moment the artifact is visible, so a published
+                // artifact is never in an unverifiable window (and a
+                // hash failure rolls back like any other write failure)
+                backend::artifact_io::file_sha256(&tmp)
+                    .map_err(|e| format!("hash: {e}"))
+            })
+            .and_then(|(hex, bytes)| {
                 std::fs::rename(&tmp, &publish)
-                    .map_err(|e| format!("publish: {e}"))
+                    .map_err(|e| format!("publish: {e}"))?;
+                slot.set_digest(hex, bytes);
+                Ok(())
             });
         if let Err(msg) = written {
             let _ = std::fs::remove_file(&tmp);
@@ -2211,6 +2466,28 @@ impl TableRegistry {
             code: "reload_failed".into(),
             message,
         };
+        // Verify the artifact's content digest BEFORE parsing: a
+        // flipped bit in codebook bytes can survive every shape check
+        // and silently serve wrong embeddings. Legacy slots (adopted
+        // from a digest-less manifest) have nothing to verify against;
+        // they gain a digest on their next demote. An unreadable file
+        // falls through to the load below, whose error path already
+        // distinguishes a concurrent unload from genuine loss.
+        if let Some((want_hex, want_bytes)) = s.digest() {
+            if let Ok((got_hex, got_bytes)) =
+                backend::artifact_io::file_sha256(&path)
+            {
+                if got_hex != want_hex || got_bytes != want_bytes {
+                    s.set_phase(SpillPhase::Ready);
+                    return Err(reload_failed(format!(
+                        "spill artifact {:?} for table {:?} does not match \
+                         its recorded digest (expected {want_bytes} bytes \
+                         sha256 {want_hex}; found {got_bytes} bytes \
+                         {got_hex}); refusing to parse",
+                        s.file, s.name)));
+                }
+            }
+        }
         let backend = match backend::load_backend(&s.kind, &path) {
             Ok(b) => b,
             Err(e) => {
@@ -2308,7 +2585,7 @@ impl TableRegistry {
             .list_spilled()
             .iter()
             .map(|s| {
-                Json::obj(vec![
+                let mut pairs = vec![
                     ("name", Json::str(s.name.as_str())),
                     ("kind", Json::str(s.kind.as_str())),
                     ("file", Json::str(s.file.as_str())),
@@ -2317,7 +2594,29 @@ impl TableRegistry {
                     ("storage_bits", Json::num(s.storage_bits as f64)),
                     ("replicas", Json::num(s.replicas() as f64)),
                     ("row_cache", Json::num(s.row_cache_bytes() as f64)),
-                ])
+                ];
+                // Content digest, recorded at publish time. A legacy
+                // slot (adopted from a pre-digest manifest) is
+                // backfilled HERE by hashing its on-disk artifact --
+                // "legacy verifies on first rewrite". A slot whose
+                // artifact is not hashable right now (mid-Spilling,
+                // lost) stays digest-less this round and retries on
+                // the next rewrite.
+                let digest = s.digest().or_else(|| {
+                    backend::artifact_io::file_sha256(&dir.join(&s.file))
+                        .ok()
+                        .map(|(hex, bytes)| {
+                            s.set_digest(hex.clone(), bytes);
+                            (hex, bytes)
+                        })
+                });
+                if let Some((hex, bytes)) = &digest {
+                    pairs.push(("sha256", Json::str(hex.as_str())));
+                    pairs.push(("bytes", Json::num(*bytes as f64)));
+                }
+                // provenance: which write path produced the artifact
+                pairs.push(("op", Json::str("spill")));
+                Json::obj(pairs)
             })
             .collect();
         let j = Json::obj(vec![
@@ -2326,10 +2625,20 @@ impl TableRegistry {
             ("tables", Json::arr(tables)),
         ]);
         let tmp = dir.join(snap_tmp_name(SPILL_MANIFEST));
-        if std::fs::write(&tmp, j.to_string()).is_ok() {
-            let _ = std::fs::rename(&tmp, dir.join(SPILL_MANIFEST));
-        } else {
+        // Write-then-rename, counting a failure of EITHER step: until
+        // some later transition rewrites it, the published spill.json
+        // is drifted from the registry. No explicit retry machinery is
+        // needed -- every spill/promote/unload transition rewrites the
+        // whole manifest from the live map, so the next one heals the
+        // drift; the counter is what makes the episode observable.
+        // (Ignoring the rename result here used to strand the .tmp
+        // file forever AND hide the drift entirely.)
+        let ok = std::fs::write(&tmp, j.to_string()).is_ok()
+            && std::fs::rename(&tmp, dir.join(SPILL_MANIFEST)).is_ok();
+        if !ok {
             let _ = std::fs::remove_file(&tmp);
+            self.spill_manifest_write_failures
+                .fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -2369,7 +2678,7 @@ impl TableRegistry {
         let mut tables = Vec::new();
         let mut fresh: Vec<String> = Vec::with_capacity(slots.len());
         let mut included: Vec<&str> = Vec::with_capacity(slots.len());
-        for (i, (name, slot)) in slots.iter().enumerate() {
+        for (name, slot) in slots.iter() {
             let (kind, vocab, d, storage_bits, replicas, row_cache) =
                 match slot {
                     Slot::Resident(e) => (
@@ -2385,14 +2694,15 @@ impl TableRegistry {
                          s.replicas(), s.row_cache_bytes())
                     }
                 };
-            let file = format!("t{i:03}_{}.{kind}", sanitize_file_stem(name));
             // Artifacts get the same write-then-rename discipline as the
             // manifest: re-snapshotting into the SAME directory must
             // never half-overwrite an artifact the surviving (old)
             // manifest still points at -- a same-shape partial rewrite
             // would pass every size/shape check on restore and silently
-            // serve wrong bytes.
-            let tmp = dir.join(snap_tmp_name(&file));
+            // serve wrong bytes. The PUBLISHED name is content-addressed
+            // (`sha256-<hex>.art`, computed after the write below), so
+            // the temp name is derived from the table name instead.
+            let tmp = dir.join(snap_tmp_name(&sanitize_file_stem(name)));
             // Ok(true) = artifact written; Ok(false) = the table was
             // deliberately unloaded mid-snapshot (skip it -- same
             // contract as a resident table unloaded mid-run: "may or
@@ -2416,18 +2726,58 @@ impl TableRegistry {
                     // the registry still deserves a backup) -- only a
                     // real serialization failure fails the snapshot.
                     s.wait_settled();
-                    let src = self
+                    // Marker prefix distinguishing a content-verification
+                    // failure from an I/O failure in the guarded copy:
+                    // verification failures mean the SOURCE data is
+                    // already damaged, so (like the Lost path) they skip
+                    // the table loudly instead of failing the backup --
+                    // or recording a torn copy under a "good" manifest.
+                    const VERIFY_ERR: &str = "verify: ";
+                    // Copy with a length stat BEFORE (cheap: catches a
+                    // source truncated out-of-band between the phase
+                    // wait and the copy) and a digest check AFTER (the
+                    // copy itself raced nothing else that can mutate
+                    // the destination; this pins the copied bytes to
+                    // the manifest-recorded digest). Legacy slots with
+                    // no digest copy unguarded, as before.
+                    let guarded_copy = |src: &Path,
+                                        want: &Option<(String, u64)>|
+                     -> Result<(), String> {
+                        if let Some((_, want_bytes)) = want {
+                            let got = std::fs::metadata(src)
+                                .map_err(|e| e.to_string())?
+                                .len();
+                            if got != *want_bytes {
+                                return Err(format!(
+                                    "{VERIFY_ERR}spill artifact {src:?} is \
+                                     {got} bytes but its manifest records \
+                                     {want_bytes} (truncated out-of-band?)"));
+                            }
+                        }
+                        std::fs::copy(src, &tmp).map_err(|e| e.to_string())?;
+                        if let Some((want_hex, want_bytes)) = want {
+                            let (got_hex, got_bytes) =
+                                backend::artifact_io::file_sha256(&tmp)
+                                    .map_err(|e| e.to_string())?;
+                            if got_hex != *want_hex || got_bytes != *want_bytes
+                            {
+                                return Err(format!(
+                                    "{VERIFY_ERR}copy of spill artifact \
+                                     {src:?} does not match its recorded \
+                                     digest (expected {want_bytes} bytes \
+                                     sha256 {want_hex}; copied {got_bytes} \
+                                     bytes {got_hex})"));
+                            }
+                        }
+                        Ok(())
+                    };
+                    let copied = self
                         .cfg
                         .spill_dir
                         .as_ref()
-                        .map(|sd| sd.join(&s.file));
-                    let copied = src
-                        .as_ref()
                         .ok_or_else(|| "no spill dir".to_string())
-                        .and_then(|src| {
-                            std::fs::copy(src, &tmp)
-                                .map(|_| ())
-                                .map_err(|e| e.to_string())
+                        .and_then(|sd| {
+                            guarded_copy(&sd.join(&s.file), &s.digest())
                         });
                     copied.map(|_| true).or_else(|copy_err| {
                         match self.slot_of(name) {
@@ -2448,24 +2798,30 @@ impl TableRegistry {
                                     .as_ref()
                                     .ok_or_else(|| "no spill dir".to_string())
                                     .and_then(|sd| {
-                                        std::fs::copy(sd.join(&cur.file), &tmp)
-                                            .map(|_| true)
-                                            .map_err(|e| e.to_string())
+                                        guarded_copy(
+                                            &sd.join(&cur.file),
+                                            &cur.digest())
+                                        .map(|_| true)
                                     });
                                 match retried {
                                     Ok(ok) => Ok(ok),
-                                    // LOST (deleted out-of-band): that
-                                    // table's data is already gone --
-                                    // failing the WHOLE backup would
-                                    // compound the damage. Skip it,
-                                    // loudly, and snapshot the rest.
-                                    Err(_) if self.probe_spilled(&cur)
-                                        == Residency::Lost =>
+                                    // LOST (deleted out-of-band) or
+                                    // VERIFIABLY DAMAGED (truncated /
+                                    // bit-rotted under its recorded
+                                    // digest): that table's on-disk
+                                    // data is already gone -- failing
+                                    // the WHOLE backup would compound
+                                    // the damage. Skip it, loudly, and
+                                    // snapshot the rest.
+                                    Err(e) if self.probe_spilled(&cur)
+                                        == Residency::Lost
+                                        || e.contains(VERIFY_ERR) =>
                                     {
                                         eprintln!(
                                             "snapshot: skipping table \
                                              {name:?}: spill artifact is \
-                                             lost ({copy_err})");
+                                             unusable ({copy_err}; \
+                                             retry: {e})");
                                         Ok(false)
                                     }
                                     Err(e) => Err(format!(
@@ -2491,9 +2847,29 @@ impl TableRegistry {
                 }
                 Ok(true) => {}
             }
-            std::fs::rename(&tmp, dir.join(&file))
-                .map_err(|err| fail(format!("publish table {name:?}"))(&err))?;
-            fresh.push(file.clone());
+            // Content-addressed publish: hash what was just written and
+            // name the artifact by its digest. Identical tables (same
+            // serialized bytes) collapse onto ONE file -- a later table
+            // whose digest is already in `fresh` drops its tmp instead
+            // of renaming, and its manifest entry points at the shared
+            // file. Restore re-links by name, so dedupe is invisible
+            // there.
+            let (hex, bytes) = match backend::artifact_io::file_sha256(&tmp) {
+                Ok(hb) => hb,
+                Err(e) => {
+                    let _ = std::fs::remove_file(&tmp);
+                    return Err(fail(format!("hash table {name:?}"))(&e));
+                }
+            };
+            let file = format!("sha256-{hex}.art");
+            if fresh.iter().any(|f| f == &file) {
+                let _ = std::fs::remove_file(&tmp); // deduped: file exists
+            } else {
+                std::fs::rename(&tmp, dir.join(&file)).map_err(|err| {
+                    fail(format!("publish table {name:?}"))(&err)
+                })?;
+                fresh.push(file.clone());
+            }
             included.push(name.as_str());
             tables.push(Json::obj(vec![
                 ("name", Json::str(name.as_str())),
@@ -2504,6 +2880,9 @@ impl TableRegistry {
                 ("storage_bits", Json::num(storage_bits as f64)),
                 ("replicas", Json::num(replicas as f64)),
                 ("row_cache", Json::num(row_cache as f64)),
+                ("sha256", Json::str(hex.as_str())),
+                ("bytes", Json::num(bytes as f64)),
+                ("op", Json::str("snapshot")),
             ]));
         }
         let mut pairs = vec![
@@ -2575,17 +2954,25 @@ impl TableRegistry {
                     continue;
                 }
                 let b = name.as_bytes();
-                // `t` + 1..n digits + `_` (format! pads to 3 but grows
-                // past 999 tables, so match any digit run)
+                // legacy (pre-digest) artifact name: `t` + 1..n digits
+                // + `_` (format! padded to 3 but grew past 999 tables,
+                // so match any digit run) -- still collected so old
+                // snapshots into this directory don't pin stale files
                 let digits = b
                     .get(1..)
                     .map(|rest| {
                         rest.iter().take_while(|c| c.is_ascii_digit()).count()
                     })
                     .unwrap_or(0);
-                let stale_artifact = b.first() == Some(&b't')
+                let legacy = b.first() == Some(&b't')
                     && digits >= 1
-                    && b.get(1 + digits) == Some(&b'_')
+                    && b.get(1 + digits) == Some(&b'_');
+                // content-addressed artifact name: `sha256-<64 hex>.art`
+                let content_addressed = name
+                    .strip_prefix("sha256-")
+                    .and_then(|r| r.strip_suffix(".art"))
+                    .is_some_and(crate::util::sha256::is_hex_digest);
+                let stale_artifact = (legacy || content_addressed)
                     && !fresh.iter().any(|f| f == name);
                 if stale_artifact {
                     let _ = std::fs::remove_file(entry.path());
@@ -2755,6 +3142,9 @@ impl TableRegistry {
             .and_then(|v| v.as_arr())
             .ok_or_else(|| fail("manifest without tables".into()))?;
         let want_default = j.get("default").and_then(|v| v.as_str());
+        // one-shot latch: a legacy (pre-digest) manifest restores
+        // unverified, warned once, not once per table
+        let mut legacy_warned = false;
         for t in tables {
             let name = t
                 .get("name")
@@ -2768,6 +3158,45 @@ impl TableRegistry {
                 .get("file")
                 .and_then(|v| v.as_str())
                 .ok_or_else(|| fail(format!("table {name:?} without file")))?;
+            // Verify the artifact's content digest BEFORE parsing:
+            // bit-rot in codebook bytes can pass every shape check and
+            // silently restore wrong embeddings. Manifests without
+            // digests (pre-digest builds) load unverified, once loudly.
+            match t.get("sha256").and_then(|v| v.as_str()) {
+                Some(hex) => {
+                    if !crate::util::sha256::is_hex_digest(hex) {
+                        return Err(fail(format!(
+                            "table {name:?} sha256 {hex:?} is not a 64-char \
+                             lowercase hex digest")));
+                    }
+                    let (got_hex, got_bytes) =
+                        backend::artifact_io::file_sha256(&base.join(file))
+                            .map_err(|e| fail(format!(
+                                "hash table {name:?} artifact {file:?}: \
+                                 {e}")))?;
+                    let want_bytes = t.get("bytes").and_then(|v| v.as_usize());
+                    if got_hex != hex
+                        || want_bytes.is_some_and(|b| b as u64 != got_bytes)
+                    {
+                        return Err(fail(format!(
+                            "table {name:?}: artifact {file:?} does not \
+                             match its manifest digest (expected {} bytes \
+                             sha256 {hex}; found {got_bytes} bytes \
+                             {got_hex}); refusing to parse",
+                            want_bytes.map_or_else(
+                                || "?".to_string(), |b| b.to_string()))));
+                    }
+                }
+                None => {
+                    if !legacy_warned {
+                        legacy_warned = true;
+                        eprintln!(
+                            "restore: manifest {manifest:?} predates \
+                             content digests; artifacts load unverified \
+                             (re-snapshot to record digests)");
+                    }
+                }
+            }
             let backend = backend::load_backend(kind, &base.join(file))
                 .map_err(|e| fail(format!("load table {name:?}: {e}")))?;
             for (key, got) in [("vocab", backend.vocab()), ("d", backend.d())] {

@@ -1,14 +1,16 @@
 //! Small shared utilities: a deterministic PRNG (no external `rand` --
 //! this repository builds fully offline), an in-repo property-testing
 //! helper used across the test suite, a micro-benchmark harness with
-//! machine-readable output ([`bench`]), and the scoped worker pool that
+//! machine-readable output ([`bench`]), the scoped worker pool that
 //! powers every parallel hot path ([`pool`], thread count from
-//! `DPQ_THREADS` / `repro --threads`).
+//! `DPQ_THREADS` / `repro --threads`), and a dependency-free SHA-256
+//! ([`sha256`]) -- the content-addressing digest of the artifact store.
 
 pub mod bench;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod sha256;
 
 pub use rng::Rng;
 

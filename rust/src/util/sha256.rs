@@ -1,0 +1,259 @@
+//! Dependency-free SHA-256 (FIPS 180-4), vendored-style: the artifact
+//! store's content-addressing digest. Nothing crates.io is pulled in --
+//! same discipline as the epoll shim. Not a general crypto library:
+//! one-shot and streaming hashing of byte slices is all the artifact
+//! paths need, and all this exposes.
+//!
+//! Digests are rendered as 64 lowercase hex characters -- the exact
+//! string recorded in `manifest.json` / `spill.json` and requested by
+//! the `fetch_artifact` wire op, so the wire form and the manifest form
+//! can never disagree on case or length.
+
+/// Round constants: the first 32 bits of the fractional parts of the
+/// cube roots of the first 64 primes (FIPS 180-4 §4.2.2).
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5,
+    0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3,
+    0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc,
+    0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+    0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13,
+    0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3,
+    0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5,
+    0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208,
+    0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// Initial hash state: the first 32 bits of the fractional parts of the
+/// square roots of the first 8 primes (FIPS 180-4 §5.3.3).
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a,
+    0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
+];
+
+/// Streaming SHA-256 state: feed bytes with [`update`](Self::update),
+/// finish with [`finalize_hex`](Self::finalize_hex). Suitable for
+/// hashing artifacts in bounded windows without holding the file in
+/// memory.
+pub struct Sha256 {
+    state: [u32; 8],
+    /// Partial block carried between `update` calls.
+    buf: [u8; 64],
+    buf_len: usize,
+    /// Total message length in bytes (the trailer encodes it in bits).
+    total: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    /// Fresh hasher (FIPS initial state).
+    pub fn new() -> Sha256 {
+        Sha256 { state: H0, buf: [0u8; 64], buf_len: 0, total: 0 }
+    }
+
+    /// Absorb `data`; call as many times as needed, in any chunking --
+    /// the digest depends only on the byte sequence.
+    pub fn update(&mut self, data: &[u8]) {
+        self.total = self.total.wrapping_add(data.len() as u64);
+        let mut rest = data;
+        // top up a partial block first
+        if self.buf_len > 0 {
+            let take = rest.len().min(64 - self.buf_len);
+            self.buf[self.buf_len..self.buf_len + take]
+                .copy_from_slice(&rest[..take]);
+            self.buf_len += take;
+            rest = &rest[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        // whole blocks straight from the input
+        while rest.len() >= 64 {
+            let (block, tail) = rest.split_at(64);
+            let mut b = [0u8; 64];
+            b.copy_from_slice(block);
+            self.compress(&b);
+            rest = tail;
+        }
+        // stash the tail
+        if !rest.is_empty() {
+            self.buf[..rest.len()].copy_from_slice(rest);
+            self.buf_len = rest.len();
+        }
+    }
+
+    /// Finish the message (padding + length trailer) and return the
+    /// digest as 64 lowercase hex characters. Consumes the hasher --
+    /// the padded state cannot absorb further bytes.
+    pub fn finalize_hex(mut self) -> String {
+        let bit_len = self.total.wrapping_mul(8);
+        // 0x80 terminator, zero padding to 56 mod 64, then the 64-bit
+        // big-endian bit length
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        // feed the trailer directly: `update` would re-count it
+        self.buf[56..64].copy_from_slice(&bit_len.to_be_bytes());
+        let block = self.buf;
+        self.compress(&block);
+        let mut hex = String::with_capacity(64);
+        for w in self.state {
+            for b in w.to_be_bytes() {
+                hex.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+                hex.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+            }
+        }
+        hex
+    }
+
+    /// One FIPS 180-4 §6.2.2 compression round over a 64-byte block.
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for (i, chunk) in block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7)
+                ^ w[i - 15].rotate_right(18)
+                ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17)
+                ^ w[i - 2].rotate_right(19)
+                ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] =
+            self.state;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        self.state[0] = self.state[0].wrapping_add(a);
+        self.state[1] = self.state[1].wrapping_add(b);
+        self.state[2] = self.state[2].wrapping_add(c);
+        self.state[3] = self.state[3].wrapping_add(d);
+        self.state[4] = self.state[4].wrapping_add(e);
+        self.state[5] = self.state[5].wrapping_add(f);
+        self.state[6] = self.state[6].wrapping_add(g);
+        self.state[7] = self.state[7].wrapping_add(h);
+    }
+}
+
+/// One-shot digest of `data` as 64 lowercase hex characters.
+pub fn hex_digest(data: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finalize_hex()
+}
+
+/// True iff `s` is a well-formed digest string: exactly 64 lowercase
+/// hex characters (the only form this crate ever writes or serves).
+/// Uppercase is rejected -- accepting both cases would let one artifact
+/// answer to two different names and break dedupe-by-name.
+pub fn is_hex_digest(s: &str) -> bool {
+    s.len() == 64
+        && s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// FIPS 180-4 / NIST CAVP vectors, plus the classic million-'a'
+    /// long-message vector.
+    #[test]
+    fn fips_vectors() {
+        assert_eq!(
+            hex_digest(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hex_digest(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            hex_digest(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        let million_a = vec![b'a'; 1_000_000];
+        assert_eq!(
+            hex_digest(&million_a),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    /// The digest must depend only on the byte sequence, not on how the
+    /// caller chunks its `update` calls -- the artifact paths hash in
+    /// 64 KiB windows while tests hash one-shot.
+    #[test]
+    fn chunking_is_invisible() {
+        let msg: Vec<u8> = (0..1000u32).flat_map(|i| i.to_le_bytes()).collect();
+        let oneshot = hex_digest(&msg);
+        for chunk in [1usize, 3, 63, 64, 65, 100, 4096] {
+            let mut h = Sha256::new();
+            for c in msg.chunks(chunk) {
+                h.update(c);
+            }
+            assert_eq!(h.finalize_hex(), oneshot, "chunk size {chunk}");
+        }
+    }
+
+    /// Boundary lengths around the 55/56-byte padding split and the
+    /// 64-byte block edge (the classic off-by-one sites), pinned
+    /// against a second independent property: two different messages
+    /// never collide in this set.
+    #[test]
+    fn padding_boundaries_distinct() {
+        let mut seen = std::collections::BTreeSet::new();
+        for len in [0usize, 1, 54, 55, 56, 57, 63, 64, 65, 127, 128, 129] {
+            let msg = vec![0xabu8; len];
+            assert!(seen.insert(hex_digest(&msg)), "collision at len {len}");
+        }
+        // 55 bytes pads within one block; 56 forces a second block --
+        // both must still be plain 64-hex strings
+        assert!(is_hex_digest(&hex_digest(&[0u8; 55])));
+        assert!(is_hex_digest(&hex_digest(&[0u8; 56])));
+    }
+
+    #[test]
+    fn digest_string_validation() {
+        let d = hex_digest(b"x");
+        assert!(is_hex_digest(&d));
+        assert!(!is_hex_digest(&d[..63]));            // truncated
+        assert!(!is_hex_digest(&format!("{d}0")));    // too long
+        assert!(!is_hex_digest(&d.to_uppercase()));   // case-sensitive
+        assert!(!is_hex_digest(&format!("g{}", &d[1..]))); // non-hex
+    }
+}

@@ -1,0 +1,290 @@
+//! Content-addressed artifact-store integrity: a one-byte flip in ANY
+//! persisted artifact (spill tier or snapshot) must surface as a typed
+//! error -- never as silently wrong served bytes -- while undamaged
+//! tables keep serving; snapshots dedupe identical tables by content
+//! digest; and a cold registry hydrated purely over the v2
+//! `fetch_artifact` wire op serves bit-identical lookups to its peer.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use dpq_embed::backend::DenseTable;
+use dpq_embed::dpq::toy_embedding;
+use dpq_embed::server::{
+    hydrate_from_peer, Client, EmbeddingServer, Residency, Rows,
+    ServerConfig, TableRegistry, WireError, SNAPSHOT_MANIFEST,
+};
+use dpq_embed::tensor::TensorF;
+use dpq_embed::util::Rng;
+
+fn spawn(server: Arc<EmbeddingServer>)
+    -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap()).unwrap();
+    });
+    (rx.recv().unwrap(), h)
+}
+
+fn bits_equal(a: &Rows, b: &Rows) -> bool {
+    a.n() == b.n()
+        && a.d() == b.d()
+        && a.as_slice().iter().zip(b.as_slice())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dpq_artifact_integ_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spill_cfg(dir: &PathBuf) -> ServerConfig {
+    ServerConfig {
+        max_batch: 16,
+        shards_per_table: 2,
+        spill_dir: Some(dir.clone()),
+        ..ServerConfig::default()
+    }
+}
+
+fn random_table(vocab: usize, d: usize, seed: u64) -> TensorF {
+    let mut rng = Rng::new(seed);
+    TensorF {
+        shape: vec![vocab, d],
+        data: (0..vocab * d).map(|_| rng.normal()).collect(),
+    }
+}
+
+/// Flip one bit of one byte in the MIDDLE of a file (payload region,
+/// past any header whose parse might coincidentally object) and return
+/// the pristine bytes for healing.
+fn flip_one_byte(path: &std::path::Path) -> Vec<u8> {
+    let good = std::fs::read(path).unwrap();
+    let mut bad = good.clone();
+    let at = bad.len() / 2;
+    bad[at] ^= 0x10;
+    std::fs::write(path, &bad).unwrap();
+    good
+}
+
+/// A single flipped bit in a spill artifact -- small enough that every
+/// structural check (magic, shape, sizes) can still pass -- must answer
+/// the typed `reload_failed` citing the content digest, on promote,
+/// while the registry's other tables keep serving. Restoring the
+/// pristine bytes heals the table bit-exactly.
+#[test]
+fn one_byte_flip_in_spill_artifact_is_typed_reload_failed() {
+    let dir = fresh_dir("spill_flip");
+    let registry = TableRegistry::open(spill_cfg(&dir)).unwrap();
+    registry.insert("victim", Arc::new(toy_embedding(50, 8, 4, 3, 9)))
+        .unwrap();
+    registry.insert(
+        "bystander",
+        Arc::new(DenseTable::new(random_table(20, 6, 2)).unwrap()),
+    ).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+
+    let ids = [0usize, 49, 17, 3];
+    let before = c.lookup_bin("victim", &ids).unwrap();
+    let file = c.admin_demote("victim").unwrap();
+    let good = flip_one_byte(&dir.join(&file));
+
+    match c.lookup_bin("victim", &ids) {
+        Err(WireError::Rejected { code, message }) => {
+            assert_eq!(code, "reload_failed");
+            assert!(message.contains("digest"), "{message}");
+            assert!(message.contains("victim"), "{message}");
+        }
+        Ok(_) => panic!("a flipped artifact byte was served"),
+        other => panic!("{other:?}"),
+    }
+    // the table stays registered (and spilled), others keep serving
+    let st = c.stats(Some("victim")).unwrap();
+    assert_eq!(st.get("residency").and_then(|v| v.as_str()), Some("spilled"));
+    assert_eq!(c.lookup_bin("bystander", &[5]).unwrap().n(), 1);
+
+    // healing: pristine bytes back -> digest matches -> bit-exact rows
+    std::fs::write(dir.join(&file), &good).unwrap();
+    let after = c.lookup_bin("victim", &ids).unwrap();
+    assert!(bits_equal(&before, &after), "healed table serves wrong bytes");
+    c.shutdown().unwrap();
+    h.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A single flipped bit in a snapshot artifact fails `restore` with the
+/// typed `restore_failed` citing the manifest digest -- BEFORE any
+/// parse -- and healing the artifact restores bit-exact serving. Also
+/// pins the content-addressed artifact naming (`sha256-<hex>.art`) and
+/// the per-table digest provenance fields in the manifest.
+#[test]
+fn one_byte_flip_in_snapshot_artifact_is_typed_restore_failed() {
+    let dir = fresh_dir("snap_flip");
+    let registry = TableRegistry::new(ServerConfig::default());
+    registry.insert("emb", Arc::new(toy_embedding(40, 8, 4, 3, 4))).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+    let ids = [1usize, 39, 8];
+    let want = c.lookup_bin("emb", &ids).unwrap();
+    let manifest = c.admin_snapshot(dir.to_str().unwrap()).unwrap();
+    assert!(manifest.ends_with(SNAPSHOT_MANIFEST), "{manifest}");
+    c.shutdown().unwrap();
+    h.join().unwrap();
+
+    // exactly one artifact, named by its own content digest
+    let arts: Vec<PathBuf> = std::fs::read_dir(&dir).unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "art"))
+        .collect();
+    assert_eq!(arts.len(), 1, "{arts:?}");
+    let name = arts[0].file_name().unwrap().to_string_lossy().into_owned();
+    assert!(name.starts_with("sha256-"), "{name}");
+
+    let good = flip_one_byte(&arts[0]);
+    let manifest_path = std::path::Path::new(&manifest);
+    match TableRegistry::restore(manifest_path, None) {
+        Err(WireError::Rejected { code, message }) => {
+            assert_eq!(code, "restore_failed");
+            assert!(message.contains("digest"), "{message}");
+        }
+        Ok(_) => panic!("restore accepted a flipped artifact byte"),
+        other => panic!("{other:?}"),
+    }
+
+    std::fs::write(&arts[0], &good).unwrap();
+    let reg2 = TableRegistry::restore(manifest_path, None).unwrap();
+    let server2 = Arc::new(EmbeddingServer::new(reg2));
+    let (addr2, h2) = spawn(server2.clone());
+    let mut c2 = Client::connect(addr2).unwrap();
+    let got = c2.lookup_bin("emb", &ids).unwrap();
+    assert!(bits_equal(&want, &got), "restored table serves wrong bytes");
+    c2.shutdown().unwrap();
+    h2.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two tables with identical bytes snapshot to ONE content-addressed
+/// artifact (cross-table dedupe), and a registry restored from that
+/// manifest serves both bit-exactly.
+#[test]
+fn snapshot_dedupes_identical_tables_by_digest() {
+    let dir = fresh_dir("dedupe");
+    let registry = TableRegistry::new(ServerConfig::default());
+    let emb = Arc::new(toy_embedding(30, 8, 4, 3, 11));
+    registry.insert("a", emb.clone()).unwrap();
+    registry.insert("b", emb).unwrap();
+    let server = Arc::new(EmbeddingServer::new(registry));
+    let (addr, h) = spawn(server.clone());
+    let mut c = Client::connect(addr).unwrap();
+    let ids = [0usize, 29, 13];
+    let want = c.lookup_bin("a", &ids).unwrap();
+    let manifest = c.admin_snapshot(dir.to_str().unwrap()).unwrap();
+    c.shutdown().unwrap();
+    h.join().unwrap();
+
+    let arts = std::fs::read_dir(&dir).unwrap()
+        .flatten()
+        .filter(|e| e.path().extension().is_some_and(|x| x == "art"))
+        .count();
+    assert_eq!(arts, 1, "identical tables must share one artifact");
+
+    let reg2 =
+        TableRegistry::restore(std::path::Path::new(&manifest), None).unwrap();
+    let server2 = Arc::new(EmbeddingServer::new(reg2));
+    let (addr2, h2) = spawn(server2.clone());
+    let mut c2 = Client::connect(addr2).unwrap();
+    assert!(bits_equal(&want, &c2.lookup_bin("a", &ids).unwrap()));
+    assert!(bits_equal(&want, &c2.lookup_bin("b", &ids).unwrap()));
+    c2.shutdown().unwrap();
+    h2.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance path for peer hydration: a cold registry with an
+/// EMPTY spill dir pulls every artifact its peer advertises over the v2
+/// `fetch_artifact` op (digest-verified as it lands), adopts them as
+/// Spilled slots, and then serves lookups bit-identical to the peer --
+/// zero shared disk. A second hydrate is a no-op, an unknown digest is
+/// a typed `not_found`, and a malformed digest a typed `bad_digest`.
+#[test]
+fn cold_registry_hydrates_over_the_wire_bit_exactly() {
+    let dir_a = fresh_dir("hydrate_a");
+    let dir_b = fresh_dir("hydrate_b");
+
+    // peer A: two backend kinds, one replicated, both demoted so the
+    // spill tier (with recorded digests) is what B can pull
+    let reg_a = TableRegistry::open(spill_cfg(&dir_a)).unwrap();
+    reg_a.insert("dpq", Arc::new(toy_embedding(60, 8, 4, 3, 21))).unwrap();
+    reg_a.insert_with_replicas(
+        "dense",
+        Arc::new(DenseTable::new(random_table(25, 6, 22)).unwrap()),
+        3,
+    ).unwrap();
+    let server_a = Arc::new(EmbeddingServer::new(reg_a));
+    let (addr_a, h_a) = spawn(server_a.clone());
+    let mut ca = Client::connect(addr_a).unwrap();
+    let ids_dpq: Vec<usize> = (0..12).map(|i| (i * 13) % 60).collect();
+    let ids_dense: Vec<usize> = (0..12).map(|i| (i * 7) % 25).collect();
+    let want_dpq = ca.lookup_bin("dpq", &ids_dpq).unwrap();
+    let want_dense = ca.lookup_bin("dense", &ids_dense).unwrap();
+    ca.admin_demote("dpq").unwrap();
+    ca.admin_demote("dense").unwrap();
+
+    // cold B: empty spill dir, nothing registered; hydrate over the
+    // wire through a deadline-bearing client
+    let reg_b = TableRegistry::open(spill_cfg(&dir_b)).unwrap();
+    assert_eq!(reg_b.len(), 0);
+    let mut hc = Client::with_timeout(addr_a, Duration::from_secs(10))
+        .unwrap();
+    assert_eq!(hydrate_from_peer(&reg_b, &mut hc).unwrap(), 2);
+    assert_eq!(reg_b.residency("dpq"), Some(Residency::Spilled));
+    assert_eq!(reg_b.residency("dense"), Some(Residency::Spilled));
+    // hydration is idempotent: everything is already here
+    assert_eq!(hydrate_from_peer(&reg_b, &mut hc).unwrap(), 0);
+
+    // an unknown (but well-formed) digest is a typed not_found; a
+    // malformed digest a typed bad_digest -- the connection survives
+    match hc.fetch_artifact(&"0".repeat(64)) {
+        Err(WireError::Rejected { code, .. }) => assert_eq!(code, "not_found"),
+        other => panic!("{other:?}"),
+    }
+    match hc.fetch_artifact("not-a-digest") {
+        Err(WireError::Rejected { code, .. }) => {
+            assert_eq!(code, "bad_digest")
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // B serves both tables bit-identical to what A served, with the
+    // peer's replica count carried across
+    let server_b = Arc::new(EmbeddingServer::new(reg_b));
+    let (addr_b, h_b) = spawn(server_b.clone());
+    let mut cb = Client::connect(addr_b).unwrap();
+    let got_dpq = cb.lookup_bin("dpq", &ids_dpq).unwrap();
+    let got_dense = cb.lookup_bin("dense", &ids_dense).unwrap();
+    assert!(bits_equal(&want_dpq, &got_dpq), "dpq diverged after hydration");
+    assert!(bits_equal(&want_dense, &got_dense),
+            "dense diverged after hydration");
+    let entry = server_b.registry().get("dense").unwrap();
+    assert_eq!(entry.replica_count(), 3);
+    // the new manifest-publish failure counter is wired into stats
+    let st = cb.stats(None).unwrap();
+    assert_eq!(
+        st.get("spill_manifest_write_failures").and_then(|v| v.as_usize()),
+        Some(0)
+    );
+
+    cb.shutdown().unwrap();
+    h_b.join().unwrap();
+    ca.shutdown().unwrap();
+    h_a.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}

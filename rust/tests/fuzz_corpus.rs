@@ -27,7 +27,7 @@ fn committed_corpus_replays_clean() {
     })
     .expect("fuzz harness failed to start");
     assert!(
-        report.corpus_replayed >= 22,
+        report.corpus_replayed >= 24,
         "corpus shrank? only {} inputs replayed", report.corpus_replayed
     );
     assert_eq!(report.handler_panics, 0, "corpus input panicked a handler");

@@ -182,15 +182,15 @@ fn recovery_degrades_lost_artifacts_and_promotes_spilled_default() {
     // the healthy table serves bit-exact rows regardless
     let rows = c.lookup_bin("keep", &[3, 29, 0]).unwrap();
     assert_eq!(rows.row(0), &t_keep.data[3 * 4..4 * 4]);
-    // a file reappears at the lost path -- but with the WRONG shape
+    // a file reappears at the lost path -- but with the WRONG content
     // (it is keep's artifact): the probe heals the Lost phase, and the
-    // promote must then fail loudly on the shape check rather than
-    // serve keep's rows under gone's name
+    // promote must then fail loudly on the recorded content digest
+    // (before any parse) rather than serve keep's rows under gone's name
     std::fs::write(dir.join(&gone_file), &backup).unwrap();
     match c.lookup_bin("gone", &[0]) {
         Err(WireError::Rejected { code, message }) => {
             assert_eq!(code, "reload_failed");
-            assert!(message.contains("shape"), "{message}");
+            assert!(message.contains("digest"), "{message}");
         }
         other => panic!("{other:?}"),
     }

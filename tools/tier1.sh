@@ -35,6 +35,14 @@
 # shards / replicas, spilled-table scoring) runs in BOTH thread passes --
 # score bits must not depend on the pool size.
 #
+# Artifact-integrity coverage: artifact_integrity (one-byte flips in
+# spill and snapshot artifacts answer typed errors off the recorded
+# SHA-256 digests -- never silently wrong bytes -- snapshot dedupe by
+# content digest, and a cold registry hydrated purely over the v2
+# `fetch_artifact` op serving bit-identically) runs in BOTH thread
+# passes -- digest verification must be invisible in the bytes at every
+# pool size.
+#
 # Skew-aware-serving coverage: cache_equivalence (hot-row cache on vs a
 # cache-disabled twin, bit-compared over a randomized op mix, plus
 # deterministic LRU admission/eviction and budget-accounting checks) and
@@ -53,7 +61,8 @@ DPQ_THREADS=2 cargo test -q --test multi_table --test server_integration \
     --test registry_lifecycle --test residency_faults --test residency_soak \
     --test replica_equivalence --test spill_recovery \
     --test conn_hardening --test fuzz_corpus --test scoring_equivalence \
-    --test cache_equivalence --test backend_granular --test conn_plane
+    --test cache_equivalence --test backend_granular --test conn_plane \
+    --test artifact_integrity
 DPQ_THREADS=2 target/release/repro fuzz --seed 42 --iters 2000
 RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links" cargo doc --no-deps -q
 for f in docs/*.md; do
